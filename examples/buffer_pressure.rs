@@ -1,0 +1,77 @@
+//! Buffer pressure and the log→linear transition (paper Figs. 7–9).
+//!
+//! "As the size of the operation increases, we will reduce the size of the
+//! logarithmic part and increase the size of the linear part." The
+//! intermediate buffer is fixed in bytes; bigger chunks mean fewer chunks
+//! fit, so the aggregation factor (number of parallel trees) shrinks:
+//! 8 trees → 4 → 2 → fully linear.
+//!
+//!     cargo run --release --example buffer_pressure
+
+use patcol::coordinator::Tuner;
+use patcol::core::Collective;
+use patcol::sched::{pat, verify::verify_program};
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn main() -> patcol::core::Result<()> {
+    let n = 16;
+    println!("PAT on {n} ranks: the aggregation sweep of Figs. 7-9\n");
+    let mut t = Table::new([
+        "trees(a)",
+        "steps",
+        "log",
+        "linear",
+        "rs_acc_slots",
+        "sim 1KiB",
+        "sim 1MiB",
+    ]);
+    let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+    let cost = CostModel::ib_hdr();
+    for a in [8usize, 4, 2, 1] {
+        let (log, lin) = pat::phase_counts(n, a);
+        let ag = pat::allgather(n, a);
+        let rs = pat::reduce_scatter(n, a);
+        let occ = verify_program(&rs)?;
+        let t_small = simulate(&ag, &topo, &cost, 1024)?.total_time;
+        let t_big = simulate(&ag, &topo, &cost, 1 << 20)?.total_time;
+        t.row([
+            format!("{a}"),
+            format!("{}", ag.steps),
+            format!("{log}"),
+            format!("{lin}"),
+            format!("{}", occ.peak_slots),
+            fmt_time_s(t_small),
+            fmt_time_s(t_big),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nsteps 4/5/8/15 match Figs. 7/8/9/10; accumulator slots follow a*log2(n/a)\n"
+    );
+
+    // How a fixed buffer budget (in BYTES) translates to aggregation as the
+    // message grows — the tuner's job.
+    let buffer_bytes = 256 << 10; // 256 KiB intermediate buffer
+    let tuner = Tuner::default();
+    println!(
+        "fixed {} intermediate buffer on {n} ranks (reduce-scatter):",
+        fmt_bytes(buffer_bytes)
+    );
+    let mut t = Table::new(["chunk", "slots", "aggregation", "steps"]);
+    for chunk in [1usize << 10, 8 << 10, 32 << 10, 128 << 10, 512 << 10] {
+        let slots = (buffer_bytes / chunk).max(1);
+        let a = tuner.max_aggregation(n, slots, Collective::ReduceScatter);
+        let steps = pat::allgather(n, a).steps;
+        t.row([
+            fmt_bytes(chunk),
+            format!("{slots}"),
+            format!("{a}"),
+            format!("{steps}"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nlarger chunks -> fewer slots -> fewer parallel trees -> more linear steps,");
+    println!("each linear transfer running with a full buffer at peak bandwidth.");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Non-power-of-two rank counts (paper claim P4 / Fig. 4).
+//!
+//! Recursive doubling requires power-of-two ranks — "a significant
+//! constraint … given a large portion of the AI use cases do not use a
+//! power of two as their data-parallelism dimension". PAT works on any
+//! count via truncated binomial trees. This example runs real-byte
+//! collectives on awkward counts and compares simulated latency against
+//! ring at scale.
+//!
+//!     cargo run --release --example nonpow2_scale
+
+use patcol::coordinator::{CommConfig, Communicator};
+use patcol::core::{Algorithm, Collective};
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::table::{fmt_time_s, Table};
+use patcol::util::Rng;
+
+fn main() -> patcol::core::Result<()> {
+    // --- correctness on real bytes for awkward counts ---------------------
+    println!("transport correctness on non-power-of-two rank counts:");
+    let chunk = 512;
+    for n in [3usize, 5, 6, 7, 9, 11, 13, 23] {
+        // recursive doubling refuses
+        assert!(sched::generate(Algorithm::Recursive, Collective::AllGather, n).is_err());
+
+        let comm = Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: 4 }),
+            ..Default::default()
+        })?;
+        let mut rng = Rng::new(n as u64);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..n * chunk).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let out = comm.reduce_scatter(&inputs)?;
+        for r in 0..n {
+            for i in 0..chunk {
+                let want: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                assert_eq!(out[r][i], want);
+            }
+        }
+        println!("  n={n:>3}: reduce-scatter exact (recursive-doubling: unsupported)");
+    }
+
+    // --- simulated latency at scale, awkward counts -----------------------
+    println!("\nsimulated small-message all-gather latency (1 KiB/rank, flat fabric):");
+    let cost = CostModel::ib_hdr();
+    let mut t = Table::new(["ranks", "ring", "pat(full)", "pat:4", "speedup"]);
+    for n in [48usize, 96, 192, 384, 768, 1000] {
+        let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+        let ring = simulate(
+            &sched::generate(Algorithm::Ring, Collective::AllGather, n)?,
+            &topo,
+            &cost,
+            1024,
+        )?
+        .total_time;
+        let patf = simulate(
+            &sched::generate(
+                Algorithm::Pat { aggregation: usize::MAX },
+                Collective::AllGather,
+                n,
+            )?,
+            &topo,
+            &cost,
+            1024,
+        )?
+        .total_time;
+        let pat4 = simulate(
+            &sched::generate(Algorithm::Pat { aggregation: 4 }, Collective::AllGather, n)?,
+            &topo,
+            &cost,
+            1024,
+        )?
+        .total_time;
+        t.row([
+            format!("{n}"),
+            fmt_time_s(ring),
+            fmt_time_s(patf),
+            fmt_time_s(pat4),
+            format!("{:.1}x", ring / patf),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(speedup = ring / pat(full); grows ~n/log n as the paper predicts)");
+    Ok(())
+}

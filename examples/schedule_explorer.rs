@@ -1,0 +1,76 @@
+//! Regenerates every schedule figure of the paper as text.
+//!
+//!     cargo run --release --example schedule_explorer
+//!
+//! Fig. 1  — classic Bruck (nearest dimension first), 8 ranks
+//! Fig. 2  — its per-root binomial trees
+//! Fig. 3  — dimension-reversed Bruck (farthest first), 8 ranks
+//! Fig. 4  — truncated trees on 7 ranks
+//! Fig. 5  — PAT, 8 ranks, aggregation 2 (the split red/blue step)
+//! Fig. 6  — the PAT tree with its log/linear phases
+//! Figs 7-9 — PAT on 16 ranks with 8/4/2 parallel trees
+//! Fig. 10 — fully linear PAT (aggregation 1)
+//! Fig. 11 — the reduce-scatter mirror
+
+use patcol::core::Collective;
+use patcol::sched::{bruck, explain, pat};
+
+fn header(title: &str) {
+    println!("\n=============================================================");
+    println!("{title}");
+    println!("=============================================================");
+}
+
+fn main() {
+    header("Fig. 1 — Bruck all-gather, nearest dimension first, 8 ranks");
+    let p = bruck::allgather_near_first(8);
+    print!("{}", explain::render_steps(&p));
+    println!("note: the LAST step sends 4 chunks at distance 4 — big and far,");
+    println!("the combination that collides under static routing (paper §1).");
+
+    header("Fig. 2 — per-root binomial trees of the same schedule");
+    print!("{}", explain::render_root_trees(&p));
+
+    header("Fig. 3 — dimension-reversed Bruck (farthest dimension first)");
+    let p = bruck::allgather_far_first(8);
+    print!("{}", explain::render_steps(&p));
+    println!("note: distances now shrink as payloads grow — 1 chunk goes far,");
+    println!("4 chunks go next door; but the 4-chunk payload is non-contiguous");
+    println!("(stride-2 roots), which is why aggregation needs buffering.");
+
+    header("Fig. 4 — truncated trees: 7 ranks, farthest first");
+    let p = bruck::allgather_far_first(7);
+    print!("{}", explain::render_steps(&p));
+
+    header("Fig. 5 — PAT, 8 ranks, aggregation limited to 2");
+    let p = pat::allgather(8, 2);
+    print!("{}", explain::render_steps(&p));
+    println!("the 4-chunk dimension-0 round of Fig. 3 is split into two");
+    println!("2-chunk rounds executed within the two parallel trees.");
+
+    header("Fig. 6 — the PAT tree for 8 ranks / 2 trees (phases)");
+    print!("{}", explain::render_pat_tree(8, 2));
+
+    for (fig, a) in [(7, 8), (8, 4), (9, 2)] {
+        header(&format!(
+            "Fig. {fig} — PAT tree, 16 ranks, {a} parallel trees"
+        ));
+        print!("{}", explain::render_pat_tree(16, a));
+    }
+
+    header("Fig. 10 — fully linear PAT (aggregation 1), 8 ranks");
+    print!("{}", explain::render_pat_tree(8, 1));
+    let p = pat::allgather(8, 1);
+    print!("{}", explain::render_steps(&p));
+    println!("far transfers first, progressively closing on the root; every");
+    println!("transfer moves one full buffer at peak bandwidth.");
+
+    header("Fig. 11 — PAT reduce-scatter (mirror of all-gather)");
+    let rs = pat::reduce_scatter(8, 2);
+    assert_eq!(rs.collective, Collective::ReduceScatter);
+    print!("{}", explain::render_steps(&rs));
+    println!("time and direction reversed: nearest dimensions first, reversed");
+    println!("tree, reduce on receive; the parallel (linear) phase runs before");
+    println!("the logarithmic bottom. Rank 0's op list:");
+    print!("{}", explain::render_rank(&rs, 0));
+}

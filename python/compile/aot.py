@@ -1,0 +1,129 @@
+"""AOT pipeline: lower the L2 graphs (which call the L1 Pallas kernels) to
+HLO **text** artifacts that the rust runtime loads via the `xla` crate.
+
+HLO text — NOT serialized protos — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under --out-dir (default ../artifacts):
+
+* reduce_f32_<n>.hlo.txt        pairwise Pallas reduction, size classes
+* reduce<k>_f32_<n>.hlo.txt     fused k-way Pallas reduction
+* scale_add_f32_<n>.hlo.txt     optimizer shard update (Pallas)
+* train_step.hlo.txt            transformer loss+grads (value_and_grad)
+* init_params.f32               initial flat parameter vector (raw LE f32)
+* manifest.json                 registry consumed by rust/src/runtime
+
+Usage: cd python && python -m compile.aot [--out-dir DIR] [--quick]
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+REDUCE_SIZES = (1024, 16384, 262144)
+REDUCE_K = 4
+REDUCE_K_SIZES = (16384,)
+SCALE_ADD_SIZES = (4096, 65536)
+NRANKS_DEFAULT = 8  # zero_train's default world size
+
+
+def to_hlo_text(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, name: str, fn, specs, entry: dict, manifest: list) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(fn, specs)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append({"name": name, "file": f"{name}.hlo.txt", **entry})
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="small reduce kernels only (fast CI smoke)",
+    )
+    ap.add_argument("--nranks", type=int, default=NRANKS_DEFAULT,
+                    help="world size the train-step shard artifacts target")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest: list = []
+
+    reduce_sizes = REDUCE_SIZES[:1] if args.quick else REDUCE_SIZES
+    for n in reduce_sizes:
+        fn, specs = model.reduce2_graph(n)
+        emit(args.out_dir, f"reduce_f32_{n}", fn, specs,
+             {"kind": "reduce", "n": n, "k": 2}, manifest)
+
+    if not args.quick:
+        for n in REDUCE_K_SIZES:
+            fn, specs = model.reduce_k_graph(n, REDUCE_K)
+            emit(args.out_dir, f"reduce{REDUCE_K}_f32_{n}", fn, specs,
+                 {"kind": "reduce_k", "n": n, "k": REDUCE_K}, manifest)
+
+        for n in SCALE_ADD_SIZES:
+            fn, specs = model.scale_add_graph(n)
+            emit(args.out_dir, f"scale_add_f32_{n}", fn, specs,
+                 {"kind": "scale_add", "n": n, "k": 2}, manifest)
+
+        # Transformer train step + initial parameters.
+        cfg = model.ModelConfig()
+        fn, specs, nparams, flat0 = model.train_step_graph(cfg)
+        emit(
+            args.out_dir, "train_step", fn, specs,
+            {
+                "kind": "train_step",
+                "n": nparams,
+                "k": 2,
+                "extra": {
+                    "batch": cfg.batch,
+                    "seq": cfg.seq,
+                    "vocab": cfg.vocab,
+                    "d_model": cfg.d_model,
+                    "n_layers": cfg.n_layers,
+                    "params": nparams,
+                },
+            },
+            manifest,
+        )
+        # Shard-sized scale_add for the default world size (padded shard).
+        shard = -(-nparams // args.nranks)
+        shard = -(-shard // 128) * 128  # lane-align
+        fn, specs = model.scale_add_graph(shard)
+        emit(args.out_dir, f"scale_add_f32_{shard}", fn, specs,
+             {"kind": "scale_add", "n": shard, "k": 2}, manifest)
+
+        raw = bytes()
+        import numpy as np
+
+        raw = np.asarray(flat0, dtype="<f4").tobytes()
+        with open(os.path.join(args.out_dir, "init_params.f32"), "wb") as f:
+            f.write(raw)
+        print(f"  wrote init_params.f32 ({len(raw)} bytes, {nparams} params)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

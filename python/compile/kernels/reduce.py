@@ -1,0 +1,110 @@
+"""L1 Pallas kernels for the reduce-scatter datapath.
+
+The paper's reduce-scatter reduces every received chunk into an
+accumulation buffer ("each time we receive data, we also reduce it with the
+current accumulation buffer"); in NCCL this is the GPU reduction kernel on
+the datapath. Here it is written as a Pallas kernel, tiled for TPU:
+
+* 1-D operands are viewed as ``(rows, 128)`` with rows padded to a multiple
+  of 8 — the VPU's (8, 128) native tile.
+* ``BlockSpec`` streams ``(BLOCK_ROWS, 128)`` tiles HBM→VMEM; the kernel is
+  elementwise, so VMEM residency is ``(k_inputs + 1) * BLOCK_ROWS * 128 * 4``
+  bytes — for the default block of 256 rows and the 2-input kernel, 384 KiB,
+  leaving ample VMEM for double buffering.
+* The op is memory-bound (1 FLOP per 12 bytes moved for k=2); the roofline
+  is HBM bandwidth, and the k-way variant amortizes the accumulator
+  traffic: k-way moves ``(k+1)·n`` elements versus ``3n·(k-1)`` for a chain
+  of pairwise adds.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels run in interpret mode and lower to plain HLO —
+numerically identical, structurally the same schedule (see DESIGN.md
+§Hardware-Adaptation-TPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM block; (BLOCK_ROWS, 128) f32 = 128 KiB per operand tile.
+BLOCK_ROWS = 256
+LANES = 128
+SUBLANES = 8
+
+
+def padded_2d(n: int) -> tuple[int, int]:
+    """View length-``n`` data as (rows, 128) with rows a multiple of 8."""
+    rows = -(-n // LANES)  # ceil
+    rows = -(-rows // SUBLANES) * SUBLANES
+    return rows, LANES
+
+
+def _add2_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _addk_kernel(*refs):
+    # refs = (acc, x0, .., x{k-1}, out)
+    out = refs[-1]
+    acc = refs[0][...]
+    for x in refs[1:-1]:
+        acc = acc + x[...]
+    out[...] = acc
+
+
+def _tiles(rows: int) -> tuple[int, int]:
+    block = min(BLOCK_ROWS, rows)
+    # rows is a multiple of 8; keep the block a divisor of rows so the grid
+    # is exact (no partial tiles to mask).
+    while rows % block != 0:
+        block -= SUBLANES
+    return block, rows // block
+
+
+@functools.partial(jax.jit, static_argnames=())
+def reduce2(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise ``a + b`` over equal-length 1-D f32 arrays via Pallas."""
+    (n,) = a.shape
+    rows, lanes = padded_2d(n)
+    pad = rows * lanes - n
+    a2 = jnp.pad(a, (0, pad)).reshape(rows, lanes)
+    b2 = jnp.pad(b, (0, pad)).reshape(rows, lanes)
+    block, grid = _tiles(rows)
+    out = pl.pallas_call(
+        _add2_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), a.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+        interpret=True,
+    )(a2, b2)
+    return out.reshape(-1)[:n]
+
+
+def reduce_k(acc: jax.Array, *xs: jax.Array) -> jax.Array:
+    """Fused ``acc + Σ xs`` (k-way reduction) via one Pallas kernel.
+
+    One kernel launch folds ``len(xs)`` received chunks into the
+    accumulator — the batched linear-phase optimization (EXPERIMENTS.md
+    §Perf).
+    """
+    (n,) = acc.shape
+    rows, lanes = padded_2d(n)
+    pad = rows * lanes - n
+    ops = [jnp.pad(v, (0, pad)).reshape(rows, lanes) for v in (acc, *xs)]
+    block, grid = _tiles(rows)
+    spec = pl.BlockSpec((block, lanes), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _addk_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), acc.dtype),
+        grid=(grid,),
+        in_specs=[spec] * (1 + len(xs)),
+        out_specs=spec,
+        interpret=True,
+    )(*ops)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth (pytest compares kernel outputs against these)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_reduce2(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def ref_reduce_k(acc: jax.Array, *xs: jax.Array) -> jax.Array:
+    out = acc
+    for x in xs:
+        out = out + x
+    return out
+
+
+def ref_scale_add(p: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    return p - lr[0] * g
+
+
+def ref_softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean cross-entropy over all positions; logits [..., V], int targets."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel for the sharded optimizer update (ZeRO-style example).
+
+``scale_add(p, g, lr) = p - lr * g`` over a parameter shard. Same (rows,
+128) tiling as the reduce kernels; ``lr`` is a (1, 1) scalar operand
+broadcast inside the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.reduce import padded_2d, _tiles, LANES
+
+
+def _scale_add_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+
+def scale_add(p: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    """SGD shard step ``p - lr*g``; ``lr`` has shape (1,)."""
+    (n,) = p.shape
+    rows, lanes = padded_2d(n)
+    pad = rows * lanes - n
+    p2 = jnp.pad(p, (0, pad)).reshape(rows, lanes)
+    g2 = jnp.pad(g, (0, pad)).reshape(rows, lanes)
+    lr2 = lr.reshape(1, 1)
+    block, grid = _tiles(rows)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _scale_add_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), p.dtype),
+        grid=(grid,),
+        in_specs=[spec, spec, pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=spec,
+        interpret=True,
+    )(p2, g2, lr2)
+    return out.reshape(-1)[:n]

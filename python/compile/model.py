@@ -1,0 +1,179 @@
+"""L2 JAX compute graphs, AOT-lowered to HLO text for the rust runtime.
+
+Two families:
+
+1. **Collective datapath graphs** — thin jax functions around the L1 Pallas
+   kernels (`kernels.reduce`, `kernels.update`). These are what the rust
+   transport executes on the reduce-scatter hot path.
+
+2. **Workload model** — a small decoder-only transformer LM with flat
+   parameter handling, used by the end-to-end ZeRO-style data-parallel
+   training example (`examples/zero_train.rs`): per-rank grads are computed
+   by the `train_step` artifact, reduce-scattered with PAT over real bytes,
+   applied with the `scale_add` artifact, and all-gathered back with PAT.
+
+Parameters travel as a single flat f32 vector (ravel_pytree) so the rust
+side can shard them with ordinary chunk arithmetic.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels import reduce as kred
+from compile.kernels import update as kupd
+from compile.kernels.ref import ref_softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# 1. Collective datapath graphs (call the Pallas kernels).
+# ---------------------------------------------------------------------------
+
+def reduce2_graph(n: int):
+    """(a[n], b[n]) -> (a+b,) via the Pallas reduce kernel."""
+
+    def fn(a, b):
+        return (kred.reduce2(a, b),)
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return fn, (spec, spec)
+
+
+def reduce_k_graph(n: int, k: int):
+    """(acc[n], x0[n], .., x{k-1}[n]) -> (acc + Σ xi,) fused."""
+
+    def fn(acc, *xs):
+        return (kred.reduce_k(acc, *xs),)
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return fn, tuple([spec] * (k + 1))
+
+
+def scale_add_graph(n: int):
+    """(p[n], g[n], lr[1]) -> (p - lr*g,) via the Pallas update kernel."""
+
+    def fn(p, g, lr):
+        return (kupd.scale_add(p, g, lr),)
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lr_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return fn, (spec, spec, lr_spec)
+
+
+# ---------------------------------------------------------------------------
+# 2. Transformer LM workload.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq: int = 64
+    batch: int = 4  # per-rank batch
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize the parameter pytree."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4 + 8 * cfg.n_layers)
+    it = iter(ks)
+    d, v, f = cfg.d_model, cfg.vocab, cfg.d_ff
+    scale = d ** -0.5
+    params = {
+        "embed": jax.random.normal(next(it), (v, d)) * 0.02,
+        "pos": jax.random.normal(next(it), (cfg.seq, d)) * 0.02,
+        "unembed": jax.random.normal(next(it), (d, v)) * scale,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wq": jax.random.normal(next(it), (d, d)) * scale,
+                "wk": jax.random.normal(next(it), (d, d)) * scale,
+                "wv": jax.random.normal(next(it), (d, d)) * scale,
+                "wo": jax.random.normal(next(it), (d, d)) * scale,
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "w1": jax.random.normal(next(it), (d, f)) * scale,
+                "w2": jax.random.normal(next(it), (f, d)) * (f ** -0.5),
+            }
+        )
+    return params
+
+
+def init_flat(cfg: ModelConfig, seed: int = 0):
+    """Flat parameter vector + unravel closure."""
+    params = init_params(cfg, seed)
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _attention(x, layer, cfg: ModelConfig):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+
+    def split(w):
+        return (x @ w).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(layer["wq"]), split(layer["wk"]), split(layer["wv"])
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ layer["wo"]
+
+
+def forward_loss(params, tokens, cfg: ModelConfig):
+    """Causal LM loss. `tokens` int32 [batch, seq+1]."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    x = params["embed"][inp] + params["pos"][None, : inp.shape[1]]
+    for layer in params["layers"]:
+        x = x + _attention(_layernorm(x, layer["ln1"]["g"], layer["ln1"]["b"]), layer, cfg)
+        hdn = _layernorm(x, layer["ln2"]["g"], layer["ln2"]["b"])
+        x = x + jax.nn.gelu(hdn @ layer["w1"]) @ layer["w2"]
+    x = _layernorm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    logits = x @ params["unembed"]
+    return ref_softmax_xent(logits, tgt)
+
+
+def train_step_graph(cfg: ModelConfig, seed: int = 0):
+    """(params_flat[P], tokens[B, S+1]) -> (loss, grads_flat[P])."""
+    flat0, unravel = init_flat(cfg, seed)
+    nparams = flat0.shape[0]
+
+    def fn(flat, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda f: forward_loss(unravel(f), tokens, cfg)
+        )(flat)
+        gflat, _ = ravel_pytree(grads)
+        return (loss, gflat.astype(jnp.float32))
+
+    specs = (
+        jax.ShapeDtypeStruct((nparams,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32),
+    )
+    return fn, specs, nparams, flat0
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def jit_forward_loss_flat(flat, tokens, cfg: ModelConfig):
+    """Convenience for python-side tests."""
+    _, unravel = init_flat(cfg, 0)
+    return forward_loss(unravel(flat), tokens, cfg)

@@ -1,0 +1,46 @@
+"""AOT pipeline checks: HLO text artifacts + manifest (quick mode)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_quick_aot_emits_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    arts = manifest["artifacts"]
+    assert len(arts) >= 1
+    for a in arts:
+        path = out / a["file"]
+        assert path.exists(), a
+        text = path.read_text()
+        assert text.startswith("HloModule"), a["file"]
+        # interpret-mode pallas must lower to plain HLO: no Mosaic
+        # custom-calls the CPU PJRT client cannot run.
+        assert "tpu_custom_call" not in text
+        assert a["kind"] in {"reduce", "reduce_k", "scale_add", "train_step"}
+
+
+def test_hlo_text_parses_back():
+    from compile import model
+    from compile.aot import to_hlo_text
+    from jax._src.lib import xla_client as xc
+
+    fn, specs = model.reduce2_graph(128)
+    text = to_hlo_text(fn, specs)
+    # round-trip through the HLO text parser the rust side uses
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None

@@ -1,0 +1,99 @@
+//! F7–F9 / P3 — the aggregation (parallel-tree) sweep and the buffer law.
+//!
+//! Regenerates the Figs. 7–9 transition (8 → 4 → 2 trees on 16 ranks) as
+//! step counts + simulated times, and measures the reduce-scatter
+//! accumulator high-water mark across rank counts and *operation sizes*:
+//! the paper's claim is that buffer need is logarithmic in ranks and
+//! independent of total size (law: a · log2(n/a) chunk slots).
+
+use patcol::core::{ceil_log2, floor_log2};
+use patcol::report::Report;
+use patcol::sched::pat;
+use patcol::sched::verify::verify_program;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::transport::{run_reduce_scatter, TransportOptions};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_time_s, Table};
+use patcol::util::Rng;
+
+fn main() {
+    let mut report = Report::new("buffer_sweep");
+
+    // --- Figs. 7-9: 16 ranks, trees 8/4/2/1 -------------------------------
+    let n = 16;
+    let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+    let cost = CostModel::ib_hdr();
+    println!("\nFigs. 7-9: PAT on {n} ranks across aggregation factors");
+    let mut t = Table::new(["trees", "steps", "log", "lin", "t(1KiB)", "t(256KiB)"]);
+    for a in [8usize, 4, 2, 1] {
+        let ag = pat::allgather(n, a);
+        let (lg, ln) = pat::phase_counts(n, a);
+        let t1 = simulate(&ag, &topo, &cost, 1 << 10).unwrap().total_time;
+        let t2 = simulate(&ag, &topo, &cost, 256 << 10).unwrap().total_time;
+        t.row([
+            format!("{a}"),
+            format!("{}", ag.steps),
+            format!("{lg}"),
+            format!("{ln}"),
+            fmt_time_s(t1),
+            fmt_time_s(t2),
+        ]);
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("fig7_9")),
+            ("trees", Json::num(a as f64)),
+            ("steps", Json::num(ag.steps as f64)),
+            ("log_steps", Json::num(lg as f64)),
+            ("lin_steps", Json::num(ln as f64)),
+            ("t_small", Json::num(t1)),
+            ("t_large", Json::num(t2)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!("(expected steps 4/5/8/15 — Figs. 7, 8, 9, 10)");
+
+    // --- P3a: accumulator occupancy vs rank count (structural) ------------
+    println!("\nreduce-scatter accumulator slots vs ranks (law: a*log2(n/a)):");
+    let mut t = Table::new(["ranks", "a=1", "a=2", "a=4", "a=8"]);
+    for k in 3..=10usize {
+        let n = 1usize << k;
+        let mut row = vec![format!("{n}")];
+        for a in [1usize, 2, 4, 8] {
+            let occ = verify_program(&pat::reduce_scatter(n, a)).unwrap();
+            let a_eff = pat::clamp_aggregation(n, a);
+            let law = a_eff * (ceil_log2(n) as usize).saturating_sub(floor_log2(a_eff) as usize).max(1);
+            assert!(occ.peak_slots <= law, "n={n} a={a}: {} > {law}", occ.peak_slots);
+            row.push(format!("{}", occ.peak_slots));
+            report.rows.push(Json::obj(vec![
+                ("kind", Json::str("occupancy_vs_ranks")),
+                ("ranks", Json::num(n as f64)),
+                ("a", Json::num(a as f64)),
+                ("peak_slots", Json::num(occ.peak_slots as f64)),
+                ("law", Json::num(law as f64)),
+            ]));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    // --- P3b: occupancy is independent of operation size (real bytes) -----
+    println!("\nreduce-scatter accumulator slots vs chunk size (16 ranks, a=2, real transport):");
+    let mut t = Table::new(["chunk elems", "peak slots"]);
+    let prog = pat::reduce_scatter(16, 2);
+    let mut rng = Rng::new(5);
+    for chunk in [16usize, 256, 4096, 65536] {
+        let inputs: Vec<Vec<f32>> = (0..16)
+            .map(|_| (0..16 * chunk).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (_, rep) = run_reduce_scatter(&prog, &inputs, &TransportOptions::default()).unwrap();
+        t.row([format!("{chunk}"), format!("{}", rep.peak_slots)]);
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("occupancy_vs_size")),
+            ("chunk_elems", Json::num(chunk as f64)),
+            ("peak_slots", Json::num(rep.peak_slots as f64)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!("(constant across sizes — the paper's 'independently from the total operation size')");
+
+    report.save().unwrap();
+}

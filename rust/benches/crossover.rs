@@ -1,0 +1,97 @@
+//! P5 — the log→linear crossover.
+//!
+//! "There is always a scale at which the linear part will become
+//! predominant over the logarithmic part. The performance factor over the
+//! ring algorithm will be dependent on how much faster the linear part is,
+//! compared to the linear part of the ring."
+//!
+//! This bench sweeps size at fixed rank count and rank count at fixed
+//! size, locating where Ring catches up with PAT, and verifying that
+//! PAT's full-buffer linear schedule sustains ring-level bandwidth.
+
+use patcol::core::{Algorithm, Collective};
+use patcol::report::Report;
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn sim_t(alg: Algorithm, n: usize, chunk: usize) -> f64 {
+    let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+    let cost = CostModel::ib_hdr();
+    let prog = sched::generate(alg, Collective::AllGather, n).unwrap();
+    simulate(&prog, &topo, &cost, chunk).unwrap().total_time
+}
+
+fn main() {
+    let mut report = Report::new("crossover");
+    let n = 64usize;
+
+    println!("\nPAT-vs-Ring crossover in size ({n} ranks):");
+    let mut t = Table::new(["size/rank", "pat(auto-best)", "ring", "ratio"]);
+    let mut crossover_size: Option<usize> = None;
+    for k in (6..=26).step_by(2) {
+        let size = 1usize << k;
+        // best PAT over aggregation choices — what the tuner would do
+        let pat_best = [usize::MAX, 8, 2, 1]
+            .iter()
+            .map(|&a| sim_t(Algorithm::Pat { aggregation: a }, n, size))
+            .fold(f64::INFINITY, f64::min);
+        let ring = sim_t(Algorithm::Ring, n, size);
+        let ratio = ring / pat_best;
+        if ratio < 1.05 && crossover_size.is_none() {
+            crossover_size = Some(size);
+        }
+        t.row([
+            fmt_bytes(size),
+            fmt_time_s(pat_best),
+            fmt_time_s(ring),
+            format!("{ratio:.2}x"),
+        ]);
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("size_sweep")),
+            ("size", Json::num(size as f64)),
+            ("pat_best", Json::num(pat_best)),
+            ("ring", Json::num(ring)),
+        ]));
+    }
+    print!("{}", t.render());
+    match crossover_size {
+        Some(s) => println!("ring reaches parity (≤1.05x) at ~{} per rank", fmt_bytes(s)),
+        None => println!("ring never reaches parity in this sweep"),
+    }
+
+    // Crossover in scale: at a fixed mid size, the PAT advantage grows
+    // with rank count (the "at scale" in the paper's title).
+    println!("\nPAT advantage vs rank count (64 KiB per rank):");
+    let mut t = Table::new(["ranks", "pat(full)", "ring", "speedup"]);
+    for &n in &[8usize, 32, 128, 512, 2048] {
+        let pat = sim_t(Algorithm::Pat { aggregation: usize::MAX }, n, 64 << 10);
+        let ring = sim_t(Algorithm::Ring, n, 64 << 10);
+        t.row([
+            format!("{n}"),
+            fmt_time_s(pat),
+            fmt_time_s(ring),
+            format!("{:.1}x", ring / pat),
+        ]);
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("rank_sweep")),
+            ("ranks", Json::num(n as f64)),
+            ("pat", Json::num(pat)),
+            ("ring", Json::num(ring)),
+        ]));
+    }
+    print!("{}", t.render());
+
+    // Bandwidth parity of the fully linear schedule at large size.
+    let big = 16 << 20;
+    let pat1 = sim_t(Algorithm::Pat { aggregation: 1 }, n, big);
+    let ring = sim_t(Algorithm::Ring, n, big);
+    println!(
+        "\nfully-linear PAT at {} per rank: {:.2}x ring time (1.0 = full bandwidth)",
+        fmt_bytes(big),
+        pat1 / ring
+    );
+    report.param("linear_parity", Json::num(pat1 / ring));
+    report.save().unwrap();
+}

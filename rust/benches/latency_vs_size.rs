@@ -1,0 +1,119 @@
+//! P1 — "logarithmic number of network transfers for small size
+//! operations": simulated all-gather latency vs message size, PAT vs Ring
+//! vs Bruck vs recursive doubling, on the ideal flat fabric.
+//!
+//! Expected shape (the paper's motivating comparison):
+//! * tiny messages: PAT/Bruck/RD ≈ α·log2(n) vs Ring ≈ α·(n-1) — PAT wins
+//!   by ~(n-1)/log2(n);
+//! * huge messages: all algorithms converge to the bandwidth bound; PAT's
+//!   full-buffer linear schedule matches Ring.
+
+use patcol::core::{Algorithm, Collective};
+use patcol::report::Report;
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn main() {
+    let n = 64usize;
+    let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+    let cost = CostModel::ib_hdr();
+    let algs = [
+        Algorithm::Ring,
+        Algorithm::BruckNearFirst,
+        Algorithm::Recursive,
+        Algorithm::Pat { aggregation: usize::MAX },
+        Algorithm::Pat { aggregation: 4 },
+        Algorithm::Pat { aggregation: 1 },
+    ];
+    let sizes: Vec<usize> = (6..=24).step_by(2).map(|k| 1usize << k).collect();
+
+    let mut report = Report::new("latency_vs_size");
+    report.param("nranks", Json::num(n as f64));
+    report.param("topology", Json::str(topo.name.clone()));
+    report.param("collective", Json::str("all_gather"));
+
+    let header: Vec<String> = std::iter::once("size/rank".to_string())
+        .chain(algs.iter().map(|a| a.name()))
+        .chain(std::iter::once("ring/pat".to_string()))
+        .collect();
+    let mut table = Table::new(header);
+
+    for &size in &sizes {
+        let mut row = vec![fmt_bytes(size)];
+        let mut times = Vec::new();
+        for alg in &algs {
+            let prog = sched::generate(*alg, Collective::AllGather, n).unwrap();
+            let t = simulate(&prog, &topo, &cost, size).unwrap().total_time;
+            times.push(t);
+            row.push(fmt_time_s(t));
+        }
+        let speedup = times[0] / times[3]; // ring / pat(full)
+        row.push(format!("{speedup:.1}x"));
+        table.row(row);
+        let mut jrow = vec![("size", Json::num(size as f64))];
+        let names: Vec<String> = algs.iter().map(|a| a.name()).collect();
+        for (name, t) in names.iter().zip(&times) {
+            jrow.push((name.as_str(), Json::num(*t)));
+        }
+        report.rows.push(Json::obj(jrow));
+    }
+
+    println!("\nall-gather latency vs size, {n} ranks, {}:", topo.name);
+    print!("{}", table.render());
+
+    // Small-size speedup check: ring/pat should approach (n-1)/ceil_log2(n).
+    let small = sizes[0];
+    let ring = simulate(
+        &sched::generate(Algorithm::Ring, Collective::AllGather, n).unwrap(),
+        &topo,
+        &cost,
+        small,
+    )
+    .unwrap()
+    .total_time;
+    let pat = simulate(
+        &sched::generate(Algorithm::Pat { aggregation: usize::MAX }, Collective::AllGather, n)
+            .unwrap(),
+        &topo,
+        &cost,
+        small,
+    )
+    .unwrap()
+    .total_time;
+    let ideal = (n - 1) as f64 / patcol::core::ceil_log2(n) as f64;
+    println!(
+        "small-size speedup ring/pat = {:.1}x (step-count ideal {:.1}x)",
+        ring / pat,
+        ideal
+    );
+    report.param("small_speedup", Json::num(ring / pat));
+    report.param("ideal_speedup", Json::num(ideal));
+
+    // Large-size bandwidth parity: pat(a=1)'s full-buffer schedule within
+    // 1.3x of ring.
+    let big = *sizes.last().unwrap();
+    let ring_b = simulate(
+        &sched::generate(Algorithm::Ring, Collective::AllGather, n).unwrap(),
+        &topo,
+        &cost,
+        big,
+    )
+    .unwrap()
+    .total_time;
+    let pat1_b = simulate(
+        &sched::generate(Algorithm::Pat { aggregation: 1 }, Collective::AllGather, n).unwrap(),
+        &topo,
+        &cost,
+        big,
+    )
+    .unwrap()
+    .total_time;
+    println!(
+        "large-size parity pat(a=1)/ring = {:.2} (→ 1.0 means full bandwidth)",
+        pat1_b / ring_b
+    );
+    report.param("large_parity", Json::num(pat1_b / ring_b));
+    report.save().unwrap();
+}

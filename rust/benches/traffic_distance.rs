@@ -1,0 +1,108 @@
+//! P2 / Figs. 1–3 — long-distance traffic and static-routing congestion.
+//!
+//! The paper's core argument against classic Bruck / recursive doubling:
+//! "their last steps consist in every rank sending a lot of data to very
+//! distant ranks, often crossing many levels of network switches … the
+//! last step frequently runs many times slower than the theory due to
+//! static routing, or due to higher levels of the fabric being tapered."
+//!
+//! This bench runs all algorithms on a 3-level fat-tree with a tapered top
+//! tier and static ECMP, reporting (a) bytes crossing each fabric level,
+//! (b) the bytes×links long-haul metric, and (c) simulated completion
+//! time. PAT should move the least data across the top tier and win
+//! end-to-end.
+
+use patcol::core::{Algorithm, Collective};
+use patcol::report::Report;
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn main() {
+    let n = 128usize;
+    // 4 pods x 4 leaves x 8 ranks; top tier tapered to 1/4.
+    let topo = Topology::three_level(n, 8, 4, 4, 2, CostModel::ib_hdr_nic_bw(), 1.0, 0.25)
+        .unwrap();
+    let cost = CostModel::ib_hdr();
+    let chunk = 256 << 10; // bandwidth-relevant size
+    let algs = [
+        Algorithm::Ring,
+        Algorithm::BruckNearFirst,
+        Algorithm::Recursive,
+        Algorithm::BruckFarFirst,
+        Algorithm::Pat { aggregation: 4 },
+        Algorithm::Pat { aggregation: 1 },
+    ];
+
+    let mut report = Report::new("traffic_distance");
+    report.param("nranks", Json::num(n as f64));
+    report.param("topology", Json::str(topo.name.clone()));
+    report.param("chunk_bytes", Json::num(chunk as f64));
+
+    println!(
+        "\nall-gather on {} ({} per rank), tapered top tier (x0.25), static ECMP:",
+        topo.name,
+        fmt_bytes(chunk)
+    );
+    let mut t = Table::new([
+        "algorithm",
+        "leaf-local",
+        "pod level",
+        "top level",
+        "bytes*links",
+        "time",
+    ]);
+    for alg in &algs {
+        let prog = sched::generate(*alg, Collective::AllGather, n).unwrap();
+        let rep = simulate(&prog, &topo, &cost, chunk).unwrap();
+        t.row([
+            alg.name(),
+            fmt_bytes(rep.bytes_by_level[0]),
+            fmt_bytes(rep.bytes_by_level[1]),
+            fmt_bytes(rep.bytes_by_level[2]),
+            format!("{:.2e}", rep.bytes_links),
+            fmt_time_s(rep.total_time),
+        ]);
+        report.rows.push(Json::obj(vec![
+            ("algorithm", Json::str(alg.name())),
+            ("bytes_leaf", Json::num(rep.bytes_by_level[0] as f64)),
+            ("bytes_pod", Json::num(rep.bytes_by_level[1] as f64)),
+            ("bytes_top", Json::num(rep.bytes_by_level[2] as f64)),
+            ("bytes_links", Json::num(rep.bytes_links)),
+            ("time", Json::num(rep.total_time)),
+            ("max_link_bytes", Json::num(rep.max_link_bytes as f64)),
+        ]));
+    }
+    print!("{}", t.render());
+
+    // Headline assertion: classic Bruck pushes far more bytes over the top
+    // tier than PAT, and loses end-to-end on the tapered fabric.
+    let get = |alg: Algorithm| {
+        let prog = sched::generate(alg, Collective::AllGather, n).unwrap();
+        simulate(&prog, &topo, &cost, chunk).unwrap()
+    };
+    let bruck = get(Algorithm::BruckNearFirst);
+    let patr = get(Algorithm::Pat { aggregation: 4 });
+    println!(
+        "\ntop-tier bytes: bruck_near {} vs pat {} ({:.1}x less long-haul)",
+        fmt_bytes(bruck.bytes_by_level[2]),
+        fmt_bytes(patr.bytes_by_level[2]),
+        bruck.bytes_by_level[2] as f64 / patr.bytes_by_level[2].max(1) as f64
+    );
+    println!(
+        "completion: bruck_near {} vs pat {} ({:.1}x faster on the tapered fabric)",
+        fmt_time_s(bruck.total_time),
+        fmt_time_s(patr.total_time),
+        bruck.total_time / patr.total_time
+    );
+    report.param(
+        "bruck_over_pat_top_bytes",
+        Json::num(bruck.bytes_by_level[2] as f64 / patr.bytes_by_level[2].max(1) as f64),
+    );
+    report.param(
+        "bruck_over_pat_time",
+        Json::num(bruck.total_time / patr.total_time),
+    );
+    report.save().unwrap();
+}

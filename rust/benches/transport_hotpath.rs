@@ -1,0 +1,139 @@
+//! HOT — wall-clock performance of the real transport hot path (the part
+//! the perf pass optimizes; EXPERIMENTS.md §Perf records before/after).
+//!
+//! Measures, with the in-repo harness (criterion is unavailable offline):
+//! * the scalar reduction kernel's memory bandwidth,
+//! * end-to-end all-gather / reduce-scatter wall time and effective
+//!   algorithm bandwidth across sizes on 8 threaded ranks,
+//! * allocation pressure (pool slots allocated per op).
+
+use patcol::bench::{bench, black_box, BenchOpts};
+use patcol::report::Report;
+use patcol::sched::{pat, ring};
+use patcol::transport::datapath::scalar_add;
+use patcol::transport::{run_allgather, run_allgather_into, run_reduce_scatter, TransportOptions};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+use patcol::util::Rng;
+
+fn main() {
+    let mut report = Report::new("transport_hotpath");
+    let opts = BenchOpts::default();
+
+    // --- scalar reduce kernel roofline ------------------------------------
+    println!("\nscalar reduction kernel (acc += x):");
+    for n in [4 << 10, 256 << 10, 4 << 20] {
+        let elems = n / 4;
+        let mut acc = vec![1.0f32; elems];
+        let x = vec![2.0f32; elems];
+        let m = bench(&format!("scalar_add {}", fmt_bytes(n)), &opts, || {
+            scalar_add(black_box(&mut acc), black_box(&x));
+        });
+        // 2 reads + 1 write per element
+        let bytes = 3.0 * n as f64;
+        println!(
+            "  {}  ({}/s)",
+            m.line(),
+            fmt_bytes((bytes / m.per_iter()) as usize)
+        );
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("scalar_add")),
+            ("bytes", Json::num(n as f64)),
+            ("per_iter_s", Json::num(m.per_iter())),
+            ("gbps", Json::num(bytes / m.per_iter() / 1e9)),
+        ]));
+    }
+
+    // --- end-to-end transport --------------------------------------------
+    let n = 8usize;
+    let topts = TransportOptions {
+        validate: false,
+        ..Default::default()
+    };
+    println!("\nthreaded transport, {n} ranks (wall time per collective):");
+    let mut table = Table::new(["op", "size/rank", "alg", "wall p50", "algbw", "allocs"]);
+    for &chunk_bytes in &[16usize << 10, 256 << 10, 4 << 20] {
+        let chunk = chunk_bytes / 4;
+        let mut rng = Rng::new(1);
+
+        // all-gather
+        let ag_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; chunk];
+                rng.fill_f32(&mut v);
+                v
+            })
+            .collect();
+        for (name, prog) in [
+            ("pat(a=2)", pat::allgather(n, 2)),
+            ("ring", ring::allgather(n)),
+        ] {
+            let mut outputs: Vec<Vec<f32>> = vec![vec![0f32; n * chunk]; n];
+            let m = bench(&format!("ag {name} {}", fmt_bytes(chunk_bytes)), &opts, || {
+                run_allgather_into(
+                    black_box(&prog),
+                    black_box(&ag_in),
+                    black_box(&mut outputs),
+                    &topts,
+                )
+                .unwrap();
+            });
+            let payload = ((n - 1) * chunk * 4) as f64;
+            let (_, rep) = run_allgather(&prog, &ag_in, &topts).unwrap();
+            table.row([
+                "all-gather".into(),
+                fmt_bytes(chunk_bytes),
+                name.to_string(),
+                fmt_time_s(m.per_iter()),
+                format!("{}/s", fmt_bytes((payload / m.per_iter()) as usize)),
+                format!("{}", rep.slots_allocated),
+            ]);
+            report.rows.push(Json::obj(vec![
+                ("kind", Json::str("allgather")),
+                ("alg", Json::str(name)),
+                ("chunk_bytes", Json::num(chunk_bytes as f64)),
+                ("wall_s", Json::num(m.per_iter())),
+                ("algbw_gbps", Json::num(payload / m.per_iter() / 1e9)),
+                ("allocs", Json::num(rep.slots_allocated as f64)),
+            ]));
+        }
+
+        // reduce-scatter
+        let rs_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; n * chunk];
+                rng.fill_f32(&mut v);
+                v
+            })
+            .collect();
+        for (name, prog) in [
+            ("pat(a=2)", pat::reduce_scatter(n, 2)),
+            ("ring", ring::reduce_scatter(n)),
+        ] {
+            let m = bench(&format!("rs {name} {}", fmt_bytes(chunk_bytes)), &opts, || {
+                let out = run_reduce_scatter(black_box(&prog), black_box(&rs_in), &topts).unwrap();
+                black_box(out);
+            });
+            let payload = ((n - 1) * chunk * 4) as f64;
+            let (_, rep) = run_reduce_scatter(&prog, &rs_in, &topts).unwrap();
+            table.row([
+                "reduce-scatter".into(),
+                fmt_bytes(chunk_bytes),
+                name.to_string(),
+                fmt_time_s(m.per_iter()),
+                format!("{}/s", fmt_bytes((payload / m.per_iter()) as usize)),
+                format!("{}", rep.slots_allocated),
+            ]);
+            report.rows.push(Json::obj(vec![
+                ("kind", Json::str("reduce_scatter")),
+                ("alg", Json::str(name)),
+                ("chunk_bytes", Json::num(chunk_bytes as f64)),
+                ("wall_s", Json::num(m.per_iter())),
+                ("algbw_gbps", Json::num(payload / m.per_iter() / 1e9)),
+                ("allocs", Json::num(rep.slots_allocated as f64)),
+            ]));
+        }
+    }
+    print!("{}", table.render());
+    report.save().unwrap();
+}

@@ -1,0 +1,143 @@
+//! Micro-benchmark harness (criterion is unavailable in this offline
+//! environment, so the measurement substrate is built here): warmup,
+//! auto-calibrated iteration counts, outlier-robust summaries, and a
+//! consistent text+JSON reporting format shared by all `cargo bench`
+//! targets.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    pub iters_per_sample: usize,
+    pub samples: usize,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Target duration for one sample batch.
+    pub sample_target: Duration,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Warmup duration.
+    pub warmup: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            sample_target: Duration::from_millis(50),
+            samples: 12,
+            warmup: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Fast preset for expensive bodies (simulator sweeps at scale).
+pub fn quick() -> BenchOpts {
+    BenchOpts {
+        sample_target: Duration::from_millis(20),
+        samples: 5,
+        warmup: Duration::from_millis(20),
+    }
+}
+
+/// Measure `f`, auto-calibrating the per-sample iteration count so each
+/// sample runs for roughly `opts.sample_target`.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> Measurement {
+    // Warmup + calibration.
+    let wstart = Instant::now();
+    let mut calib_iters = 0usize;
+    while wstart.elapsed() < opts.warmup || calib_iters == 0 {
+        f();
+        calib_iters += 1;
+        if calib_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = wstart.elapsed().as_secs_f64() / calib_iters as f64;
+    let iters = ((opts.sample_target.as_secs_f64() / per_iter.max(1e-9)).ceil() as usize)
+        .clamp(1, 10_000_000);
+
+    let mut samples = Vec::with_capacity(opts.samples);
+    for _ in 0..opts.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        iters_per_sample: iters,
+        samples: opts.samples,
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Measurement {
+    pub fn per_iter(&self) -> f64 {
+        self.summary.p50
+    }
+
+    /// `value / seconds` formatted as a rate (e.g. bytes/s).
+    pub fn rate(&self, per_iter_units: f64) -> f64 {
+        per_iter_units / self.per_iter()
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<42} p50 {:>12}  mean {:>12}  rsd {:>5.1}%  (n={} x {})",
+            self.name,
+            crate::util::table::fmt_time_s(self.summary.p50),
+            crate::util::table::fmt_time_s(self.summary.mean),
+            self.summary.rsd() * 100.0,
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let opts = BenchOpts {
+            sample_target: Duration::from_millis(2),
+            samples: 3,
+            warmup: Duration::from_millis(2),
+        };
+        let mut acc = 0u64;
+        let m = bench("noop-ish", &opts, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.per_iter() > 0.0);
+        assert!(m.per_iter() < 1e-3);
+        assert_eq!(m.samples, 3);
+    }
+
+    #[test]
+    fn line_formats() {
+        let m = Measurement {
+            name: "x".into(),
+            summary: Summary::of(&[1e-6, 1.1e-6, 0.9e-6]),
+            iters_per_sample: 10,
+            samples: 3,
+        };
+        assert!(m.line().contains("p50"));
+    }
+}

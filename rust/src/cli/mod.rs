@@ -1,0 +1,140 @@
+//! Minimal CLI argument parser (clap is unavailable offline): a
+//! subcommand plus `--key value` / `--flag` pairs with typed accessors and
+//! generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::core::{Error, Result};
+use crate::coordinator::config::parse_bytes;
+
+/// Parsed command line: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token is the subcommand; `--key value`
+    /// pairs and bare `--flag`s follow.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --option, got {tok:?}")))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    opts.insert(key, it.next().unwrap());
+                }
+                _ => flags.push(key),
+            }
+        }
+        Ok(Args { command, opts, flags })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.opts.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.opts.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: bad integer {v:?}"))),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: bad float {v:?}"))),
+        }
+    }
+
+    /// Parse a byte size (`--size 1MiB`).
+    pub fn bytes(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => parse_bytes(v),
+        }
+    }
+
+    /// Comma-separated list of usizes (`--ranks 8,16,32`).
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.opts.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{name}: bad integer {t:?}")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated byte sizes (`--sizes 1KiB,64KiB,4MiB`).
+    pub fn bytes_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.opts.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v.split(',').map(|t| parse_bytes(t.trim())).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args("run --ranks 16 --alg pat:2 --verbose --size 4KiB");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.usize("ranks", 0).unwrap(), 16);
+        assert_eq!(a.str("alg", ""), "pat:2");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.bytes("size", 0).unwrap(), 4096);
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("sweep --ranks 8,16,32 --sizes 1KiB,1MiB");
+        assert_eq!(a.usize_list("ranks", &[]).unwrap(), vec![8, 16, 32]);
+        assert_eq!(a.bytes_list("sizes", &[]).unwrap(), vec![1024, 1 << 20]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("run");
+        assert_eq!(a.usize("ranks", 8).unwrap(), 8);
+        assert_eq!(a.str("alg", "pat_auto"), "pat_auto");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(vec!["run".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! The public communicator API — the NCCL-equivalent object a framework
+//! holds per process group.
+//!
+//! A [`Communicator`] owns: the resolved datapath (scalar or the PJRT
+//! service running the AOT Pallas kernels), a program cache (schedules are
+//! generated once per (collective, algorithm, nranks) and reused), and the
+//! tuner used when no algorithm is pinned.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Algorithm, Collective, Error, Result};
+use crate::coordinator::tuner::Tuner;
+use crate::runtime::{PjrtService, Registry};
+use crate::sched::{self, program::Program};
+use crate::transport::{self, DataPath, TransportOptions, TransportReport};
+
+/// Which reduction backend the communicator uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DataPathKind {
+    /// Pure-rust reduction (always available).
+    #[default]
+    Scalar,
+    /// AOT Pallas kernels through PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Communicator configuration.
+#[derive(Debug, Clone)]
+pub struct CommConfig {
+    pub nranks: usize,
+    /// Pinned algorithm; `None` lets the tuner decide per call.
+    pub algorithm: Option<Algorithm>,
+    /// Intermediate-buffer budget in chunk slots (drives PAT aggregation
+    /// and is enforced by the transport buffer pool).
+    pub buffer_slots: Option<usize>,
+    pub datapath: DataPathKind,
+    /// Artifact directory for the PJRT datapath (default: $PATCOL_ARTIFACTS
+    /// or ./artifacts).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Verify programs before first use (cheap; cached).
+    pub validate: bool,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            nranks: 1,
+            algorithm: None,
+            buffer_slots: None,
+            datapath: DataPathKind::Scalar,
+            artifacts_dir: None,
+            validate: true,
+        }
+    }
+}
+
+/// Result metadata for one collective call.
+#[derive(Debug, Clone)]
+pub struct CollectiveReport {
+    pub algorithm: Algorithm,
+    pub steps: usize,
+    pub transport: TransportReport,
+}
+
+/// An NCCL-like communicator over `nranks` in-process ranks.
+pub struct Communicator {
+    cfg: CommConfig,
+    datapath: DataPath,
+    _service: Option<PjrtService>,
+    tuner: Tuner,
+    cache: Mutex<HashMap<(Collective, String), Arc<Program>>>,
+}
+
+impl Communicator {
+    pub fn new(cfg: CommConfig) -> Result<Communicator> {
+        if cfg.nranks == 0 {
+            return Err(Error::Config("nranks must be >= 1".into()));
+        }
+        if let Some(alg) = cfg.algorithm {
+            if !alg.supports(cfg.nranks) {
+                return Err(Error::Config(format!(
+                    "{alg} does not support nranks={}",
+                    cfg.nranks
+                )));
+            }
+        }
+        let (datapath, service) = match cfg.datapath {
+            DataPathKind::Scalar => (DataPath::Scalar, None),
+            DataPathKind::Pjrt => {
+                let dir = cfg
+                    .artifacts_dir
+                    .clone()
+                    .unwrap_or_else(Registry::default_dir);
+                let (svc, handle) = PjrtService::spawn(dir)?;
+                (DataPath::Pjrt(handle), Some(svc))
+            }
+        };
+        Ok(Communicator {
+            cfg,
+            datapath,
+            _service: service,
+            tuner: Tuner::default(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.cfg.nranks
+    }
+
+    pub fn tuner(&self) -> &Tuner {
+        &self.tuner
+    }
+
+    /// Resolve the algorithm for this call (pinned, or tuned from the
+    /// message size and buffer budget).
+    pub fn resolve(&self, coll: Collective, chunk_bytes: usize) -> Algorithm {
+        match self.cfg.algorithm {
+            Some(Algorithm::PatAuto) | None => {
+                let slots = self.cfg.buffer_slots.unwrap_or(usize::MAX / 2);
+                self.tuner
+                    .choose(self.cfg.nranks, chunk_bytes, slots, coll)
+                    .algorithm
+            }
+            Some(alg) => alg,
+        }
+    }
+
+    fn program(&self, coll: Collective, alg: Algorithm) -> Result<Arc<Program>> {
+        let key = (coll, alg.name());
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(p) = cache.get(&key) {
+                return Ok(p.clone());
+            }
+        }
+        let prog = sched::generate(alg, coll, self.cfg.nranks)?;
+        if self.cfg.validate {
+            sched::verify::verify_program(&prog)?;
+        }
+        let prog = Arc::new(prog);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, prog.clone());
+        Ok(prog)
+    }
+
+    fn options(&self) -> TransportOptions {
+        TransportOptions {
+            datapath: self.datapath.clone(),
+            slot_capacity: self.cfg.buffer_slots,
+            staged: true,
+            // programs are verified once at cache fill, not per call
+            validate: false,
+            ..Default::default()
+        }
+    }
+
+    /// All-gather: `inputs[r]` is rank r's contribution; every output is
+    /// the concatenation of all contributions.
+    pub fn all_gather(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self.all_gather_report(inputs)?.0)
+    }
+
+    /// All-gather returning execution metadata.
+    pub fn all_gather_report(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, CollectiveReport)> {
+        let chunk_bytes = inputs.first().map(|v| v.len() * 4).unwrap_or(0);
+        let alg = self.resolve(Collective::AllGather, chunk_bytes);
+        let prog = self.program(Collective::AllGather, alg)?;
+        let (out, rep) = transport::run_allgather(&prog, inputs, &self.options())?;
+        Ok((
+            out,
+            CollectiveReport { algorithm: alg, steps: prog.steps, transport: rep },
+        ))
+    }
+
+    /// Reduce-scatter: `inputs[r]` holds rank r's contribution to all `n`
+    /// chunks; output `r` is the element-wise sum of chunk `r`.
+    pub fn reduce_scatter(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self.reduce_scatter_report(inputs)?.0)
+    }
+
+    /// All-reduce, composed the NCCL way from the paper's two collectives:
+    /// reduce-scatter the padded input into shards, then all-gather the
+    /// shards. Every rank returns the full element-wise sum.
+    ///
+    /// Input vectors may have any (uniform) length; shards are padded to
+    /// `ceil(len / n)` internally and the padding is stripped on return.
+    pub fn all_reduce(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let n = self.cfg.nranks;
+        if inputs.len() != n {
+            return Err(Error::Config(format!(
+                "expected {n} inputs, got {}",
+                inputs.len()
+            )));
+        }
+        let len = inputs.first().map(Vec::len).unwrap_or(0);
+        if inputs.iter().any(|v| v.len() != len) {
+            return Err(Error::Config("ragged all-reduce inputs".into()));
+        }
+        let chunk = len.div_ceil(n.max(1)).max(1);
+        let padded = chunk * n;
+        let padded_inputs: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|v| {
+                let mut p = v.clone();
+                p.resize(padded, 0.0);
+                p
+            })
+            .collect();
+        let shards = self.reduce_scatter(&padded_inputs)?;
+        let gathered = self.all_gather(&shards)?;
+        Ok(gathered
+            .into_iter()
+            .map(|mut v| {
+                v.truncate(len);
+                v
+            })
+            .collect())
+    }
+
+    /// Reduce-scatter returning execution metadata.
+    pub fn reduce_scatter_report(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, CollectiveReport)> {
+        let n = self.cfg.nranks;
+        let chunk_bytes = inputs
+            .first()
+            .map(|v| v.len() * 4 / n.max(1))
+            .unwrap_or(0);
+        let alg = self.resolve(Collective::ReduceScatter, chunk_bytes);
+        let prog = self.program(Collective::ReduceScatter, alg)?;
+        let (out, rep) = transport::run_reduce_scatter(&prog, inputs, &self.options())?;
+        Ok((
+            out,
+            CollectiveReport { algorithm: alg, steps: prog.steps, transport: rep },
+        ))
+    }
+}
+
+impl std::fmt::Debug for Communicator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Communicator")
+            .field("nranks", &self.cfg.nranks)
+            .field("algorithm", &self.cfg.algorithm)
+            .field("datapath", &self.datapath.name())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn comm(nranks: usize, alg: Option<Algorithm>) -> Communicator {
+        Communicator::new(CommConfig { nranks, algorithm: alg, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn allgather_end_to_end() {
+        let n = 6;
+        let c = comm(n, Some(Algorithm::Pat { aggregation: 2 }));
+        let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 32]).collect();
+        let (out, rep) = c.all_gather_report(&inputs).unwrap();
+        assert_eq!(rep.algorithm, Algorithm::Pat { aggregation: 2 });
+        for o in &out {
+            assert_eq!(o.len(), n * 32);
+            for r in 0..n {
+                assert!(o[r * 32..(r + 1) * 32].iter().all(|&v| v == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_end_to_end() {
+        let n = 5;
+        let c = comm(n, None); // tuned
+        let mut rng = Rng::new(4);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..n * 16).map(|_| rng.below(50) as f32).collect())
+            .collect();
+        let out = c.reduce_scatter(&inputs).unwrap();
+        for r in 0..n {
+            for i in 0..16 {
+                let want: f32 = (0..n).map(|s| inputs[s][r * 16 + i]).sum();
+                assert_eq!(out[r][i], want, "rank {r} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn program_cache_reused() {
+        let c = comm(4, Some(Algorithm::Ring));
+        let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 8]).collect();
+        c.all_gather(&inputs).unwrap();
+        c.all_gather(&inputs).unwrap();
+        assert_eq!(c.cache.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn all_reduce_composed() {
+        // length not divisible by nranks exercises the padding path
+        let n = 6;
+        let len = 50;
+        let c = comm(n, Some(Algorithm::Pat { aggregation: 2 }));
+        let mut rng = Rng::new(8);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let outs = c.all_reduce(&inputs).unwrap();
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out.len(), len, "rank {r}");
+            for i in 0..len {
+                let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(out[i], want, "rank {r} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Communicator::new(CommConfig { nranks: 0, ..Default::default() }).is_err());
+        assert!(Communicator::new(CommConfig {
+            nranks: 6,
+            algorithm: Some(Algorithm::Recursive),
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn tuned_pick_small_message_is_logarithmic() {
+        let c = comm(32, None);
+        let alg = c.resolve(Collective::AllGather, 128);
+        match alg {
+            Algorithm::Pat { aggregation } => assert!(aggregation > 1),
+            other => panic!("expected PAT for small messages, got {other}"),
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Configuration: environment variables (`PATCOL_*`) and simple
+//! `key = value` config files, merged into a [`CommConfig`] and cost-model
+//! overrides. (No serde in this environment — the parser is a small
+//! line-oriented reader with `#` comments.)
+//!
+//! Recognized keys (file and env, env wins; env names are upper-cased with
+//! the `PATCOL_` prefix):
+//!
+//! | key | meaning |
+//! |-----|---------|
+//! | `nranks` | world size |
+//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto` |
+//! | `buffer_slots` | intermediate-buffer budget in chunk slots |
+//! | `datapath` | `scalar` or `pjrt` |
+//! | `artifacts` | artifact directory |
+//! | `validate` | `true`/`false` |
+//! | `alpha_base_us`, `alpha_hop_ns`, `gamma_chunk_ns`, `nic_gbps` | cost-model overrides |
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::core::{Algorithm, Error, Result};
+use crate::coordinator::communicator::{CommConfig, DataPathKind};
+use crate::sim::CostModel;
+
+/// A flat key→value config layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigMap {
+    pub values: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    /// Parse `key = value` lines; `#` starts a comment; blank lines are
+    /// skipped. Keys are lower-cased.
+    pub fn parse(text: &str) -> Result<ConfigMap> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("config line {}: expected key = value", lineno + 1))
+            })?;
+            values.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        Ok(ConfigMap { values })
+    }
+
+    pub fn from_file(path: &Path) -> Result<ConfigMap> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Read `PATCOL_<KEY>` environment overrides for the given keys.
+    pub fn env_overlay(mut self, keys: &[&str]) -> ConfigMap {
+        for k in keys {
+            let env_key = format!("PATCOL_{}", k.to_uppercase());
+            if let Ok(v) = std::env::var(&env_key) {
+                self.values.insert(k.to_string(), v);
+            }
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("{key}: bad integer {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("{key}: bad float {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some("true" | "1" | "yes") => Ok(Some(true)),
+            Some("false" | "0" | "no") => Ok(Some(false)),
+            Some(v) => Err(Error::Config(format!("{key}: bad bool {v:?}"))),
+        }
+    }
+
+    /// Build a [`CommConfig`] from this map.
+    pub fn to_comm_config(&self) -> Result<CommConfig> {
+        let mut cfg = CommConfig::default();
+        if let Some(n) = self.get_usize("nranks")? {
+            cfg.nranks = n;
+        }
+        if let Some(a) = self.get("algorithm") {
+            cfg.algorithm = Some(Algorithm::parse(a)?);
+        }
+        cfg.buffer_slots = self.get_usize("buffer_slots")?;
+        match self.get("datapath") {
+            Some("pjrt") => cfg.datapath = DataPathKind::Pjrt,
+            Some("scalar") | None => {}
+            Some(other) => {
+                return Err(Error::Config(format!("datapath: unknown {other:?}")))
+            }
+        }
+        if let Some(dir) = self.get("artifacts") {
+            cfg.artifacts_dir = Some(PathBuf::from(dir));
+        }
+        if let Some(v) = self.get_bool("validate")? {
+            cfg.validate = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply cost-model overrides, returning `(model, nic_bw)`.
+    pub fn to_cost_model(&self) -> Result<(CostModel, f64)> {
+        let mut cost = CostModel::ib_hdr();
+        let mut nic = CostModel::ib_hdr_nic_bw();
+        if let Some(v) = self.get_f64("alpha_base_us")? {
+            cost.alpha_base = v * 1e-6;
+        }
+        if let Some(v) = self.get_f64("alpha_hop_ns")? {
+            cost.alpha_hop = v * 1e-9;
+        }
+        if let Some(v) = self.get_f64("gamma_chunk_ns")? {
+            cost.gamma_chunk = v * 1e-9;
+        }
+        if let Some(v) = self.get_f64("nic_gbps")? {
+            nic = v * 1e9;
+        }
+        Ok((cost, nic))
+    }
+}
+
+/// Parse a human size like `64`, `4KiB`, `1MiB`, `2GiB` (also `KB`/`MB`/
+/// `GB` as power-of-two for CLI convenience).
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: usize = num
+        .parse()
+        .map_err(|_| Error::Config(format!("bad size {s:?}")))?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        other => return Err(Error::Config(format!("bad size unit {other:?}"))),
+    };
+    Ok(n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_file_and_build() {
+        let cfg = ConfigMap::parse(
+            "# comment\nnranks = 16\nalgorithm = pat:4\nbuffer_slots = 32\nvalidate = false\n",
+        )
+        .unwrap();
+        let cc = cfg.to_comm_config().unwrap();
+        assert_eq!(cc.nranks, 16);
+        assert_eq!(cc.algorithm, Some(Algorithm::Pat { aggregation: 4 }));
+        assert_eq!(cc.buffer_slots, Some(32));
+        assert!(!cc.validate);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(ConfigMap::parse("nonsense line").is_err());
+        let cfg = ConfigMap::parse("nranks = abc").unwrap();
+        assert!(cfg.to_comm_config().is_err());
+    }
+
+    #[test]
+    fn cost_overrides() {
+        let cfg = ConfigMap::parse("alpha_base_us = 5\nnic_gbps = 100\n").unwrap();
+        let (cost, nic) = cfg.to_cost_model().unwrap();
+        assert!((cost.alpha_base - 5e-6).abs() < 1e-12);
+        assert_eq!(nic, 100e9);
+    }
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_bytes("64").unwrap(), 64);
+        assert_eq!(parse_bytes("4KiB").unwrap(), 4096);
+        assert_eq!(parse_bytes("1M").unwrap(), 1 << 20);
+        assert_eq!(parse_bytes("2GiB").unwrap(), 2 << 30);
+        assert!(parse_bytes("x").is_err());
+        assert!(parse_bytes("4XB").is_err());
+    }
+
+    #[test]
+    fn env_overlay_wins() {
+        std::env::set_var("PATCOL_NRANKS", "99");
+        let cfg = ConfigMap::parse("nranks = 4").unwrap().env_overlay(&["nranks"]);
+        assert_eq!(cfg.get_usize("nranks").unwrap(), Some(99));
+        std::env::remove_var("PATCOL_NRANKS");
+    }
+}

@@ -1,0 +1,18 @@
+//! The coordinator: the NCCL-like public API ([`Communicator`]), the
+//! algorithm auto-tuner ([`tuner`]), and configuration ([`config`]).
+//!
+//! This is the layer a downstream user programs against:
+//!
+//! ```no_run
+//! use patcol::coordinator::{CommConfig, Communicator};
+//! let comm = Communicator::new(CommConfig { nranks: 8, ..Default::default() }).unwrap();
+//! let inputs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 256]).collect();
+//! let out = comm.all_gather(&inputs).unwrap();
+//! ```
+
+pub mod communicator;
+pub mod tuner;
+pub mod config;
+
+pub use communicator::{CollectiveReport, CommConfig, Communicator, DataPathKind};
+pub use tuner::{Tuner, TunerChoice};

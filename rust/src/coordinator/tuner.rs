@@ -1,0 +1,200 @@
+//! Algorithm auto-selection (what NCCL's tuning model does for PAT vs
+//! Ring): a closed-form α-β-γ cost estimate over the candidate schedules,
+//! constrained by the intermediate-buffer budget.
+//!
+//! The PAT aggregation factor is derived from the buffer budget using the
+//! measured accumulator law (see `sched::pat`): a reduce-scatter with
+//! aggregation `a` needs `a · log2(n/a)` persistent chunk slots, an
+//! all-gather needs `a` transient slots per transfer. The tuner picks the
+//! largest feasible `a`, then compares PAT(a), Ring, and (log-shaped but
+//! congestion-prone) far-first Bruck under the cost model and returns the
+//! cheapest.
+
+use crate::core::{ceil_log2, Algorithm, Collective};
+use crate::sched::pat;
+use crate::sim::CostModel;
+
+/// A tuner decision with its predicted cost.
+#[derive(Debug, Clone)]
+pub struct TunerChoice {
+    pub algorithm: Algorithm,
+    pub predicted_seconds: f64,
+    /// All evaluated candidates (algorithm, predicted seconds), best first.
+    pub candidates: Vec<(Algorithm, f64)>,
+}
+
+/// Closed-form schedule cost estimator.
+#[derive(Debug, Clone)]
+pub struct Tuner {
+    pub cost: CostModel,
+    /// NIC bandwidth (bytes/s) used for serialization estimates.
+    pub nic_bw: f64,
+}
+
+impl Default for Tuner {
+    fn default() -> Self {
+        Tuner { cost: CostModel::ib_hdr(), nic_bw: CostModel::ib_hdr_nic_bw() }
+    }
+}
+
+impl Tuner {
+    /// Largest PAT aggregation whose buffer need fits `buffer_slots` chunk
+    /// slots for this collective.
+    pub fn max_aggregation(
+        &self,
+        nranks: usize,
+        buffer_slots: usize,
+        coll: Collective,
+    ) -> usize {
+        let buffer_slots = buffer_slots.max(1);
+        let full = pat::clamp_aggregation(nranks, usize::MAX);
+        let mut best = 1;
+        let mut a = 1;
+        while a <= full {
+            let need = match coll {
+                Collective::AllGather => a,
+                Collective::ReduceScatter => {
+                    let levels = (ceil_log2(nranks.max(2)) as usize)
+                        .saturating_sub(a.trailing_zeros() as usize)
+                        .max(1);
+                    a * levels
+                }
+            };
+            if need <= buffer_slots {
+                best = a;
+            }
+            if a >= full {
+                break;
+            }
+            a = (a * 2).min(full);
+            if a == best {
+                break;
+            }
+        }
+        best
+    }
+
+    /// Predicted wall time of a PAT schedule: per round, message overhead +
+    /// serialization + local pack cost.
+    pub fn predict_pat(&self, nranks: usize, a: usize, chunk_bytes: usize) -> f64 {
+        let c = &self.cost;
+        let mut t = 0.0;
+        for round in pat::rounds(nranks, a) {
+            let k = round.offsets.len();
+            let bytes = k * chunk_bytes;
+            t += c.alpha_base
+                + bytes as f64 / self.nic_bw
+                + c.pack_cost(k, bytes)
+                + c.msg_gap;
+        }
+        t
+    }
+
+    /// Predicted wall time of the ring schedule: n-1 back-to-back single
+    /// chunk transfers; the pipeline overlaps serialization, so latency is
+    /// (n-1)·(α + gap) + serialization of the payload.
+    pub fn predict_ring(&self, nranks: usize, chunk_bytes: usize) -> f64 {
+        if nranks <= 1 {
+            return 0.0;
+        }
+        let c = &self.cost;
+        let steps = (nranks - 1) as f64;
+        steps * (c.alpha_base + c.msg_gap + chunk_bytes as f64 / self.nic_bw)
+    }
+
+    /// Predicted wall time of far-first Bruck (fully aggregated): log
+    /// rounds of doubling payload, plus pack costs.
+    pub fn predict_bruck(&self, nranks: usize, chunk_bytes: usize) -> f64 {
+        self.predict_pat(nranks, usize::MAX, chunk_bytes)
+    }
+
+    /// Choose an algorithm for `nranks`, `chunk_bytes` per rank, and a
+    /// `buffer_slots`-chunk intermediate buffer.
+    pub fn choose(
+        &self,
+        nranks: usize,
+        chunk_bytes: usize,
+        buffer_slots: usize,
+        coll: Collective,
+    ) -> TunerChoice {
+        let a = self.max_aggregation(nranks, buffer_slots, coll);
+        let mut candidates = vec![
+            (Algorithm::Pat { aggregation: a }, self.predict_pat(nranks, a, chunk_bytes)),
+            (Algorithm::Ring, self.predict_ring(nranks, chunk_bytes)),
+        ];
+        // Also consider intermediate aggregations (a smaller a can win when
+        // pack cost dominates).
+        let mut sub = a;
+        while sub > 1 {
+            sub /= 2;
+            candidates.push((
+                Algorithm::Pat { aggregation: sub },
+                self.predict_pat(nranks, sub, chunk_bytes),
+            ));
+        }
+        candidates.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+        TunerChoice {
+            algorithm: candidates[0].0,
+            predicted_seconds: candidates[0].1,
+            candidates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_messages_pick_pat_large_pick_ring_or_pat1() {
+        let t = Tuner::default();
+        let small = t.choose(64, 256, 1 << 20, Collective::AllGather);
+        assert!(
+            matches!(small.algorithm, Algorithm::Pat { aggregation } if aggregation > 1),
+            "{:?}",
+            small.algorithm
+        );
+        // At huge sizes the per-chunk pack cost and serialization dominate:
+        // ring (contiguous, pipelined) or pat(a=1) (also contiguous) win.
+        let large = t.choose(64, 64 << 20, 1 << 20, Collective::AllGather);
+        match large.algorithm {
+            Algorithm::Ring | Algorithm::Pat { aggregation: 1 } => {}
+            other => panic!("large message picked {other:?}"),
+        }
+    }
+
+    #[test]
+    fn buffer_budget_caps_aggregation() {
+        let t = Tuner::default();
+        // RS on 64 ranks: a=8 needs 8*log2(64/8)=24 slots.
+        assert_eq!(t.max_aggregation(64, 24, Collective::ReduceScatter), 8);
+        assert_eq!(t.max_aggregation(64, 23, Collective::ReduceScatter), 4);
+        assert_eq!(t.max_aggregation(64, 1, Collective::ReduceScatter), 1);
+        // AG is bounded by the transfer itself.
+        assert_eq!(t.max_aggregation(64, 8, Collective::AllGather), 8);
+    }
+
+    #[test]
+    fn predictions_monotone_in_ranks() {
+        let t = Tuner::default();
+        assert!(t.predict_ring(128, 1024) > t.predict_ring(16, 1024));
+        assert!(t.predict_pat(128, 8, 1024) > t.predict_pat(16, 8, 1024));
+    }
+
+    /// The tuner's pick must be within 5% of the best candidate it saw
+    /// (trivially true) and PAT must beat ring by ~(n-1)/log2(n) at tiny
+    /// sizes.
+    #[test]
+    fn pat_speedup_at_small_sizes() {
+        let t = Tuner::default();
+        let n = 128;
+        let pat_t = t.predict_pat(n, 64, 64);
+        let ring_t = t.predict_ring(n, 64);
+        let speedup = ring_t / pat_t;
+        let ideal = (n - 1) as f64 / (ceil_log2(n) as f64);
+        assert!(
+            speedup > ideal * 0.5,
+            "speedup {speedup:.1} vs ideal {ideal:.1}"
+        );
+    }
+}

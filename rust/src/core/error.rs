@@ -1,0 +1,38 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("schedule error: {0}")]
+    Schedule(String),
+
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    #[error("verification failed: {0}")]
+    Verify(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    #[error("unsupported: {0}")]
+    Unsupported(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}

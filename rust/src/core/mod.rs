@@ -1,0 +1,234 @@
+//! Core types shared by every layer: ranks, chunks, collectives, algorithms,
+//! element types and error handling.
+
+pub mod error;
+
+pub use error::{Error, Result};
+
+use std::fmt;
+
+/// A rank id within a communicator, `0..nranks`.
+pub type Rank = usize;
+
+/// A chunk id. For all-gather, chunk `c` is the contribution of rank `c`
+/// (and ends up in slot `c` of every receive buffer). For reduce-scatter,
+/// chunk `c` is the slice of every rank's send buffer that reduces to rank
+/// `c`'s output.
+pub type ChunkId = usize;
+
+/// The two collectives PAT implements (the paper's scope).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    /// Every rank contributes one chunk; every rank ends with all `n` chunks.
+    AllGather,
+    /// Every rank contributes `n` chunks; rank `r` ends with the element-wise
+    /// sum over ranks of chunk `r`.
+    ReduceScatter,
+}
+
+impl Collective {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Collective::AllGather => "all_gather",
+            Collective::ReduceScatter => "reduce_scatter",
+        }
+    }
+}
+
+impl fmt::Display for Collective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Algorithm selection for a collective operation.
+///
+/// `Ring` is NCCL's historical AG/RS algorithm (linear step count, full
+/// bandwidth). `BruckNearFirst`/`BruckFarFirst` and `RecursiveDoubling` (AG) /
+/// `RecursiveHalving` (RS) are the classic logarithmic baselines discussed in
+/// the paper. `Pat` is the paper's contribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Ring,
+    /// Classic Bruck dimension order: nearest dimension first (paper Fig. 1).
+    BruckNearFirst,
+    /// Dimension-reversed Bruck: farthest dimension first (paper Fig. 3).
+    BruckFarFirst,
+    /// Recursive doubling (AG) / halving (RS); power-of-two ranks only.
+    Recursive,
+    /// Parallel Aggregated Trees with at most `aggregation` parallel trees
+    /// (chunks aggregated per transfer). `aggregation` is clamped to a power
+    /// of two in `[1, 2^(ceil(log2 n) - 1)]`.
+    Pat { aggregation: usize },
+    /// PAT with aggregation chosen from the intermediate-buffer budget and
+    /// the operation size (what the tuner does in NCCL).
+    PatAuto,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::Ring => "ring".into(),
+            Algorithm::BruckNearFirst => "bruck_near".into(),
+            Algorithm::BruckFarFirst => "bruck_far".into(),
+            Algorithm::Recursive => "recursive".into(),
+            Algorithm::Pat { aggregation } if *aggregation >= usize::MAX / 2 => {
+                "pat(full)".into()
+            }
+            Algorithm::Pat { aggregation } => format!("pat(a={aggregation})"),
+            Algorithm::PatAuto => "pat_auto".into(),
+        }
+    }
+
+    /// Parse a CLI/config spelling: `ring`, `bruck_near`, `bruck_far`,
+    /// `recursive`, `pat`, `pat:<agg>`, `pat_auto`.
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("pat:") {
+            let a: usize = rest
+                .parse()
+                .map_err(|_| Error::Config(format!("bad pat aggregation: {rest:?}")))?;
+            if a == 0 {
+                return Err(Error::Config("pat aggregation must be >= 1".into()));
+            }
+            return Ok(Algorithm::Pat { aggregation: a });
+        }
+        match s {
+            "ring" => Ok(Algorithm::Ring),
+            "bruck_near" | "bruck" => Ok(Algorithm::BruckNearFirst),
+            "bruck_far" => Ok(Algorithm::BruckFarFirst),
+            "recursive" | "rd" | "rh" => Ok(Algorithm::Recursive),
+            "pat" => Ok(Algorithm::Pat { aggregation: usize::MAX }),
+            "pat_auto" => Ok(Algorithm::PatAuto),
+            other => Err(Error::Config(format!("unknown algorithm {other:?}"))),
+        }
+    }
+
+    /// Does this algorithm support `nranks`?
+    pub fn supports(&self, nranks: usize) -> bool {
+        match self {
+            Algorithm::Recursive => nranks.is_power_of_two(),
+            _ => nranks >= 1,
+        }
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Element types supported on the datapath. The wire format is always raw
+/// little-endian bytes; reduction kernels exist for each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// Ceiling log2 for schedule dimensioning. `ceil_log2(1) == 0`.
+pub fn ceil_log2(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    usize::BITS - (n - 1).leading_zeros()
+}
+
+/// Floor log2. `floor_log2(1) == 0`.
+pub fn floor_log2(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    usize::BITS - 1 - n.leading_zeros()
+}
+
+/// Ideal (perfectly packed) step count of the PAT schedule for `nranks`
+/// with aggregation `a`: `Σ_d ceil(|O_d| / a)` where `|O_d|` counts offsets
+/// `o ≡ 0 (mod 2^{d+1})` with `o + 2^d < nranks`.
+///
+/// The implemented schedule achieves this exactly for power-of-two rank
+/// counts (and for `a = 1` / full aggregation on any count); for awkward
+/// counts the lockstep depth-first linear phase may leave partially-empty
+/// rounds and use up to `n-1` steps (see `sched::pat`).
+pub fn pat_step_count(nranks: usize, a: usize) -> usize {
+    debug_assert!(a >= 1);
+    if nranks <= 1 {
+        return 0;
+    }
+    let dmax = floor_log2(nranks - 1); // highest dim with any transfer
+    let mut steps = 0usize;
+    for d in 0..=dmax {
+        let stride = 1usize << (d + 1);
+        let span = nranks - (1usize << d); // o in [0, span), o % stride == 0
+        let od = (span + stride - 1) / stride;
+        steps += (od + a - 1) / a;
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_helpers() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(floor_log2(1), 0);
+        assert_eq!(floor_log2(8), 3);
+        assert_eq!(floor_log2(9), 3);
+    }
+
+    #[test]
+    fn step_counts_match_paper_figures() {
+        // N=8: full Bruck 3 steps; agg 2 -> 4 (Figs 5-6); agg 1 -> 7 (Fig 10).
+        assert_eq!(pat_step_count(8, 4), 3);
+        assert_eq!(pat_step_count(8, 2), 4);
+        assert_eq!(pat_step_count(8, 1), 7);
+        // N=16: 8 trees -> 4 (Fig 7); 4 trees -> 5 (Fig 8); 2 trees -> 8 (Fig 9).
+        assert_eq!(pat_step_count(16, 8), 4);
+        assert_eq!(pat_step_count(16, 4), 5);
+        assert_eq!(pat_step_count(16, 2), 8);
+        assert_eq!(pat_step_count(16, 1), 15);
+    }
+
+    #[test]
+    fn step_count_fully_linear_is_nminus1() {
+        for n in 2..70 {
+            assert_eq!(pat_step_count(n, 1), n - 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        assert_eq!(Algorithm::parse("ring").unwrap(), Algorithm::Ring);
+        assert_eq!(Algorithm::parse("pat:4").unwrap(), Algorithm::Pat { aggregation: 4 });
+        assert_eq!(Algorithm::parse("bruck_far").unwrap(), Algorithm::BruckFarFirst);
+        assert!(Algorithm::parse("nope").is_err());
+        assert!(Algorithm::parse("pat:0").is_err());
+    }
+
+    #[test]
+    fn recursive_requires_pow2() {
+        assert!(Algorithm::Recursive.supports(8));
+        assert!(!Algorithm::Recursive.supports(7));
+        assert!(Algorithm::Pat { aggregation: 1 }.supports(7));
+    }
+}

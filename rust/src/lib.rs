@@ -1,0 +1,56 @@
+//! # patcol — PAT collective communication library
+//!
+//! A production-shaped reproduction of *"PAT: a new algorithm for all-gather
+//! and reduce-scatter operations at scale"* (Sylvain Jeaugey, NVIDIA, 2025).
+//!
+//! PAT (Parallel Aggregated Trees) implements all-gather and reduce-scatter
+//! with a logarithmic number of network transfers for small operations,
+//! minimal long-distance communication, and a logarithmic amount of internal
+//! buffering independent of the operation size — degrading gracefully to a
+//! full-bandwidth linear schedule as buffer pressure grows.
+//!
+//! The crate is organized as an NCCL-like stack:
+//!
+//! * [`sched`] — schedule generators (PAT plus the Ring, Bruck, recursive
+//!   doubling/halving baselines) emitting a common per-rank program IR.
+//! * [`transport`] — an in-process, threaded, real-byte-moving execution
+//!   engine with staging/accumulator buffer pools (the PAT buffer-occupancy
+//!   invariants are enforced here).
+//! * [`sim`] — an event-driven network simulator (fat-tree topologies,
+//!   static ECMP routing, α-β-γ cost model with link contention) used for
+//!   at-scale evaluation.
+//! * [`runtime`] — PJRT bridge executing AOT-compiled JAX/Pallas reduction
+//!   kernels (HLO text artifacts) on the reduce-scatter datapath.
+//! * [`coordinator`] — the public [`coordinator::Communicator`] API plus the
+//!   algorithm auto-tuner and configuration.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use patcol::coordinator::{Communicator, CommConfig};
+//! use patcol::core::Algorithm;
+//!
+//! let comm = Communicator::new(CommConfig {
+//!     nranks: 8,
+//!     algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+//!     ..Default::default()
+//! }).unwrap();
+//! // one send buffer per rank, 1024 f32 each
+//! let inputs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 1024]).collect();
+//! let gathered = comm.all_gather(&inputs).unwrap();
+//! assert_eq!(gathered[0].len(), 8 * 1024);
+//! ```
+
+pub mod core;
+pub mod util;
+pub mod sched;
+pub mod sim;
+pub mod transport;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod cli;
+pub mod report;
+
+pub use crate::core::{Algorithm, Collective, Rank};
+pub use crate::coordinator::{CommConfig, Communicator};

@@ -1,0 +1,340 @@
+//! `patcol` — the command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `explain`  — print a schedule step-by-step + the PAT tree (regenerates
+//!   the paper's figures as text).
+//! * `run`      — execute a collective on the in-process transport with
+//!   real bytes (optionally through the PJRT Pallas datapath).
+//! * `simulate` — run a schedule through the network simulator at scale.
+//! * `sweep`    — compare algorithms across sizes on the simulator.
+//! * `tune`     — show the tuner's decision for a configuration.
+//! * `selftest` — quick correctness matrix across algorithms and rank
+//!   counts.
+
+use patcol::cli::Args;
+use patcol::coordinator::config::parse_bytes;
+use patcol::coordinator::{CommConfig, Communicator, DataPathKind, Tuner};
+use patcol::core::{Algorithm, Collective, Result};
+use patcol::sched::{self, explain, pat};
+use patcol::sim::{self, CostModel, Topology};
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+use patcol::util::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return;
+    }
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    let res = match args.command.as_str() {
+        "explain" => cmd_explain(&args),
+        "run" => cmd_run(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "tune" => cmd_tune(&args),
+        "selftest" => cmd_selftest(&args),
+        other => {
+            eprintln!("unknown command {other:?}");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "patcol — PAT collective communication (all-gather / reduce-scatter)
+
+USAGE: patcol <command> [--options]
+
+COMMANDS
+  explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs] [--trees]
+  run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs]
+            [--datapath scalar|pjrt] [--buffer-slots S]
+  simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs]
+            [--topo flat|leaf_spine|three_level|dragonfly] [--taper F]
+  sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
+  tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs]
+  selftest  [--max-ranks N]
+
+ALG: ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
+SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)"
+    );
+}
+
+fn collective(args: &Args) -> Result<Collective> {
+    match args.str("collective", "ag").as_str() {
+        "ag" | "allgather" | "all_gather" => Ok(Collective::AllGather),
+        "rs" | "reducescatter" | "reduce_scatter" => Ok(Collective::ReduceScatter),
+        other => Err(patcol::core::Error::Config(format!(
+            "unknown collective {other:?}"
+        ))),
+    }
+}
+
+fn topology(args: &Args, nranks: usize) -> Result<Topology> {
+    let nic = CostModel::ib_hdr_nic_bw();
+    let taper = args.f64("taper", 1.0)?;
+    match args.str("topo", "flat").as_str() {
+        "flat" => Ok(Topology::flat(nranks, nic)),
+        "leaf_spine" => {
+            let g = args.usize("ranks-per-leaf", 8.min(nranks))?;
+            let s = args.usize("spines", (g).max(1))?;
+            Topology::leaf_spine(nranks, g, s, nic, taper)
+        }
+        "three_level" => {
+            let g = args.usize("ranks-per-leaf", 8.min(nranks))?;
+            let lp = args.usize("leaves-per-pod", 4)?;
+            let sp = args.usize("spines-per-pod", g)?;
+            let c = args.usize("cores", sp)?;
+            Topology::three_level(nranks, g, lp, sp, c, nic, 1.0, taper)
+        }
+        "dragonfly" => {
+            let g = args.usize("ranks-per-group", 8.min(nranks))?;
+            Topology::dragonfly(nranks, g, nic, nic * taper)
+        }
+        other => Err(patcol::core::Error::Config(format!(
+            "unknown topology {other:?}"
+        ))),
+    }
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    let n = args.usize("ranks", 8)?;
+    let agg = args.usize("agg", usize::MAX)?;
+    let coll = collective(args)?;
+    let alg = match args.opt_str("alg") {
+        Some(s) => Algorithm::parse(&s)?,
+        None => Algorithm::Pat { aggregation: agg },
+    };
+    let prog = sched::generate(alg, coll, n)?;
+    println!("{}", explain::render_steps(&prog));
+    if let Algorithm::Pat { .. } = alg {
+        println!("{}", explain::render_pat_tree(n, agg));
+    }
+    if args.flag("trees") {
+        println!("{}", explain::render_root_trees(&prog));
+    }
+    let occ = sched::verify::verify_program(&prog)?;
+    let s = prog.stats();
+    println!(
+        "steps={} messages={} chunk_transfers={} max_aggregation={} peak_buffer_slots={}",
+        s.steps, s.messages, s.chunk_transfers, s.max_aggregation, occ.peak_slots
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let n = args.usize("ranks", 8)?;
+    let size = args.bytes("size", 64 * 1024)?;
+    let coll = collective(args)?;
+    let alg = match args.opt_str("alg") {
+        Some(s) => Some(Algorithm::parse(&s)?),
+        None => None,
+    };
+    let datapath = match args.str("datapath", "scalar").as_str() {
+        "pjrt" => DataPathKind::Pjrt,
+        _ => DataPathKind::Scalar,
+    };
+    let comm = Communicator::new(CommConfig {
+        nranks: n,
+        algorithm: alg,
+        buffer_slots: args.opt_str("buffer-slots").map(|s| parse_bytes(&s)).transpose()?,
+        datapath,
+        ..Default::default()
+    })?;
+    let chunk = (size / 4).max(1);
+    let mut rng = Rng::new(7);
+    let (rep, payload) = match coll {
+        Collective::AllGather => {
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0f32; chunk];
+                    rng.fill_f32(&mut v);
+                    v
+                })
+                .collect();
+            let (_, rep) = comm.all_gather_report(&inputs)?;
+            (rep, (n - 1) * chunk * 4)
+        }
+        Collective::ReduceScatter => {
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0f32; n * chunk];
+                    rng.fill_f32(&mut v);
+                    v
+                })
+                .collect();
+            let (_, rep) = comm.reduce_scatter_report(&inputs)?;
+            (rep, (n - 1) * chunk * 4)
+        }
+    };
+    let wall = rep.transport.wall.as_secs_f64();
+    println!(
+        "{} {} ranks={} chunk={} steps={} msgs={} bytes={} peak_slots={} wall={} algbw={}/s",
+        rep.algorithm,
+        coll,
+        n,
+        fmt_bytes(size),
+        rep.steps,
+        rep.transport.messages,
+        fmt_bytes(rep.transport.bytes_moved),
+        rep.transport.peak_slots,
+        fmt_time_s(wall),
+        fmt_bytes((payload as f64 / wall.max(1e-9)) as usize),
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let n = args.usize("ranks", 64)?;
+    let size = args.bytes("size", 64 * 1024)?;
+    let coll = collective(args)?;
+    let alg = Algorithm::parse(&args.str("alg", "pat"))?;
+    let topo = topology(args, n)?;
+    let cost = CostModel::ib_hdr();
+    let prog = sched::generate(alg, coll, n)?;
+    let rep = if let Some(trace_path) = args.opt_str("trace") {
+        use patcol::util::json::Json;
+        let (rep, trace) = sim::simulate_traced(&prog, &topo, &cost, size)?;
+        let rows: Vec<Json> = trace
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("step", Json::num(e.step as f64)),
+                    ("src", Json::num(e.src as f64)),
+                    ("dst", Json::num(e.dst as f64)),
+                    ("bytes", Json::num(e.bytes as f64)),
+                    ("t_start", Json::num(e.t_start)),
+                    ("t_arrival", Json::num(e.t_arrival)),
+                ])
+            })
+            .collect();
+        std::fs::write(&trace_path, Json::Arr(rows).to_pretty())?;
+        println!("trace ({} messages) -> {trace_path}", trace.len());
+        rep
+    } else {
+        sim::simulate(&prog, &topo, &cost, size)?
+    };
+    println!(
+        "{} {} ranks={} chunk={} topo={}",
+        alg, coll, n, fmt_bytes(size), topo.name
+    );
+    println!(
+        "  time={}  algbw={}/s  msgs={}  bytes={}  bytes_links={:.2e}",
+        fmt_time_s(rep.total_time),
+        fmt_bytes(rep.algbw((n - 1) * size) as usize),
+        rep.messages,
+        fmt_bytes(rep.bytes_sent),
+        rep.bytes_links,
+    );
+    for (lvl, b) in rep.bytes_by_level.iter().enumerate() {
+        println!("  level {lvl}: {}", fmt_bytes(*b));
+    }
+    println!(
+        "  busiest link: {} ({:.0}% busy)",
+        fmt_bytes(rep.max_link_bytes),
+        rep.busiest_link_utilization * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let n = args.usize("ranks", 64)?;
+    let sizes = args.bytes_list(
+        "sizes",
+        &[256, 4 << 10, 64 << 10, 1 << 20, 16 << 20],
+    )?;
+    let coll = collective(args)?;
+    let topo = topology(args, n)?;
+    let cost = CostModel::ib_hdr();
+    let algs: Vec<Algorithm> = vec![
+        Algorithm::Ring,
+        Algorithm::BruckNearFirst,
+        Algorithm::Pat { aggregation: usize::MAX },
+        Algorithm::Pat { aggregation: 4 },
+        Algorithm::Pat { aggregation: 1 },
+    ];
+    let header: Vec<String> = std::iter::once("size".to_string())
+        .chain(algs.iter().map(|a| a.name()))
+        .collect();
+    let mut t = Table::new(header);
+    for size in sizes {
+        let mut row = vec![fmt_bytes(size)];
+        for alg in &algs {
+            let prog = sched::generate(*alg, coll, n)?;
+            let rep = sim::simulate(&prog, &topo, &cost, size)?;
+            row.push(fmt_time_s(rep.total_time));
+        }
+        t.row(row);
+    }
+    println!("{} on {} ({} ranks):", coll, topo.name, n);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let n = args.usize("ranks", 64)?;
+    let size = args.bytes("size", 64 * 1024)?;
+    let slots = args.usize("buffer-slots", 64)?;
+    let coll = collective(args)?;
+    let tuner = Tuner::default();
+    let choice = tuner.choose(n, size, slots, coll);
+    println!(
+        "tune: ranks={n} chunk={} buffer_slots={slots} {coll}",
+        fmt_bytes(size)
+    );
+    let mut t = Table::new(["algorithm", "predicted"]);
+    for (alg, cost) in &choice.candidates {
+        t.row([alg.name(), fmt_time_s(*cost)]);
+    }
+    print!("{}", t.render());
+    println!("chosen: {}", choice.algorithm);
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let max = args.usize("max-ranks", 33)?;
+    let mut count = 0usize;
+    for n in 1..=max {
+        for alg in [
+            Algorithm::Ring,
+            Algorithm::BruckNearFirst,
+            Algorithm::BruckFarFirst,
+            Algorithm::Recursive,
+            Algorithm::Pat { aggregation: 1 },
+            Algorithm::Pat { aggregation: 2 },
+            Algorithm::Pat { aggregation: 7 },
+            Algorithm::Pat { aggregation: usize::MAX },
+        ] {
+            if !alg.supports(n) {
+                continue;
+            }
+            for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                let prog = sched::generate(alg, coll, n)?;
+                sched::verify::verify_program(&prog).map_err(|e| {
+                    patcol::core::Error::Verify(format!("{alg} {coll} n={n}: {e}"))
+                })?;
+                count += 1;
+            }
+        }
+    }
+    // Spot-check PAT tree phases against the paper's figures.
+    assert_eq!(pat::phase_counts(8, 2), (1, 3));
+    assert_eq!(pat::phase_counts(16, 2), (1, 7));
+    println!("selftest OK: {count} (algorithm, collective, nranks) cases verified");
+    Ok(())
+}

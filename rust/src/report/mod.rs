@@ -1,0 +1,94 @@
+//! Machine-readable bench/experiment results: every bench writes a JSON
+//! document under `bench_results/` (plus the human table on stdout), so
+//! EXPERIMENTS.md entries are regenerable and diffable.
+
+use std::path::{Path, PathBuf};
+
+use crate::core::Result;
+use crate::util::json::Json;
+
+/// A named result set: free-form parameters plus a list of row objects.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub params: Vec<(String, Json)>,
+    pub rows: Vec<Json>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>) -> Report {
+        Report { name: name.into(), params: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn param(&mut self, key: &str, value: Json) -> &mut Self {
+        self.params.push((key.to_string(), value));
+        self
+    }
+
+    pub fn row(&mut self, row: Vec<(&str, Json)>) -> &mut Self {
+        self.rows.push(Json::obj(row));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "params",
+                Json::Obj(
+                    self.params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                ),
+            ),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+    }
+
+    /// Output directory: `$PATCOL_BENCH_DIR` or `bench_results/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PATCOL_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("bench_results"))
+    }
+
+    /// Write `<dir>/<name>.json`; creates the directory.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_pretty())?;
+        Ok(path)
+    }
+
+    /// Write to the default directory and announce on stdout.
+    pub fn save(&self) -> Result<()> {
+        let path = self.write(&Self::default_dir())?;
+        println!("[report] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let mut r = Report::new("unit_test_report");
+        r.param("nranks", Json::num(8.0));
+        r.row(vec![("alg", Json::str("ring")), ("t", Json::num(1.5))]);
+        r.row(vec![("alg", Json::str("pat")), ("t", Json::num(0.5))]);
+        let dir = std::env::temp_dir().join("patcol_report_test");
+        let path = r.write(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("unit_test_report"));
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            back.get("params").unwrap().get("nranks").unwrap().as_usize(),
+            Some(8)
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! Artifact registry: reads `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`), lazily compiles artifacts on first use, and
+//! selects size classes for the reduction datapath.
+//!
+//! The reduce kernels are compiled at a small set of fixed sizes
+//! (AOT-compiled graphs have static shapes); [`Registry::reduce_f32`]
+//! segments an arbitrary-length reduction over the largest fitting class
+//! and pads the tail.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::core::{Error, Result};
+use crate::runtime::client::{Executable, PjrtContext};
+use crate::util::json::{self};
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(a[n], b[n]) -> (a + b,)` — the RS datapath reduction (Pallas).
+    Reduce,
+    /// `(acc[n], x0[n], .., x{k-1}[n]) -> (acc + Σ xi,)` — fused k-way
+    /// reduction (Pallas), used to batch the linear phase.
+    ReduceK,
+    /// `(p[n], g[n], lr[1]) -> (p - lr*g,)` — optimizer shard update
+    /// (Pallas).
+    ScaleAdd,
+    /// Transformer LM: `(params, tokens) -> (loss, grads)`.
+    TrainStep,
+    /// Transformer LM loss only: `(params, tokens) -> (loss,)`.
+    EvalLoss,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "reduce" => ArtifactKind::Reduce,
+            "reduce_k" => ArtifactKind::ReduceK,
+            "scale_add" => ArtifactKind::ScaleAdd,
+            "train_step" => ArtifactKind::TrainStep,
+            "eval_loss" => ArtifactKind::EvalLoss,
+            other => return Err(Error::Config(format!("unknown artifact kind {other:?}"))),
+        })
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// Element count for elementwise kernels; parameter count for models.
+    pub n: usize,
+    /// Fan-in for `ReduceK`.
+    pub k: usize,
+    /// Extra integers (model artifacts): [batch, seq, vocab] etc.
+    pub extra: HashMap<String, usize>,
+}
+
+/// Artifact registry with lazy compilation cache.
+pub struct Registry {
+    ctx: PjrtContext,
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+    cache: Mutex<HashMap<String, Executable>>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`. Fails with a pointer to `make artifacts`
+    /// if missing.
+    pub fn load(ctx: PjrtContext, dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest.display()
+            ))
+        })?;
+        let root = json::parse(&text)?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| Error::Config("manifest missing 'artifacts' array".into()))?;
+        let mut metas = Vec::new();
+        for a in arts {
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Config(format!("artifact missing '{k}'")))
+            };
+            let name = get_str("name")?;
+            let file = get_str("file")?;
+            let kind = ArtifactKind::parse(&get_str("kind")?)?;
+            let n = a.get("n").and_then(|v| v.as_usize()).unwrap_or(0);
+            let k = a.get("k").and_then(|v| v.as_usize()).unwrap_or(2);
+            let mut extra = HashMap::new();
+            if let Some(obj) = a.get("extra").and_then(|v| v.as_obj()) {
+                for (key, val) in obj {
+                    if let Some(x) = val.as_usize() {
+                        extra.insert(key.clone(), x);
+                    }
+                }
+            }
+            metas.push(ArtifactMeta { name, file, kind, n, k, extra });
+        }
+        Ok(Registry { ctx, dir: dir.to_path_buf(), metas, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact directory: `$PATCOL_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PATCOL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.iter().find(|m| m.name == name)
+    }
+
+    /// Get (compiling if needed) the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<Executable> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let meta = self
+            .meta(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named {name:?} in manifest")))?
+            .clone();
+        let exe = self.ctx.load_hlo_text(&self.dir.join(&meta.file), name)?;
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert(exe).clone())
+    }
+
+    /// Size classes available for a kind, ascending by n.
+    pub fn size_classes(&self, kind: ArtifactKind) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self.metas.iter().filter(|m| m.kind == kind).collect();
+        v.sort_by_key(|m| m.n);
+        v
+    }
+
+    /// Pick the best reduce artifact for a length-`n` operand: the smallest
+    /// class ≥ n, else the largest class (the caller segments).
+    pub fn pick_class(&self, kind: ArtifactKind, n: usize) -> Result<&ArtifactMeta> {
+        let classes = self.size_classes(kind);
+        if classes.is_empty() {
+            return Err(Error::Runtime(format!(
+                "no artifacts of kind {kind:?}; re-run `make artifacts`"
+            )));
+        }
+        Ok(classes
+            .iter()
+            .find(|m| m.n >= n)
+            .copied()
+            .unwrap_or(*classes.last().unwrap()))
+    }
+
+    /// `acc += x` via the Pallas reduce kernel, segmenting + padding to the
+    /// artifact's static shape. This is the reduce-scatter datapath.
+    pub fn reduce_f32(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        if acc.len() != x.len() {
+            return Err(Error::Runtime(format!(
+                "reduce_f32 length mismatch: {} vs {}",
+                acc.len(),
+                x.len()
+            )));
+        }
+        if acc.is_empty() {
+            return Ok(());
+        }
+        let meta = self.pick_class(ArtifactKind::Reduce, acc.len())?;
+        let class_n = meta.n;
+        let exe = self.get(&meta.name.clone())?;
+        let mut start = 0usize;
+        let mut abuf = vec![0f32; class_n];
+        let mut xbuf = vec![0f32; class_n];
+        while start < acc.len() {
+            let end = (start + class_n).min(acc.len());
+            let len = end - start;
+            abuf[..len].copy_from_slice(&acc[start..end]);
+            abuf[len..].fill(0.0);
+            xbuf[..len].copy_from_slice(&x[start..end]);
+            xbuf[len..].fill(0.0);
+            let dims = [class_n as i64];
+            let out = exe.run_f32(&[(&abuf, &dims), (&xbuf, &dims)])?;
+            acc[start..end].copy_from_slice(&out[0][..len]);
+            start = end;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_and_class_pick() {
+        let dir = std::env::temp_dir().join("patcol_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"name": "reduce_f32_1024", "file": "r1024.hlo.txt", "kind": "reduce", "n": 1024},
+                {"name": "reduce_f32_65536", "file": "r65536.hlo.txt", "kind": "reduce", "n": 65536},
+                {"name": "train_step", "file": "t.hlo.txt", "kind": "train_step", "n": 123,
+                 "extra": {"batch": 4, "seq": 64}}
+            ]}"#,
+        )
+        .unwrap();
+        let ctx = PjrtContext::cpu().unwrap();
+        let reg = Registry::load(ctx, &dir).unwrap();
+        assert_eq!(reg.metas().len(), 3);
+        assert_eq!(reg.pick_class(ArtifactKind::Reduce, 100).unwrap().n, 1024);
+        assert_eq!(reg.pick_class(ArtifactKind::Reduce, 2048).unwrap().n, 65536);
+        assert_eq!(reg.pick_class(ArtifactKind::Reduce, 1 << 20).unwrap().n, 65536);
+        assert_eq!(reg.meta("train_step").unwrap().extra["batch"], 4);
+        assert!(reg.pick_class(ArtifactKind::ScaleAdd, 4).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let ctx = PjrtContext::cpu().unwrap();
+        let err = Registry::load(ctx, Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.metas.len())
+            .finish()
+    }
+}

@@ -1,0 +1,145 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts are lowered by jax with
+//! `return_tuple=True`, so outputs are always a tuple literal which we
+//! decompose.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::core::{Error, Result};
+
+/// A process-wide PJRT CPU context. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct PjrtContext {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtContext {
+    /// Create (or fail with a runtime error wrapping the PJRT status).
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtContext { client: Arc::new(client) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path, name: impl Into<String>) -> Result<Executable> {
+        let name = name.into();
+        let path_str = path.to_str().ok_or_else(|| {
+            Error::Runtime(format!("non-utf8 artifact path {path:?}"))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(|e| {
+            Error::Runtime(format!("parse HLO text {path_str} ({name}): {e:?}"))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| {
+            Error::Runtime(format!("compile artifact {name}: {e:?}"))
+        })?;
+        Ok(Executable { exe: Arc::new(exe), name })
+    }
+}
+
+/// A compiled artifact. Cheap to clone; `run_f32` is safe to call from
+/// multiple threads (PJRT CPU executables are thread-safe).
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with 1-D f32 inputs (each reshaped to the given dims) and
+    /// return all tuple outputs as flat f32 vectors.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims)
+                    .map_err(|e| Error::Runtime(format!("{}: reshape: {e:?}", self.name)))?
+            };
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::Runtime(format!("{}: execute: {e:?}", self.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{}: to_literal: {e:?}", self.name)))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("{}: output not a tuple: {e:?}", self.name)))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("{}: to_vec: {e:?}", self.name)))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute with pre-built literals (for mixed dtypes, e.g. token ids).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("{}: execute: {e:?}", self.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{}: to_literal: {e:?}", self.name)))?;
+        lit.to_tuple()
+            .map_err(|e| Error::Runtime(format!("{}: output not a tuple: {e:?}", self.name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The PJRT CPU client must come up in this environment. (Artifact
+    /// loading is exercised by integration tests once `make artifacts`
+    /// has produced them.)
+    #[test]
+    fn cpu_client_boots() {
+        let ctx = PjrtContext::cpu().unwrap();
+        assert_eq!(ctx.platform_name(), "cpu");
+        assert!(ctx.device_count() >= 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let ctx = PjrtContext::cpu().unwrap();
+        let err = ctx
+            .load_hlo_text(Path::new("/nonexistent/foo.hlo.txt"), "foo")
+            .unwrap_err();
+        assert!(err.to_string().contains("foo"));
+    }
+}
+
+impl std::fmt::Debug for PjrtContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtContext")
+            .field("platform", &self.platform_name())
+            .finish()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("name", &self.name).finish()
+    }
+}

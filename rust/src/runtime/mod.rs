@@ -1,0 +1,16 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` (L2 JAX graphs calling L1 Pallas kernels) and
+//! executes them from the rust hot path. Python is never on this path —
+//! artifacts are built once by `make artifacts`.
+//!
+//! Interchange format is HLO **text**: jax ≥ 0.5 serializes HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly.
+
+pub mod client;
+pub mod artifacts;
+pub mod service;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Registry};
+pub use client::{Executable, PjrtContext};
+pub use service::{PjrtHandle, PjrtService};

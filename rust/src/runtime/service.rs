@@ -1,0 +1,133 @@
+//! PJRT datapath service.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so a single
+//! dedicated service thread owns the [`Registry`] and executes reduction
+//! requests on behalf of all rank threads — the moral equivalent of kernels
+//! serializing onto one accelerator stream. Rank threads hold a cloneable
+//! [`PjrtHandle`] and block on a reply channel per call.
+//!
+//! The perf pass can shard requests over several service threads (one
+//! client each) if the single stream becomes the bottleneck; see
+//! EXPERIMENTS.md §Perf.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use crate::core::{Error, Result};
+use crate::runtime::artifacts::Registry;
+use crate::runtime::client::PjrtContext;
+
+enum Request {
+    /// acc += x elementwise; replies with the updated acc.
+    Reduce {
+        acc: Vec<f32>,
+        x: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Request>,
+}
+
+impl PjrtHandle {
+    /// `acc += x` through the AOT Pallas reduce kernel.
+    pub fn reduce_into(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request::Reduce {
+                acc: acc.to_vec(),
+                x: x.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Runtime("pjrt service is down".into()))?;
+        let out = reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt service dropped reply".into()))??;
+        acc.copy_from_slice(&out);
+        Ok(())
+    }
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct PjrtService {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service over the artifact directory (must contain
+    /// `manifest.json`; see `make artifacts`). Fails fast if the registry
+    /// cannot be loaded.
+    pub fn spawn(artifact_dir: PathBuf) -> Result<(PjrtService, PjrtHandle)> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let reg = match PjrtContext::cpu()
+                    .and_then(|ctx| Registry::load(ctx, &artifact_dir))
+                {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Reduce { mut acc, x, reply } => {
+                            let res = reg.reduce_f32(&mut acc, &x).map(|()| acc);
+                            let _ = reply.send(res);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn pjrt service: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt service died during startup".into()))??;
+        let handle = PjrtHandle { tx: tx.clone() };
+        Ok((PjrtService { tx, join: Some(join) }, handle))
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_failure_is_reported() {
+        let err = PjrtService::spawn(PathBuf::from("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}
+
+impl std::fmt::Debug for PjrtHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PjrtHandle")
+    }
+}
+
+impl std::fmt::Debug for PjrtService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PjrtService")
+    }
+}

@@ -1,0 +1,140 @@
+//! Bruck all-gather in both dimension orders (paper Figs. 1–4).
+//!
+//! Classic (nearest-dimension-first) Bruck doubles both the distance and the
+//! payload every step: the last step sends half of the total data to the
+//! most distant peer — the behaviour that collapses on static-routed /
+//! tapered fabrics and motivates PAT. Reversing the dimension order fixes
+//! the distance profile but makes the payload non-contiguous (the data sent
+//! to a peer comes from ranks with stride `2^(d+1)`), which is where PAT's
+//! bounded aggregation picks up.
+
+use crate::core::{Collective, Rank};
+use crate::sched::program::{Op, Program};
+use crate::sched::tree::{FarFirstTree, NearFirstTree};
+
+/// Classic Bruck all-gather (nearest dimension first, Fig. 1). At step `d`
+/// each rank sends the `min(2^d, n - 2^d)` chunks it holds for offsets
+/// `[0, 2^d)` to the rank `2^d` ahead.
+pub fn allgather_near_first(n: usize) -> Program {
+    let mut p = Program::new(n, Collective::AllGather, "bruck_near");
+    if n <= 1 {
+        return p;
+    }
+    let t = NearFirstTree::new(n);
+    let dmax = t.dmax().unwrap();
+    for (step, d) in (0..=dmax).enumerate() {
+        push_dim_round(&mut p, n, d, step, &offsets_near(&t, d));
+    }
+    p
+}
+
+/// Dimension-reversed Bruck all-gather (farthest dimension first, Fig. 3).
+/// At step `d` (descending) each rank sends the chunks at source offsets
+/// `o ≡ 0 (mod 2^(d+1))`, `o + 2^d < n` — 1, 2, 4, … chunks at
+/// *decreasing* distance.
+pub fn allgather_far_first(n: usize) -> Program {
+    let mut p = Program::new(n, Collective::AllGather, "bruck_far");
+    if n <= 1 {
+        return p;
+    }
+    let t = FarFirstTree::new(n);
+    let dmax = t.dmax().unwrap();
+    for (step, d) in (0..=dmax).rev().enumerate() {
+        push_dim_round(&mut p, n, d, step, &offsets_far(&t, d));
+    }
+    p
+}
+
+/// Source offsets of tree edges at dimension `d`, near-first tree.
+fn offsets_near(t: &NearFirstTree, d: u32) -> Vec<usize> {
+    t.edges_at_dim(d).into_iter().map(|e| e.from).collect()
+}
+
+/// Source offsets of tree edges at dimension `d`, far-first tree.
+fn offsets_far(t: &FarFirstTree, d: u32) -> Vec<usize> {
+    t.edges_at_dim(d).into_iter().map(|e| e.from).collect()
+}
+
+/// Emit one fully-aggregated dimension round: every rank `i` sends, to
+/// `i + 2^d`, the chunks rooted at `j = i - o` for each tree-edge source
+/// offset `o`, and receives the matching chunks from `i - 2^d`.
+fn push_dim_round(p: &mut Program, n: usize, d: u32, step: usize, offsets: &[usize]) {
+    if offsets.is_empty() {
+        return;
+    }
+    let hop = 1usize << d;
+    for i in 0..n {
+        let dst: Rank = (i + hop) % n;
+        let src: Rank = (i + n - hop % n) % n;
+        let send_chunks: Vec<usize> = offsets.iter().map(|o| (i + n - o % n) % n).collect();
+        let recv_chunks: Vec<usize> = offsets.iter().map(|o| (src + n - o % n) % n).collect();
+        p.push(i, Op::Send { peer: dst, chunks: send_chunks, step });
+        p.push(i, Op::Recv { peer: src, chunks: recv_chunks, reduce: false, step });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ceil_log2;
+    use crate::sched::verify::verify_program;
+
+    #[test]
+    fn near_first_correct_any_n() {
+        for n in 1..34 {
+            verify_program(&allgather_near_first(n)).unwrap();
+        }
+    }
+
+    #[test]
+    fn far_first_correct_any_n() {
+        for n in 1..34 {
+            verify_program(&allgather_far_first(n)).unwrap();
+        }
+    }
+
+    #[test]
+    fn log_steps() {
+        for n in [2usize, 3, 4, 7, 8, 15, 16, 31, 32, 33] {
+            let want = ceil_log2(n) as usize;
+            assert_eq!(allgather_near_first(n).steps, want, "near n={n}");
+            assert_eq!(allgather_far_first(n).steps, want, "far n={n}");
+        }
+    }
+
+    /// Fig. 1: classic Bruck on 8 ranks sends 1, 2, 4 chunks at distances
+    /// 1, 2, 4. Fig. 3: reversed sends 1, 2, 4 chunks at distances 4, 2, 1.
+    #[test]
+    fn payload_distance_profiles() {
+        let near = allgather_near_first(8);
+        let prof: Vec<(usize, usize)> = near
+            .rounds()
+            .values()
+            .map(|ms| {
+                let m = &ms[0];
+                (m.chunks.len(), (m.dst + 8 - m.src) % 8)
+            })
+            .collect();
+        assert_eq!(prof, vec![(1, 1), (2, 2), (4, 4)]);
+
+        let far = allgather_far_first(8);
+        let prof: Vec<(usize, usize)> = far
+            .rounds()
+            .values()
+            .map(|ms| {
+                let m = &ms[0];
+                (m.chunks.len(), (m.dst + 8 - m.src) % 8)
+            })
+            .collect();
+        assert_eq!(prof, vec![(1, 4), (2, 2), (4, 1)]);
+    }
+
+    /// Mirrored Bruck programs implement reduce-scatter on any rank count.
+    #[test]
+    fn mirrored_rs_correct() {
+        for n in 1..20 {
+            verify_program(&allgather_near_first(n).mirror()).unwrap();
+            verify_program(&allgather_far_first(n).mirror()).unwrap();
+        }
+    }
+}

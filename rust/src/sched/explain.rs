@@ -1,0 +1,188 @@
+//! Human-readable schedule rendering — regenerates the paper's figures as
+//! text: per-step transfer lists (Figs. 1, 3, 5), per-root broadcast trees
+//! (Figs. 2, 4, 6–10), and the reduce-scatter mirror (Fig. 11).
+
+use std::fmt::Write as _;
+
+use crate::core::Collective;
+use crate::sched::pat::{self, StepPhase};
+use crate::sched::program::Program;
+use crate::sched::tree::FarFirstTree;
+
+/// Render the global step-by-step transfer table of a program, one line per
+/// message, grouped by step — the "what does each rank send when" view of
+/// Figs. 1/3/5.
+pub fn render_steps(p: &Program) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} / {} on {} ranks — {} steps",
+        p.algorithm, p.collective, p.nranks, p.steps
+    );
+    for (step, msgs) in p.rounds() {
+        let _ = writeln!(out, "step {step}:");
+        for m in msgs {
+            let dist = ring_distance(m.src, m.dst, p.nranks);
+            let _ = writeln!(
+                out,
+                "  {:>3} -> {:<3} dist {:>3}  chunks {:?}",
+                m.src, m.dst, dist, m.chunks
+            );
+        }
+    }
+    out
+}
+
+/// Render one rank's program (op-by-op), the per-rank view used to inspect
+/// FIFO order and buffer behaviour.
+pub fn render_rank(p: &Program, rank: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "rank {rank} program ({}):", p.algorithm);
+    for op in &p.ranks[rank] {
+        match op {
+            crate::sched::program::Op::Send { peer, chunks, step } => {
+                let _ = writeln!(out, "  [s{step}] send -> {peer}: {chunks:?}");
+            }
+            crate::sched::program::Op::Recv { peer, chunks, reduce, step } => {
+                let verb = if *reduce { "recv+reduce" } else { "recv" };
+                let _ = writeln!(out, "  [s{step}] {verb} <- {peer}: {chunks:?}");
+            }
+        }
+    }
+    out
+}
+
+/// Render the PAT broadcast tree for root offset 0 with the step at which
+/// each edge executes — the single-tree view of Figs. 6–10.
+pub fn render_pat_tree(n: usize, a: usize) -> String {
+    let mut out = String::new();
+    let a = pat::clamp_aggregation(n, a);
+    let rounds = pat::rounds(n, a);
+    let (log_steps, lin_steps) = pat::phase_counts(n, a);
+    let _ = writeln!(
+        out,
+        "PAT tree, {n} ranks, aggregation {a}: {} steps ({log_steps} logarithmic + {lin_steps} linear)",
+        rounds.len()
+    );
+    // step at which each offset receives its data (edge from parent).
+    let mut recv_step = vec![usize::MAX; n];
+    for (s, r) in rounds.iter().enumerate() {
+        for &o in &r.offsets {
+            let to = o + (1usize << r.dim);
+            if to < n {
+                recv_step[to] = s;
+            }
+        }
+    }
+    let t = FarFirstTree::new(n);
+    // Depth-first print.
+    fn dfs(
+        t: &FarFirstTree,
+        o: usize,
+        depth: usize,
+        recv_step: &[usize],
+        rounds: &[pat::PatRound],
+        out: &mut String,
+    ) {
+        let indent = "  ".repeat(depth);
+        if o == 0 {
+            let _ = writeln!(out, "{indent}offset 0 (root)");
+        } else {
+            let s = recv_step[o];
+            let phase = match rounds[s].phase {
+                StepPhase::Logarithmic => "log",
+                StepPhase::Linear => "lin",
+            };
+            let _ = writeln!(
+                out,
+                "{indent}offset {o:<3} <- {:<3} dim {} step {s} [{phase}]",
+                t.parent(o),
+                t.edge_dim(o)
+            );
+        }
+        for c in t.children(o) {
+            dfs(t, c, depth + 1, recv_step, rounds, out);
+        }
+    }
+    dfs(&t, 0, 0, &recv_step, &rounds, &mut out);
+    out
+}
+
+/// Render the per-root binomial-tree decomposition (Fig. 2 / Fig. 4): for
+/// each root rank, the tree its chunk follows.
+pub fn render_root_trees(p: &Program) -> String {
+    let mut out = String::new();
+    let n = p.nranks;
+    let _ = writeln!(out, "{}: per-root broadcast trees", p.algorithm);
+    for root in 0..n {
+        let _ = writeln!(out, "root {root}:");
+        // Collect the (src, dst, step) edges carrying this root's chunk.
+        let mut edges: Vec<(usize, usize, usize)> = Vec::new();
+        for m in p.messages() {
+            if m.chunks.contains(&root) {
+                edges.push((m.src, m.dst, m.step));
+            }
+        }
+        match p.collective {
+            Collective::AllGather => edges.sort_by_key(|e| e.2),
+            Collective::ReduceScatter => edges.sort_by_key(|e| e.2),
+        }
+        for (src, dst, step) in edges {
+            let _ = writeln!(out, "  step {step}: {src} -> {dst}");
+        }
+    }
+    out
+}
+
+/// Distance around the ring (minimum of the two directions) — the "how far
+/// does this transfer travel" metric of the paper's discussion.
+pub fn ring_distance(a: usize, b: usize, n: usize) -> usize {
+    let d = (b + n - a) % n;
+    d.min(n - d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{bruck, pat};
+
+    #[test]
+    fn render_steps_has_all_steps() {
+        let p = pat::allgather(8, 2);
+        let s = render_steps(&p);
+        for step in 0..4 {
+            assert!(s.contains(&format!("step {step}:")), "missing step {step}\n{s}");
+        }
+    }
+
+    #[test]
+    fn render_tree_mentions_phases() {
+        let s = render_pat_tree(8, 2);
+        assert!(s.contains("1 logarithmic + 3 linear"), "{s}");
+        assert!(s.contains("offset 4"), "{s}");
+    }
+
+    #[test]
+    fn root_trees_cover_all_roots() {
+        let p = bruck::allgather_near_first(4);
+        let s = render_root_trees(&p);
+        for r in 0..4 {
+            assert!(s.contains(&format!("root {r}:")));
+        }
+    }
+
+    #[test]
+    fn ring_distance_wraps() {
+        assert_eq!(ring_distance(7, 0, 8), 1);
+        assert_eq!(ring_distance(0, 4, 8), 4);
+        assert_eq!(ring_distance(2, 1, 8), 1);
+    }
+
+    #[test]
+    fn render_rank_lists_ops() {
+        let p = pat::allgather(4, 1);
+        let s = render_rank(&p, 0);
+        assert!(s.contains("send ->"));
+        assert!(s.contains("recv <-"));
+    }
+}

@@ -1,0 +1,62 @@
+//! Schedule generation: the PAT algorithm and its baselines, all emitting a
+//! common per-rank program IR ([`Program`]).
+//!
+//! One IR serves every consumer in the stack:
+//! * [`verify`] — the reference executor (correctness, FIFO/deadlock checks,
+//!   buffer-occupancy measurement),
+//! * [`crate::transport`] — the threaded real-byte engine,
+//! * [`crate::sim`] — the event-driven network simulator,
+//! * the schedule explorer example (regenerates the paper's figures).
+//!
+//! Reduce-scatter programs are derived from all-gather programs by
+//! [`Program::mirror`]: reverse time, flip send↔recv, reduce on receive.
+//! This is exactly the paper's construction ("the reduce-scatter PAT
+//! algorithm works the same way as all-gather, but with a reversed binomial
+//! tree", communicating close dimensions first and executing the parallel
+//! trees before the logarithmic part).
+
+pub mod program;
+pub mod tree;
+pub mod ring;
+pub mod bruck;
+pub mod recursive;
+pub mod pat;
+pub mod verify;
+pub mod explain;
+
+pub use program::{Op, Program, ProgramStats};
+pub use tree::{FarFirstTree, NearFirstTree};
+pub use verify::{verify_program, OccupancyReport};
+
+use crate::core::{Algorithm, Collective, Error, Result};
+
+/// Generate a program for `algorithm` on `nranks`.
+///
+/// For reduce-scatter, every algorithm is the mirror of its all-gather
+/// counterpart (recursive doubling mirrors to recursive halving).
+pub fn generate(alg: Algorithm, coll: Collective, nranks: usize) -> Result<Program> {
+    if nranks == 0 {
+        return Err(Error::Schedule("nranks must be >= 1".into()));
+    }
+    if !alg.supports(nranks) {
+        return Err(Error::Unsupported(format!(
+            "{alg} does not support nranks={nranks} (power-of-two required)"
+        )));
+    }
+    let ag = match alg {
+        Algorithm::Ring => ring::allgather(nranks),
+        Algorithm::BruckNearFirst => bruck::allgather_near_first(nranks),
+        Algorithm::BruckFarFirst => bruck::allgather_far_first(nranks),
+        Algorithm::Recursive => recursive::allgather(nranks),
+        Algorithm::Pat { aggregation } => pat::allgather(nranks, aggregation),
+        Algorithm::PatAuto => {
+            return Err(Error::Schedule(
+                "PatAuto must be resolved by the tuner before generation".into(),
+            ))
+        }
+    };
+    Ok(match coll {
+        Collective::AllGather => ag,
+        Collective::ReduceScatter => ag.mirror(),
+    })
+}

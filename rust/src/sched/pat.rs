@@ -1,0 +1,447 @@
+//! PAT — Parallel Aggregated Trees (the paper's contribution).
+//!
+//! PAT starts from the dimension-reversed Bruck schedule
+//! ([`crate::sched::bruck::allgather_far_first`]) and bounds the number of
+//! chunks aggregated into any single transfer by the *aggregation factor*
+//! `a` (in NCCL terms: how many chunks fit in the pre-mapped intermediate
+//! buffer).
+//!
+//! * `a ≥ ceil((n-1)/2)` — the buffer holds the largest dimension round:
+//!   identical to reversed-dimension Bruck, fully aggregated,
+//!   `ceil(log2 n)` steps (Fig. 7).
+//! * smaller `a` — the schedule becomes a fully-aggregated logarithmic
+//!   *top* (dimensions above the `A = 2^⌊log2 a⌋` subtree roots) followed
+//!   by the `A` *parallel trees* executed linearly (Figs. 5–9): the
+//!   canonical subtree's edges are walked **depth-first, farthest child
+//!   first** ("the algorithm starts by sending data far, then
+//!   progressively getting closer to the root", Fig. 10), in lockstep
+//!   across the `A` subtrees — each round aggregates one chunk per
+//!   parallel tree into a single transfer.
+//! * `a = 1` — a single tree executed fully linearly: `n-1` steps, each a
+//!   full-buffer transfer at ring-like bandwidth (Fig. 10).
+//!
+//! The depth-first order is what delivers the paper's buffer guarantee
+//! ("we will always be able to use intermediate buffers as we will have
+//! emptied them before we need to communicate on that same dimension to
+//! process data for another rank"): the mirrored reduce-scatter then keeps
+//! only O(a + log n) live accumulators, versus Θ(n) for a naive
+//! dimension-major order — measured and asserted in the tests, swept in
+//! the occupancy bench, and exposed as [`LinearOrder::DimMajor`] for the
+//! ablation study (paper P7).
+//!
+//! Reduce-scatter is the time-and-direction mirror (Fig. 11), obtained via
+//! [`Program::mirror`]: nearest dimensions first, reversed tree, reduce on
+//! receive, parallel trees before the logarithmic bottom.
+//!
+//! For non-power-of-two rank counts the lockstep rounds may be partially
+//! empty (truncated subtrees); the schedule stays correct and
+//! buffer-bounded but can use up to `n-1` steps where perfect packing
+//! would use [`crate::core::pat_step_count`]. Power-of-two counts achieve
+//! the closed form exactly.
+
+use crate::core::{ceil_log2, Collective, Rank};
+use crate::sched::program::{Op, Program};
+use crate::sched::tree::FarFirstTree;
+
+/// Phase classification of each PAT step (for Fig. 6-style analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPhase {
+    /// Fully-aggregated step above the parallel-tree roots (the
+    /// logarithmic top of the tree).
+    Logarithmic,
+    /// A lockstep round of the linear phase executed within the parallel
+    /// trees.
+    Linear,
+}
+
+/// Sub-round ordering of the linear phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinearOrder {
+    /// The paper's schedule: depth-first (farthest child first) within each
+    /// parallel tree — bounded intermediate buffers.
+    DepthFirst,
+    /// Ablation: dimension-major, farthest offsets first. Same step count
+    /// on powers of two, but the mirrored reduce-scatter needs Θ(n)
+    /// accumulators (this is why PAT is *not* just "split Bruck rounds").
+    DimMajor,
+}
+
+/// A PAT schedule round: all transfers cross dimension `dim`; `offsets`
+/// are the tree-edge source offsets (≤ aggregation-factor many), i.e. rank
+/// `i` sends the chunks rooted at `i - o` for each `o` to rank `i + 2^dim`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatRound {
+    pub dim: u32,
+    pub offsets: Vec<usize>,
+    pub phase: StepPhase,
+}
+
+/// Clamp a requested aggregation factor to the useful range for `n` ranks.
+/// The largest useful aggregation is `ceil((n-1)/2)` (the size of the
+/// final, distance-1 dimension round).
+pub fn clamp_aggregation(n: usize, a: usize) -> usize {
+    if n <= 2 {
+        return 1;
+    }
+    let max_useful = (n - 1).div_ceil(2);
+    a.clamp(1, max_useful)
+}
+
+/// The ordered PAT rounds for `n` ranks with aggregation `a`, paper
+/// (depth-first) order.
+pub fn rounds(n: usize, a: usize) -> Vec<PatRound> {
+    rounds_with(n, a, LinearOrder::DepthFirst)
+}
+
+/// The ordered PAT rounds with an explicit linear-phase order.
+pub fn rounds_with(n: usize, a: usize, order: LinearOrder) -> Vec<PatRound> {
+    let t = FarFirstTree::new(n);
+    let Some(dmax) = t.dmax() else {
+        return Vec::new();
+    };
+    let a_req = clamp_aggregation(n, a);
+    let full = (n - 1).div_ceil(2);
+    let mut out = Vec::new();
+
+    if a_req >= full {
+        // Buffer fits every dimension round: exact dimension-reversed
+        // Bruck, one round per dimension.
+        for d in (0..=dmax).rev() {
+            let offsets: Vec<usize> = t.edges_at_dim(d).into_iter().map(|e| e.from).collect();
+            if offsets.is_empty() {
+                continue;
+            }
+            let phase = if offsets.len() < a_req {
+                StepPhase::Logarithmic
+            } else {
+                StepPhase::Linear
+            };
+            out.push(PatRound { dim: d, offsets, phase });
+        }
+        return out;
+    }
+
+    // A parallel trees (power of two), each spanning `span` offsets.
+    let a_pow = prev_pow2(a_req);
+    let span = (1usize << ceil_log2(n)) / a_pow;
+    let top_dim = span.trailing_zeros(); // log2(span)
+
+    // Logarithmic top: dimensions above the subtree roots, one round each.
+    for d in (top_dim..=dmax).rev() {
+        let offsets: Vec<usize> = t.edges_at_dim(d).into_iter().map(|e| e.from).collect();
+        if !offsets.is_empty() {
+            out.push(PatRound { dim: d, offsets, phase: StepPhase::Logarithmic });
+        }
+    }
+
+    // Linear phase within the parallel trees.
+    let roots: Vec<usize> = (0..n).step_by(span).collect();
+    match order {
+        LinearOrder::DepthFirst => {
+            // Canonical subtree of `span` offsets, edges in pre-order DFS,
+            // farthest child first, executed in lockstep across subtrees.
+            let canon = FarFirstTree::new(span);
+            let mut edges = Vec::with_capacity(span.saturating_sub(1));
+            dfs_edges(&canon, 0, &mut edges);
+            for (o_from, d) in edges {
+                let hop = 1usize << d;
+                let offsets: Vec<usize> = roots
+                    .iter()
+                    .map(|r| r + o_from)
+                    .filter(|&o| o + hop < n)
+                    .collect();
+                if !offsets.is_empty() {
+                    out.push(PatRound { dim: d, offsets, phase: StepPhase::Linear });
+                }
+            }
+        }
+        LinearOrder::DimMajor => {
+            // Ablation: split each dimension round into blocks of a_pow,
+            // farthest offsets first.
+            for d in (0..top_dim).rev() {
+                let mut offsets: Vec<usize> =
+                    t.edges_at_dim(d).into_iter().map(|e| e.from).collect();
+                offsets.reverse();
+                for block in offsets.chunks(a_pow) {
+                    out.push(PatRound {
+                        dim: d,
+                        offsets: block.to_vec(),
+                        phase: StepPhase::Linear,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pre-order DFS over the canonical subtree, farthest child first,
+/// emitting `(source offset, dim)` edges.
+fn dfs_edges(t: &FarFirstTree, o: usize, out: &mut Vec<(usize, u32)>) {
+    for c in t.children(o) {
+        out.push((o, t.edge_dim(c)));
+        dfs_edges(t, c, out);
+    }
+}
+
+fn prev_pow2(x: usize) -> usize {
+    debug_assert!(x >= 1);
+    1usize << (usize::BITS - 1 - x.leading_zeros())
+}
+
+/// PAT all-gather program for `n` ranks with aggregation factor `a`.
+pub fn allgather(n: usize, a: usize) -> Program {
+    allgather_with(n, a, LinearOrder::DepthFirst)
+}
+
+/// PAT all-gather with an explicit linear-phase order (ablation).
+pub fn allgather_with(n: usize, a: usize, order: LinearOrder) -> Program {
+    let a_c = clamp_aggregation(n, a);
+    let name = match order {
+        LinearOrder::DepthFirst => format!("pat(a={a_c})"),
+        LinearOrder::DimMajor => format!("pat_dimmajor(a={a_c})"),
+    };
+    let mut p = Program::new(n, Collective::AllGather, name);
+    if n <= 1 {
+        return p;
+    }
+    for (step, round) in rounds_with(n, a_c, order).iter().enumerate() {
+        let hop = 1usize << round.dim;
+        for i in 0..n {
+            let dst: Rank = (i + hop) % n;
+            let src: Rank = (i + n - hop) % n;
+            let send: Vec<usize> = round.offsets.iter().map(|&o| (i + n - o) % n).collect();
+            let recv: Vec<usize> = round.offsets.iter().map(|&o| (src + n - o) % n).collect();
+            p.push(i, Op::Send { peer: dst, chunks: send, step });
+            p.push(i, Op::Recv { peer: src, chunks: recv, reduce: false, step });
+        }
+    }
+    p
+}
+
+/// PAT reduce-scatter: the mirror of PAT all-gather (paper Fig. 11).
+pub fn reduce_scatter(n: usize, a: usize) -> Program {
+    allgather(n, a).mirror()
+}
+
+/// PAT reduce-scatter with an explicit linear-phase order (ablation).
+pub fn reduce_scatter_with(n: usize, a: usize, order: LinearOrder) -> Program {
+    allgather_with(n, a, order).mirror()
+}
+
+/// Count the logarithmic vs linear steps of a PAT schedule (Fig. 6: "1 step
+/// at the top, 3 steps within the tree" for n=8, a=2).
+pub fn phase_counts(n: usize, a: usize) -> (usize, usize) {
+    let mut log = 0;
+    let mut lin = 0;
+    for r in rounds(n, a) {
+        match r.phase {
+            StepPhase::Logarithmic => log += 1,
+            StepPhase::Linear => lin += 1,
+        }
+    }
+    (log, lin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::pat_step_count;
+    use crate::sched::bruck;
+    use crate::sched::verify::verify_program;
+
+    /// PAT with unconstrained aggregation IS dimension-reversed Bruck, for
+    /// every rank count (the buffer fits whole dimension rounds).
+    #[test]
+    fn pat_full_agg_equals_reversed_bruck() {
+        for n in 2..26 {
+            let pat = allgather(n, usize::MAX);
+            let mut bruck = bruck::allgather_far_first(n);
+            bruck.algorithm = pat.algorithm.clone();
+            assert_eq!(pat, bruck, "n={n}");
+        }
+    }
+
+    #[test]
+    fn correct_all_n_and_aggregations() {
+        for n in 1..26 {
+            for a in [1usize, 2, 3, 4, 8, usize::MAX] {
+                verify_program(&allgather(n, a)).unwrap();
+                verify_program(&reduce_scatter(n, a)).unwrap();
+                verify_program(&allgather_with(n, a, LinearOrder::DimMajor)).unwrap();
+                verify_program(&reduce_scatter_with(n, a, LinearOrder::DimMajor)).unwrap();
+            }
+        }
+    }
+
+    /// Step counts match the closed form on powers of two, and the paper's
+    /// figures.
+    #[test]
+    fn step_counts_pow2() {
+        for k in 1..7usize {
+            let n = 1 << k;
+            for a in [1usize, 2, 4, 8, 16] {
+                let p = allgather(n, a);
+                assert_eq!(
+                    p.steps,
+                    pat_step_count(n, clamp_aggregation(n, a).min(prev_pow2_pub(n, a))),
+                    "n={n} a={a}"
+                );
+            }
+        }
+        // Paper figures.
+        assert_eq!(allgather(8, 2).steps, 4); // Figs 5-6
+        assert_eq!(allgather(8, 1).steps, 7); // Fig 10
+        assert_eq!(allgather(16, 8).steps, 4); // Fig 7
+        assert_eq!(allgather(16, 4).steps, 5); // Fig 8
+        assert_eq!(allgather(16, 2).steps, 8); // Fig 9
+    }
+
+    fn prev_pow2_pub(n: usize, a: usize) -> usize {
+        let c = clamp_aggregation(n, a);
+        if c >= (n - 1).div_ceil(2) {
+            c
+        } else {
+            super::prev_pow2(c)
+        }
+    }
+
+    /// Non-power-of-two counts: between the ideal closed form and n-1
+    /// steps, always correct (Fig. 4 territory).
+    #[test]
+    fn step_counts_non_pow2_bounded() {
+        for n in [3usize, 5, 6, 7, 9, 11, 13, 17, 23, 25, 31, 33] {
+            for a in [1usize, 2, 4, 8] {
+                let p = allgather(n, a);
+                let ideal = pat_step_count(n, clamp_aggregation(n, a));
+                assert!(p.steps >= ideal.min(n - 1), "n={n} a={a}");
+                assert!(p.steps <= n - 1 + ceil_log2(n) as usize, "n={n} a={a} steps={}", p.steps);
+            }
+        }
+    }
+
+    /// Fig. 6: n=8, a=2 has one logarithmic step at the top and three
+    /// linear steps within the two parallel trees.
+    #[test]
+    fn fig6_phase_split() {
+        assert_eq!(phase_counts(8, 2), (1, 3));
+        // Fig. 7 (n=16, 8 trees): 3 top steps + 1 within-tree step.
+        assert_eq!(phase_counts(16, 8), (3, 1));
+        // Fig. 9 (n=16, 2 trees): 1 top step + 7 steps within each
+        // 8-node parallel tree.
+        assert_eq!(phase_counts(16, 2), (1, 7));
+        // Fig. 10 (fully linear): no logarithmic top at all.
+        assert_eq!(phase_counts(8, 1), (0, 7));
+    }
+
+    /// No transfer ever aggregates more than `a` chunks.
+    #[test]
+    fn aggregation_bounded() {
+        for n in 2..26 {
+            for a in 1..8 {
+                for order in [LinearOrder::DepthFirst, LinearOrder::DimMajor] {
+                    let p = allgather_with(n, a, order);
+                    assert!(p.stats().max_aggregation <= a, "n={n} a={a} {order:?}");
+                }
+            }
+        }
+    }
+
+    /// THE paper claim (P3): mirrored PAT reduce-scatter runs in
+    /// `a · log2(n/a)` accumulators with the depth-first order (each of the
+    /// `a` parallel trees holds one accumulator per level of its DFS path),
+    /// but Θ(n) with the dimension-major order — the ordering is what buys
+    /// the paper's "logarithmic amount of internal buffers".
+    #[test]
+    fn rs_accumulators_logarithmic_dfs_linear_dimmajor() {
+        for n in [8usize, 16, 32, 64, 128] {
+            for a in [1usize, 2, 4] {
+                let occ_dfs = verify_program(&reduce_scatter(n, a)).unwrap();
+                let bound = a * (ceil_log2(n) - crate::core::floor_log2(a)) as usize;
+                assert!(
+                    occ_dfs.peak_slots <= bound,
+                    "dfs n={n} a={a}: peak {} > {bound}",
+                    occ_dfs.peak_slots
+                );
+            }
+            // dim-major ablation blows up linearly
+            let occ_dm =
+                verify_program(&reduce_scatter_with(n, 2, LinearOrder::DimMajor)).unwrap();
+            assert!(
+                occ_dm.peak_slots >= n / 2 - 1,
+                "dim-major n={n}: peak {} unexpectedly small",
+                occ_dm.peak_slots
+            );
+        }
+    }
+
+    /// A=1 degenerates to a fully linear single-tree schedule (Fig. 10):
+    /// n-1 steps of exactly one chunk, for every n.
+    #[test]
+    fn fully_linear() {
+        for n in 2..24 {
+            let p = allgather(n, 1);
+            assert_eq!(p.steps, n - 1, "n={n}");
+            assert_eq!(p.stats().max_aggregation, 1);
+        }
+    }
+
+    /// Fig. 10 order: the first transfer of the fully linear schedule is
+    /// the farthest (root sends to its farthest child), then the schedule
+    /// progressively closes in.
+    #[test]
+    fn fully_linear_far_first() {
+        let rs = rounds(8, 1);
+        assert_eq!(rs[0].dim, 2, "first transfer crosses the far dimension");
+        assert_eq!(rs[0].offsets, vec![0]);
+        // last round is the root's nearest child
+        let last = rs.last().unwrap();
+        assert_eq!(last.dim, 0);
+        assert_eq!(last.offsets, vec![0]);
+    }
+
+    /// Mirror structure: PAT RS is PAT AG reversed (per-rank op lists flip).
+    #[test]
+    fn rs_is_exact_mirror() {
+        let ag = allgather(12, 2);
+        let rs = reduce_scatter(12, 2);
+        for r in 0..12 {
+            assert_eq!(ag.ranks[r].len(), rs.ranks[r].len());
+            for (a, b) in ag.ranks[r].iter().zip(rs.ranks[r].iter().rev()) {
+                match (a, b) {
+                    (Op::Send { peer: pa, chunks: ca, .. }, Op::Recv { peer: pb, chunks: cb, reduce, .. }) => {
+                        assert_eq!(pa, pb);
+                        assert_eq!(ca, cb);
+                        assert!(*reduce);
+                    }
+                    (Op::Recv { peer: pa, chunks: ca, .. }, Op::Send { peer: pb, chunks: cb, .. }) => {
+                        assert_eq!(pa, pb);
+                        assert_eq!(ca, cb);
+                    }
+                    other => panic!("mirror mismatch: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamping() {
+        assert_eq!(clamp_aggregation(2, 100), 1);
+        assert_eq!(clamp_aggregation(8, 100), 4);
+        assert_eq!(clamp_aggregation(16, usize::MAX), 8);
+        assert_eq!(clamp_aggregation(7, 100), 3);
+        assert_eq!(clamp_aggregation(9, 100), 4);
+    }
+
+    /// Total transfers always cover each root's tree exactly: n-1 chunk
+    /// transfers per root across the whole schedule.
+    #[test]
+    fn chunk_transfer_totals() {
+        for n in 2..20 {
+            for a in [1usize, 2, 3, usize::MAX] {
+                let p = allgather(n, a);
+                assert_eq!(p.stats().chunk_transfers, n * (n - 1), "n={n} a={a}");
+            }
+        }
+    }
+}

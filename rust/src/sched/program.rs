@@ -1,0 +1,282 @@
+//! The per-rank program IR shared by the verifier, the threaded transport,
+//! the network simulator and the benches.
+//!
+//! A [`Program`] holds, for each rank, an ordered list of [`Op`]s. Execution
+//! semantics:
+//!
+//! * Ops on one rank execute in list order (a rank is single-threaded, like
+//!   one NCCL channel).
+//! * Messages between a given (src, dst) pair are FIFO; the k-th `Recv` from
+//!   a peer matches the k-th `Send` to us from that peer.
+//! * `Send` is non-blocking (buffered), `Recv` blocks — the NCCL-like model
+//!   where the sender writes into a pre-mapped remote staging buffer.
+//!
+//! Chunk semantics depend on the collective:
+//!
+//! * **All-gather**: rank `r` initially owns chunk `r`. `Send` transmits
+//!   copies of owned chunks; `Recv` takes ownership of new chunks. At
+//!   completion every rank owns every chunk.
+//! * **Reduce-scatter**: rank `r` holds a contribution to *every* chunk.
+//!   `Recv { reduce: true }` folds the incoming partial sums into per-chunk
+//!   accumulators; `Send` transmits `own contribution (+ accumulator)` for
+//!   each chunk and consumes both. At completion rank `r` holds the full sum
+//!   for chunk `r` only.
+
+use std::collections::BTreeMap;
+
+use crate::core::{ChunkId, Collective, Rank};
+
+/// One operation in a rank's program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Send `chunks` (aggregated into a single message) to `peer`.
+    Send {
+        peer: Rank,
+        chunks: Vec<ChunkId>,
+        /// Logical schedule step (for display/grouping; not needed for
+        /// execution, which relies on per-rank order + per-pair FIFO).
+        step: usize,
+    },
+    /// Receive a message of `chunks` from `peer`. `reduce` folds into
+    /// accumulators (reduce-scatter) instead of taking ownership
+    /// (all-gather).
+    Recv {
+        peer: Rank,
+        chunks: Vec<ChunkId>,
+        reduce: bool,
+        step: usize,
+    },
+}
+
+impl Op {
+    pub fn step(&self) -> usize {
+        match self {
+            Op::Send { step, .. } | Op::Recv { step, .. } => *step,
+        }
+    }
+    pub fn chunks(&self) -> &[ChunkId] {
+        match self {
+            Op::Send { chunks, .. } | Op::Recv { chunks, .. } => chunks,
+        }
+    }
+    pub fn peer(&self) -> Rank {
+        match self {
+            Op::Send { peer, .. } | Op::Recv { peer, .. } => *peer,
+        }
+    }
+    pub fn is_send(&self) -> bool {
+        matches!(self, Op::Send { .. })
+    }
+}
+
+/// A complete collective schedule for `nranks`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Program {
+    pub nranks: usize,
+    pub collective: Collective,
+    /// Human-readable generator name, e.g. `pat(a=2)`.
+    pub algorithm: String,
+    /// `ranks[r]` is rank `r`'s ordered op list.
+    pub ranks: Vec<Vec<Op>>,
+    /// Number of logical steps (max `Op::step` + 1).
+    pub steps: usize,
+}
+
+impl Program {
+    pub fn new(nranks: usize, collective: Collective, algorithm: impl Into<String>) -> Program {
+        Program {
+            nranks,
+            collective,
+            algorithm: algorithm.into(),
+            ranks: vec![Vec::new(); nranks],
+            steps: 0,
+        }
+    }
+
+    pub fn push(&mut self, rank: Rank, op: Op) {
+        self.steps = self.steps.max(op.step() + 1);
+        self.ranks[rank].push(op);
+    }
+
+    /// Mirror an all-gather program into the corresponding reduce-scatter
+    /// program: reverse each rank's op order, swap `Send`↔`Recv`, and set
+    /// `reduce` on the receives. Steps are renumbered so the mirrored first
+    /// step is step 0.
+    ///
+    /// Why this is correct: in a valid all-gather, every `Recv` of a chunk
+    /// precedes all later `Send`s of that chunk on the same rank
+    /// (causality), and per-pair FIFO matching holds. Reversal flips both:
+    /// all reduced receives of a chunk now precede its single send (the
+    /// accumulator is complete before forwarding), and per-pair sequences
+    /// reverse consistently on both sides, so FIFO matching is preserved.
+    /// This is the paper's reduce-scatter construction: reversed tree,
+    /// nearest dimensions first, parallel (linear) phase before the
+    /// logarithmic phase.
+    pub fn mirror(&self) -> Program {
+        assert_eq!(
+            self.collective,
+            Collective::AllGather,
+            "mirror() converts all-gather programs to reduce-scatter"
+        );
+        let last = self.steps.saturating_sub(1);
+        let mut out = Program::new(self.nranks, Collective::ReduceScatter, self.algorithm.clone());
+        for (r, ops) in self.ranks.iter().enumerate() {
+            for op in ops.iter().rev() {
+                let m = match op {
+                    Op::Send { peer, chunks, step } => Op::Recv {
+                        peer: *peer,
+                        chunks: chunks.clone(),
+                        reduce: true,
+                        step: last - *step,
+                    },
+                    Op::Recv { peer, chunks, step, .. } => Op::Send {
+                        peer: *peer,
+                        chunks: chunks.clone(),
+                        step: last - *step,
+                    },
+                };
+                out.push(r, m);
+            }
+        }
+        out
+    }
+
+    /// All (src, dst, chunks, step) message tuples, in global step order
+    /// (ties broken by src). Convenient for printing and traffic analysis.
+    pub fn messages(&self) -> Vec<Message> {
+        let mut msgs = Vec::new();
+        for (src, ops) in self.ranks.iter().enumerate() {
+            for op in ops {
+                if let Op::Send { peer, chunks, step } = op {
+                    msgs.push(Message {
+                        src,
+                        dst: *peer,
+                        chunks: chunks.clone(),
+                        step: *step,
+                    });
+                }
+            }
+        }
+        msgs.sort_by_key(|m| (m.step, m.src));
+        msgs
+    }
+
+    /// Aggregate statistics used by benches and the tuner cost model.
+    pub fn stats(&self) -> ProgramStats {
+        let msgs = self.messages();
+        let nmsg = msgs.len();
+        let total_chunk_sends: usize = msgs.iter().map(|m| m.chunks.len()).sum();
+        let max_agg = msgs.iter().map(|m| m.chunks.len()).max().unwrap_or(0);
+        let mut per_rank_msgs: Vec<usize> = vec![0; self.nranks];
+        let mut per_rank_chunks: Vec<usize> = vec![0; self.nranks];
+        for m in &msgs {
+            per_rank_msgs[m.src] += 1;
+            per_rank_chunks[m.src] += m.chunks.len();
+        }
+        // Serial depth per rank: number of ops in the longest rank program.
+        let depth = self.ranks.iter().map(|o| o.len()).max().unwrap_or(0);
+        ProgramStats {
+            steps: self.steps,
+            messages: nmsg,
+            chunk_transfers: total_chunk_sends,
+            max_aggregation: max_agg,
+            max_rank_messages: per_rank_msgs.iter().copied().max().unwrap_or(0),
+            max_rank_chunks: per_rank_chunks.iter().copied().max().unwrap_or(0),
+            depth,
+        }
+    }
+
+    /// Group messages by logical step — the "rounds" shown in the paper's
+    /// figures.
+    pub fn rounds(&self) -> BTreeMap<usize, Vec<Message>> {
+        let mut by_step: BTreeMap<usize, Vec<Message>> = BTreeMap::new();
+        for m in self.messages() {
+            by_step.entry(m.step).or_default().push(m);
+        }
+        by_step
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.ranks.iter().map(|o| o.len()).sum()
+    }
+}
+
+/// A single message extracted from a program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    pub src: Rank,
+    pub dst: Rank,
+    pub chunks: Vec<ChunkId>,
+    pub step: usize,
+}
+
+/// Summary statistics of a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgramStats {
+    /// Logical step count (the paper's "number of network transfers" per
+    /// rank for symmetric schedules).
+    pub steps: usize,
+    /// Total messages across all ranks.
+    pub messages: usize,
+    /// Total chunk transfers (sum of message aggregation counts).
+    pub chunk_transfers: usize,
+    /// Largest number of chunks aggregated into one message.
+    pub max_aggregation: usize,
+    /// Max messages sent by any single rank.
+    pub max_rank_messages: usize,
+    /// Max chunk transfers sent by any single rank.
+    pub max_rank_chunks: usize,
+    /// Longest per-rank op list (serial depth).
+    pub depth: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_ag() -> Program {
+        // 2 ranks: 0 sends chunk 0 to 1; 1 sends chunk 1 to 0.
+        let mut p = Program::new(2, Collective::AllGather, "toy");
+        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
+        p.push(0, Op::Recv { peer: 1, chunks: vec![1], reduce: false, step: 0 });
+        p.push(1, Op::Send { peer: 0, chunks: vec![1], step: 0 });
+        p.push(1, Op::Recv { peer: 0, chunks: vec![0], reduce: false, step: 0 });
+        p
+    }
+
+    #[test]
+    fn mirror_swaps_and_reverses() {
+        let ag = toy_ag();
+        let rs = ag.mirror();
+        assert_eq!(rs.collective, Collective::ReduceScatter);
+        // rank 0: originally [Send c0, Recv c1] -> mirrored [Send c1, Recv c0 reduce]
+        assert_eq!(
+            rs.ranks[0],
+            vec![
+                Op::Send { peer: 1, chunks: vec![1], step: 0 },
+                Op::Recv { peer: 1, chunks: vec![0], reduce: true, step: 0 },
+            ]
+        );
+        assert_eq!(rs.steps, 1);
+    }
+
+    #[test]
+    fn stats_counts() {
+        let s = toy_ag().stats();
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.chunk_transfers, 2);
+        assert_eq!(s.max_aggregation, 1);
+        assert_eq!(s.depth, 2);
+    }
+
+    #[test]
+    fn messages_ordered_by_step() {
+        let mut p = Program::new(2, Collective::AllGather, "t");
+        p.push(1, Op::Send { peer: 0, chunks: vec![1], step: 1 });
+        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
+        let m = p.messages();
+        assert_eq!(m[0].step, 0);
+        assert_eq!(m[1].step, 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! Recursive doubling all-gather (and, by mirroring, recursive halving
+//! reduce-scatter) — the hypercube baseline [Thakur et al. 2005]. Works only
+//! on power-of-two rank counts, which the paper calls out as a significant
+//! constraint for AI workloads.
+//!
+//! At step `d`, rank `i` exchanges its entire aligned block of `2^d` chunks
+//! with partner `i XOR 2^d`; like classic Bruck, the last step moves half of
+//! the total data across the largest distance.
+
+use crate::core::{Collective, Error, Result};
+use crate::sched::program::{Op, Program};
+
+/// Recursive-doubling all-gather. `n` must be a power of two.
+pub fn allgather(n: usize) -> Program {
+    try_allgather(n).expect("recursive doubling requires power-of-two nranks")
+}
+
+/// Fallible variant used by the generation front-end.
+pub fn try_allgather(n: usize) -> Result<Program> {
+    if !n.is_power_of_two() {
+        return Err(Error::Unsupported(format!(
+            "recursive doubling requires a power-of-two rank count, got {n}"
+        )));
+    }
+    let mut p = Program::new(n, Collective::AllGather, "recursive");
+    if n <= 1 {
+        return Ok(p);
+    }
+    let k = n.trailing_zeros();
+    for d in 0..k {
+        let blk = 1usize << d;
+        for i in 0..n {
+            let partner = i ^ blk;
+            // Block of chunks currently held: the 2^d-aligned block around i.
+            let base = (i / blk) * blk;
+            let send: Vec<usize> = (base..base + blk).collect();
+            let pbase = (partner / blk) * blk;
+            let recv: Vec<usize> = (pbase..pbase + blk).collect();
+            p.push(i, Op::Send { peer: partner, chunks: send, step: d as usize });
+            p.push(i, Op::Recv { peer: partner, chunks: recv, reduce: false, step: d as usize });
+        }
+    }
+    Ok(p)
+}
+
+/// Recursive-halving reduce-scatter: the mirror of recursive doubling.
+pub fn reduce_scatter(n: usize) -> Result<Program> {
+    Ok(try_allgather(n)?.mirror())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify::verify_program;
+
+    #[test]
+    fn correct_pow2() {
+        for k in 0..6 {
+            verify_program(&allgather(1 << k)).unwrap();
+            verify_program(&reduce_scatter(1 << k).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_non_pow2() {
+        assert!(try_allgather(6).is_err());
+        assert!(try_allgather(7).is_err());
+    }
+
+    #[test]
+    fn log_steps_and_doubling_payload() {
+        let p = allgather(16);
+        assert_eq!(p.steps, 4);
+        let sizes: Vec<usize> = p
+            .rounds()
+            .values()
+            .map(|ms| ms[0].chunks.len())
+            .collect();
+        assert_eq!(sizes, vec![1, 2, 4, 8]);
+    }
+
+    /// The last step moves half the data to the most distant partner — the
+    /// pathology the paper describes for static-routed fabrics.
+    #[test]
+    fn last_step_is_far_and_fat() {
+        let p = allgather(16);
+        let rounds = p.rounds();
+        let last = rounds.values().last().unwrap();
+        for m in last {
+            assert_eq!(m.chunks.len(), 8);
+            assert_eq!(m.src ^ m.dst, 8);
+        }
+    }
+}

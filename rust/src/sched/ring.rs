@@ -1,0 +1,69 @@
+//! Ring all-gather — NCCL's historical algorithm for AG/RS and the paper's
+//! primary baseline: `n-1` steps, each moving one chunk to the next rank.
+//! Bandwidth-optimal, but latency is linear in the number of ranks.
+
+use crate::core::Collective;
+use crate::sched::program::{Op, Program};
+
+/// Ring all-gather. At step `s`, rank `i` sends chunk `(i - s) mod n` to
+/// `i+1` and receives chunk `(i - 1 - s) mod n` from `i-1`; after `n-1`
+/// steps every chunk has visited every rank.
+pub fn allgather(n: usize) -> Program {
+    let mut p = Program::new(n, Collective::AllGather, "ring");
+    if n <= 1 {
+        return p;
+    }
+    for s in 0..n - 1 {
+        for i in 0..n {
+            let next = (i + 1) % n;
+            let prev = (i + n - 1) % n;
+            let send_chunk = (i + n - s % n) % n;
+            let recv_chunk = (prev + n - s % n) % n;
+            p.push(i, Op::Send { peer: next, chunks: vec![send_chunk], step: s });
+            p.push(i, Op::Recv { peer: prev, chunks: vec![recv_chunk], reduce: false, step: s });
+        }
+    }
+    p
+}
+
+/// Ring reduce-scatter: the mirror of ring all-gather. Chunk `c` starts at
+/// rank `c+1`, travels the ring accumulating each rank's contribution, and
+/// lands fully-reduced on rank `c`.
+pub fn reduce_scatter(n: usize) -> Program {
+    allgather(n).mirror()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify::verify_program;
+
+    #[test]
+    fn ring_ag_structure() {
+        let p = allgather(4);
+        assert_eq!(p.steps, 3);
+        let s = p.stats();
+        assert_eq!(s.messages, 12); // (n-1) * n
+        assert_eq!(s.max_aggregation, 1);
+    }
+
+    #[test]
+    fn ring_ag_correct_small() {
+        for n in 1..12 {
+            verify_program(&allgather(n)).unwrap();
+        }
+    }
+
+    #[test]
+    fn ring_rs_correct_small() {
+        for n in 1..12 {
+            verify_program(&reduce_scatter(n)).unwrap();
+        }
+    }
+
+    #[test]
+    fn ring_rs_linear_steps() {
+        let p = reduce_scatter(8);
+        assert_eq!(p.steps, 7);
+    }
+}

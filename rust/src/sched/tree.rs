@@ -1,0 +1,330 @@
+//! Truncated binomial trees over rank offsets `[0, n)` — the building block
+//! of Bruck-style all-gather schedules (paper Figs. 2, 4, 6–10).
+//!
+//! All trees are expressed over *offsets*: the broadcast tree for rank `r`'s
+//! chunk spans offsets `o = (rank - r) mod n`. Shifting by the root rank
+//! turns tree edges into concrete (src, dst) rank pairs.
+//!
+//! Two dimension orders appear in the paper:
+//!
+//! * **Near-first** (classic Bruck, Fig. 1): data for the root reaches
+//!   offset `o` by adding set bits of `o` from lowest to highest, so
+//!   `parent(o) = o - 2^msb(o)`. Executing dims 0,1,2,… transfers 1,2,4,…
+//!   chunks — the *last* step moves half the data the *farthest*.
+//! * **Far-first** (dimension-reversed Bruck, Fig. 3; the PAT tree): bits
+//!   are added highest-to-lowest, so `parent(o) = o & (o-1)` (clear lowest
+//!   set bit). Executing dims …,2,1,0 sends 1,2,4,… chunks at *decreasing*
+//!   distance — long-haul transfers stay small, which is the property PAT
+//!   inherits.
+//!
+//! Both constructions are valid for any `n` (truncated trees, Fig. 4):
+//! every offset `< n` is reachable because each prefix of its bit
+//! decomposition is `≤ o < n`.
+
+use crate::core::floor_log2;
+
+/// Edge `(from, to)` between offsets, crossing dimension `dim`
+/// (`to = from + 2^dim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    pub dim: u32,
+}
+
+/// The far-first (dimension-reversed) truncated binomial tree — the PAT
+/// broadcast tree.
+#[derive(Debug, Clone)]
+pub struct FarFirstTree {
+    pub n: usize,
+}
+
+impl FarFirstTree {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        FarFirstTree { n }
+    }
+
+    /// Highest dimension with any edge: `floor(log2(n-1))`. `None` if n == 1.
+    pub fn dmax(&self) -> Option<u32> {
+        if self.n <= 1 {
+            None
+        } else {
+            Some(floor_log2(self.n - 1))
+        }
+    }
+
+    /// Parent of offset `o` (`o > 0`): clear the lowest set bit.
+    pub fn parent(&self, o: usize) -> usize {
+        assert!(o > 0 && o < self.n);
+        o & (o - 1)
+    }
+
+    /// The dimension of the edge from `parent(o)` to `o`: the lowest set bit.
+    pub fn edge_dim(&self, o: usize) -> u32 {
+        assert!(o > 0);
+        o.trailing_zeros()
+    }
+
+    /// Children of offset `o`, ordered far-to-near (descending dim):
+    /// `o + 2^d` for `d < lsb(o)` (all dims for the root `o = 0`), bounded
+    /// by `n`.
+    pub fn children(&self, o: usize) -> Vec<usize> {
+        let top = if o == 0 {
+            match self.dmax() {
+                Some(d) => d as i64,
+                None => return vec![],
+            }
+        } else {
+            o.trailing_zeros() as i64 - 1
+        };
+        let mut out = Vec::new();
+        for d in (0..=top).rev() {
+            let c = o + (1usize << d);
+            if c < self.n {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// All edges crossing dimension `d`: sources are the multiples of
+    /// `2^(d+1)` with `o + 2^d < n`. Returned in ascending source order.
+    pub fn edges_at_dim(&self, d: u32) -> Vec<Edge> {
+        let stride = 1usize << (d + 1);
+        let hop = 1usize << d;
+        let mut out = Vec::new();
+        let mut o = 0usize;
+        while o + hop < self.n {
+            out.push(Edge { from: o, to: o + hop, dim: d });
+            o += stride;
+        }
+        out
+    }
+
+    /// All edges, far dimension first (the PAT / reversed-Bruck execution
+    /// order), sources ascending within a dimension.
+    pub fn edges_far_first(&self) -> Vec<Edge> {
+        let mut out = Vec::new();
+        if let Some(dmax) = self.dmax() {
+            for d in (0..=dmax).rev() {
+                out.extend(self.edges_at_dim(d));
+            }
+        }
+        out
+    }
+
+    /// Depth of offset `o` in the tree (= number of set bits: each bit is
+    /// one hop from the root).
+    pub fn depth(&self, o: usize) -> u32 {
+        o.count_ones()
+    }
+}
+
+/// The near-first (classic Bruck) truncated binomial tree.
+#[derive(Debug, Clone)]
+pub struct NearFirstTree {
+    pub n: usize,
+}
+
+impl NearFirstTree {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        NearFirstTree { n }
+    }
+
+    pub fn dmax(&self) -> Option<u32> {
+        if self.n <= 1 {
+            None
+        } else {
+            Some(floor_log2(self.n - 1))
+        }
+    }
+
+    /// Parent of offset `o`: clear the highest set bit.
+    pub fn parent(&self, o: usize) -> usize {
+        assert!(o > 0 && o < self.n);
+        o - (1usize << floor_log2(o))
+    }
+
+    pub fn edge_dim(&self, o: usize) -> u32 {
+        assert!(o > 0);
+        floor_log2(o)
+    }
+
+    /// Children of `o`: `o + 2^d` for `d > msb(o)` (any dim for the root),
+    /// bounded by `n`. Ordered near-to-far (ascending dim).
+    pub fn children(&self, o: usize) -> Vec<usize> {
+        let lo = if o == 0 { 0 } else { floor_log2(o) + 1 };
+        let mut out = Vec::new();
+        if let Some(dmax) = self.dmax() {
+            for d in lo..=dmax {
+                let c = o + (1usize << d);
+                if c < self.n {
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// All edges crossing dimension `d`: sources are offsets `o < 2^d` with
+    /// `o + 2^d < n` — i.e. `min(2^d, n - 2^d)` edges, the classic Bruck
+    /// transfer count.
+    pub fn edges_at_dim(&self, d: u32) -> Vec<Edge> {
+        let hop = 1usize << d;
+        let count = hop.min(self.n.saturating_sub(hop));
+        (0..count)
+            .map(|o| Edge { from: o, to: o + hop, dim: d })
+            .collect()
+    }
+
+    /// All edges, near dimension first (classic Bruck execution order).
+    pub fn edges_near_first(&self) -> Vec<Edge> {
+        let mut out = Vec::new();
+        if let Some(dmax) = self.dmax() {
+            for d in 0..=dmax {
+                out.extend(self.edges_at_dim(d));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    /// Every offset in [1, n) must be reachable from 0 through parent links.
+    /// Walking *up* a far-first tree clears the lowest set bit each hop, so
+    /// edge dims strictly increase toward the root (equivalently: they
+    /// strictly decrease along the root→leaf path, the far-first property).
+    #[test]
+    fn far_first_tree_spans_any_n() {
+        for n in 1..130 {
+            let t = FarFirstTree::new(n);
+            for o in 1..n {
+                let mut cur = o;
+                let mut last_dim: i64 = -1;
+                while cur != 0 {
+                    let d = t.edge_dim(cur) as i64;
+                    assert!(d > last_dim, "dims must increase walking up (n={n}, o={o})");
+                    last_dim = d;
+                    cur = t.parent(cur);
+                }
+            }
+        }
+    }
+
+    /// Near-first mirror: walking up clears the highest set bit each hop,
+    /// so edge dims strictly decrease toward the root.
+    #[test]
+    fn near_first_tree_spans_any_n() {
+        for n in 1..130 {
+            let t = NearFirstTree::new(n);
+            for o in 1..n {
+                let mut cur = o;
+                let mut last_dim = u32::MAX;
+                while cur != 0 {
+                    let d = t.edge_dim(cur);
+                    assert!(d < last_dim, "dims must decrease walking up (n={n}, o={o})");
+                    last_dim = d;
+                    cur = t.parent(cur);
+                }
+            }
+        }
+    }
+
+    /// The union of edges_at_dim over all dims is exactly n-1 edges, one per
+    /// non-root offset, and matches parent().
+    #[test]
+    fn edges_form_the_tree() {
+        for n in 2..100 {
+            let t = FarFirstTree::new(n);
+            let edges = t.edges_far_first();
+            assert_eq!(edges.len(), n - 1, "n={n}");
+            let mut seen = HashSet::new();
+            for e in &edges {
+                assert_eq!(t.parent(e.to), e.from);
+                assert_eq!(t.edge_dim(e.to), e.dim);
+                assert!(seen.insert(e.to), "offset {} reached twice (n={n})", e.to);
+            }
+            let nt = NearFirstTree::new(n);
+            let edges = nt.edges_near_first();
+            assert_eq!(edges.len(), n - 1, "near n={n}");
+            for e in &edges {
+                assert_eq!(nt.parent(e.to), e.from);
+            }
+        }
+    }
+
+    /// children() is consistent with parent().
+    #[test]
+    fn children_parent_consistent() {
+        for n in [1usize, 2, 3, 7, 8, 16, 23, 64, 100] {
+            let t = FarFirstTree::new(n);
+            for o in 0..n {
+                for c in t.children(o) {
+                    assert_eq!(t.parent(c), o, "far n={n} o={o} c={c}");
+                }
+            }
+            let nt = NearFirstTree::new(n);
+            for o in 0..n {
+                for c in nt.children(o) {
+                    assert_eq!(nt.parent(c), o, "near n={n} o={o} c={c}");
+                }
+            }
+        }
+    }
+
+    /// Paper Fig. 3 (reversed-dim Bruck, 8 ranks): dims executed 2,1,0 send
+    /// 1, 2, 4 chunks respectively.
+    #[test]
+    fn far_first_dim_transfer_counts_8() {
+        let t = FarFirstTree::new(8);
+        assert_eq!(t.edges_at_dim(2).len(), 1);
+        assert_eq!(t.edges_at_dim(1).len(), 2);
+        assert_eq!(t.edges_at_dim(0).len(), 4);
+    }
+
+    /// Paper Fig. 1 (classic Bruck, 8 ranks): dims executed 0,1,2 send
+    /// 1, 2, 4 chunks.
+    #[test]
+    fn near_first_dim_transfer_counts_8() {
+        let t = NearFirstTree::new(8);
+        assert_eq!(t.edges_at_dim(0).len(), 1);
+        assert_eq!(t.edges_at_dim(1).len(), 2);
+        assert_eq!(t.edges_at_dim(2).len(), 4);
+    }
+
+    /// Paper Fig. 4 (7 ranks): per-dim chunk counts for the truncated tree.
+    #[test]
+    fn truncated_7_counts() {
+        let t = FarFirstTree::new(7);
+        // far-first: dim 2 -> 1 edge (0->4), dim 1 -> 2 (0->2, 4->6),
+        // dim 0 -> 3 (0->1, 2->3, 4->5); total 6 = n-1.
+        assert_eq!(t.edges_at_dim(2).len(), 1);
+        assert_eq!(t.edges_at_dim(1).len(), 2);
+        assert_eq!(t.edges_at_dim(0).len(), 3);
+        let nt = NearFirstTree::new(7);
+        assert_eq!(nt.edges_at_dim(0).len(), 1);
+        assert_eq!(nt.edges_at_dim(1).len(), 2);
+        assert_eq!(nt.edges_at_dim(2).len(), 3);
+    }
+
+    #[test]
+    fn depth_is_popcount() {
+        let t = FarFirstTree::new(16);
+        assert_eq!(t.depth(0), 0);
+        assert_eq!(t.depth(7), 3);
+        assert_eq!(t.depth(8), 1);
+    }
+
+    #[test]
+    fn single_rank_has_no_edges() {
+        assert!(FarFirstTree::new(1).edges_far_first().is_empty());
+        assert!(NearFirstTree::new(1).edges_near_first().is_empty());
+        assert_eq!(FarFirstTree::new(1).dmax(), None);
+    }
+}

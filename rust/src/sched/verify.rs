@@ -1,0 +1,452 @@
+//! Reference executor over the program IR: correctness, FIFO matching,
+//! deadlock detection, and buffer-occupancy measurement.
+//!
+//! This is the ground truth every generator, the transport engine, and the
+//! simulator are validated against. Reduce-scatter is checked with exact
+//! integer arithmetic (each rank's contribution to each chunk is a distinct
+//! integer), so reduction-order questions cannot mask a miscounted or
+//! double-counted contribution.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::core::{ChunkId, Collective, Error, Rank, Result};
+use crate::sched::program::{Op, Program};
+
+/// Buffer-occupancy report (paper claim P3: PAT needs a logarithmic amount
+/// of internal buffering, independent of the operation size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OccupancyReport {
+    /// All-gather: peak number of chunks held in staging (received but not
+    /// yet fully forwarded, excluding the rank's own chunk) on any rank.
+    /// Reduce-scatter: peak number of live accumulators on any rank.
+    pub peak_slots: usize,
+    /// Rank on which the peak occurred.
+    pub peak_rank: Rank,
+}
+
+/// The exact integer contribution of `rank` to `chunk` used by the
+/// reduce-scatter check (distinct per (rank, chunk) pair).
+pub fn rs_contribution(rank: Rank, chunk: ChunkId) -> i64 {
+    (rank as i64 + 1) * 1_000_003 + (chunk as i64 + 1) * 7919
+}
+
+/// Verify a program end-to-end. Checks, in order:
+/// 1. per-pair FIFO consistency (k-th recv matches k-th send: same chunk
+///    list, matching reduce flag for the collective),
+/// 2. deadlock-free completion under blocking receives,
+/// 3. data correctness (every rank owns every chunk for AG; exact reduced
+///    sums on the owner rank for RS),
+/// 4. causality (a rank only sends chunk data it actually holds).
+///
+/// Returns the buffer-occupancy report measured during execution.
+pub fn verify_program(p: &Program) -> Result<OccupancyReport> {
+    check_fifo(p)?;
+    match p.collective {
+        Collective::AllGather => verify_allgather(p),
+        Collective::ReduceScatter => verify_reduce_scatter(p),
+    }
+}
+
+/// Structural FIFO check: for each ordered pair (s, d), the sequence of
+/// sends s→d equals the sequence of recvs at d from s (chunk lists in
+/// order), and reduce flags agree with the collective type.
+pub fn check_fifo(p: &Program) -> Result<()> {
+    let mut sends: HashMap<(Rank, Rank), Vec<&Vec<ChunkId>>> = HashMap::new();
+    let mut recvs: HashMap<(Rank, Rank), Vec<&Vec<ChunkId>>> = HashMap::new();
+    for (r, ops) in p.ranks.iter().enumerate() {
+        for op in ops {
+            match op {
+                Op::Send { peer, chunks, .. } => {
+                    if *peer == r {
+                        return Err(Error::Verify(format!("rank {r} sends to itself")));
+                    }
+                    sends.entry((r, *peer)).or_default().push(chunks);
+                }
+                Op::Recv { peer, chunks, reduce, .. } => {
+                    let want_reduce = p.collective == Collective::ReduceScatter;
+                    if *reduce != want_reduce {
+                        return Err(Error::Verify(format!(
+                            "rank {r}: recv reduce={reduce} inconsistent with {}",
+                            p.collective
+                        )));
+                    }
+                    recvs.entry((*peer, r)).or_default().push(chunks);
+                }
+            }
+        }
+    }
+    for (pair, s) in &sends {
+        let r = recvs.get(pair).map(|v| v.as_slice()).unwrap_or(&[]);
+        if s.len() != r.len() {
+            return Err(Error::Verify(format!(
+                "pair {pair:?}: {} sends vs {} recvs",
+                s.len(),
+                r.len()
+            )));
+        }
+        for (k, (sc, rc)) in s.iter().zip(r.iter()).enumerate() {
+            if sc != rc {
+                return Err(Error::Verify(format!(
+                    "pair {pair:?} message {k}: send chunks {sc:?} != recv chunks {rc:?}"
+                )));
+            }
+        }
+    }
+    for pair in recvs.keys() {
+        if !sends.contains_key(pair) {
+            return Err(Error::Verify(format!("recv with no send for pair {pair:?}")));
+        }
+    }
+    Ok(())
+}
+
+/// Round-robin execution harness shared by both verifiers. Calls `on_send`
+/// / `on_recv` as ops retire; returns an error on deadlock.
+fn execute<FS, FR>(p: &Program, mut on_send: FS, mut on_recv: FR) -> Result<()>
+where
+    FS: FnMut(Rank, Rank, &[ChunkId]) -> Result<Vec<i64>>,
+    FR: FnMut(Rank, Rank, &[ChunkId], Vec<i64>) -> Result<()>,
+{
+    let n = p.nranks;
+    let mut pc = vec![0usize; n];
+    // In-flight FIFO queues per directed pair.
+    let mut wires: HashMap<(Rank, Rank), VecDeque<Vec<i64>>> = HashMap::new();
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..n {
+            // Drain every op the rank can retire right now (sends always
+            // retire; recvs retire when the message is queued).
+            while pc[r] < p.ranks[r].len() {
+                match &p.ranks[r][pc[r]] {
+                    Op::Send { peer, chunks, .. } => {
+                        let payload = on_send(r, *peer, chunks)?;
+                        wires.entry((r, *peer)).or_default().push_back(payload);
+                        pc[r] += 1;
+                        progressed = true;
+                    }
+                    Op::Recv { peer, chunks, .. } => {
+                        let q = wires.entry((*peer, r)).or_default();
+                        if let Some(payload) = q.pop_front() {
+                            on_recv(r, *peer, chunks, payload)?;
+                            pc[r] += 1;
+                            progressed = true;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+            if pc[r] < p.ranks[r].len() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            return Ok(());
+        }
+        if !progressed {
+            let stuck: Vec<String> = (0..n)
+                .filter(|&r| pc[r] < p.ranks[r].len())
+                .map(|r| format!("rank {r} at op {}: {:?}", pc[r], p.ranks[r][pc[r]]))
+                .collect();
+            return Err(Error::Verify(format!(
+                "deadlock; blocked ranks: {}",
+                stuck.join("; ")
+            )));
+        }
+    }
+}
+
+fn verify_allgather(p: &Program) -> Result<OccupancyReport> {
+    let n = p.nranks;
+    // owned[r][c]: value of chunk c held by rank r (i64 tag), or None.
+    let mut owned: Vec<Vec<Option<i64>>> = (0..n)
+        .map(|r| {
+            (0..n)
+                .map(|c| if c == r { Some(chunk_tag(c)) } else { None })
+                .collect()
+        })
+        .collect();
+    // Staging occupancy: chunks received that still have pending forwards.
+    // pending_forwards[r][c] = number of sends of chunk c by rank r that
+    // occur *after* its receive, computed statically.
+    let pending = pending_forwards(p);
+    let mut live: Vec<HashMap<ChunkId, usize>> = vec![HashMap::new(); n];
+    let mut peak = OccupancyReport { peak_slots: 0, peak_rank: 0 };
+
+    // Work around borrow rules: state in RefCell-free closures via split.
+    let owned_cell = std::cell::RefCell::new(&mut owned);
+    let live_cell = std::cell::RefCell::new(&mut live);
+    let peak_cell = std::cell::RefCell::new(&mut peak);
+
+    execute(
+        p,
+        |r, _dst, chunks| {
+            let ow = owned_cell.borrow_mut();
+            let mut lv = live_cell.borrow_mut();
+            let mut payload = Vec::with_capacity(chunks.len());
+            for &c in chunks {
+                let v = ow[r][c].ok_or_else(|| {
+                    Error::Verify(format!("rank {r} sends chunk {c} it does not hold"))
+                })?;
+                payload.push(v);
+                // Retire one pending forward; free the staging slot on last.
+                if let Some(cnt) = lv[r].get_mut(&c) {
+                    *cnt -= 1;
+                    if *cnt == 0 {
+                        lv[r].remove(&c);
+                    }
+                }
+            }
+            Ok(payload)
+        },
+        |r, _src, chunks, payload| {
+            let mut ow = owned_cell.borrow_mut();
+            let mut lv = live_cell.borrow_mut();
+            let mut pk = peak_cell.borrow_mut();
+            if payload.len() != chunks.len() {
+                return Err(Error::Verify("payload/chunks length mismatch".into()));
+            }
+            for (&c, v) in chunks.iter().zip(payload) {
+                if ow[r][c].is_some() {
+                    return Err(Error::Verify(format!(
+                        "rank {r} received chunk {c} it already holds"
+                    )));
+                }
+                if v != chunk_tag(c) {
+                    return Err(Error::Verify(format!(
+                        "rank {r} chunk {c}: corrupted tag {v}"
+                    )));
+                }
+                ow[r][c] = Some(v);
+                let fw = pending[r].get(&c).copied().unwrap_or(0);
+                if fw > 0 {
+                    lv[r].insert(c, fw);
+                }
+            }
+            if lv[r].len() > pk.peak_slots {
+                pk.peak_slots = lv[r].len();
+                pk.peak_rank = r;
+            }
+            Ok(())
+        },
+    )?;
+
+    for (r, row) in owned.iter().enumerate() {
+        for (c, v) in row.iter().enumerate() {
+            if v.is_none() {
+                return Err(Error::Verify(format!(
+                    "all-gather incomplete: rank {r} missing chunk {c}"
+                )));
+            }
+        }
+    }
+    Ok(peak)
+}
+
+/// For each rank, how many times each chunk is forwarded after being
+/// received (all-gather staging lifetime).
+fn pending_forwards(p: &Program) -> Vec<HashMap<ChunkId, usize>> {
+    let mut out: Vec<HashMap<ChunkId, usize>> = vec![HashMap::new(); p.nranks];
+    for (r, ops) in p.ranks.iter().enumerate() {
+        let mut seen_recv: HashMap<ChunkId, bool> = HashMap::new();
+        for op in ops {
+            match op {
+                Op::Recv { chunks, .. } => {
+                    for &c in chunks {
+                        seen_recv.insert(c, true);
+                    }
+                }
+                Op::Send { chunks, .. } => {
+                    for &c in chunks {
+                        if seen_recv.get(&c).copied().unwrap_or(false) {
+                            *out[r].entry(c).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn chunk_tag(c: ChunkId) -> i64 {
+    (c as i64 + 1) * 104_729
+}
+
+fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
+    let n = p.nranks;
+    // Accumulators per rank: chunk -> partial sum. Own contribution is
+    // consumed exactly when the chunk is sent (or at completion for the
+    // rank's own chunk).
+    let mut acc: Vec<HashMap<ChunkId, i64>> = vec![HashMap::new(); n];
+    let mut contributed: Vec<Vec<bool>> = vec![vec![false; n]; n];
+    let mut peak = OccupancyReport { peak_slots: 0, peak_rank: 0 };
+
+    let acc_cell = std::cell::RefCell::new(&mut acc);
+    let contrib_cell = std::cell::RefCell::new(&mut contributed);
+    let peak_cell = std::cell::RefCell::new(&mut peak);
+
+    execute(
+        p,
+        |r, _dst, chunks| {
+            let mut ac = acc_cell.borrow_mut();
+            let mut ct = contrib_cell.borrow_mut();
+            let mut payload = Vec::with_capacity(chunks.len());
+            for &c in chunks {
+                if c == r {
+                    return Err(Error::Verify(format!(
+                        "rank {r} sends its own output chunk {c}"
+                    )));
+                }
+                if ct[r][c] {
+                    return Err(Error::Verify(format!(
+                        "rank {r} contributes to chunk {c} twice"
+                    )));
+                }
+                ct[r][c] = true;
+                let partial = ac[r].remove(&c).unwrap_or(0);
+                payload.push(partial + rs_contribution(r, c));
+            }
+            Ok(payload)
+        },
+        |r, _src, chunks, payload| {
+            let mut ac = acc_cell.borrow_mut();
+            let mut pk = peak_cell.borrow_mut();
+            for (&c, v) in chunks.iter().zip(payload) {
+                *ac[r].entry(c).or_insert(0) += v;
+            }
+            if ac[r].len() > pk.peak_slots {
+                pk.peak_slots = ac[r].len();
+                pk.peak_rank = r;
+            }
+            Ok(())
+        },
+    )?;
+
+    // Completion: rank r holds exactly the full sum for chunk r.
+    for r in 0..n {
+        let own = acc[r].remove(&r).unwrap_or(0) + rs_contribution(r, r);
+        let want: i64 = (0..n).map(|i| rs_contribution(i, r)).sum();
+        if own != want {
+            return Err(Error::Verify(format!(
+                "reduce-scatter: rank {r} output {own} != expected {want}"
+            )));
+        }
+        if !acc[r].is_empty() {
+            return Err(Error::Verify(format!(
+                "rank {r} left with stale accumulators for chunks {:?}",
+                acc[r].keys().collect::<Vec<_>>()
+            )));
+        }
+        // Every rank must have contributed to every chunk exactly once
+        // (either by sending it or by owning the output).
+        for c in 0..n {
+            if c != r && !contributed[r][c] {
+                return Err(Error::Verify(format!(
+                    "rank {r} never contributed to chunk {c}"
+                )));
+            }
+        }
+    }
+    Ok(peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::program::{Op, Program};
+
+    fn push_pair(p: &mut Program, src: Rank, dst: Rank, chunks: Vec<ChunkId>, step: usize) {
+        let reduce = p.collective == Collective::ReduceScatter;
+        p.push(src, Op::Send { peer: dst, chunks: chunks.clone(), step });
+        p.push(dst, Op::Recv { peer: src, chunks, reduce, step });
+    }
+
+    #[test]
+    fn detects_missing_chunk() {
+        // 3 ranks, rank 2 never receives chunk 0.
+        let mut p = Program::new(3, Collective::AllGather, "bad");
+        push_pair(&mut p, 0, 1, vec![0], 0);
+        push_pair(&mut p, 1, 0, vec![1], 0);
+        push_pair(&mut p, 1, 2, vec![1], 1);
+        push_pair(&mut p, 2, 0, vec![2], 1);
+        push_pair(&mut p, 2, 1, vec![2], 1);
+        let err = verify_program(&p).unwrap_err();
+        assert!(err.to_string().contains("missing chunk"), "{err}");
+    }
+
+    #[test]
+    fn detects_send_of_unheld_chunk() {
+        let mut p = Program::new(2, Collective::AllGather, "bad");
+        // rank 0 sends chunk 1 which it does not hold.
+        push_pair(&mut p, 0, 1, vec![1], 0);
+        push_pair(&mut p, 1, 0, vec![1], 0);
+        let err = verify_program(&p).unwrap_err();
+        assert!(err.to_string().contains("does not hold"), "{err}");
+    }
+
+    #[test]
+    fn detects_deadlock() {
+        let mut p = Program::new(2, Collective::AllGather, "bad");
+        // Both ranks recv first from each other with no sends queued.
+        p.push(0, Op::Recv { peer: 1, chunks: vec![1], reduce: false, step: 0 });
+        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
+        p.push(1, Op::Recv { peer: 0, chunks: vec![0], reduce: false, step: 0 });
+        p.push(1, Op::Send { peer: 0, chunks: vec![1], step: 0 });
+        let err = verify_program(&p).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn detects_fifo_mismatch() {
+        let mut p = Program::new(2, Collective::AllGather, "bad");
+        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
+        p.push(1, Op::Recv { peer: 0, chunks: vec![1], reduce: false, step: 0 });
+        let err = verify_program(&p).unwrap_err();
+        assert!(err.to_string().contains("send chunks"), "{err}");
+    }
+
+    #[test]
+    fn detects_double_contribution() {
+        let mut p = Program::new(2, Collective::ReduceScatter, "bad");
+        push_pair(&mut p, 0, 1, vec![1], 0);
+        push_pair(&mut p, 0, 1, vec![1], 1);
+        push_pair(&mut p, 1, 0, vec![0], 0);
+        let err = verify_program(&p).unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn minimal_ag_2ranks_ok() {
+        let mut p = Program::new(2, Collective::AllGather, "ok");
+        push_pair(&mut p, 0, 1, vec![0], 0);
+        push_pair(&mut p, 1, 0, vec![1], 0);
+        let occ = verify_program(&p).unwrap();
+        assert_eq!(occ.peak_slots, 0); // nothing is ever forwarded
+    }
+
+    #[test]
+    fn minimal_rs_2ranks_ok() {
+        let mut p = Program::new(2, Collective::ReduceScatter, "ok");
+        push_pair(&mut p, 0, 1, vec![1], 0);
+        push_pair(&mut p, 1, 0, vec![0], 0);
+        verify_program(&p).unwrap();
+    }
+
+    /// Staging occupancy: a 3-rank relay where rank 1 must hold rank 0's
+    /// chunk before forwarding it to rank 2.
+    #[test]
+    fn staging_occupancy_counted() {
+        let mut p = Program::new(3, Collective::AllGather, "relay");
+        push_pair(&mut p, 0, 1, vec![0], 0);
+        push_pair(&mut p, 1, 2, vec![0], 1); // forward: chunk 0 staged at rank 1
+        push_pair(&mut p, 1, 2, vec![1], 1);
+        push_pair(&mut p, 1, 0, vec![1], 1);
+        push_pair(&mut p, 2, 0, vec![2], 2);
+        push_pair(&mut p, 2, 1, vec![2], 2);
+        let occ = verify_program(&p).unwrap();
+        assert_eq!(occ.peak_slots, 1);
+        assert_eq!(occ.peak_rank, 1);
+    }
+}

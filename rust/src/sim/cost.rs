@@ -1,0 +1,116 @@
+//! The α-β-γ cost model.
+//!
+//! * `alpha_base` — per-message software/NIC initiation overhead (the α in
+//!   α-β models; a few microseconds for IB verbs + NCCL proxies).
+//! * `alpha_hop` — per-switch-hop propagation/forwarding latency.
+//! * link bandwidth — per-link serialization (β) lives on the
+//!   [`crate::sim::topology::Link`], so tapered tiers serialize slower.
+//! * `gamma_chunk` / `gamma_byte` — *local* per-chunk and per-byte handling
+//!   cost for non-contiguous aggregation (pack/unpack). This is PAT's
+//!   "linear part [that] is purely local" (paper §Performance).
+//! * `msg_gap` — minimum spacing between messages injected by one NIC
+//!   (inverse message rate). This is Ring's linear part: "more related to
+//!   the message rate of the network than its latency".
+//! * `reduce_byte` — per-byte cost of the reduction on the RS datapath.
+
+/// Cost model parameters. All times in seconds, bandwidth in bytes/s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub alpha_base: f64,
+    pub alpha_hop: f64,
+    pub gamma_chunk: f64,
+    pub gamma_byte: f64,
+    pub msg_gap: f64,
+    pub reduce_byte: f64,
+}
+
+impl CostModel {
+    /// An HDR-InfiniBand-like profile: 25 GB/s NICs (set on the topology),
+    /// ~2 µs message overhead, 150 ns per hop, ~200M msg/s NIC message
+    /// rate, 50 ns per-chunk local handling (GPU copy-engine descriptor
+    /// cost), ~200 GB/s local pack/reduce bandwidth. The per-chunk constant
+    /// is the knob the paper's §Performance discusses ("depending on the
+    /// amount of optimization we can achieve on those linear parts … the
+    /// algorithm may look linear or logarithmic"); the ablation bench
+    /// sweeps it.
+    pub fn ib_hdr() -> CostModel {
+        CostModel {
+            alpha_base: 2.0e-6,
+            alpha_hop: 150e-9,
+            gamma_chunk: 50e-9,
+            gamma_byte: 1.0 / 200e9,
+            msg_gap: 5e-9,
+            reduce_byte: 1.0 / 200e9,
+        }
+    }
+
+    /// NIC bandwidth matching the ib_hdr profile (bytes/s).
+    pub fn ib_hdr_nic_bw() -> f64 {
+        25e9
+    }
+
+    /// A latency-dominated profile (slow software stack, e.g. TCP):
+    /// stresses the logarithmic-vs-linear step-count difference.
+    pub fn tcp_like() -> CostModel {
+        CostModel {
+            alpha_base: 30e-6,
+            alpha_hop: 1e-6,
+            gamma_chunk: 1e-6,
+            gamma_byte: 1.0 / 20e9,
+            msg_gap: 2e-6,
+            reduce_byte: 1.0 / 20e9,
+        }
+    }
+
+    /// Zero-overhead model: pure link serialization. Useful in tests to
+    /// isolate bandwidth effects.
+    pub fn ideal() -> CostModel {
+        CostModel {
+            alpha_base: 0.0,
+            alpha_hop: 0.0,
+            gamma_chunk: 0.0,
+            gamma_byte: 0.0,
+            msg_gap: 0.0,
+            reduce_byte: 0.0,
+        }
+    }
+
+    /// Local pack/unpack cost for a message of `chunks` pieces totalling
+    /// `bytes` (zero when the payload is a single contiguous chunk).
+    pub fn pack_cost(&self, chunks: usize, bytes: usize) -> f64 {
+        if chunks <= 1 {
+            0.0
+        } else {
+            self.gamma_chunk * chunks as f64 + self.gamma_byte * bytes as f64
+        }
+    }
+
+    /// Reduction cost for folding `bytes` into an accumulator.
+    pub fn reduce_cost(&self, bytes: usize) -> f64 {
+        self.reduce_byte * bytes as f64
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::ib_hdr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_free_for_contiguous() {
+        let c = CostModel::ib_hdr();
+        assert_eq!(c.pack_cost(1, 1 << 20), 0.0);
+        assert!(c.pack_cost(4, 1 << 20) > 0.0);
+    }
+
+    #[test]
+    fn profiles_ordered() {
+        assert!(CostModel::tcp_like().alpha_base > CostModel::ib_hdr().alpha_base);
+        assert_eq!(CostModel::ideal().alpha_base, 0.0);
+    }
+}

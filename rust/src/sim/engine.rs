@@ -1,0 +1,415 @@
+//! Discrete-event execution of a schedule [`Program`] against a
+//! [`Topology`] + [`CostModel`].
+//!
+//! Model (documented assumptions):
+//!
+//! * Each rank is a single in-order execution stream (one NCCL channel):
+//!   ops retire in program order; `Recv` blocks, `Send` posts and returns
+//!   after the software gap `msg_gap` (NIC offload does serialization).
+//! * A message traverses its link path cut-through: every link on the path
+//!   starts serializing at the same contended start time `t0 = max(ready,
+//!   max link_free)` and is busy for `bytes / bw_link`; the message arrives
+//!   at `t0 + bytes / min_bw + alpha_base + alpha_hop * hops`. Contention
+//!   is first-come-first-served per link in event-time order.
+//! * Static routing: the path for (src, dst) is fixed for the whole run
+//!   (ECMP hash, salt 0), so colliding flows collide on *every* step —
+//!   the paper's congestion mechanism.
+//! * Non-contiguous payloads (more than one chunk per message) pay the
+//!   local pack cost at the sender and unpack cost at the receiver
+//!   (PAT's "linear part is purely local"). Reducing receives additionally
+//!   pay `reduce_byte * bytes` (the RS datapath kernel).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::core::{Error, Rank, Result};
+use crate::sched::program::{Op, Program};
+use crate::sim::cost::CostModel;
+use crate::sim::topology::Topology;
+
+/// Simulation result and traffic metrics.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Completion time of the slowest rank (seconds).
+    pub total_time: f64,
+    /// Total messages injected.
+    pub messages: usize,
+    /// Total bytes injected at NICs.
+    pub bytes_sent: usize,
+    /// Σ (message bytes × links traversed) — the "long-distance traffic"
+    /// metric: schedules that send big payloads far score high.
+    pub bytes_links: f64,
+    /// Bytes crossing each fabric tier (index = distance level; level 0 =
+    /// NIC/leaf-local, top = the tapered tier the paper worries about).
+    pub bytes_by_level: Vec<usize>,
+    /// Heaviest per-link byte count (hot-spot load).
+    pub max_link_bytes: usize,
+    /// Busy fraction of the busiest link (serialization time / total time).
+    pub busiest_link_utilization: f64,
+    /// Per-rank completion times.
+    pub finish: Vec<f64>,
+}
+
+impl SimReport {
+    /// Algorithm bandwidth: payload bytes per rank / total time (the
+    /// `algbw` NCCL reports). For AG the payload is `(n-1) * chunk_bytes`
+    /// received per rank; callers pass the per-rank payload.
+    pub fn algbw(&self, payload_bytes_per_rank: usize) -> f64 {
+        payload_bytes_per_rank as f64 / self.total_time
+    }
+}
+
+/// Time-ordered f64 key for the event heap (all times finite).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("non-finite sim time")
+    }
+}
+
+/// One message's simulated lifetime (for `--trace` / timeline analysis).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub step: usize,
+    pub src: Rank,
+    pub dst: Rank,
+    pub nchunks: usize,
+    pub bytes: usize,
+    /// Time serialization started (after link contention).
+    pub t_start: f64,
+    /// Time the message fully arrived at the destination NIC.
+    pub t_arrival: f64,
+}
+
+/// Simulate `p` over `topo` with `cost`, `chunk_bytes` bytes per chunk.
+pub fn simulate(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: usize,
+) -> Result<SimReport> {
+    sim_inner(p, topo, cost, chunk_bytes, None)
+}
+
+/// Like [`simulate`], additionally returning the per-message timeline.
+pub fn simulate_traced(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: usize,
+) -> Result<(SimReport, Vec<TraceEvent>)> {
+    let mut trace = Vec::new();
+    let rep = sim_inner(p, topo, cost, chunk_bytes, Some(&mut trace))?;
+    trace.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+    Ok((rep, trace))
+}
+
+fn sim_inner(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: usize,
+    mut trace: Option<&mut Vec<TraceEvent>>,
+) -> Result<SimReport> {
+    if topo.nranks != p.nranks {
+        return Err(Error::Sim(format!(
+            "topology has {} ranks, program has {}",
+            topo.nranks, p.nranks
+        )));
+    }
+    let n = p.nranks;
+    let mut pc = vec![0usize; n];
+    let mut rank_time = vec![0.0f64; n];
+    let mut link_free = vec![0.0f64; topo.links.len()];
+    let mut link_bytes = vec![0usize; topo.links.len()];
+    // In-flight messages per directed pair: arrival times, FIFO.
+    let mut wires: HashMap<(Rank, Rank), VecDeque<f64>> = HashMap::new();
+    // Ranks blocked on an empty wire, keyed by (src, dst).
+    let mut blocked: HashMap<(Rank, Rank), Rank> = HashMap::new();
+    // Event heap: (ready time, rank). A rank appears at most once.
+    let mut heap: BinaryHeap<Reverse<(T, Rank)>> = BinaryHeap::new();
+    let mut queued = vec![false; n];
+
+    let mut report = SimReport {
+        total_time: 0.0,
+        messages: 0,
+        bytes_sent: 0,
+        bytes_links: 0.0,
+        bytes_by_level: vec![0; topo.max_level() + 1],
+        max_link_bytes: 0,
+        busiest_link_utilization: 0.0,
+        finish: vec![0.0; n],
+    };
+
+    // Initial scheduling pass.
+    for r in 0..n {
+        schedule_rank(
+            r, p, &pc, &rank_time, &wires, &mut blocked, &mut heap, &mut queued,
+        );
+    }
+
+    let mut retired = 0usize;
+    let total_ops = p.total_ops();
+
+    while let Some(Reverse((T(t), r))) = heap.pop() {
+        queued[r] = false;
+        let op = &p.ranks[r][pc[r]];
+        match op {
+            Op::Send { peer, chunks, step } => {
+                let bytes = chunks.len() * chunk_bytes;
+                // Local pack for non-contiguous aggregated payloads.
+                let t_ready = t + cost.pack_cost(chunks.len(), bytes);
+                let path = topo.route(r, *peer, 0);
+                // Contended start: after every link on the path is free.
+                let mut t0 = t_ready;
+                let mut min_bw = f64::INFINITY;
+                for &l in &path {
+                    t0 = t0.max(link_free[l]);
+                    min_bw = min_bw.min(topo.links[l].bandwidth);
+                }
+                for &l in &path {
+                    link_free[l] = t0 + bytes as f64 / topo.links[l].bandwidth;
+                    link_bytes[l] += bytes;
+                }
+                let ser = if path.is_empty() { 0.0 } else { bytes as f64 / min_bw };
+                let hops = path.len().saturating_sub(1);
+                let arrival = t0 + ser + cost.alpha_base + cost.alpha_hop * hops as f64;
+                wires.entry((r, *peer)).or_default().push_back(arrival);
+                // Sender available again after the posting gap.
+                rank_time[r] = t_ready + cost.msg_gap;
+
+                report.messages += 1;
+                report.bytes_sent += bytes;
+                report.bytes_links += (bytes * path.len()) as f64;
+                let lvl = topo.distance_level(r, *peer);
+                report.bytes_by_level[lvl] += bytes;
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(TraceEvent {
+                        step: *step,
+                        src: r,
+                        dst: *peer,
+                        nchunks: chunks.len(),
+                        bytes,
+                        t_start: t0,
+                        t_arrival: arrival,
+                    });
+                }
+
+                // Wake the peer if it is blocked on this wire.
+                if let Some(d) = blocked.remove(&(r, *peer)) {
+                    debug_assert_eq!(d, *peer);
+                    if !queued[d] {
+                        let wake = rank_time[d].max(arrival);
+                        heap.push(Reverse((T(wake), d)));
+                        queued[d] = true;
+                    }
+                }
+            }
+            Op::Recv { peer, chunks, reduce, .. } => {
+                let bytes = chunks.len() * chunk_bytes;
+                let q = wires.entry((*peer, r)).or_default();
+                let arrival = q.pop_front().ok_or_else(|| {
+                    Error::Sim(format!("rank {r} woken with empty wire from {peer}"))
+                })?;
+                let mut tdone = t.max(arrival) + cost.pack_cost(chunks.len(), bytes);
+                if *reduce {
+                    tdone += cost.reduce_cost(bytes);
+                }
+                rank_time[r] = tdone;
+            }
+        }
+        pc[r] += 1;
+        retired += 1;
+        schedule_rank(
+            r, p, &pc, &rank_time, &wires, &mut blocked, &mut heap, &mut queued,
+        );
+    }
+
+    if retired != total_ops {
+        return Err(Error::Sim(format!(
+            "simulation stalled: retired {retired}/{total_ops} ops (unverified program?)"
+        )));
+    }
+
+    for r in 0..n {
+        report.finish[r] = rank_time[r];
+    }
+    report.total_time = rank_time.iter().cloned().fold(0.0, f64::max);
+    report.max_link_bytes = link_bytes.iter().copied().max().unwrap_or(0);
+    if report.total_time > 0.0 {
+        report.busiest_link_utilization = link_bytes
+            .iter()
+            .enumerate()
+            .map(|(l, &b)| b as f64 / topo.links[l].bandwidth / report.total_time)
+            .fold(0.0, f64::max);
+    }
+    Ok(report)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn schedule_rank(
+    r: Rank,
+    p: &Program,
+    pc: &[usize],
+    rank_time: &[f64],
+    wires: &HashMap<(Rank, Rank), VecDeque<f64>>,
+    blocked: &mut HashMap<(Rank, Rank), Rank>,
+    heap: &mut BinaryHeap<Reverse<(T, Rank)>>,
+    queued: &mut [bool],
+) {
+    if pc[r] >= p.ranks[r].len() || queued[r] {
+        return;
+    }
+    match &p.ranks[r][pc[r]] {
+        Op::Send { .. } => {
+            heap.push(Reverse((T(rank_time[r]), r)));
+            queued[r] = true;
+        }
+        Op::Recv { peer, .. } => {
+            if let Some(q) = wires.get(&(*peer, r)) {
+                if let Some(&arrival) = q.front() {
+                    heap.push(Reverse((T(rank_time[r].max(arrival)), r)));
+                    queued[r] = true;
+                    return;
+                }
+            }
+            blocked.insert((*peer, r), r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{pat, ring};
+    use crate::sim::topology::Topology;
+
+    fn flat(n: usize) -> Topology {
+        Topology::flat(n, CostModel::ib_hdr_nic_bw())
+    }
+
+    #[test]
+    fn ring_time_scales_linearly_in_ranks() {
+        let cost = CostModel::ib_hdr();
+        let t8 = simulate(&ring::allgather(8), &flat(8), &cost, 256).unwrap();
+        let t32 = simulate(&ring::allgather(32), &flat(32), &cost, 256).unwrap();
+        let ratio = t32.total_time / t8.total_time;
+        assert!(
+            (3.0..6.0).contains(&ratio),
+            "ring should scale ~linearly: {ratio}"
+        );
+    }
+
+    #[test]
+    fn pat_time_scales_logarithmically_for_small_messages() {
+        let cost = CostModel::ib_hdr();
+        let t8 = simulate(&pat::allgather(8, usize::MAX), &flat(8), &cost, 256).unwrap();
+        let t64 = simulate(&pat::allgather(64, usize::MAX), &flat(64), &cost, 256).unwrap();
+        // 3 steps -> 6 steps: about 2x, certainly far below the 8x of ring.
+        let ratio = t64.total_time / t8.total_time;
+        assert!(ratio < 3.5, "pat should scale ~log: {ratio}");
+    }
+
+    #[test]
+    fn pat_beats_ring_at_small_size_loses_nothing_at_large() {
+        let cost = CostModel::ib_hdr();
+        let n = 32;
+        let small = 128; // bytes/chunk
+        let pat_t = simulate(&pat::allgather(n, usize::MAX), &flat(n), &cost, small)
+            .unwrap()
+            .total_time;
+        let ring_t = simulate(&ring::allgather(n), &flat(n), &cost, small)
+            .unwrap()
+            .total_time;
+        assert!(
+            pat_t < ring_t / 2.0,
+            "small-size PAT {pat_t} should be well under ring {ring_t}"
+        );
+    }
+
+    #[test]
+    fn conservation_of_bytes() {
+        let cost = CostModel::ideal();
+        let n = 16;
+        let chunk = 1024;
+        let rep = simulate(&ring::allgather(n), &flat(n), &cost, chunk).unwrap();
+        // ring AG: n*(n-1) messages of one chunk
+        assert_eq!(rep.messages, n * (n - 1));
+        assert_eq!(rep.bytes_sent, n * (n - 1) * chunk);
+    }
+
+    #[test]
+    fn reduce_scatter_pays_reduction() {
+        let mut cost = CostModel::ideal();
+        cost.reduce_byte = 1.0; // 1 s/byte — dominates everything
+        let n = 4;
+        let ag = simulate(&ring::allgather(n), &flat(n), &cost, 64).unwrap();
+        let rs = simulate(&ring::reduce_scatter(n), &flat(n), &cost, 64).unwrap();
+        assert!(rs.total_time > ag.total_time * 10.0);
+    }
+
+    #[test]
+    fn tapered_fabric_slows_cross_leaf_traffic() {
+        let cost = CostModel::ideal();
+        let n = 16;
+        let full = Topology::leaf_spine(n, 4, 4, 25e9, 1.0).unwrap();
+        let tapered = Topology::leaf_spine(n, 4, 1, 25e9, 0.25).unwrap();
+        let p = crate::sched::bruck::allgather_near_first(n);
+        let t_full = simulate(&p, &full, &cost, 1 << 20).unwrap().total_time;
+        let t_tap = simulate(&p, &tapered, &cost, 1 << 20).unwrap().total_time;
+        assert!(
+            t_tap > 2.0 * t_full,
+            "taper must hurt: full={t_full} tapered={t_tap}"
+        );
+    }
+
+    #[test]
+    fn level_accounting() {
+        let cost = CostModel::ideal();
+        let topo = Topology::leaf_spine(8, 4, 2, 25e9, 1.0).unwrap();
+        let p = ring::allgather(8);
+        let rep = simulate(&p, &topo, &cost, 100).unwrap();
+        // ring neighbours: ranks 3->4 and 7->0 cross leaves each step.
+        assert!(rep.bytes_by_level[1] > 0);
+        assert!(rep.bytes_by_level[0] > rep.bytes_by_level[1]);
+        assert_eq!(rep.bytes_by_level.iter().sum::<usize>(), rep.bytes_sent);
+    }
+
+    #[test]
+    fn empty_program_zero_time() {
+        let p = crate::sched::pat::allgather(1, 1);
+        let rep = simulate(&p, &flat(1), &CostModel::ib_hdr(), 64).unwrap();
+        assert_eq!(rep.total_time, 0.0);
+        assert_eq!(rep.messages, 0);
+    }
+
+    #[test]
+    fn trace_covers_every_message() {
+        let p = ring::allgather(6);
+        let topo = flat(6);
+        let (rep, trace) = simulate_traced(&p, &topo, &CostModel::ib_hdr(), 512).unwrap();
+        assert_eq!(trace.len(), rep.messages);
+        for ev in &trace {
+            assert!(ev.t_arrival > ev.t_start);
+            assert!(ev.t_arrival <= rep.total_time + 1e-12);
+            assert_eq!(ev.bytes, ev.nchunks * 512);
+        }
+        // sorted by start time
+        for w in trace.windows(2) {
+            assert!(w[0].t_start <= w[1].t_start);
+        }
+    }
+
+    #[test]
+    fn rank_count_mismatch_rejected() {
+        let p = ring::allgather(4);
+        assert!(simulate(&p, &flat(8), &CostModel::ib_hdr(), 64).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Event-driven network simulator used for at-scale evaluation.
+//!
+//! The paper's motivation is fabric behaviour NCCL observes at thousands of
+//! ranks: static routing collisions and tapered upper tiers make the "send
+//! half the data to the most distant rank" steps of Bruck / recursive
+//! doubling run far slower than the α-β model predicts. This simulator
+//! reproduces exactly that mechanism:
+//!
+//! * [`topology`] — flat crossbar, 2-/3-level fat-trees (with taper), and a
+//!   dragonfly-lite, all exposing per-message link paths;
+//! * [`routing`] — deterministic (static) ECMP path selection by flow hash,
+//!   so distinct flows can collide on an uplink, as on real IB fabrics;
+//! * [`cost`] — the α-β-γ cost model: per-message software overhead α_base,
+//!   per-hop latency α_hop, per-byte link serialization β, per-chunk local
+//!   pack/unpack cost γ (PAT's "linear part is local"), NIC message-rate
+//!   limits (Ring's linear part), and reduction cost on the RS datapath;
+//! * [`engine`] — executes a [`crate::sched::Program`] against a topology +
+//!   cost model, tracking per-link busy intervals (contention) and per-rank
+//!   serialization, producing completion time and traffic metrics.
+
+pub mod topology;
+pub mod routing;
+pub mod cost;
+pub mod engine;
+
+pub use cost::CostModel;
+pub use engine::{simulate, simulate_traced, SimReport, TraceEvent};
+pub use topology::Topology;

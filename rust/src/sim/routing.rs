@@ -1,0 +1,67 @@
+//! Static (deterministic) ECMP flow hashing.
+//!
+//! Real IB/RoCE fabrics pick the uplink for a flow from a hash of the flow
+//! identifiers, fixed for the flow's lifetime ("static routing"). Two
+//! simultaneous flows whose hashes collide share one uplink at half
+//! bandwidth — the effect that makes the final steps of Bruck/recursive
+//! doubling "run many times slower than the theory" (paper §1). The
+//! simulator uses the same mechanism: the path for (src, dst) never changes
+//! across steps or repetitions.
+
+/// Deterministic 64-bit mix of (src, dst, salt) — splitmix64 finalizer over
+/// the packed flow id.
+#[inline]
+pub fn flow_hash(src: u64, dst: u64, salt: u64) -> u64 {
+    let mut z = src
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(dst.wrapping_mul(0xBF58476D1CE4E5B9))
+        .wrapping_add(salt.wrapping_mul(0x94D049BB133111EB));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Measure ECMP collision pressure: given flows as (src, dst) pairs all
+/// crossing the same `nports`-way choice point, return the maximum number
+/// of flows hashed onto one port. Perfect spreading gives
+/// `ceil(flows / nports)`; static hashing typically does worse — the
+/// quantity the paper blames for Bruck's last-step slowdown.
+pub fn max_port_collisions(flows: &[(usize, usize)], nports: usize, salt: u64) -> usize {
+    let mut load = vec![0usize; nports.max(1)];
+    for &(s, d) in flows {
+        let p = (flow_hash(s as u64, d as u64, salt) % nports.max(1) as u64) as usize;
+        load[p] += 1;
+    }
+    load.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(flow_hash(3, 5, 0), flow_hash(3, 5, 0));
+        assert_ne!(flow_hash(3, 5, 0), flow_hash(5, 3, 0));
+    }
+
+    #[test]
+    fn spreads_reasonably() {
+        // 1024 distinct flows over 16 ports: max load should be near 64,
+        // certainly below 2x.
+        let flows: Vec<(usize, usize)> = (0..1024).map(|i| (i, i + 7777)).collect();
+        let m = max_port_collisions(&flows, 16, 0);
+        assert!(m >= 64 && m < 128, "max load {m}");
+    }
+
+    #[test]
+    fn collisions_exist_for_structured_flows() {
+        // The Bruck last step: every rank i sends to i + n/2. With static
+        // hashing, some uplink carries >= 2 of these flows for most salts —
+        // demonstrating the paper's congestion mechanism.
+        let n = 64;
+        let flows: Vec<(usize, usize)> = (0..n / 2).map(|i| (i, i + n / 2)).collect();
+        let m = max_port_collisions(&flows, n / 8, 1);
+        assert!(m >= 2, "expected at least one collision, got max load {m}");
+    }
+}

@@ -1,0 +1,443 @@
+//! Network topologies. Each topology maps `nranks` endpoints onto a set of
+//! directed links and yields, per (src, dst, flow-hash), the ordered link
+//! path a message traverses.
+//!
+//! Links are directed and identified by dense `LinkId`s; each has its own
+//! bandwidth so tapered tiers (the paper's "higher levels of the fabric
+//! being tapered") are expressible directly.
+
+use crate::core::{Error, Rank, Result};
+use crate::sim::routing::flow_hash;
+
+pub type LinkId = usize;
+
+/// A directed link with a fixed bandwidth (bytes/second).
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub bandwidth: f64,
+    /// Human-readable role, e.g. "nic_tx", "leaf_up", "spine_down".
+    pub kind: LinkKind,
+    /// Tier of the fabric this link belongs to (0 = NIC/leaf edge).
+    pub level: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    NicTx,
+    NicRx,
+    Up,
+    Down,
+    Global,
+}
+
+/// A topology instance: links plus routing.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nranks: usize,
+    pub links: Vec<Link>,
+    pub name: String,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    /// Non-blocking crossbar: every message crosses src NIC-tx and dst
+    /// NIC-rx only. The ideal α-β fabric.
+    Flat,
+    /// Two-level CLOS: `leaves` leaf switches × `ranks_per_leaf` ranks;
+    /// every leaf connects to each of `spines` spine switches. Static ECMP
+    /// picks the spine by flow hash.
+    LeafSpine {
+        ranks_per_leaf: usize,
+        leaves: usize,
+        spines: usize,
+    },
+    /// Three-level CLOS: pods of leaves with pod-local spines, cores above.
+    /// Models the tapered top tier of large training fabrics.
+    ThreeLevel {
+        ranks_per_leaf: usize,
+        leaves_per_pod: usize,
+        pods: usize,
+        spines_per_pod: usize,
+        cores: usize,
+    },
+    /// Dragonfly-lite: fully-connected groups, one global link per group
+    /// pair (heavily tapered by construction).
+    Dragonfly { ranks_per_group: usize, groups: usize },
+}
+
+impl Topology {
+    /// Ideal non-blocking fabric (pure α-β behaviour, no contention beyond
+    /// the endpoints).
+    pub fn flat(nranks: usize, nic_bw: f64) -> Topology {
+        let mut links = Vec::with_capacity(2 * nranks);
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicTx, level: 0 });
+        }
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicRx, level: 0 });
+        }
+        Topology {
+            nranks,
+            links,
+            name: format!("flat({nranks})"),
+            kind: Kind::Flat,
+        }
+    }
+
+    /// Two-level leaf-spine fat-tree. `taper` scales the per-spine uplink
+    /// bandwidth: `taper = 1.0` is full bisection when
+    /// `spines == ranks_per_leaf`; smaller means an oversubscribed fabric.
+    pub fn leaf_spine(
+        nranks: usize,
+        ranks_per_leaf: usize,
+        spines: usize,
+        nic_bw: f64,
+        taper: f64,
+    ) -> Result<Topology> {
+        if ranks_per_leaf == 0 || nranks % ranks_per_leaf != 0 {
+            return Err(Error::Sim(format!(
+                "nranks={nranks} not divisible by ranks_per_leaf={ranks_per_leaf}"
+            )));
+        }
+        let leaves = nranks / ranks_per_leaf;
+        let up_bw = nic_bw * taper;
+        let mut links = Vec::new();
+        // [0, n): nic tx; [n, 2n): nic rx
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicTx, level: 0 });
+        }
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicRx, level: 0 });
+        }
+        // per (leaf, spine): up then down
+        for _leaf in 0..leaves {
+            for _s in 0..spines {
+                links.push(Link { bandwidth: up_bw, kind: LinkKind::Up, level: 1 });
+                links.push(Link { bandwidth: up_bw, kind: LinkKind::Down, level: 1 });
+            }
+        }
+        Ok(Topology {
+            nranks,
+            links,
+            name: format!("leaf_spine({nranks},g={ranks_per_leaf},s={spines},t={taper})"),
+            kind: Kind::LeafSpine { ranks_per_leaf, leaves, spines },
+        })
+    }
+
+    /// Three-level fat-tree: `pods` × `leaves_per_pod` × `ranks_per_leaf`
+    /// ranks. `pod_taper` scales leaf→spine links, `core_taper` scales
+    /// spine→core links (the paper's tapered top tier).
+    pub fn three_level(
+        nranks: usize,
+        ranks_per_leaf: usize,
+        leaves_per_pod: usize,
+        spines_per_pod: usize,
+        cores: usize,
+        nic_bw: f64,
+        pod_taper: f64,
+        core_taper: f64,
+    ) -> Result<Topology> {
+        let pod_size = ranks_per_leaf * leaves_per_pod;
+        if pod_size == 0 || nranks % pod_size != 0 {
+            return Err(Error::Sim(format!(
+                "nranks={nranks} not divisible by pod size {pod_size}"
+            )));
+        }
+        let pods = nranks / pod_size;
+        let leaves = pods * leaves_per_pod;
+        let mut links = Vec::new();
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicTx, level: 0 });
+        }
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicRx, level: 0 });
+        }
+        // per (leaf, spine-in-pod): up, down — level 1
+        let spine_bw = nic_bw * pod_taper;
+        for _leaf in 0..leaves {
+            for _s in 0..spines_per_pod {
+                links.push(Link { bandwidth: spine_bw, kind: LinkKind::Up, level: 1 });
+                links.push(Link { bandwidth: spine_bw, kind: LinkKind::Down, level: 1 });
+            }
+        }
+        // per (pod, spine, core): up, down — level 2
+        let core_bw = nic_bw * core_taper;
+        for _pod in 0..pods {
+            for _s in 0..spines_per_pod {
+                for _c in 0..cores {
+                    links.push(Link { bandwidth: core_bw, kind: LinkKind::Up, level: 2 });
+                    links.push(Link { bandwidth: core_bw, kind: LinkKind::Down, level: 2 });
+                }
+            }
+        }
+        Ok(Topology {
+            nranks,
+            links,
+            name: format!(
+                "three_level({nranks},g={ranks_per_leaf},lp={leaves_per_pod},sp={spines_per_pod},c={cores})"
+            ),
+            kind: Kind::ThreeLevel {
+                ranks_per_leaf,
+                leaves_per_pod,
+                pods,
+                spines_per_pod,
+                cores,
+            },
+        })
+    }
+
+    /// Dragonfly-lite: `groups` groups of `ranks_per_group`; intra-group is
+    /// non-blocking, each group pair shares a single global link per
+    /// direction at `global_bw`.
+    pub fn dragonfly(
+        nranks: usize,
+        ranks_per_group: usize,
+        nic_bw: f64,
+        global_bw: f64,
+    ) -> Result<Topology> {
+        if ranks_per_group == 0 || nranks % ranks_per_group != 0 {
+            return Err(Error::Sim(format!(
+                "nranks={nranks} not divisible by ranks_per_group={ranks_per_group}"
+            )));
+        }
+        let groups = nranks / ranks_per_group;
+        let mut links = Vec::new();
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicTx, level: 0 });
+        }
+        for _ in 0..nranks {
+            links.push(Link { bandwidth: nic_bw, kind: LinkKind::NicRx, level: 0 });
+        }
+        // one directed global link per ordered group pair (g1 != g2)
+        for _ in 0..groups * groups {
+            links.push(Link { bandwidth: global_bw, kind: LinkKind::Global, level: 1 });
+        }
+        Ok(Topology {
+            nranks,
+            links,
+            name: format!("dragonfly({nranks},g={ranks_per_group})"),
+            kind: Kind::Dragonfly { ranks_per_group, groups },
+        })
+    }
+
+    #[inline]
+    fn nic_tx(&self, r: Rank) -> LinkId {
+        r
+    }
+    #[inline]
+    fn nic_rx(&self, r: Rank) -> LinkId {
+        self.nranks + r
+    }
+
+    /// The ordered link path for a message `src → dst`. `flow` feeds the
+    /// static ECMP hash (constant per (src,dst) pair in NCCL-like fabrics —
+    /// callers pass 0 extra entropy for fully static routing).
+    pub fn route(&self, src: Rank, dst: Rank, flow: u64) -> Vec<LinkId> {
+        debug_assert!(src < self.nranks && dst < self.nranks);
+        if src == dst {
+            return vec![];
+        }
+        match &self.kind {
+            Kind::Flat => vec![self.nic_tx(src), self.nic_rx(dst)],
+            Kind::LeafSpine { ranks_per_leaf, leaves: _, spines } => {
+                let ls = src / ranks_per_leaf;
+                let ld = dst / ranks_per_leaf;
+                if ls == ld {
+                    return vec![self.nic_tx(src), self.nic_rx(dst)];
+                }
+                let s = (flow_hash(src as u64, dst as u64, flow) % *spines as u64) as usize;
+                let base = 2 * self.nranks;
+                let up = base + 2 * (ls * spines + s);
+                let down = base + 2 * (ld * spines + s) + 1;
+                vec![self.nic_tx(src), up, down, self.nic_rx(dst)]
+            }
+            Kind::ThreeLevel {
+                ranks_per_leaf,
+                leaves_per_pod,
+                pods,
+                spines_per_pod,
+                cores,
+            } => {
+                let pod_size = ranks_per_leaf * leaves_per_pod;
+                let (ps, pd) = (src / pod_size, dst / pod_size);
+                let (ls, ld) = (src / ranks_per_leaf, dst / ranks_per_leaf);
+                if ls == ld {
+                    return vec![self.nic_tx(src), self.nic_rx(dst)];
+                }
+                let leaves = pods * leaves_per_pod;
+                let spine_base = 2 * self.nranks;
+                let core_base = spine_base + 2 * leaves * spines_per_pod;
+                let s = (flow_hash(src as u64, dst as u64, flow) % *spines_per_pod as u64) as usize;
+                if ps == pd {
+                    // up to a pod spine, back down
+                    let up = spine_base + 2 * (ls * spines_per_pod + s);
+                    let down = spine_base + 2 * (ld * spines_per_pod + s) + 1;
+                    return vec![self.nic_tx(src), up, down, self.nic_rx(dst)];
+                }
+                // cross-pod: leaf->spine, spine->core, core->spine', spine'->leaf'
+                let c = (flow_hash(dst as u64, src as u64, flow ^ 0x9E37) % *cores as u64) as usize;
+                let up1 = spine_base + 2 * (ls * spines_per_pod + s);
+                let up2 = core_base + 2 * ((ps * spines_per_pod + s) * cores + c);
+                let down2 = core_base + 2 * ((pd * spines_per_pod + s) * cores + c) + 1;
+                let down1 = spine_base + 2 * (ld * spines_per_pod + s) + 1;
+                vec![self.nic_tx(src), up1, up2, down2, down1, self.nic_rx(dst)]
+            }
+            Kind::Dragonfly { ranks_per_group, groups } => {
+                let gs = src / ranks_per_group;
+                let gd = dst / ranks_per_group;
+                if gs == gd {
+                    return vec![self.nic_tx(src), self.nic_rx(dst)];
+                }
+                let g = 2 * self.nranks + gs * groups + gd;
+                vec![self.nic_tx(src), g, self.nic_rx(dst)]
+            }
+        }
+    }
+
+    /// Number of switch hops a message crosses (for α_hop): `route.len()`
+    /// is the number of links; hops = links - 1 crossings of switching
+    /// elements plus endpoint NICs. We use links-1 as the "switch traversal"
+    /// count.
+    pub fn hops(&self, src: Rank, dst: Rank) -> usize {
+        if src == dst {
+            0
+        } else {
+            self.route(src, dst, 0).len() - 1
+        }
+    }
+
+    /// Topological distance classes for traffic accounting: the highest
+    /// fabric level a (src,dst) message must cross (0 = same leaf /
+    /// NIC-only, 1 = one switch tier, 2 = top tier).
+    pub fn distance_level(&self, src: Rank, dst: Rank) -> usize {
+        if src == dst {
+            return 0;
+        }
+        match &self.kind {
+            Kind::Flat => 0,
+            Kind::LeafSpine { ranks_per_leaf, .. } => {
+                if src / ranks_per_leaf == dst / ranks_per_leaf {
+                    0
+                } else {
+                    1
+                }
+            }
+            Kind::ThreeLevel { ranks_per_leaf, leaves_per_pod, .. } => {
+                let pod = ranks_per_leaf * leaves_per_pod;
+                if src / ranks_per_leaf == dst / ranks_per_leaf {
+                    0
+                } else if src / pod == dst / pod {
+                    1
+                } else {
+                    2
+                }
+            }
+            Kind::Dragonfly { ranks_per_group, .. } => {
+                if src / ranks_per_group == dst / ranks_per_group {
+                    0
+                } else {
+                    1
+                }
+            }
+        }
+    }
+
+    /// Highest distance level present in this topology.
+    pub fn max_level(&self) -> usize {
+        match &self.kind {
+            Kind::Flat => 0,
+            Kind::LeafSpine { .. } | Kind::Dragonfly { .. } => 1,
+            Kind::ThreeLevel { .. } => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_routes() {
+        let t = Topology::flat(4, 10e9);
+        assert_eq!(t.route(0, 3, 0), vec![0, 4 + 3]);
+        assert_eq!(t.route(2, 2, 0), Vec::<usize>::new());
+        assert_eq!(t.hops(0, 3), 1);
+    }
+
+    #[test]
+    fn leaf_spine_local_vs_remote() {
+        let t = Topology::leaf_spine(8, 4, 2, 10e9, 1.0).unwrap();
+        // same leaf: 2 links
+        assert_eq!(t.route(0, 3, 0).len(), 2);
+        assert_eq!(t.distance_level(0, 3), 0);
+        // cross leaf: 4 links
+        assert_eq!(t.route(0, 7, 0).len(), 4);
+        assert_eq!(t.distance_level(0, 7), 1);
+    }
+
+    #[test]
+    fn leaf_spine_static_routing_is_deterministic() {
+        let t = Topology::leaf_spine(16, 4, 4, 10e9, 1.0).unwrap();
+        let p1 = t.route(1, 9, 0);
+        let p2 = t.route(1, 9, 0);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn three_level_distances() {
+        // 2 pods x 2 leaves x 4 ranks = 16
+        let t = Topology::three_level(16, 4, 2, 2, 2, 10e9, 1.0, 0.5).unwrap();
+        assert_eq!(t.distance_level(0, 3), 0); // same leaf
+        assert_eq!(t.distance_level(0, 5), 1); // same pod, cross leaf
+        assert_eq!(t.distance_level(0, 12), 2); // cross pod
+        assert_eq!(t.route(0, 3, 0).len(), 2);
+        assert_eq!(t.route(0, 5, 0).len(), 4);
+        assert_eq!(t.route(0, 12, 0).len(), 6);
+        assert_eq!(t.max_level(), 2);
+    }
+
+    #[test]
+    fn three_level_core_links_tapered() {
+        let t = Topology::three_level(16, 4, 2, 2, 2, 10e9, 1.0, 0.25).unwrap();
+        let path = t.route(0, 12, 0);
+        // third link is the spine->core uplink at core_taper bandwidth
+        let core_link = &t.links[path[2]];
+        assert_eq!(core_link.level, 2);
+        assert!((core_link.bandwidth - 2.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn routes_are_valid_link_ids() {
+        let topos = vec![
+            Topology::flat(12, 1e9),
+            Topology::leaf_spine(12, 3, 2, 1e9, 0.5).unwrap(),
+            Topology::three_level(24, 2, 3, 2, 2, 1e9, 1.0, 0.5).unwrap(),
+            Topology::dragonfly(12, 4, 1e9, 0.5e9).unwrap(),
+        ];
+        for t in &topos {
+            for s in 0..t.nranks {
+                for d in 0..t.nranks {
+                    for l in t.route(s, d, 0) {
+                        assert!(l < t.links.len(), "{} route {s}->{d}", t.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dragonfly_global_links_shared() {
+        let t = Topology::dragonfly(8, 4, 10e9, 5e9).unwrap();
+        // both cross-group flows share the single g0->g1 global link
+        let p1 = t.route(0, 4, 0);
+        let p2 = t.route(1, 5, 0);
+        assert_eq!(p1[1], p2[1]);
+    }
+
+    #[test]
+    fn divisibility_checked() {
+        assert!(Topology::leaf_spine(10, 4, 2, 1e9, 1.0).is_err());
+        assert!(Topology::dragonfly(10, 4, 1e9, 1e9).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Bounded intermediate-buffer pool with occupancy accounting.
+//!
+//! PAT exists because intermediate buffers are scarce: NCCL pre-maps a
+//! fixed-size staging region per peer, and the aggregation factor is
+//! exactly "how many chunks fit". The pool hands out fixed-size slots
+//! (one chunk each), fails fast if a schedule exceeds its capacity, and
+//! records the high-water mark — the quantity the paper claims stays
+//! logarithmic in rank count and independent of operation size.
+
+use crate::core::{Error, Result};
+
+/// A pool of `capacity` chunk-sized slots (`None` = unbounded, measuring
+/// only).
+#[derive(Debug)]
+pub struct BufferPool {
+    slot_elems: usize,
+    capacity: Option<usize>,
+    free: Vec<Vec<f32>>,
+    live: usize,
+    peak: usize,
+    allocated: usize,
+}
+
+impl BufferPool {
+    pub fn new(slot_elems: usize, capacity: Option<usize>) -> BufferPool {
+        BufferPool {
+            slot_elems,
+            capacity,
+            free: Vec::new(),
+            live: 0,
+            peak: 0,
+            allocated: 0,
+        }
+    }
+
+    /// Acquire a zeroed slot. Errors if the configured capacity would be
+    /// exceeded — a PAT schedule that violates its own aggregation bound is
+    /// a bug, not a condition to absorb.
+    pub fn acquire(&mut self) -> Result<Vec<f32>> {
+        if let Some(cap) = self.capacity {
+            if self.live >= cap {
+                return Err(Error::Transport(format!(
+                    "buffer pool exhausted: {} live slots of capacity {cap}",
+                    self.live
+                )));
+            }
+        }
+        self.live += 1;
+        self.peak = self.peak.max(self.live);
+        match self.free.pop() {
+            Some(mut v) => {
+                v.fill(0.0);
+                Ok(v)
+            }
+            None => {
+                self.allocated += 1;
+                Ok(vec![0.0; self.slot_elems])
+            }
+        }
+    }
+
+    /// Return a slot to the pool.
+    pub fn release(&mut self, slot: Vec<f32>) {
+        debug_assert_eq!(slot.len(), self.slot_elems);
+        self.live -= 1;
+        self.free.push(slot);
+    }
+
+    /// Current live slots.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of simultaneously-live slots.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Distinct vectors ever allocated (allocation pressure metric for the
+    /// perf pass — steady-state should reuse, not allocate).
+    pub fn total_allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// Accounting-only reservation: enforce and track occupancy without
+    /// handing out storage. Used by the all-gather send path, where the
+    /// wire message itself is the staging storage — copying into a
+    /// separate slot would only model the same bytes twice (perf pass:
+    /// −1 full payload copy per transfer; see EXPERIMENTS.md §Perf).
+    pub fn reserve(&mut self, slots: usize) -> Result<()> {
+        if let Some(cap) = self.capacity {
+            if self.live + slots > cap {
+                return Err(Error::Transport(format!(
+                    "buffer pool exhausted: {} live + {slots} requested of capacity {cap}",
+                    self.live
+                )));
+            }
+        }
+        self.live += slots;
+        self.peak = self.peak.max(self.live);
+        Ok(())
+    }
+
+    /// Release an accounting-only reservation.
+    pub fn unreserve(&mut self, slots: usize) {
+        debug_assert!(self.live >= slots);
+        self.live -= slots;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak_and_reuses() {
+        let mut p = BufferPool::new(8, Some(2));
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert_eq!(p.live(), 2);
+        assert!(p.acquire().is_err());
+        p.release(a);
+        let c = p.acquire().unwrap();
+        assert_eq!(p.peak(), 2);
+        // slot reused, not newly allocated
+        assert_eq!(p.total_allocated(), 2);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.live(), 0);
+    }
+
+    #[test]
+    fn acquired_slots_are_zeroed() {
+        let mut p = BufferPool::new(4, None);
+        let mut a = p.acquire().unwrap();
+        a.fill(7.0);
+        p.release(a);
+        let b = p.acquire().unwrap();
+        assert!(b.iter().all(|&x| x == 0.0));
+        p.release(b);
+    }
+
+    #[test]
+    fn unbounded_never_errors() {
+        let mut p = BufferPool::new(1, None);
+        let slots: Vec<_> = (0..100).map(|_| p.acquire().unwrap()).collect();
+        assert_eq!(p.peak(), 100);
+        for s in slots {
+            p.release(s);
+        }
+    }
+}

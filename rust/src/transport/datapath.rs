@@ -1,0 +1,90 @@
+//! The receive-side reduction datapath.
+//!
+//! Reduce-scatter folds every incoming chunk into an accumulator — the
+//! compute hot-spot the paper's NCCL implementation runs as a GPU kernel.
+//! Two implementations:
+//!
+//! * [`DataPath::Scalar`] — a plain rust loop (auto-vectorized); the
+//!   baseline and fallback.
+//! * [`DataPath::Pjrt`] — the AOT-compiled Pallas reduce kernel executed
+//!   through the PJRT service thread ([`crate::runtime::PjrtHandle`]; the
+//!   `xla` crate's handles are not `Send`, so one thread owns the client —
+//!   the analog of kernels serializing on a device stream). Three-layer
+//!   path: Pallas (L1) → jax graph (L2) → rust runtime (L3).
+
+use crate::core::Result;
+use crate::runtime::PjrtHandle;
+
+/// Reduction backend used by the transport engine.
+#[derive(Clone)]
+pub enum DataPath {
+    /// Pure-rust elementwise add.
+    Scalar,
+    /// AOT Pallas kernel via the PJRT service thread.
+    Pjrt(PjrtHandle),
+}
+
+impl DataPath {
+    /// `acc[i] += x[i]` for all i.
+    pub fn reduce_into(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        debug_assert_eq!(acc.len(), x.len());
+        match self {
+            DataPath::Scalar => {
+                scalar_add(acc, x);
+                Ok(())
+            }
+            DataPath::Pjrt(h) => h.reduce_into(acc, x),
+        }
+    }
+
+    /// Append `a + b` to `out` (3-operand fused form for the send path:
+    /// one read of each operand, one write of the destination — versus the
+    /// reduce-into-slot-then-copy sequence's extra round trip; perf pass,
+    /// EXPERIMENTS.md §Perf).
+    pub fn add_extend(&self, out: &mut Vec<f32>, a: &[f32], b: &[f32]) -> Result<()> {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            DataPath::Scalar => {
+                out.extend(a.iter().zip(b.iter()).map(|(x, y)| x + y));
+                Ok(())
+            }
+            DataPath::Pjrt(h) => {
+                let base = out.len();
+                out.extend_from_slice(a);
+                h.reduce_into(&mut out[base..], b)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataPath::Scalar => "scalar",
+            DataPath::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// The scalar kernel, split out so benches can target it directly.
+#[inline]
+pub fn scalar_add(acc: &mut [f32], x: &[f32]) {
+    for (a, b) in acc.iter_mut().zip(x.iter()) {
+        *a += *b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_adds() {
+        let mut acc = vec![1.0, 2.0, 3.0];
+        DataPath::Scalar.reduce_into(&mut acc, &[10.0, 20.0, 30.0]).unwrap();
+        assert_eq!(acc, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(DataPath::Scalar.name(), "scalar");
+    }
+}

@@ -1,0 +1,588 @@
+//! Threaded execution of schedule programs with real data movement.
+//!
+//! One OS thread per rank; each rank owns an mpsc receiver and cloned
+//! senders to every peer (messages carry their source, and per-source FIFO
+//! order is preserved by buffering out-of-order arrivals). `Send` never
+//! blocks; `Recv` blocks with a watchdog timeout so schedule bugs fail
+//! loudly instead of hanging the suite.
+//!
+//! All-gather writes into a full `n × chunk` receive buffer per rank; in
+//! *staged* mode (the NCCL case PAT is designed for — user buffers are not
+//! directly sendable/receivable, so every transfer goes through pre-mapped
+//! staging), each message's chunks transit bounded staging slots from the
+//! [`BufferPool`] around the send, enforcing the PAT aggregation bound:
+//! a schedule aggregating more chunks per transfer than the buffer holds
+//! fails loudly. Reduce-scatter keeps *persistent* per-chunk accumulators
+//! in pool slots — the stronger constraint the paper says the algorithm
+//! was originally designed around — and folds incoming data through the
+//! configured [`DataPath`] (scalar loop or the AOT Pallas kernel via PJRT).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::core::{ChunkId, Collective, Error, Rank, Result};
+use crate::sched::program::{Op, Program};
+use crate::transport::buffers::BufferPool;
+use crate::transport::datapath::DataPath;
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct TransportOptions {
+    pub datapath: DataPath,
+    /// Staging/accumulator slot capacity per rank. `None` measures without
+    /// enforcing. PAT schedules with aggregation `a` are expected to run
+    /// within `a` slots (claim P3, verified in tests).
+    pub slot_capacity: Option<usize>,
+    /// All-gather: physically route forwarded chunks through staging slots
+    /// (models un-registerable user buffers) instead of sending straight
+    /// from the receive buffer.
+    pub staged: bool,
+    /// Structurally verify the program before running (cheap; disable for
+    /// large-scale benches).
+    pub validate: bool,
+    /// Watchdog for blocking receives.
+    pub recv_timeout: Duration,
+}
+
+impl Default for TransportOptions {
+    fn default() -> Self {
+        TransportOptions {
+            datapath: DataPath::Scalar,
+            slot_capacity: None,
+            staged: true,
+            validate: true,
+            recv_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Execution metrics.
+#[derive(Debug, Clone, Default)]
+pub struct TransportReport {
+    /// Peak staging slots (AG) or accumulator slots (RS) on any rank.
+    pub peak_slots: usize,
+    /// Total payload bytes moved between ranks.
+    pub bytes_moved: usize,
+    /// Total messages.
+    pub messages: usize,
+    /// Wall-clock duration of the collective.
+    pub wall: Duration,
+    /// Sum of distinct slot vectors allocated (allocation pressure).
+    pub slots_allocated: usize,
+}
+
+struct WireMsg {
+    src: Rank,
+    data: Vec<f32>,
+}
+
+/// Per-rank endpoint hiding the single-receiver / per-source-FIFO plumbing.
+///
+/// Wire buffers are recycled: after a receiver consumes a message it sends
+/// the (emptied) vector back to the sender's return queue, so steady-state
+/// traffic reuses warm pages instead of faulting fresh ones in — the
+/// dominant cost for multi-MiB messages on this host (perf pass,
+/// EXPERIMENTS.md §Perf).
+struct Endpoint {
+    rank: Rank,
+    senders: Vec<Sender<WireMsg>>,
+    receiver: Receiver<WireMsg>,
+    pending: Vec<VecDeque<Vec<f32>>>,
+    /// Return path for consumed wire buffers (indexed by original sender).
+    ret_senders: Vec<Sender<Vec<f32>>>,
+    ret_receiver: Receiver<Vec<f32>>,
+    timeout: Duration,
+}
+
+impl Endpoint {
+    fn send(&self, dst: Rank, data: Vec<f32>) -> Result<()> {
+        self.senders[dst]
+            .send(WireMsg { src: self.rank, data })
+            .map_err(|_| Error::Transport(format!("rank {dst} hung up", dst = dst)))
+    }
+
+    /// An empty send buffer, recycled when available.
+    fn take_buffer(&mut self, capacity: usize) -> Vec<f32> {
+        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() { return Vec::with_capacity(capacity); }
+        while let Ok(mut v) = self.ret_receiver.try_recv() {
+            if v.capacity() >= capacity {
+                v.clear();
+                return v;
+            }
+            // undersized stragglers are dropped
+        }
+        Vec::with_capacity(capacity)
+    }
+
+    /// Hand a consumed message buffer back to its sender for reuse.
+    fn recycle(&self, src: Rank, mut data: Vec<f32>) {
+        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() { return; }
+        data.clear();
+        let _ = self.ret_senders[src].send(data); // sender may be done; fine
+    }
+
+    fn recv_from(&mut self, src: Rank) -> Result<Vec<f32>> {
+        if let Some(data) = self.pending[src].pop_front() {
+            return Ok(data);
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| {
+                    Error::Transport(format!(
+                        "rank {} timed out waiting for message from {src}",
+                        self.rank
+                    ))
+                })?;
+            let msg = self.receiver.recv_timeout(remaining).map_err(|_| {
+                Error::Transport(format!(
+                    "rank {} timed out waiting for message from {src}",
+                    self.rank
+                ))
+            })?;
+            if msg.src == src {
+                return Ok(msg.data);
+            }
+            self.pending[msg.src].push_back(msg.data);
+        }
+    }
+}
+
+fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    let mut ret_senders = Vec::with_capacity(n);
+    let mut ret_receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+        let (rtx, rrx) = channel();
+        ret_senders.push(rtx);
+        ret_receivers.push(rrx);
+    }
+    receivers
+        .into_iter()
+        .zip(ret_receivers)
+        .enumerate()
+        .map(|(rank, (receiver, ret_receiver))| Endpoint {
+            rank,
+            senders: senders.clone(),
+            receiver,
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            ret_senders: ret_senders.clone(),
+            ret_receiver,
+            timeout,
+        })
+        .collect()
+}
+
+/// Run an all-gather program. `inputs[r]` is rank r's contribution
+/// (uniform length = chunk size); returns each rank's gathered buffer of
+/// `n × chunk` elements (chunk `c` at offset `c × chunk`).
+pub fn run_allgather(
+    p: &Program,
+    inputs: &[Vec<f32>],
+    opts: &TransportOptions,
+) -> Result<(Vec<Vec<f32>>, TransportReport)> {
+    let chunk = inputs.first().map(|v| v.len()).unwrap_or(0);
+    let mut outputs: Vec<Vec<f32>> = vec![vec![0f32; p.nranks * chunk]; p.nranks];
+    let rep = run_allgather_into(p, inputs, &mut outputs, opts)?;
+    Ok((outputs, rep))
+}
+
+/// Like [`run_allgather`], writing into caller-provided receive buffers
+/// (each `n × chunk` elements) — the NCCL calling convention, and the hot
+/// path for repeated collectives: no per-call output allocation or zeroing
+/// (perf pass, EXPERIMENTS.md §Perf).
+pub fn run_allgather_into(
+    p: &Program,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+    opts: &TransportOptions,
+) -> Result<TransportReport> {
+    if p.collective != Collective::AllGather {
+        return Err(Error::Transport(format!(
+            "run_allgather on a {} program",
+            p.collective
+        )));
+    }
+    let n = p.nranks;
+    if inputs.len() != n {
+        return Err(Error::Transport(format!(
+            "expected {n} inputs, got {}",
+            inputs.len()
+        )));
+    }
+    let chunk = inputs.first().map(|v| v.len()).unwrap_or(0);
+    if inputs.iter().any(|v| v.len() != chunk) {
+        return Err(Error::Transport("ragged input chunk sizes".into()));
+    }
+    if outputs.len() != n || outputs.iter().any(|o| o.len() != n * chunk) {
+        return Err(Error::Transport(format!(
+            "outputs must be {n} buffers of {} elements",
+            n * chunk
+        )));
+    }
+    if opts.validate {
+        crate::sched::verify::verify_program(p)?;
+    }
+    let endpoints = make_endpoints(n, opts.recv_timeout);
+    let report = Mutex::new(TransportReport::default());
+    let start = Instant::now();
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(n);
+        for (r, (ep, out_slot)) in endpoints
+            .into_iter()
+            .zip(outputs.iter_mut())
+            .enumerate()
+        {
+            let p = &p;
+            let inputs = &inputs;
+            let report = &report;
+            let opts = &*opts;
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut ep = ep;
+                let recvbuf: &mut [f32] = out_slot;
+                recvbuf[r * chunk..(r + 1) * chunk].copy_from_slice(&inputs[r]);
+                let mut pool = BufferPool::new(chunk, opts.slot_capacity);
+                let mut local_bytes = 0usize;
+                let mut local_msgs = 0usize;
+
+                for op in &p.ranks[r] {
+                    match op {
+                        Op::Send { peer, chunks, .. } => {
+                            // Pack through staging: one slot per chunk of the
+                            // message is live until the send is posted,
+                            // enforcing that a transfer never aggregates more
+                            // than the buffer budget. The wire message itself
+                            // is the staging storage (reserve() is
+                            // accounting-only), so packing costs exactly one
+                            // copy of the payload.
+                            if opts.staged {
+                                pool.reserve(chunks.len())?;
+                            }
+                            let mut msg = ep.take_buffer(chunks.len() * chunk);
+                            for &c in chunks {
+                                msg.extend_from_slice(&recvbuf[c * chunk..(c + 1) * chunk]);
+                            }
+                            local_bytes += msg.len() * 4;
+                            local_msgs += 1;
+                            ep.send(*peer, msg)?;
+                            if opts.staged {
+                                pool.unreserve(chunks.len());
+                            }
+                        }
+                        Op::Recv { peer, chunks, .. } => {
+                            let data = ep.recv_from(*peer)?;
+                            if data.len() != chunks.len() * chunk {
+                                return Err(Error::Transport(format!(
+                                    "rank {r}: message from {peer} has {} elems, want {}",
+                                    data.len(),
+                                    chunks.len() * chunk
+                                )));
+                            }
+                            for (k, &c) in chunks.iter().enumerate() {
+                                let seg = &data[k * chunk..(k + 1) * chunk];
+                                recvbuf[c * chunk..(c + 1) * chunk].copy_from_slice(seg);
+                            }
+                            ep.recycle(*peer, data);
+                        }
+                    }
+                }
+                let mut rep = report.lock().unwrap();
+                rep.peak_slots = rep.peak_slots.max(pool.peak());
+                rep.bytes_moved += local_bytes;
+                rep.messages += local_msgs;
+                rep.slots_allocated += pool.total_allocated();
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| Error::Transport("rank thread panicked".into()))??;
+        }
+        Ok(())
+    })?;
+
+    let mut rep = report.into_inner().unwrap();
+    rep.wall = start.elapsed();
+    Ok(rep)
+}
+
+/// Run a reduce-scatter program. `inputs[r]` holds rank r's contribution to
+/// all `n` chunks (`n × chunk` elements); returns each rank's reduced own
+/// chunk (`chunk` elements).
+pub fn run_reduce_scatter(
+    p: &Program,
+    inputs: &[Vec<f32>],
+    opts: &TransportOptions,
+) -> Result<(Vec<Vec<f32>>, TransportReport)> {
+    if p.collective != Collective::ReduceScatter {
+        return Err(Error::Transport(format!(
+            "run_reduce_scatter on a {} program",
+            p.collective
+        )));
+    }
+    let n = p.nranks;
+    if inputs.len() != n {
+        return Err(Error::Transport(format!(
+            "expected {n} inputs, got {}",
+            inputs.len()
+        )));
+    }
+    if n == 0 {
+        return Ok((vec![], TransportReport::default()));
+    }
+    let total = inputs[0].len();
+    if total % n != 0 || inputs.iter().any(|v| v.len() != total) {
+        return Err(Error::Transport(format!(
+            "reduce-scatter inputs must be uniform and divisible by nranks={n}"
+        )));
+    }
+    let chunk = total / n;
+    if opts.validate {
+        crate::sched::verify::verify_program(p)?;
+    }
+    let endpoints = make_endpoints(n, opts.recv_timeout);
+    let report = Mutex::new(TransportReport::default());
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); n];
+    let start = Instant::now();
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(n);
+        for (r, (ep, out_slot)) in endpoints
+            .into_iter()
+            .zip(outputs.iter_mut())
+            .enumerate()
+        {
+            let p = &p;
+            let inputs = &inputs;
+            let report = &report;
+            let opts = &*opts;
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut ep = ep;
+                let own = |c: ChunkId| &inputs[r][c * chunk..(c + 1) * chunk];
+                let mut pool = BufferPool::new(chunk, opts.slot_capacity);
+                let mut acc: HashMap<ChunkId, Vec<f32>> = HashMap::new();
+                let mut local_bytes = 0usize;
+                let mut local_msgs = 0usize;
+
+                for op in &p.ranks[r] {
+                    match op {
+                        Op::Send { peer, chunks, .. } => {
+                            let mut msg = ep.take_buffer(chunks.len() * chunk);
+                            for &c in chunks {
+                                match acc.remove(&c) {
+                                    Some(slot) => {
+                                        // fused accumulator + own contribution
+                                        // straight into the wire buffer
+                                        opts.datapath.add_extend(&mut msg, &slot, own(c))?;
+                                        pool.release(slot);
+                                    }
+                                    None => msg.extend_from_slice(own(c)),
+                                }
+                            }
+                            local_bytes += msg.len() * 4;
+                            local_msgs += 1;
+                            ep.send(*peer, msg)?;
+                        }
+                        Op::Recv { peer, chunks, .. } => {
+                            let data = ep.recv_from(*peer)?;
+                            if data.len() != chunks.len() * chunk {
+                                return Err(Error::Transport(format!(
+                                    "rank {r}: message from {peer} has {} elems, want {}",
+                                    data.len(),
+                                    chunks.len() * chunk
+                                )));
+                            }
+                            // (Perf-pass note: a zero-copy "steal the wire
+                            // buffer as accumulator" variant was tried for
+                            // single-chunk messages and reverted — it starves
+                            // the sender-side buffer recycling loop and lost
+                            // ~25% on 4 MiB ring reduce-scatter; see
+                            // EXPERIMENTS.md §Perf.)
+                            for (k, &c) in chunks.iter().enumerate() {
+                                let seg = &data[k * chunk..(k + 1) * chunk];
+                                match acc.get_mut(&c) {
+                                    Some(slot) => opts.datapath.reduce_into(slot, seg)?,
+                                    None => {
+                                        let mut slot = pool.acquire()?;
+                                        slot.copy_from_slice(seg);
+                                        acc.insert(c, slot);
+                                    }
+                                }
+                            }
+                            ep.recycle(*peer, data);
+                        }
+                    }
+                }
+                // Output: own contribution plus whatever accumulated for r.
+                let mut out = own(r).to_vec();
+                if let Some(slot) = acc.remove(&r) {
+                    opts.datapath.reduce_into(&mut out, &slot)?;
+                    pool.release(slot);
+                }
+                if !acc.is_empty() {
+                    return Err(Error::Transport(format!(
+                        "rank {r}: stale accumulators for chunks {:?}",
+                        acc.keys().collect::<Vec<_>>()
+                    )));
+                }
+                *out_slot = out;
+                let mut rep = report.lock().unwrap();
+                rep.peak_slots = rep.peak_slots.max(pool.peak());
+                rep.bytes_moved += local_bytes;
+                rep.messages += local_msgs;
+                rep.slots_allocated += pool.total_allocated();
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| Error::Transport("rank thread panicked".into()))??;
+        }
+        Ok(())
+    })?;
+
+    let mut rep = report.into_inner().unwrap();
+    rep.wall = start.elapsed();
+    Ok((outputs, rep))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{pat, ring};
+    use crate::util::Rng;
+
+    fn ag_inputs(n: usize, chunk: usize, seed: u64) -> Vec<Vec<f32>> {
+        // integer-valued so f32 sums are exact
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..chunk).map(|_| rng.below(1000) as f32).collect())
+            .collect()
+    }
+
+    fn rs_inputs(n: usize, chunk: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..n * chunk).map(|_| rng.below(1000) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn allgather_matches_reference() {
+        for n in [2usize, 3, 7, 8] {
+            let inputs = ag_inputs(n, 16, n as u64);
+            let mut want = Vec::new();
+            for inp in &inputs {
+                want.extend_from_slice(inp);
+            }
+            for a in [1usize, 2, usize::MAX] {
+                let p = pat::allgather(n, a);
+                let (outs, _) = run_allgather(&p, &inputs, &TransportOptions::default()).unwrap();
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(o, &want, "n={n} a={a} rank={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_matches_reference() {
+        for n in [2usize, 3, 7, 8] {
+            let chunk = 16;
+            let inputs = rs_inputs(n, chunk, 7 + n as u64);
+            for a in [1usize, 2, usize::MAX] {
+                let p = pat::reduce_scatter(n, a);
+                let (outs, _) =
+                    run_reduce_scatter(&p, &inputs, &TransportOptions::default()).unwrap();
+                for r in 0..n {
+                    let want: Vec<f32> = (0..chunk)
+                        .map(|i| (0..n).map(|src| inputs[src][r * chunk + i]).sum())
+                        .collect();
+                    assert_eq!(outs[r], want, "n={n} a={a} rank={r}");
+                }
+            }
+        }
+    }
+
+    /// The PAT transfer-staging bound: an aggregation-a all-gather schedule
+    /// never needs more than a send-staging slots (enforced, not measured).
+    #[test]
+    fn pat_respects_slot_capacity() {
+        let n = 16;
+        for a in [1usize, 2, 4] {
+            let p = pat::allgather(n, a);
+            let opts = TransportOptions {
+                slot_capacity: Some(a),
+                ..Default::default()
+            };
+            let inputs = ag_inputs(n, 8, a as u64);
+            let (_, rep) = run_allgather(&p, &inputs, &opts).unwrap();
+            assert!(rep.peak_slots <= a, "a={a} peak={}", rep.peak_slots);
+        }
+    }
+
+    /// The RS accumulator bound (the paper's "logarithmic amount of
+    /// internal buffers"): peak live accumulators stays within
+    /// a · log2(n/a), independent of chunk size.
+    #[test]
+    fn rs_accumulators_logarithmic() {
+        let n = 16usize;
+        for a in [1usize, 2, 4] {
+            let bound = a * (crate::core::ceil_log2(n) - crate::core::floor_log2(a)) as usize;
+            for chunk in [4usize, 64] {
+                let prs = pat::reduce_scatter(n, a);
+                let rs_in = rs_inputs(n, chunk, a as u64);
+                let opts_rs = TransportOptions {
+                    slot_capacity: Some(bound),
+                    ..Default::default()
+                };
+                let (_, rep) = run_reduce_scatter(&prs, &rs_in, &opts_rs).unwrap();
+                assert!(
+                    rep.peak_slots <= bound,
+                    "rs a={a} chunk={chunk} peak={}",
+                    rep.peak_slots
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_transport_works() {
+        let n = 6;
+        let inputs = ag_inputs(n, 32, 3);
+        let (outs, rep) = run_allgather(&ring::allgather(n), &inputs, &Default::default()).unwrap();
+        assert_eq!(rep.messages, n * (n - 1));
+        let mut want = Vec::new();
+        for inp in &inputs {
+            want.extend_from_slice(inp);
+        }
+        assert_eq!(outs[0], want);
+    }
+
+    #[test]
+    fn wrong_collective_rejected() {
+        let p = ring::allgather(4);
+        let inputs = rs_inputs(4, 4, 1);
+        assert!(run_reduce_scatter(&p, &inputs, &Default::default()).is_err());
+    }
+
+    #[test]
+    fn capacity_violation_detected() {
+        // Unconstrained bruck far-first on 16 ranks needs >2 staging slots;
+        // capping at 1 must error.
+        let p = crate::sched::bruck::allgather_far_first(16);
+        let inputs = ag_inputs(16, 4, 9);
+        let opts = TransportOptions {
+            slot_capacity: Some(1),
+            ..Default::default()
+        };
+        let err = run_allgather(&p, &inputs, &opts).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+    }
+}

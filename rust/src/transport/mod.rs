@@ -1,0 +1,21 @@
+//! In-process transport: executes schedule programs with real bytes moving
+//! between rank threads — the "one rank per node" runtime of the paper,
+//! collapsed onto one host.
+//!
+//! * [`engine`] — one OS thread per rank, FIFO channels per directed pair,
+//!   blocking receives, non-blocking sends (the NCCL model where senders
+//!   write into pre-mapped remote staging buffers).
+//! * [`buffers`] — the bounded intermediate-buffer pool. PAT's defining
+//!   constraint is that staging/accumulator space is limited; the pool
+//!   enforces the bound and records peak occupancy (paper claim P3).
+//! * [`datapath`] — the receive-side reduction: either a pure-rust scalar
+//!   loop or the AOT-compiled Pallas kernel via PJRT
+//!   ([`crate::runtime::Registry::reduce_f32`]).
+
+pub mod engine;
+pub mod buffers;
+pub mod datapath;
+
+pub use buffers::BufferPool;
+pub use datapath::DataPath;
+pub use engine::{run_allgather, run_allgather_into, run_reduce_scatter, TransportOptions, TransportReport};

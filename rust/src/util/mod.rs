@@ -1,0 +1,11 @@
+//! Self-contained utilities: deterministic PRNG, statistics, JSON
+//! emission/parsing, and text tables. The offline build environment has no
+//! `rand`/`serde`/`criterion`, so these substrates are implemented here.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,145 @@
+//! Fixed-width text tables for CLI / bench output (the rows the paper's
+//! evaluation would print).
+
+/// A simple left-padded column table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = widths[i].saturating_sub(cells[i].len());
+                // right-align numeric-looking cells, left-align text
+                let numeric = cells[i]
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_digit() || c == '-' || c == '+' || c == '.')
+                    .unwrap_or(false);
+                if numeric {
+                    line.extend(std::iter::repeat(' ').take(pad));
+                    line.push_str(&cells[i]);
+                } else {
+                    line.push_str(&cells[i]);
+                    line.extend(std::iter::repeat(' ').take(pad));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.extend(std::iter::repeat('-').take(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a byte count human-readably (power-of-two units, NCCL style).
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u + 1 < UNITS.len() {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else if x >= 100.0 {
+        format!("{x:.0} {}", UNITS[u])
+    } else {
+        format!("{x:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn fmt_time_s(t: f64) -> String {
+    if t < 1e-6 {
+        format!("{:.1} ns", t * 1e9)
+    } else if t < 1e-3 {
+        format!("{:.2} us", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.3} ms", t * 1e3)
+    } else {
+        format!("{t:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(["alg", "time"]);
+        t.row(["ring", "1.5"]);
+        t.row(["pat(a=2)", "12.25"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("alg"));
+        assert!(lines[3].contains("12.25"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(1 << 20), "1.0 MiB");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time_s(0.5e-9 * 100.0), "50.0 ns");
+        assert!(fmt_time_s(0.0025).contains("ms"));
+    }
+}

@@ -1,0 +1,146 @@
+//! P4 + global correctness matrix: every algorithm × collective × rank
+//! count in its domain, through the reference executor AND the real
+//! threaded transport, including primes and other awkward counts (paper
+//! Fig. 4 / the "any number of ranks" claim).
+
+use patcol::core::{Algorithm, Collective};
+use patcol::sched::{self, verify::verify_program};
+use patcol::transport::{run_allgather, run_reduce_scatter, TransportOptions};
+use patcol::util::Rng;
+
+fn algorithms() -> Vec<Algorithm> {
+    vec![
+        Algorithm::Ring,
+        Algorithm::BruckNearFirst,
+        Algorithm::BruckFarFirst,
+        Algorithm::Recursive,
+        Algorithm::Pat { aggregation: 1 },
+        Algorithm::Pat { aggregation: 2 },
+        Algorithm::Pat { aggregation: 3 },
+        Algorithm::Pat { aggregation: 5 },
+        Algorithm::Pat { aggregation: 8 },
+        Algorithm::Pat { aggregation: usize::MAX },
+    ]
+}
+
+/// Reference-executor matrix over all n in [1, 64].
+#[test]
+fn verifier_matrix_to_64() {
+    for n in 1..=64usize {
+        for alg in algorithms() {
+            if !alg.supports(n) {
+                continue;
+            }
+            for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                let p = sched::generate(alg, coll, n).unwrap();
+                verify_program(&p)
+                    .unwrap_or_else(|e| panic!("{alg} {coll} n={n}: {e}"));
+            }
+        }
+    }
+}
+
+/// Real-byte transport on a spread of counts including primes.
+#[test]
+fn transport_matrix_primes_and_powers() {
+    let opts = TransportOptions::default();
+    for n in [2usize, 3, 5, 7, 8, 11, 13, 16, 17, 19, 23] {
+        let chunk = 24;
+        let mut rng = Rng::new(n as u64 * 31);
+        for alg in algorithms() {
+            if !alg.supports(n) {
+                continue;
+            }
+            // all-gather
+            let ag = sched::generate(alg, Collective::AllGather, n).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let mut want = Vec::new();
+            for i in &inputs {
+                want.extend_from_slice(i);
+            }
+            let (outs, _) = run_allgather(&ag, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("{alg} ag n={n}: {e}"));
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &want, "{alg} ag n={n} rank={r}");
+            }
+            // reduce-scatter
+            let rs = sched::generate(alg, Collective::ReduceScatter, n).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let (outs, _) = run_reduce_scatter(&rs, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("{alg} rs n={n}: {e}"));
+            for r in 0..n {
+                for i in 0..chunk {
+                    let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                    assert_eq!(outs[r][i], w, "{alg} rs n={n} rank={r} idx={i}");
+                }
+            }
+        }
+    }
+}
+
+/// Property-style randomized sweep: random (n, aggregation, chunk) triples,
+/// deterministic seed, both collectives, exact results.
+#[test]
+fn randomized_pat_cases() {
+    let mut rng = Rng::new(0xFADE);
+    let opts = TransportOptions::default();
+    for case in 0..60 {
+        let n = rng.range(1, 40);
+        let a = match rng.below(4) {
+            0 => 1,
+            1 => rng.range(1, n.max(2)),
+            2 => rng.range(1, 8),
+            _ => usize::MAX,
+        };
+        let chunk = [1usize, 3, 8, 17][rng.below(4)];
+        let ag = patcol::sched::pat::allgather(n, a);
+        verify_program(&ag).unwrap_or_else(|e| panic!("case {case} n={n} a={a}: {e}"));
+        let rs = patcol::sched::pat::reduce_scatter(n, a);
+        verify_program(&rs).unwrap_or_else(|e| panic!("case {case} rs n={n} a={a}: {e}"));
+
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..n * chunk).map(|_| rng.below(256) as f32).collect())
+            .collect();
+        let (outs, _) = run_reduce_scatter(&rs, &inputs, &opts).unwrap();
+        for r in 0..n {
+            for i in 0..chunk {
+                let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                assert_eq!(outs[r][i], w, "case {case} n={n} a={a} rank={r}");
+            }
+        }
+    }
+}
+
+/// Degenerate shapes: 1 rank (no-op), 2 ranks, empty chunks.
+#[test]
+fn degenerate_cases() {
+    let opts = TransportOptions::default();
+    // one rank: identity
+    let p = patcol::sched::pat::allgather(1, 1);
+    let (outs, rep) = run_allgather(&p, &[vec![5.0, 6.0]], &opts).unwrap();
+    assert_eq!(outs[0], vec![5.0, 6.0]);
+    assert_eq!(rep.messages, 0);
+
+    let p = patcol::sched::pat::reduce_scatter(1, 1);
+    let (outs, _) = run_reduce_scatter(&p, &[vec![7.0]], &opts).unwrap();
+    assert_eq!(outs[0], vec![7.0]);
+
+    // zero-length chunks move no bytes but complete
+    let p = patcol::sched::pat::allgather(4, 2);
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![]).collect();
+    let (outs, rep) = run_allgather(&p, &inputs, &opts).unwrap();
+    assert!(outs.iter().all(|o| o.is_empty()));
+    assert_eq!(rep.bytes_moved, 0);
+}
+
+/// The generation front-end rejects unsupported combinations cleanly.
+#[test]
+fn unsupported_combinations() {
+    assert!(sched::generate(Algorithm::Recursive, Collective::AllGather, 12).is_err());
+    assert!(sched::generate(Algorithm::PatAuto, Collective::AllGather, 8).is_err());
+    assert!(sched::generate(Algorithm::Ring, Collective::AllGather, 0).is_err());
+}

@@ -1,0 +1,163 @@
+//! Golden tests pinning the exact schedules of the paper's figures
+//! (F1–F11 in DESIGN.md). Any change to the generators that alters these
+//! schedules is a deliberate, reviewed event.
+
+use patcol::core::Collective;
+use patcol::sched::program::Message;
+use patcol::sched::{bruck, explain, pat};
+
+/// Compact encoding of rank 0's view of each step: (src->dst, chunks).
+fn rank0_messages(msgs: &[Message]) -> Vec<(usize, usize, Vec<usize>)> {
+    msgs.iter()
+        .filter(|m| m.src == 0)
+        .map(|m| (m.src, m.dst, m.chunks.clone()))
+        .collect()
+}
+
+/// Fig. 1 — classic Bruck, 8 ranks: rank 0 sends 1, 2, 4 chunks to peers
+/// at distance 1, 2, 4 (payload and distance grow together).
+#[test]
+fn fig1_bruck_near_first() {
+    let p = bruck::allgather_near_first(8);
+    assert_eq!(p.steps, 3);
+    let got = rank0_messages(&p.messages());
+    assert_eq!(
+        got,
+        vec![
+            (0, 1, vec![0]),
+            (0, 2, vec![0, 7]),
+            (0, 4, vec![0, 7, 6, 5]),
+        ]
+    );
+}
+
+/// Fig. 2 — the same schedule decomposes into one binomial tree per root.
+#[test]
+fn fig2_per_root_trees() {
+    let p = bruck::allgather_near_first(8);
+    // chunk 0's tree: reached offsets double every step
+    let mut holders = vec![0usize];
+    for (_, msgs) in p.rounds() {
+        let mut new = Vec::new();
+        for m in &msgs {
+            if m.chunks.contains(&0) {
+                assert!(holders.contains(&m.src), "sender {} lacks chunk 0", m.src);
+                new.push(m.dst);
+            }
+        }
+        holders.extend(new);
+    }
+    holders.sort_unstable();
+    assert_eq!(holders, (0..8).collect::<Vec<_>>());
+}
+
+/// Fig. 3 — reversed dimensions: distances shrink 4, 2, 1 while payloads
+/// grow 1, 2, 4.
+#[test]
+fn fig3_bruck_far_first() {
+    let p = bruck::allgather_far_first(8);
+    assert_eq!(p.steps, 3);
+    let got = rank0_messages(&p.messages());
+    assert_eq!(
+        got,
+        vec![
+            (0, 4, vec![0]),
+            (0, 2, vec![0, 4]),
+            (0, 1, vec![0, 6, 4, 2]),
+        ]
+    );
+}
+
+/// Fig. 4 — truncated trees on 7 ranks: per-step payloads 1, 2, 3.
+#[test]
+fn fig4_truncated_7() {
+    let p = bruck::allgather_far_first(7);
+    assert_eq!(p.steps, 3);
+    let got = rank0_messages(&p.messages());
+    assert_eq!(got[0], (0, 4, vec![0]));
+    assert_eq!(got[1], (0, 2, vec![0, 3]));
+    assert_eq!(got[2], (0, 1, vec![0, 5, 3]));
+    let total: usize = got.iter().map(|(_, _, c)| c.len()).sum();
+    assert_eq!(total, 6); // n-1 chunk transfers per rank
+}
+
+/// Fig. 5 — PAT 8 ranks, aggregation 2: the 4-chunk distance-1 round of
+/// Fig. 3 splits into two 2-chunk rounds (4 steps total).
+#[test]
+fn fig5_pat_8_agg2() {
+    let p = pat::allgather(8, 2);
+    assert_eq!(p.steps, 4);
+    let got = rank0_messages(&p.messages());
+    assert_eq!(got[0], (0, 4, vec![0]));
+    assert_eq!(got[1], (0, 2, vec![0, 4]));
+    // linear phase: one edge per parallel tree per round, 2 chunks each
+    assert_eq!(got[2], (0, 1, vec![6, 2]));
+    assert_eq!(got[3], (0, 1, vec![0, 4]));
+}
+
+/// Fig. 6 — phase split: 1 logarithmic step + 3 linear steps.
+#[test]
+fn fig6_phases() {
+    assert_eq!(pat::phase_counts(8, 2), (1, 3));
+    let txt = explain::render_pat_tree(8, 2);
+    assert!(txt.contains("1 logarithmic + 3 linear"), "{txt}");
+}
+
+/// Figs. 7-9 — 16 ranks with 8/4/2 trees: 4/5/8 steps.
+#[test]
+fn fig7_8_9_tree_counts() {
+    assert_eq!(pat::allgather(16, 8).steps, 4);
+    assert_eq!(pat::allgather(16, 4).steps, 5);
+    assert_eq!(pat::allgather(16, 2).steps, 8);
+    assert_eq!(pat::phase_counts(16, 8), (3, 1));
+    assert_eq!(pat::phase_counts(16, 4), (2, 3));
+    assert_eq!(pat::phase_counts(16, 2), (1, 7));
+}
+
+/// Fig. 10 — fully linear: 8 ranks, 7 steps, far-first then progressively
+/// closer; every transfer is a single full chunk.
+#[test]
+fn fig10_fully_linear() {
+    let p = pat::allgather(8, 1);
+    assert_eq!(p.steps, 7);
+    let got = rank0_messages(&p.messages());
+    let dists: Vec<usize> = got.iter().map(|(_, d, _)| *d).collect();
+    // DFS pre-order, far child first: 0->4, then subtree of 4, then near.
+    assert_eq!(dists, vec![4, 2, 1, 1, 2, 1, 1]);
+    assert!(got.iter().all(|(_, _, c)| c.len() == 1));
+    // first transfer is the farthest child of the root
+    assert_eq!(got[0].2, vec![0]);
+}
+
+/// Fig. 11 — reduce-scatter is the exact mirror: same messages with
+/// src/dst swapped, in reverse step order, reduce on receive.
+#[test]
+fn fig11_rs_mirror() {
+    let ag = pat::allgather(8, 2);
+    let rs = pat::reduce_scatter(8, 2);
+    assert_eq!(rs.collective, Collective::ReduceScatter);
+    let mut ag_msgs = ag.messages();
+    let rs_msgs = rs.messages();
+    assert_eq!(ag_msgs.len(), rs_msgs.len());
+    // reverse ag step order and flip direction -> must equal rs messages
+    let max_step = ag.steps - 1;
+    for m in &mut ag_msgs {
+        std::mem::swap(&mut m.src, &mut m.dst);
+        m.step = max_step - m.step;
+    }
+    ag_msgs.sort_by_key(|m| (m.step, m.src));
+    for (a, b) in ag_msgs.iter().zip(&rs_msgs) {
+        assert_eq!((a.src, a.dst, &a.chunks, a.step), (b.src, b.dst, &b.chunks, b.step));
+    }
+}
+
+/// The rendered figures (text) stay stable for the explorer example.
+#[test]
+fn rendered_text_stable() {
+    let p = pat::allgather(8, 2);
+    let steps = explain::render_steps(&p);
+    assert!(steps.contains("pat(a=2) / all_gather on 8 ranks — 4 steps"));
+    assert!(steps.contains("0 -> 4"));
+    let rank0 = explain::render_rank(&p, 0);
+    assert!(rank0.contains("[s0] send -> 4: [0]"));
+}

@@ -1,0 +1,140 @@
+//! Integration: AOT artifacts (L1 Pallas → L2 jax → HLO text) load and run
+//! through the rust PJRT runtime, and the transport engine produces
+//! identical results on the scalar and PJRT datapaths.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::path::PathBuf;
+
+use patcol::runtime::{ArtifactKind, PjrtContext, PjrtService, Registry};
+use patcol::sched::pat;
+use patcol::transport::{run_reduce_scatter, DataPath, TransportOptions};
+use patcol::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("PATCOL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "skipping: no artifacts at {} (run `make artifacts`)",
+            dir.display()
+        );
+        None
+    }
+}
+
+#[test]
+fn pallas_reduce_matches_scalar() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = PjrtContext::cpu().unwrap();
+    let reg = Registry::load(ctx, &dir).unwrap();
+    let mut rng = Rng::new(42);
+    // cover: smaller than class, exact class, needs segmentation
+    for n in [100usize, 1024, 1500, 20000] {
+        let mut acc = vec![0f32; n];
+        let mut x = vec![0f32; n];
+        rng.fill_f32(&mut acc);
+        rng.fill_f32(&mut x);
+        let mut want = acc.clone();
+        for (w, xi) in want.iter_mut().zip(&x) {
+            *w += *xi;
+        }
+        reg.reduce_f32(&mut acc, &x).unwrap();
+        for (i, (a, w)) in acc.iter().zip(&want).enumerate() {
+            assert!((a - w).abs() < 1e-5, "n={n} idx={i}: {a} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn scale_add_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = PjrtContext::cpu().unwrap();
+    let reg = Registry::load(ctx, &dir).unwrap();
+    let meta = reg.pick_class(ArtifactKind::ScaleAdd, 4096).unwrap();
+    let n = meta.n;
+    let exe = reg.get(&meta.name.clone()).unwrap();
+    let p = vec![1.0f32; n];
+    let g = vec![2.0f32; n];
+    let lr = vec![0.5f32];
+    let dims = [n as i64];
+    let out = exe
+        .run_f32(&[(&p, &dims), (&g, &dims), (&lr, &[1])])
+        .unwrap();
+    assert!(out[0].iter().all(|&v| (v - 0.0).abs() < 1e-6));
+}
+
+#[test]
+fn train_step_artifact_runs_and_loss_is_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = PjrtContext::cpu().unwrap();
+    let reg = Registry::load(ctx, &dir).unwrap();
+    let Some(meta) = reg.meta("train_step") else {
+        eprintln!("skipping: no train_step artifact");
+        return;
+    };
+    let nparams = meta.extra["params"];
+    let batch = meta.extra["batch"];
+    let seq = meta.extra["seq"];
+    let vocab = meta.extra["vocab"] as i32;
+    // initial params from the AOT dump
+    let raw = std::fs::read(dir.join("init_params.f32")).unwrap();
+    assert_eq!(raw.len(), nparams * 4);
+    let params: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut rng = Rng::new(7);
+    let tokens: Vec<i32> = (0..batch * (seq + 1))
+        .map(|_| (rng.below(vocab as usize)) as i32)
+        .collect();
+    let exe = reg.get("train_step").unwrap();
+    let plit = xla::Literal::vec1(&params);
+    let tlit = xla::Literal::vec1(&tokens)
+        .reshape(&[batch as i64, (seq + 1) as i64])
+        .unwrap();
+    let outs = exe.run_literals(&[plit, tlit]).unwrap();
+    let loss = outs[0].to_vec::<f32>().unwrap()[0];
+    let grads = outs[1].to_vec::<f32>().unwrap();
+    assert_eq!(grads.len(), nparams);
+    // random tokens: loss near ln(vocab)
+    assert!(
+        (loss - (vocab as f32).ln()).abs() < 1.5,
+        "loss {loss} vs ln(V) {}",
+        (vocab as f32).ln()
+    );
+    assert!(grads.iter().any(|g| g.abs() > 1e-8));
+}
+
+#[test]
+fn transport_pjrt_datapath_matches_scalar() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_svc, handle) = PjrtService::spawn(dir).unwrap();
+    let n = 8usize;
+    let chunk = 300usize; // not lane-aligned on purpose
+    let mut rng = Rng::new(99);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..n * chunk).map(|_| rng.below(100) as f32).collect())
+        .collect();
+    let p = pat::reduce_scatter(n, 2);
+    let scalar_opts = TransportOptions::default();
+    let (want, _) = run_reduce_scatter(&p, &inputs, &scalar_opts).unwrap();
+    let pjrt_opts = TransportOptions {
+        datapath: DataPath::Pjrt(handle),
+        ..Default::default()
+    };
+    let (got, _) = run_reduce_scatter(&p, &inputs, &pjrt_opts).unwrap();
+    for r in 0..n {
+        for i in 0..chunk {
+            assert!(
+                (got[r][i] - want[r][i]).abs() < 1e-4,
+                "rank {r} idx {i}: {} vs {}",
+                got[r][i],
+                want[r][i]
+            );
+        }
+    }
+}

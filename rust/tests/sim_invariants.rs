@@ -1,0 +1,155 @@
+//! Simulator invariants: conservation, monotonicity, contention and
+//! routing properties that must hold for any schedule on any topology.
+
+use patcol::core::{Algorithm, Collective};
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::Rng;
+
+fn topos(n: usize) -> Vec<Topology> {
+    let nic = 25e9;
+    let mut v = vec![Topology::flat(n, nic)];
+    if n % 8 == 0 {
+        v.push(Topology::leaf_spine(n, 8, 4, nic, 0.5).unwrap());
+        v.push(Topology::dragonfly(n, 8, nic, 12.5e9).unwrap());
+    }
+    if n % 16 == 0 {
+        v.push(Topology::three_level(n, 4, 4, 4, 2, nic, 1.0, 0.5).unwrap());
+    }
+    v
+}
+
+/// Bytes injected = messages × payload for single-chunk schedules; level
+/// accounting partitions total bytes.
+#[test]
+fn byte_conservation_across_topologies() {
+    let n = 32;
+    for topo in topos(n) {
+        for alg in [Algorithm::Ring, Algorithm::Pat { aggregation: 4 }] {
+            let prog = sched::generate(alg, Collective::AllGather, n).unwrap();
+            let rep = simulate(&prog, &topo, &CostModel::ideal(), 128).unwrap();
+            let expect: usize = prog
+                .messages()
+                .iter()
+                .map(|m| m.chunks.len() * 128)
+                .sum();
+            assert_eq!(rep.bytes_sent, expect, "{} {}", topo.name, alg);
+            assert_eq!(
+                rep.bytes_by_level.iter().sum::<usize>(),
+                rep.bytes_sent,
+                "{} {}",
+                topo.name,
+                alg
+            );
+        }
+    }
+}
+
+/// Simulated time grows monotonically with chunk size and with every cost
+/// parameter.
+#[test]
+fn monotonicity() {
+    let n = 16;
+    let topo = Topology::flat(n, 25e9);
+    let prog = sched::generate(Algorithm::Pat { aggregation: 2 }, Collective::AllGather, n)
+        .unwrap();
+    let base = CostModel::ib_hdr();
+    let t0 = simulate(&prog, &topo, &base, 1024).unwrap().total_time;
+    // size up
+    let t_big = simulate(&prog, &topo, &base, 64 * 1024).unwrap().total_time;
+    assert!(t_big > t0);
+    // each knob up
+    for knob in 0..4 {
+        let mut c = base;
+        match knob {
+            0 => c.alpha_base *= 10.0,
+            1 => c.alpha_hop *= 100.0,
+            2 => c.gamma_chunk *= 100.0,
+            _ => c.msg_gap *= 1000.0,
+        }
+        let t = simulate(&prog, &topo, &c, 1024).unwrap().total_time;
+        assert!(t >= t0, "knob {knob}: {t} < {t0}");
+    }
+}
+
+/// A tapered fabric is never faster than the full-bisection one.
+#[test]
+fn taper_never_helps() {
+    let n = 64;
+    let full = Topology::leaf_spine(n, 8, 8, 25e9, 1.0).unwrap();
+    let tapered = Topology::leaf_spine(n, 8, 2, 25e9, 0.25).unwrap();
+    for alg in [
+        Algorithm::Ring,
+        Algorithm::BruckNearFirst,
+        Algorithm::Pat { aggregation: 4 },
+    ] {
+        let prog = sched::generate(alg, Collective::AllGather, n).unwrap();
+        let tf = simulate(&prog, &full, &CostModel::ib_hdr(), 64 << 10)
+            .unwrap()
+            .total_time;
+        let tt = simulate(&prog, &tapered, &CostModel::ib_hdr(), 64 << 10)
+            .unwrap()
+            .total_time;
+        assert!(tt >= tf * 0.999, "{alg}: tapered {tt} < full {tf}");
+    }
+}
+
+/// Static routing: repeated simulation is bit-identical (determinism), and
+/// routes do not depend on call order.
+#[test]
+fn deterministic_simulation() {
+    let n = 48;
+    let topo = Topology::leaf_spine(n, 8, 4, 25e9, 0.5).unwrap();
+    let prog = sched::generate(Algorithm::BruckNearFirst, Collective::AllGather, n).unwrap();
+    let a = simulate(&prog, &topo, &CostModel::ib_hdr(), 4096).unwrap();
+    let b = simulate(&prog, &topo, &CostModel::ib_hdr(), 4096).unwrap();
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.finish, b.finish);
+    assert_eq!(a.max_link_bytes, b.max_link_bytes);
+}
+
+/// Reduce-scatter simulation accounts reduction cost.
+#[test]
+fn rs_costs_more_than_ag_with_reduce_cost() {
+    let n = 16;
+    let topo = Topology::flat(n, 25e9);
+    let mut cost = CostModel::ib_hdr();
+    cost.reduce_byte = 1.0 / 1e9; // expensive reduction
+    let ag = sched::generate(Algorithm::Pat { aggregation: 4 }, Collective::AllGather, n)
+        .unwrap();
+    let rs = sched::generate(
+        Algorithm::Pat { aggregation: 4 },
+        Collective::ReduceScatter,
+        n,
+    )
+    .unwrap();
+    let t_ag = simulate(&ag, &topo, &cost, 256 << 10).unwrap().total_time;
+    let t_rs = simulate(&rs, &topo, &cost, 256 << 10).unwrap().total_time;
+    assert!(t_rs > t_ag, "rs {t_rs} should exceed ag {t_ag}");
+}
+
+/// Random schedules through random topologies never panic and never stall
+/// (verified generators only).
+#[test]
+fn random_sweep_never_stalls() {
+    let mut rng = Rng::new(77);
+    for _ in 0..40 {
+        let n = 8 * rng.range(1, 6); // 8..48, divisible by 8
+        let algs = [
+            Algorithm::Ring,
+            Algorithm::BruckFarFirst,
+            Algorithm::Pat { aggregation: rng.range(1, 9) },
+        ];
+        let alg = algs[rng.below(algs.len())];
+        let coll = if rng.chance(0.5) {
+            Collective::AllGather
+        } else {
+            Collective::ReduceScatter
+        };
+        let prog = sched::generate(alg, coll, n).unwrap();
+        for topo in topos(n) {
+            let rep = simulate(&prog, &topo, &CostModel::ib_hdr(), 512).unwrap();
+            assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
+        }
+    }
+}

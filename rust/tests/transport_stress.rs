@@ -1,0 +1,217 @@
+//! Transport robustness: repeated operations (buffer-recycling
+//! steady-state), wider worlds, concurrent communicators, auto-tuned
+//! algorithm paths, and failure behaviour (timeouts surface as errors, not
+//! hangs).
+
+use std::time::Duration;
+
+use patcol::coordinator::{CommConfig, Communicator};
+use patcol::core::{Algorithm, Collective};
+use patcol::sched::pat;
+use patcol::sched::program::{Op, Program};
+use patcol::transport::{run_allgather, run_allgather_into, run_reduce_scatter, TransportOptions};
+use patcol::util::Rng;
+
+/// Steady-state reuse: 25 back-to-back reduce-scatters through one
+/// communicator produce identical results every time (recycled buffers
+/// never leak stale data).
+#[test]
+fn repeated_ops_are_deterministic() {
+    let n = 8;
+    let chunk = 257; // deliberately unaligned
+    let comm = Communicator::new(CommConfig {
+        nranks: n,
+        algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(1234);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..n * chunk).map(|_| rng.below(1000) as f32).collect())
+        .collect();
+    let first = comm.reduce_scatter(&inputs).unwrap();
+    for rep in 0..24 {
+        let again = comm.reduce_scatter(&inputs).unwrap();
+        assert_eq!(again, first, "repetition {rep} diverged");
+    }
+}
+
+/// run_allgather_into with reused output buffers across calls: outputs are
+/// fully overwritten (no stale chunks from the previous call).
+#[test]
+fn into_buffers_fully_overwritten() {
+    let n = 6;
+    let chunk = 33;
+    let prog = pat::allgather(n, 2);
+    let opts = TransportOptions { validate: false, ..Default::default() };
+    let mut outputs: Vec<Vec<f32>> = vec![vec![f32::NAN; n * chunk]; n];
+    for round in 0..3 {
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|r| vec![(round * 100 + r) as f32; chunk]).collect();
+        run_allgather_into(&prog, &inputs, &mut outputs, &opts).unwrap();
+        for (r, o) in outputs.iter().enumerate() {
+            for src in 0..n {
+                assert!(
+                    o[src * chunk..(src + 1) * chunk]
+                        .iter()
+                        .all(|&v| v == (round * 100 + src) as f32),
+                    "round {round} rank {r} chunk {src}"
+                );
+            }
+        }
+    }
+}
+
+/// 32 rank threads on this host still complete correctly (oversubscribed
+/// scheduling stresses the FIFO reordering path).
+#[test]
+fn wide_world_32_ranks() {
+    let n = 32;
+    let chunk = 16;
+    let mut rng = Rng::new(9);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..chunk).map(|_| rng.below(100) as f32).collect())
+        .collect();
+    let mut want = Vec::new();
+    for i in &inputs {
+        want.extend_from_slice(i);
+    }
+    for alg in [
+        Algorithm::Pat { aggregation: 4 },
+        Algorithm::Ring,
+        Algorithm::BruckNearFirst,
+    ] {
+        let prog = patcol::sched::generate(alg, Collective::AllGather, n).unwrap();
+        let (outs, _) =
+            run_allgather(&prog, &inputs, &TransportOptions::default()).unwrap();
+        assert_eq!(outs[n - 1], want, "{alg}");
+    }
+}
+
+/// Two communicators running interleaved collectives don't interfere.
+#[test]
+fn concurrent_communicators() {
+    let mk = |n: usize, a: usize| {
+        Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: a }),
+            ..Default::default()
+        })
+        .unwrap()
+    };
+    let c1 = mk(4, 1);
+    let c2 = mk(6, 2);
+    std::thread::scope(|s| {
+        let h1 = s.spawn(|| {
+            let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 64]).collect();
+            for _ in 0..10 {
+                let out = c1.all_gather(&inputs).unwrap();
+                assert_eq!(out[0].len(), 4 * 64);
+            }
+        });
+        let h2 = s.spawn(|| {
+            let inputs: Vec<Vec<f32>> = (0..6).map(|r| vec![r as f32; 48]).collect();
+            for _ in 0..10 {
+                let out = c2.all_gather(&inputs).unwrap();
+                assert_eq!(out[5].len(), 6 * 48);
+            }
+        });
+        h1.join().unwrap();
+        h2.join().unwrap();
+    });
+}
+
+/// The auto-tuned path end-to-end: PatAuto resolves per size and still
+/// computes exact results at both extremes.
+#[test]
+fn pat_auto_both_regimes() {
+    let n = 8;
+    let comm = Communicator::new(CommConfig {
+        nranks: n,
+        algorithm: Some(Algorithm::PatAuto),
+        buffer_slots: Some(16),
+        ..Default::default()
+    })
+    .unwrap();
+    for chunk in [4usize, 32 * 1024] {
+        let mut rng = Rng::new(chunk as u64);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..n * chunk).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (outs, rep) = comm.reduce_scatter_report(&inputs).unwrap();
+        for r in 0..n {
+            for i in 0..chunk {
+                let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                assert_eq!(outs[r][i], w, "chunk={chunk} rank={r}");
+            }
+        }
+        // resolved to a concrete algorithm, never PatAuto itself
+        assert!(!matches!(rep.algorithm, Algorithm::PatAuto));
+    }
+}
+
+/// A deliberately deadlocked program fails with a timeout error instead of
+/// hanging the process (watchdog path).
+#[test]
+fn timeout_instead_of_hang() {
+    // rank 0 waits for a message rank 1 never sends
+    let mut p = Program::new(2, Collective::AllGather, "broken");
+    p.push(0, Op::Recv { peer: 1, chunks: vec![1], reduce: false, step: 0 });
+    p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
+    p.push(1, Op::Recv { peer: 0, chunks: vec![0], reduce: false, step: 0 });
+    let opts = TransportOptions {
+        validate: false, // skip the verifier to reach the runtime watchdog
+        recv_timeout: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let inputs = vec![vec![1.0f32], vec![2.0f32]];
+    let err = run_allgather(&p, &inputs, &opts).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+}
+
+/// Recycling kill-switch still yields correct results.
+#[test]
+fn no_recycle_env_correct() {
+    std::env::set_var("PATCOL_NO_RECYCLE", "1");
+    let n = 8;
+    let prog = pat::reduce_scatter(n, 2);
+    let mut rng = Rng::new(3);
+    let chunk = 100;
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..n * chunk).map(|_| rng.below(100) as f32).collect())
+        .collect();
+    let (outs, _) = run_reduce_scatter(&prog, &inputs, &TransportOptions::default()).unwrap();
+    for r in 0..n {
+        for i in 0..chunk {
+            let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+            assert_eq!(outs[r][i], w);
+        }
+    }
+    std::env::remove_var("PATCOL_NO_RECYCLE");
+}
+
+/// all_reduce at awkward lengths (not divisible by nranks), repeated.
+#[test]
+fn all_reduce_awkward_lengths() {
+    let n = 5;
+    let comm = Communicator::new(CommConfig {
+        nranks: n,
+        algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+        ..Default::default()
+    })
+    .unwrap();
+    for len in [1usize, 4, 5, 17, 101] {
+        let mut rng = Rng::new(len as u64);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.below(50) as f32).collect())
+            .collect();
+        let outs = comm.all_reduce(&inputs).unwrap();
+        for (r, o) in outs.iter().enumerate() {
+            assert_eq!(o.len(), len);
+            for i in 0..len {
+                let w: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(o[i], w, "len={len} rank={r} idx={i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Tuner sanity (DESIGN invariant 6) and config/CLI plumbing.
+
+use patcol::coordinator::config::{parse_bytes, ConfigMap};
+use patcol::coordinator::{CommConfig, Communicator, Tuner};
+use patcol::core::{Algorithm, Collective};
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+
+/// Invariant 6: on a grid of (ranks, sizes), the tuner's pick simulates
+/// within 25% of the best fixed candidate on the ideal fabric. (The tuner
+/// uses a closed-form model, the reference is the event simulator, so we
+/// allow model error but no gross misprediction.)
+#[test]
+fn tuner_never_grossly_wrong() {
+    let tuner = Tuner::default();
+    let cost = CostModel::ib_hdr();
+    for &n in &[8usize, 32, 128] {
+        let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+        for &size in &[256usize, 16 << 10, 1 << 20] {
+            let sim_t = |alg: Algorithm| {
+                let prog = sched::generate(alg, Collective::AllGather, n).unwrap();
+                simulate(&prog, &topo, &cost, size).unwrap().total_time
+            };
+            let candidates = [
+                Algorithm::Ring,
+                Algorithm::Pat { aggregation: usize::MAX },
+                Algorithm::Pat { aggregation: 8 },
+                Algorithm::Pat { aggregation: 1 },
+            ];
+            let best = candidates
+                .iter()
+                .map(|&a| sim_t(a))
+                .fold(f64::INFINITY, f64::min);
+            let picked = tuner.choose(n, size, 1 << 30, Collective::AllGather).algorithm;
+            let picked_t = sim_t(picked);
+            assert!(
+                picked_t <= best * 1.25,
+                "n={n} size={size}: picked {picked} at {picked_t}, best {best}"
+            );
+        }
+    }
+}
+
+/// The tuner respects the buffer budget end-to-end through the
+/// communicator: with 2 slots, the resolved PAT aggregation is 1 for RS on
+/// 32 ranks (law: a·log2(n/a) ≤ slots).
+#[test]
+fn buffer_budget_respected_via_communicator() {
+    let comm = Communicator::new(CommConfig {
+        nranks: 32,
+        buffer_slots: Some(2),
+        ..Default::default()
+    })
+    .unwrap();
+    match comm.resolve(Collective::ReduceScatter, 64) {
+        Algorithm::Pat { aggregation } => assert_eq!(aggregation, 1),
+        Algorithm::Ring => {} // also buffer-safe
+        other => panic!("unexpected {other}"),
+    }
+}
+
+#[test]
+fn config_file_to_communicator() {
+    let cfg = ConfigMap::parse(
+        "nranks = 6\nalgorithm = pat:2\nbuffer_slots = 16\ndatapath = scalar\n",
+    )
+    .unwrap();
+    let cc = cfg.to_comm_config().unwrap();
+    let comm = Communicator::new(cc).unwrap();
+    assert_eq!(comm.nranks(), 6);
+    let inputs: Vec<Vec<f32>> = (0..6).map(|r| vec![r as f32; 10]).collect();
+    let (_, rep) = comm.all_gather_report(&inputs).unwrap();
+    assert_eq!(rep.algorithm, Algorithm::Pat { aggregation: 2 });
+}
+
+#[test]
+fn size_strings() {
+    assert_eq!(parse_bytes("512").unwrap(), 512);
+    assert_eq!(parse_bytes("8MiB").unwrap(), 8 << 20);
+}
+
+/// CLI binary smoke: selftest + explain + tune + sweep run clean.
+#[test]
+fn cli_binary_smoke() {
+    let bin = env!("CARGO_BIN_EXE_patcol");
+    for argv in [
+        vec!["selftest", "--max-ranks", "9"],
+        vec!["explain", "--ranks", "8", "--agg", "2"],
+        vec!["tune", "--ranks", "64", "--size", "4KiB", "--buffer-slots", "16"],
+        vec!["sweep", "--ranks", "16", "--sizes", "1KiB,64KiB"],
+        vec![
+            "simulate", "--ranks", "32", "--size", "64KiB", "--alg", "ring",
+            "--topo", "leaf_spine", "--ranks-per-leaf", "8",
+        ],
+        vec!["run", "--ranks", "4", "--size", "4KiB", "--alg", "pat:2",
+             "--collective", "rs"],
+    ] {
+        let out = std::process::Command::new(bin)
+            .args(&argv)
+            .output()
+            .expect("spawn patcol");
+        assert!(
+            out.status.success(),
+            "patcol {argv:?}: {}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
