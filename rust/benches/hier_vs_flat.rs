@@ -1,0 +1,114 @@
+//! Hierarchical vs flat PAT at scale on a tapered three-level fat-tree.
+//!
+//! The production question the `sched::hier` subsystem answers: once the
+//! fabric's upper tiers are tapered and ranks are packed 8-to-a-leaf, how
+//! much does running PAT *between nodes only* (leaders), with the chatty
+//! phases kept under the leaf switches, buy over the flat schedule? This
+//! bench sweeps 64–1024 simulated ranks at equal aggregation and reports
+//! completion time plus the cross-leaf traffic metrics (messages and bytes
+//! at fabric level ≥ 1) for both, emitting the usual JSON report.
+
+use patcol::core::{Algorithm, Collective, Placement};
+use patcol::report::Report;
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, SimReport, Topology};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn cross_msgs(r: &SimReport) -> usize {
+    r.msgs_by_level[1..].iter().sum()
+}
+
+fn cross_bytes(r: &SimReport) -> usize {
+    r.bytes_by_level[1..].iter().sum()
+}
+
+fn main() {
+    let ranks_per_leaf = 8usize;
+    let leaves_per_pod = 4usize;
+    let taper = 0.25f64;
+    let chunk = 4 << 10; // latency-relevant size, the paper's PAT regime
+    let agg = 4usize;
+    let cost = CostModel::ib_hdr();
+
+    let mut report = Report::new("hier_vs_flat");
+    report.param("ranks_per_leaf", Json::num(ranks_per_leaf as f64));
+    report.param("leaves_per_pod", Json::num(leaves_per_pod as f64));
+    report.param("core_taper", Json::num(taper));
+    report.param("chunk_bytes", Json::num(chunk as f64));
+    report.param("aggregation", Json::num(agg as f64));
+
+    println!(
+        "\nall-gather, pat(a={agg}) vs hier_pat(a={agg}) on tapered three-level fat-trees \
+         ({} per rank, top tier x{taper}):",
+        fmt_bytes(chunk)
+    );
+    let mut t = Table::new([
+        "ranks",
+        "flat time",
+        "hier time",
+        "speedup",
+        "flat x-leaf msgs",
+        "hier x-leaf msgs",
+        "flat x-leaf bytes",
+        "hier x-leaf bytes",
+    ]);
+
+    for &n in &[64usize, 128, 256, 512, 1024] {
+        let topo = Topology::three_level(
+            n,
+            ranks_per_leaf,
+            leaves_per_pod,
+            4,
+            2,
+            CostModel::ib_hdr_nic_bw(),
+            1.0,
+            taper,
+        )
+        .unwrap();
+        let pl = Placement::uniform(n, ranks_per_leaf).unwrap();
+        topo.check_placement(&pl).unwrap();
+
+        let flat_prog =
+            sched::generate(Algorithm::Pat { aggregation: agg }, Collective::AllGather, n)
+                .unwrap();
+        let hier_prog = sched::generate_placed(
+            Algorithm::HierPat { aggregation: agg },
+            Collective::AllGather,
+            &pl,
+        )
+        .unwrap();
+
+        let flat = simulate(&flat_prog, &topo, &cost, chunk).unwrap();
+        let hier = simulate(&hier_prog, &topo, &cost, chunk).unwrap();
+
+        t.row([
+            n.to_string(),
+            fmt_time_s(flat.total_time),
+            fmt_time_s(hier.total_time),
+            format!("{:.2}x", flat.total_time / hier.total_time),
+            cross_msgs(&flat).to_string(),
+            cross_msgs(&hier).to_string(),
+            fmt_bytes(cross_bytes(&flat)),
+            fmt_bytes(cross_bytes(&hier)),
+        ]);
+        report.rows.push(Json::obj(vec![
+            ("nranks", Json::num(n as f64)),
+            ("flat_time", Json::num(flat.total_time)),
+            ("hier_time", Json::num(hier.total_time)),
+            ("flat_cross_msgs", Json::num(cross_msgs(&flat) as f64)),
+            ("hier_cross_msgs", Json::num(cross_msgs(&hier) as f64)),
+            ("flat_cross_bytes", Json::num(cross_bytes(&flat) as f64)),
+            ("hier_cross_bytes", Json::num(cross_bytes(&hier) as f64)),
+            ("flat_busiest_util", Json::num(flat.busiest_link_utilization)),
+            ("hier_busiest_util", Json::num(hier.busiest_link_utilization)),
+        ]));
+
+        assert!(
+            cross_msgs(&hier) < cross_msgs(&flat),
+            "n={n}: hier must cross leaves less than flat"
+        );
+    }
+    print!("{}", t.render());
+    report.save().unwrap();
+}

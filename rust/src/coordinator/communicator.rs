@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
-use crate::core::{Algorithm, Collective, Error, Result};
+use crate::core::{Algorithm, Collective, Error, Placement, Result};
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::{PjrtService, Registry};
 use crate::sched::{self, program::Program};
@@ -41,6 +41,16 @@ pub struct CommConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Verify programs before first use (cheap; cached).
     pub validate: bool,
+    /// Rank → node placement for hierarchical algorithms and the
+    /// placement-aware tuner (config keys `placement` / `ranks_per_node`).
+    /// `None` assumes contiguous nodes of
+    /// [`crate::sched::DEFAULT_RANKS_PER_NODE`] when a hierarchical
+    /// algorithm is pinned.
+    pub placement: Option<Placement>,
+    /// Per-node uplink bandwidth (bytes/s) for the tuner's
+    /// flat-vs-hierarchical crossover (config key `inter_gbps`); `None`
+    /// models a non-blocking fabric.
+    pub inter_bw: Option<f64>,
 }
 
 impl Default for CommConfig {
@@ -52,6 +62,8 @@ impl Default for CommConfig {
             datapath: DataPathKind::Scalar,
             artifacts_dir: None,
             validate: true,
+            placement: None,
+            inter_bw: None,
         }
     }
 }
@@ -86,6 +98,15 @@ impl Communicator {
                 )));
             }
         }
+        if let Some(pl) = &cfg.placement {
+            if pl.nranks() != cfg.nranks {
+                return Err(Error::Config(format!(
+                    "placement covers {} ranks but nranks={}",
+                    pl.nranks(),
+                    cfg.nranks
+                )));
+            }
+        }
         let (datapath, service) = match cfg.datapath {
             DataPathKind::Scalar => (DataPath::Scalar, None),
             DataPathKind::Pjrt => {
@@ -97,11 +118,15 @@ impl Communicator {
                 (DataPath::Pjrt(handle), Some(svc))
             }
         };
+        let tuner = Tuner {
+            inter_bw: cfg.inter_bw,
+            ..Tuner::default()
+        };
         Ok(Communicator {
             cfg,
             datapath,
             _service: service,
-            tuner: Tuner::default(),
+            tuner,
             cache: Mutex::new(HashMap::new()),
         })
     }
@@ -115,16 +140,32 @@ impl Communicator {
     }
 
     /// Resolve the algorithm for this call (pinned, or tuned from the
-    /// message size and buffer budget).
+    /// message size, buffer budget, and — when configured — the rank
+    /// placement).
     pub fn resolve(&self, coll: Collective, chunk_bytes: usize) -> Algorithm {
         match self.cfg.algorithm {
             Some(Algorithm::PatAuto) | None => {
                 let slots = self.cfg.buffer_slots.unwrap_or(usize::MAX / 2);
                 self.tuner
-                    .choose(self.cfg.nranks, chunk_bytes, slots, coll)
+                    .choose_placed(
+                        self.cfg.nranks,
+                        chunk_bytes,
+                        slots,
+                        coll,
+                        self.cfg.placement.as_ref(),
+                    )
                     .algorithm
             }
             Some(alg) => alg,
+        }
+    }
+
+    /// The placement hierarchical programs are built from: the configured
+    /// one, or contiguous default-sized nodes.
+    fn effective_placement(&self) -> Result<Placement> {
+        match &self.cfg.placement {
+            Some(p) => Ok(p.clone()),
+            None => Placement::uniform(self.cfg.nranks, sched::DEFAULT_RANKS_PER_NODE),
         }
     }
 
@@ -136,7 +177,13 @@ impl Communicator {
                 return Ok(p.clone());
             }
         }
-        let prog = sched::generate(alg, coll, self.cfg.nranks)?;
+        let prog = match alg {
+            Algorithm::HierPat { .. } => {
+                let pl = self.effective_placement()?;
+                sched::generate_placed(alg, coll, &pl)?
+            }
+            _ => sched::generate(alg, coll, self.cfg.nranks)?,
+        };
         if self.cfg.validate {
             sched::verify::verify_program(&prog)?;
         }
@@ -334,6 +381,62 @@ mod tests {
             ..Default::default()
         })
         .is_err());
+        // placement / nranks mismatch
+        assert!(Communicator::new(CommConfig {
+            nranks: 6,
+            placement: Some(crate::core::Placement::uniform(8, 4).unwrap()),
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    /// Hierarchical PAT end-to-end over the threaded transport, uneven
+    /// nodes (13 ranks on nodes of 4), both collectives.
+    #[test]
+    fn hier_pat_end_to_end() {
+        let n = 13;
+        let c = Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::HierPat { aggregation: 2 }),
+            placement: Some(crate::core::Placement::uniform(n, 4).unwrap()),
+            ..Default::default()
+        })
+        .unwrap();
+        let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 16]).collect();
+        let (out, rep) = c.all_gather_report(&inputs).unwrap();
+        assert_eq!(rep.algorithm, Algorithm::HierPat { aggregation: 2 });
+        for o in &out {
+            for r in 0..n {
+                assert!(o[r * 16..(r + 1) * 16].iter().all(|&v| v == r as f32));
+            }
+        }
+        let mut rng = Rng::new(11);
+        let rs_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..n * 8).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let rs_out = c.reduce_scatter(&rs_in).unwrap();
+        for r in 0..n {
+            for i in 0..8 {
+                let want: f32 = (0..n).map(|s| rs_in[s][r * 8 + i]).sum();
+                assert_eq!(rs_out[r][i], want, "rank {r} idx {i}");
+            }
+        }
+    }
+
+    /// Without an explicit placement, a pinned hierarchical algorithm runs
+    /// on default 8-rank nodes.
+    #[test]
+    fn hier_pat_default_placement() {
+        let n = 12;
+        let c = Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::HierPat { aggregation: usize::MAX }),
+            ..Default::default()
+        })
+        .unwrap();
+        let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 4]).collect();
+        let out = c.all_gather(&inputs).unwrap();
+        assert_eq!(out[0].len(), n * 4);
     }
 
     #[test]

@@ -9,17 +9,35 @@
 //! | key | meaning |
 //! |-----|---------|
 //! | `nranks` | world size |
-//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto` |
+//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto`, `hier_pat`, `hier_pat:<a>` |
 //! | `buffer_slots` | intermediate-buffer budget in chunk slots |
 //! | `datapath` | `scalar` or `pjrt` |
 //! | `artifacts` | artifact directory |
 //! | `validate` | `true`/`false` |
+//! | `placement` | rank → node placement (grammar below) |
+//! | `ranks_per_node` | shorthand for `placement = uniform:<k>` |
+//! | `inter_gbps` | per-node uplink bandwidth for the tuner's flat-vs-hier crossover |
 //! | `alpha_base_us`, `alpha_hop_ns`, `gamma_chunk_ns`, `nic_gbps` | cost-model overrides |
+//!
+//! ## Placement grammar
+//!
+//! `placement` accepts (see [`Placement::parse`]):
+//!
+//! * `uniform:<k>` — contiguous nodes of `k` ranks; when `k` does not
+//!   divide `nranks` the last node takes the remainder
+//!   (`uniform:4` over 13 ranks → nodes of `[4, 4, 4, 1]`);
+//! * `<k>` — shorthand for `uniform:<k>`;
+//! * `<k1>,<k2>,...` — explicit node sizes, which must sum to `nranks`
+//!   (e.g. `4,4,5` over 13 ranks).
+//!
+//! `nranks` must be set (in the same file or by env overlay) for the
+//! placement to be resolved; `ranks_per_node` is ignored when an explicit
+//! `placement` is present.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::core::{Algorithm, Error, Result};
+use crate::core::{Algorithm, Error, Placement, Result};
 use crate::coordinator::communicator::{CommConfig, DataPathKind};
 use crate::sim::CostModel;
 
@@ -120,6 +138,14 @@ impl ConfigMap {
         if let Some(v) = self.get_bool("validate")? {
             cfg.validate = v;
         }
+        if let Some(spec) = self.get("placement") {
+            cfg.placement = Some(Placement::parse(spec, cfg.nranks)?);
+        } else if let Some(k) = self.get_usize("ranks_per_node")? {
+            cfg.placement = Some(Placement::uniform(cfg.nranks, k)?);
+        }
+        if let Some(v) = self.get_f64("inter_gbps")? {
+            cfg.inter_bw = Some(v * 1e9);
+        }
         Ok(cfg)
     }
 
@@ -186,6 +212,40 @@ mod tests {
         assert!(ConfigMap::parse("nonsense line").is_err());
         let cfg = ConfigMap::parse("nranks = abc").unwrap();
         assert!(cfg.to_comm_config().is_err());
+    }
+
+    #[test]
+    fn placement_keys() {
+        let cfg = ConfigMap::parse("nranks = 13\nplacement = 4,4,5\ninter_gbps = 12.5\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        let pl = cfg.placement.unwrap();
+        assert_eq!(pl.node_sizes(), vec![4, 4, 5]);
+        assert_eq!(cfg.inter_bw, Some(12.5e9));
+
+        let cfg = ConfigMap::parse("nranks = 13\nranks_per_node = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.placement.unwrap().node_sizes(), vec![4, 4, 4, 1]);
+
+        // explicit placement wins over ranks_per_node
+        let cfg = ConfigMap::parse("nranks = 8\nplacement = uniform:2\nranks_per_node = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.placement.unwrap().nnodes(), 4);
+
+        // sizes that do not sum to nranks are rejected
+        assert!(ConfigMap::parse("nranks = 8\nplacement = 4,4,4\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+        assert!(ConfigMap::parse("nranks = 8\nranks_per_node = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
     }
 
     #[test]

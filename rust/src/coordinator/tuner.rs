@@ -9,8 +9,26 @@
 //! largest feasible `a`, then compares PAT(a), Ring, and (log-shaped but
 //! congestion-prone) far-first Bruck under the cost model and returns the
 //! cheapest.
+//!
+//! ## Placement-aware crossover
+//!
+//! When the caller supplies a rank [`Placement`] (ranks grouped onto
+//! nodes) the tuner also evaluates the hierarchical two-level schedule
+//! ([`crate::sched::hier`]). The fabric asymmetry is modelled by
+//! [`Tuner::inter_bw`]: the aggregate uplink bandwidth one node has to the
+//! rest of the fabric (`None` = non-blocking). Per-schedule traffic shape
+//! matters: the dimension-hopping schedules (PAT/Bruck) have every rank
+//! talking cross-node on most rounds, so a node's `k` ranks share the
+//! uplink `k` ways (`inter_bw / k` each); a *contiguous* ring crosses
+//! each node boundary exactly once per step, so its pipeline is
+//! bottlenecked by `min(nic, inter_bw)` — rings stay bandwidth-strong on
+//! tapered fabrics, exactly why NCCL keeps them for huge payloads. The
+//! hierarchical schedule gives its single leader the whole uplink and
+//! keeps the other `k-1` ranks off the fabric. The resulting crossover
+//! ([`Tuner::choose_placed`]): flat PAT at latency-bound sizes, HierPat
+//! in the tapered mid-size band, Ring at the bandwidth extreme.
 
-use crate::core::{ceil_log2, Algorithm, Collective};
+use crate::core::{ceil_log2, Algorithm, Collective, Placement};
 use crate::sched::pat;
 use crate::sim::CostModel;
 
@@ -29,11 +47,19 @@ pub struct Tuner {
     pub cost: CostModel,
     /// NIC bandwidth (bytes/s) used for serialization estimates.
     pub nic_bw: f64,
+    /// Aggregate uplink bandwidth of one node toward the rest of the
+    /// fabric (bytes/s); `None` models a non-blocking fabric. Only
+    /// consulted by the placement-aware prediction paths.
+    pub inter_bw: Option<f64>,
 }
 
 impl Default for Tuner {
     fn default() -> Self {
-        Tuner { cost: CostModel::ib_hdr(), nic_bw: CostModel::ib_hdr_nic_bw() }
+        Tuner {
+            cost: CostModel::ib_hdr(),
+            nic_bw: CostModel::ib_hdr_nic_bw(),
+            inter_bw: None,
+        }
     }
 }
 
@@ -74,38 +100,106 @@ impl Tuner {
         best
     }
 
-    /// Predicted wall time of a PAT schedule: per round, message overhead +
-    /// serialization + local pack cost.
-    pub fn predict_pat(&self, nranks: usize, a: usize, chunk_bytes: usize) -> f64 {
+    /// Per-rank serialization rate of a *flat* (placement-oblivious)
+    /// schedule: on a tapered fabric, a node's `k` ranks share its uplink.
+    fn flat_rate(&self, placement: Option<&Placement>) -> f64 {
+        match (placement, self.inter_bw) {
+            (Some(pl), Some(bw)) if pl.nnodes() > 1 => {
+                (bw / pl.max_node_size() as f64).min(self.nic_bw)
+            }
+            _ => self.nic_bw,
+        }
+    }
+
+    /// Serialization rate of a hierarchical leader: the whole node uplink,
+    /// capped by its own NIC.
+    fn leader_rate(&self) -> f64 {
+        match self.inter_bw {
+            Some(bw) => bw.min(self.nic_bw),
+            None => self.nic_bw,
+        }
+    }
+
+    fn predict_pat_at(&self, nranks: usize, a: usize, chunk_bytes: usize, rate: f64) -> f64 {
         let c = &self.cost;
         let mut t = 0.0;
         for round in pat::rounds(nranks, a) {
             let k = round.offsets.len();
             let bytes = k * chunk_bytes;
-            t += c.alpha_base
-                + bytes as f64 / self.nic_bw
-                + c.pack_cost(k, bytes)
-                + c.msg_gap;
+            t += c.alpha_base + bytes as f64 / rate + c.pack_cost(k, bytes) + c.msg_gap;
         }
         t
+    }
+
+    fn predict_ring_at(&self, nranks: usize, chunk_bytes: usize, rate: f64) -> f64 {
+        if nranks <= 1 {
+            return 0.0;
+        }
+        let c = &self.cost;
+        let steps = (nranks - 1) as f64;
+        steps * (c.alpha_base + c.msg_gap + chunk_bytes as f64 / rate)
+    }
+
+    /// Predicted wall time of a PAT schedule: per round, message overhead +
+    /// serialization + local pack cost.
+    pub fn predict_pat(&self, nranks: usize, a: usize, chunk_bytes: usize) -> f64 {
+        self.predict_pat_at(nranks, a, chunk_bytes, self.nic_bw)
     }
 
     /// Predicted wall time of the ring schedule: n-1 back-to-back single
     /// chunk transfers; the pipeline overlaps serialization, so latency is
     /// (n-1)·(α + gap) + serialization of the payload.
     pub fn predict_ring(&self, nranks: usize, chunk_bytes: usize) -> f64 {
-        if nranks <= 1 {
-            return 0.0;
-        }
-        let c = &self.cost;
-        let steps = (nranks - 1) as f64;
-        steps * (c.alpha_base + c.msg_gap + chunk_bytes as f64 / self.nic_bw)
+        self.predict_ring_at(nranks, chunk_bytes, self.nic_bw)
     }
 
     /// Predicted wall time of far-first Bruck (fully aggregated): log
     /// rounds of doubling payload, plus pack costs.
     pub fn predict_bruck(&self, nranks: usize, chunk_bytes: usize) -> f64 {
         self.predict_pat(nranks, usize::MAX, chunk_bytes)
+    }
+
+    /// Predicted wall time of the hierarchical two-level schedule
+    /// ([`crate::sched::hier`]): intra-node gather at NIC rate, PAT over
+    /// node leaders at the leader's uplink rate (each transfer carries up
+    /// to `a` whole node chunk sets), intra-node fan-out at NIC rate.
+    pub fn predict_hier(&self, pl: &Placement, a: usize, chunk_bytes: usize) -> f64 {
+        let c = &self.cost;
+        let n = pl.nranks();
+        let nnodes = pl.nnodes();
+        if n <= 1 {
+            return 0.0;
+        }
+        let kmax = pl.max_node_size();
+        let mut t = 0.0;
+        if kmax > 1 {
+            // Intra-node gather: the leader drains k-1 messages totalling
+            // k-1 chunks (subtree payloads overlap-free on the leader NIC).
+            let steps = (kmax - 1) as f64;
+            t += steps * (c.alpha_base + c.msg_gap)
+                + steps * chunk_bytes as f64 / self.nic_bw;
+        }
+        if nnodes > 1 {
+            let node_bytes = kmax * chunk_bytes;
+            let rate = self.leader_rate();
+            for round in pat::rounds(nnodes, pat::clamp_aggregation(nnodes, a)) {
+                let k = round.offsets.len();
+                let bytes = k * node_bytes;
+                t += c.alpha_base
+                    + bytes as f64 / rate
+                    + c.pack_cost(k * kmax, bytes)
+                    + c.msg_gap;
+            }
+        }
+        if kmax > 1 {
+            // Fan-out: the leader feeds ~log2(k) subtrees with everything
+            // outside them — log2(k)·n − (k−1) chunk transfers off its NIC.
+            let nch = ceil_log2(kmax) as f64;
+            let fan_chunks = (nch * n as f64 - (kmax - 1) as f64).max(0.0);
+            t += nch * (c.alpha_base + c.msg_gap)
+                + fan_chunks * chunk_bytes as f64 / self.nic_bw;
+        }
+        t
     }
 
     /// Choose an algorithm for `nranks`, `chunk_bytes` per rank, and a
@@ -117,10 +211,42 @@ impl Tuner {
         buffer_slots: usize,
         coll: Collective,
     ) -> TunerChoice {
+        self.choose_placed(nranks, chunk_bytes, buffer_slots, coll, None)
+    }
+
+    /// Placement-aware choice: like [`Tuner::choose`], additionally
+    /// evaluating hierarchical PAT candidates when the placement spans
+    /// multiple multi-rank nodes. Hierarchical schedules stage up to
+    /// `nranks` chunks at the node leaders (n-1 staged chunks for AG, n
+    /// live accumulators for RS), so they are only offered when the buffer
+    /// budget covers that.
+    pub fn choose_placed(
+        &self,
+        nranks: usize,
+        chunk_bytes: usize,
+        buffer_slots: usize,
+        coll: Collective,
+        placement: Option<&Placement>,
+    ) -> TunerChoice {
         let a = self.max_aggregation(nranks, buffer_slots, coll);
+        let rate = self.flat_rate(placement);
+        // A contiguous ring crosses each node boundary once per step (one
+        // flow per uplink), so it runs at min(nic, inter_bw), not the
+        // k-way shared rate the dimension-hopping schedules pay.
+        let ring_rate = if placement.is_some_and(|pl| pl.nnodes() > 1) {
+            self.leader_rate()
+        } else {
+            self.nic_bw
+        };
         let mut candidates = vec![
-            (Algorithm::Pat { aggregation: a }, self.predict_pat(nranks, a, chunk_bytes)),
-            (Algorithm::Ring, self.predict_ring(nranks, chunk_bytes)),
+            (
+                Algorithm::Pat { aggregation: a },
+                self.predict_pat_at(nranks, a, chunk_bytes, rate),
+            ),
+            (
+                Algorithm::Ring,
+                self.predict_ring_at(nranks, chunk_bytes, ring_rate),
+            ),
         ];
         // Also consider intermediate aggregations (a smaller a can win when
         // pack cost dominates).
@@ -129,8 +255,25 @@ impl Tuner {
             sub /= 2;
             candidates.push((
                 Algorithm::Pat { aggregation: sub },
-                self.predict_pat(nranks, sub, chunk_bytes),
+                self.predict_pat_at(nranks, sub, chunk_bytes, rate),
             ));
+        }
+        if let Some(pl) = placement {
+            let hier_feasible =
+                pl.nnodes() > 1 && pl.nnodes() < nranks && buffer_slots >= nranks;
+            if hier_feasible {
+                let mut ah = pat::clamp_aggregation(pl.nnodes(), usize::MAX);
+                loop {
+                    candidates.push((
+                        Algorithm::HierPat { aggregation: ah },
+                        self.predict_hier(pl, ah, chunk_bytes),
+                    ));
+                    if ah <= 1 {
+                        break;
+                    }
+                    ah /= 2;
+                }
+            }
         }
         candidates.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
         TunerChoice {
@@ -179,6 +322,9 @@ mod tests {
         let t = Tuner::default();
         assert!(t.predict_ring(128, 1024) > t.predict_ring(16, 1024));
         assert!(t.predict_pat(128, 8, 1024) > t.predict_pat(16, 8, 1024));
+        let small = Placement::uniform(16, 8).unwrap();
+        let big = Placement::uniform(128, 8).unwrap();
+        assert!(t.predict_hier(&big, 4, 1024) > t.predict_hier(&small, 4, 1024));
     }
 
     /// The tuner's pick must be within 5% of the best candidate it saw
@@ -195,6 +341,71 @@ mod tests {
         assert!(
             speedup > ideal * 0.5,
             "speedup {speedup:.1} vs ideal {ideal:.1}"
+        );
+    }
+
+    /// The flat-vs-hierarchical crossover on a tapered fabric (a node's 8
+    /// ranks share one NIC-worth of uplink): tiny messages stay with flat
+    /// PAT (fewest serial phases), the mid-size band goes hierarchical
+    /// (flat PAT pays the k-way uplink share, ring pays (n-1)·α), and the
+    /// bandwidth extreme goes to Ring (one boundary flow per uplink, full
+    /// pipeline) — NCCL's actual regime split. On a non-blocking fabric
+    /// the flat schedules win everywhere.
+    #[test]
+    fn hier_crossover_tracks_fabric_taper() {
+        let pl = Placement::uniform(64, 8).unwrap();
+        let slots = usize::MAX / 2;
+        // 8 ranks share one NIC-worth of uplink
+        let tapered = Tuner {
+            inter_bw: Some(CostModel::ib_hdr_nic_bw()),
+            ..Tuner::default()
+        };
+        let tiny = tapered.choose_placed(64, 64, slots, Collective::AllGather, Some(&pl));
+        assert!(
+            matches!(tiny.algorithm, Algorithm::Pat { .. }),
+            "tapered tiny-message pick: {:?}",
+            tiny.algorithm
+        );
+        let mid = tapered.choose_placed(64, 4 << 10, slots, Collective::AllGather, Some(&pl));
+        assert!(
+            matches!(mid.algorithm, Algorithm::HierPat { .. }),
+            "tapered mid-size pick: {:?}",
+            mid.algorithm
+        );
+        let big = tapered.choose_placed(64, 1 << 20, slots, Collective::AllGather, Some(&pl));
+        assert!(
+            matches!(big.algorithm, Algorithm::Ring),
+            "tapered big-message pick: {:?}",
+            big.algorithm
+        );
+        let flat = Tuner::default();
+        for chunk in [64usize, 4 << 10, 1 << 20] {
+            let pick = flat.choose_placed(64, chunk, slots, Collective::AllGather, Some(&pl));
+            assert!(
+                !matches!(pick.algorithm, Algorithm::HierPat { .. }),
+                "non-blocking fabric pick at {chunk}: {:?}",
+                pick.algorithm
+            );
+        }
+    }
+
+    /// Hierarchical candidates need the leader staging budget (~n slots);
+    /// with a tight buffer the tuner must not offer them.
+    #[test]
+    fn hier_gated_on_buffer_budget() {
+        let pl = Placement::uniform(64, 8).unwrap();
+        let t = Tuner {
+            inter_bw: Some(CostModel::ib_hdr_nic_bw()),
+            ..Tuner::default()
+        };
+        let choice = t.choose_placed(64, 1 << 20, 16, Collective::AllGather, Some(&pl));
+        assert!(
+            choice
+                .candidates
+                .iter()
+                .all(|(alg, _)| !matches!(alg, Algorithm::HierPat { .. })),
+            "{:?}",
+            choice.candidates
         );
     }
 }

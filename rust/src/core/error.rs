@@ -1,38 +1,83 @@
-//! Crate-wide error type.
+//! Crate-wide error type. Hand-rolled `Display`/`Error` impls (no
+//! `thiserror` in this offline environment).
 
-use thiserror::Error;
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("configuration error: {0}")]
     Config(String),
-
-    #[error("schedule error: {0}")]
     Schedule(String),
-
-    #[error("transport error: {0}")]
     Transport(String),
-
-    #[error("verification failed: {0}")]
     Verify(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("simulation error: {0}")]
     Sim(String),
-
-    #[error("unsupported: {0}")]
+    /// Topology construction or placement-compatibility failure (e.g. a
+    /// placement whose node straddles a leaf switch).
+    Topology(String),
     Unsupported(String),
+    Io(std::io::Error),
+}
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Schedule(m) => write!(f, "schedule error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Verify(m) => write!(f, "verification failed: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(
+            Error::Topology("bad".into()).to_string(),
+            "topology error: bad"
+        );
+        assert_eq!(
+            Error::Config("oops".into()).to_string(),
+            "configuration error: oops"
+        );
+        assert!(Error::Verify("x".into()).to_string().contains("verification"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
     }
 }

@@ -2,8 +2,10 @@
 //! element types and error handling.
 
 pub mod error;
+pub mod placement;
 
 pub use error::{Error, Result};
+pub use placement::Placement;
 
 use std::fmt;
 
@@ -63,6 +65,14 @@ pub enum Algorithm {
     /// PAT with aggregation chosen from the intermediate-buffer budget and
     /// the operation size (what the tuner does in NCCL).
     PatAuto,
+    /// Two-level hierarchical PAT over a rank [`Placement`]: an intra-node
+    /// gather (near-first tree among co-located ranks), an inter-node PAT
+    /// among per-node leaders with `aggregation` bounding how many *node*
+    /// chunk sets one transfer carries, and an intra-node fan-out. The
+    /// placement comes from the communicator/CLI configuration (see
+    /// [`crate::sched::generate_placed`]); without one, contiguous nodes of
+    /// 8 ranks are assumed.
+    HierPat { aggregation: usize },
 }
 
 impl Algorithm {
@@ -77,11 +87,16 @@ impl Algorithm {
             }
             Algorithm::Pat { aggregation } => format!("pat(a={aggregation})"),
             Algorithm::PatAuto => "pat_auto".into(),
+            Algorithm::HierPat { aggregation } if *aggregation >= usize::MAX / 2 => {
+                "hier_pat(full)".into()
+            }
+            Algorithm::HierPat { aggregation } => format!("hier_pat(a={aggregation})"),
         }
     }
 
     /// Parse a CLI/config spelling: `ring`, `bruck_near`, `bruck_far`,
-    /// `recursive`, `pat`, `pat:<agg>`, `pat_auto`.
+    /// `recursive`, `pat`, `pat:<agg>`, `pat_auto`, `hier_pat`,
+    /// `hier_pat:<agg>`.
     pub fn parse(s: &str) -> Result<Algorithm> {
         let s = s.trim();
         if let Some(rest) = s.strip_prefix("pat:") {
@@ -93,6 +108,15 @@ impl Algorithm {
             }
             return Ok(Algorithm::Pat { aggregation: a });
         }
+        if let Some(rest) = s.strip_prefix("hier_pat:") {
+            let a: usize = rest
+                .parse()
+                .map_err(|_| Error::Config(format!("bad hier_pat aggregation: {rest:?}")))?;
+            if a == 0 {
+                return Err(Error::Config("hier_pat aggregation must be >= 1".into()));
+            }
+            return Ok(Algorithm::HierPat { aggregation: a });
+        }
         match s {
             "ring" => Ok(Algorithm::Ring),
             "bruck_near" | "bruck" => Ok(Algorithm::BruckNearFirst),
@@ -100,6 +124,7 @@ impl Algorithm {
             "recursive" | "rd" | "rh" => Ok(Algorithm::Recursive),
             "pat" => Ok(Algorithm::Pat { aggregation: usize::MAX }),
             "pat_auto" => Ok(Algorithm::PatAuto),
+            "hier_pat" | "hier" => Ok(Algorithm::HierPat { aggregation: usize::MAX }),
             other => Err(Error::Config(format!("unknown algorithm {other:?}"))),
         }
     }
@@ -221,8 +246,22 @@ mod tests {
         assert_eq!(Algorithm::parse("ring").unwrap(), Algorithm::Ring);
         assert_eq!(Algorithm::parse("pat:4").unwrap(), Algorithm::Pat { aggregation: 4 });
         assert_eq!(Algorithm::parse("bruck_far").unwrap(), Algorithm::BruckFarFirst);
+        assert_eq!(
+            Algorithm::parse("hier_pat:2").unwrap(),
+            Algorithm::HierPat { aggregation: 2 }
+        );
+        assert_eq!(
+            Algorithm::parse("hier_pat").unwrap(),
+            Algorithm::HierPat { aggregation: usize::MAX }
+        );
+        assert_eq!(Algorithm::parse("hier_pat").unwrap().name(), "hier_pat(full)");
+        assert_eq!(
+            Algorithm::HierPat { aggregation: 2 }.name(),
+            "hier_pat(a=2)"
+        );
         assert!(Algorithm::parse("nope").is_err());
         assert!(Algorithm::parse("pat:0").is_err());
+        assert!(Algorithm::parse("hier_pat:0").is_err());
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Rank placement: the rank → node mapping hierarchical schedules are built
+//! from.
+//!
+//! A *node* models a set of ranks with cheap mutual communication (one
+//! machine's NVLink domain, or one leaf switch of a fat-tree). Node sizes
+//! may be uneven — 13 ranks on nodes of 4 places them as `[4, 4, 4, 1]` —
+//! which is exactly the shape elastic / partially-drained training jobs
+//! produce. The first rank of each node is its *leader*: the rank that
+//! participates in the inter-node phase of a hierarchical schedule
+//! ([`crate::sched::hier`]).
+//!
+//! ## Spelling (config / CLI grammar)
+//!
+//! * `uniform:<k>` — contiguous nodes of `k` ranks, last node takes the
+//!   remainder (`uniform:4` over 13 ranks → `[4, 4, 4, 1]`).
+//! * `<k>` — shorthand for `uniform:<k>`.
+//! * `<k1>,<k2>,...` — explicit node sizes; must sum to the rank count
+//!   (`4,4,5` over 13 ranks).
+
+use crate::core::{Error, Rank, Result};
+
+/// A rank → node mapping with (possibly uneven) contiguous nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// `node_of[r]` is the node id of rank `r` (node ids are dense).
+    node_of: Vec<usize>,
+    /// `nodes[m]` is node `m`'s rank list, ascending; `nodes[m][0]` is the
+    /// leader.
+    nodes: Vec<Vec<Rank>>,
+}
+
+impl Placement {
+    /// Build from explicit node sizes; ranks are assigned contiguously.
+    pub fn from_node_sizes(sizes: &[usize]) -> Result<Placement> {
+        if sizes.is_empty() {
+            return Err(Error::Config("placement needs at least one node".into()));
+        }
+        if sizes.iter().any(|&s| s == 0) {
+            return Err(Error::Config("placement node sizes must be >= 1".into()));
+        }
+        let nranks: usize = sizes.iter().sum();
+        let mut node_of = Vec::with_capacity(nranks);
+        let mut nodes = Vec::with_capacity(sizes.len());
+        let mut next = 0usize;
+        for (m, &s) in sizes.iter().enumerate() {
+            nodes.push((next..next + s).collect());
+            for _ in 0..s {
+                node_of.push(m);
+            }
+            next += s;
+        }
+        Ok(Placement { node_of, nodes })
+    }
+
+    /// Contiguous nodes of `ranks_per_node`; when it does not divide
+    /// `nranks` the last node takes the remainder (uneven tail), and
+    /// `ranks_per_node > nranks` yields a single node — callers never need
+    /// to pre-clamp.
+    pub fn uniform(nranks: usize, ranks_per_node: usize) -> Result<Placement> {
+        if nranks == 0 {
+            return Err(Error::Config("placement needs at least one rank".into()));
+        }
+        if ranks_per_node == 0 {
+            return Err(Error::Config("ranks_per_node must be >= 1".into()));
+        }
+        let full = nranks / ranks_per_node;
+        let rem = nranks % ranks_per_node;
+        let mut sizes = vec![ranks_per_node; full];
+        if rem > 0 {
+            sizes.push(rem);
+        }
+        Self::from_node_sizes(&sizes)
+    }
+
+    /// Every rank on its own node (degenerates hierarchical schedules to
+    /// their flat inter-node algorithm).
+    pub fn singletons(nranks: usize) -> Result<Placement> {
+        Self::uniform(nranks, 1)
+    }
+
+    /// Parse the config/CLI grammar (see module docs) for `nranks` ranks.
+    pub fn parse(spec: &str, nranks: usize) -> Result<Placement> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(Error::Config("empty placement spec".into()));
+        }
+        if let Some(rest) = spec.strip_prefix("uniform:") {
+            let k: usize = rest
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("placement: bad node size {rest:?}")))?;
+            return Self::uniform(nranks, k);
+        }
+        if spec.contains(',') {
+            let sizes: Result<Vec<usize>> = spec
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|_| Error::Config(format!("placement: bad node size {t:?}")))
+                })
+                .collect();
+            let sizes = sizes?;
+            let total: usize = sizes.iter().sum();
+            if total != nranks {
+                return Err(Error::Config(format!(
+                    "placement sizes sum to {total}, expected nranks={nranks}"
+                )));
+            }
+            return Self::from_node_sizes(&sizes);
+        }
+        let k: usize = spec
+            .parse()
+            .map_err(|_| Error::Config(format!("placement: bad spec {spec:?}")))?;
+        Self::uniform(nranks, k)
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Node id of `rank`.
+    pub fn node_of(&self, rank: Rank) -> usize {
+        self.node_of[rank]
+    }
+
+    /// Ranks of `node`, ascending (leader first).
+    pub fn ranks_of(&self, node: usize) -> &[Rank] {
+        &self.nodes[node]
+    }
+
+    /// The leader rank of `node` (its first rank).
+    pub fn leader(&self, node: usize) -> Rank {
+        self.nodes[node][0]
+    }
+
+    pub fn is_leader(&self, rank: Rank) -> bool {
+        self.leader(self.node_of(rank)) == rank
+    }
+
+    pub fn node_sizes(&self) -> Vec<usize> {
+        self.nodes.iter().map(Vec::len).collect()
+    }
+
+    pub fn max_node_size(&self) -> usize {
+        self.nodes.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    pub fn min_node_size(&self) -> usize {
+        self.nodes.iter().map(Vec::len).min().unwrap_or(0)
+    }
+
+    /// `"nodes=4 sizes=[4, 4, 4, 1]"` — for reports and explain output.
+    pub fn describe(&self) -> String {
+        format!("nodes={} sizes={:?}", self.nnodes(), self.node_sizes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_uneven_tail() {
+        let p = Placement::uniform(13, 4).unwrap();
+        assert_eq!(p.nranks(), 13);
+        assert_eq!(p.nnodes(), 4);
+        assert_eq!(p.node_sizes(), vec![4, 4, 4, 1]);
+        assert_eq!(p.leader(0), 0);
+        assert_eq!(p.leader(3), 12);
+        assert_eq!(p.node_of(7), 1);
+        assert!(p.is_leader(8));
+        assert!(!p.is_leader(9));
+        assert_eq!(p.max_node_size(), 4);
+        assert_eq!(p.min_node_size(), 1);
+    }
+
+    #[test]
+    fn explicit_sizes() {
+        let p = Placement::from_node_sizes(&[4, 4, 5]).unwrap();
+        assert_eq!(p.nranks(), 13);
+        assert_eq!(p.ranks_of(2), &[8, 9, 10, 11, 12]);
+        assert_eq!(p.leader(2), 8);
+    }
+
+    #[test]
+    fn singletons_degenerate() {
+        let p = Placement::singletons(5).unwrap();
+        assert_eq!(p.nnodes(), 5);
+        assert!((0..5).all(|r| p.is_leader(r)));
+    }
+
+    #[test]
+    fn parse_grammar() {
+        assert_eq!(
+            Placement::parse("uniform:4", 13).unwrap().node_sizes(),
+            vec![4, 4, 4, 1]
+        );
+        assert_eq!(Placement::parse("4", 13).unwrap().node_sizes(), vec![4, 4, 4, 1]);
+        assert_eq!(
+            Placement::parse("4,4,5", 13).unwrap().node_sizes(),
+            vec![4, 4, 5]
+        );
+        // oversized uniform clamps to one node
+        assert_eq!(Placement::parse("99", 6).unwrap().nnodes(), 1);
+        assert!(Placement::parse("4,4", 13).is_err()); // wrong sum
+        assert!(Placement::parse("a,b", 2).is_err());
+        assert!(Placement::parse("", 4).is_err());
+        assert!(Placement::parse("0", 4).is_err());
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(Placement::from_node_sizes(&[]).is_err());
+        assert!(Placement::from_node_sizes(&[2, 0]).is_err());
+        assert!(Placement::uniform(0, 4).is_err());
+        assert!(Placement::uniform(8, 0).is_err());
+    }
+}

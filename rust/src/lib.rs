@@ -12,7 +12,12 @@
 //! The crate is organized as an NCCL-like stack:
 //!
 //! * [`sched`] — schedule generators (PAT plus the Ring, Bruck, recursive
-//!   doubling/halving baselines) emitting a common per-rank program IR.
+//!   doubling/halving baselines) emitting a common per-rank program IR, and
+//!   the hierarchical tier ([`sched::hier`]): two-level, topology-aware
+//!   schedules over a rank [`core::Placement`] (intra-node tree → inter-node
+//!   PAT among per-node leaders → intra-node fan-out; uneven node sizes
+//!   supported), selected as [`core::Algorithm::HierPat`] and generated
+//!   through the placement-aware [`sched::generate_placed`].
 //! * [`transport`] — an in-process, threaded, real-byte-moving execution
 //!   engine with staging/accumulator buffer pools (the PAT buffer-occupancy
 //!   invariants are enforced here).
@@ -22,7 +27,9 @@
 //! * [`runtime`] — PJRT bridge executing AOT-compiled JAX/Pallas reduction
 //!   kernels (HLO text artifacts) on the reduce-scatter datapath.
 //! * [`coordinator`] — the public [`coordinator::Communicator`] API plus the
-//!   algorithm auto-tuner and configuration.
+//!   algorithm auto-tuner (including the flat-vs-hierarchical crossover on
+//!   tapered fabrics) and configuration (`placement` / `ranks_per_node` /
+//!   `inter_gbps` knobs).
 //!
 //! ## Quickstart
 //!

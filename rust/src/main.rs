@@ -15,7 +15,7 @@
 use patcol::cli::Args;
 use patcol::coordinator::config::parse_bytes;
 use patcol::coordinator::{CommConfig, Communicator, DataPathKind, Tuner};
-use patcol::core::{Algorithm, Collective, Result};
+use patcol::core::{Algorithm, Collective, Placement, Result};
 use patcol::sched::{self, explain, pat};
 use patcol::sim::{self, CostModel, Topology};
 use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
@@ -62,16 +62,22 @@ USAGE: patcol <command> [--options]
 
 COMMANDS
   explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs] [--trees]
+            [--placement SPEC | --ranks-per-node K]
   run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs]
             [--datapath scalar|pjrt] [--buffer-slots S]
+            [--placement SPEC | --ranks-per-node K]
   simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs]
             [--topo flat|leaf_spine|three_level|dragonfly] [--taper F]
+            [--placement SPEC | --ranks-per-node K]
   sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
   tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs]
+            [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
   selftest  [--max-ranks N]
 
 ALG: ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
-SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)"
+     | hier_pat | hier_pat:<agg>   (two-level, placement-aware)
+SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)
+SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)"
     );
 }
 
@@ -82,6 +88,44 @@ fn collective(args: &Args) -> Result<Collective> {
         other => Err(patcol::core::Error::Config(format!(
             "unknown collective {other:?}"
         ))),
+    }
+}
+
+/// Placement from `--placement SPEC` or `--ranks-per-node K` (None if
+/// neither is given).
+fn placement_opt(args: &Args, nranks: usize) -> Result<Option<Placement>> {
+    if let Some(spec) = args.opt_str("placement") {
+        return Ok(Some(Placement::parse(&spec, nranks)?));
+    }
+    let k = args.usize("ranks-per-node", 0)?;
+    if k == 0 {
+        return Ok(None);
+    }
+    Ok(Some(Placement::uniform(nranks, k)?))
+}
+
+/// The placement a hierarchical algorithm runs on: the explicit one, or
+/// contiguous default-sized nodes.
+fn placement_or_default(args: &Args, nranks: usize) -> Result<Placement> {
+    match placement_opt(args, nranks)? {
+        Some(p) => Ok(p),
+        None => Placement::uniform(nranks, sched::DEFAULT_RANKS_PER_NODE),
+    }
+}
+
+/// Generate `alg`, routing hierarchical algorithms through the
+/// placement-aware front-end.
+fn generate_for_cli(
+    args: &Args,
+    alg: Algorithm,
+    coll: Collective,
+    nranks: usize,
+) -> Result<patcol::sched::Program> {
+    if let Algorithm::HierPat { .. } = alg {
+        let pl = placement_or_default(args, nranks)?;
+        sched::generate_placed(alg, coll, &pl)
+    } else {
+        sched::generate(alg, coll, nranks)
     }
 }
 
@@ -120,10 +164,14 @@ fn cmd_explain(args: &Args) -> Result<()> {
         Some(s) => Algorithm::parse(&s)?,
         None => Algorithm::Pat { aggregation: agg },
     };
-    let prog = sched::generate(alg, coll, n)?;
+    let prog = generate_for_cli(args, alg, coll, n)?;
     println!("{}", explain::render_steps(&prog));
     if let Algorithm::Pat { .. } = alg {
         println!("{}", explain::render_pat_tree(n, agg));
+    }
+    if let Algorithm::HierPat { aggregation } = alg {
+        let pl = placement_or_default(args, n)?;
+        println!("{}", explain::render_hier_phases(&prog, &pl, aggregation));
     }
     if args.flag("trees") {
         println!("{}", explain::render_root_trees(&prog));
@@ -154,6 +202,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         algorithm: alg,
         buffer_slots: args.opt_str("buffer-slots").map(|s| parse_bytes(&s)).transpose()?,
         datapath,
+        placement: placement_opt(args, n)?,
         ..Default::default()
     })?;
     let chunk = (size / 4).max(1);
@@ -206,7 +255,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let alg = Algorithm::parse(&args.str("alg", "pat"))?;
     let topo = topology(args, n)?;
     let cost = CostModel::ib_hdr();
-    let prog = sched::generate(alg, coll, n)?;
+    if let Algorithm::HierPat { .. } = alg {
+        // Intra-node traffic must stay under one switch; reject placements
+        // that straddle fat-tree leaves up front.
+        let pl = placement_or_default(args, n)?;
+        topo.check_placement(&pl)?;
+    }
+    let prog = generate_for_cli(args, alg, coll, n)?;
     let rep = if let Some(trace_path) = args.opt_str("trace") {
         use patcol::util::json::Json;
         let (rep, trace) = sim::simulate_traced(&prog, &topo, &cost, size)?;
@@ -242,7 +297,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         rep.bytes_links,
     );
     for (lvl, b) in rep.bytes_by_level.iter().enumerate() {
-        println!("  level {lvl}: {}", fmt_bytes(*b));
+        println!(
+            "  level {lvl}: {} ({} msgs)",
+            fmt_bytes(*b),
+            rep.msgs_by_level[lvl]
+        );
     }
     println!(
         "  busiest link: {} ({:.0}% busy)",
@@ -261,12 +320,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let coll = collective(args)?;
     let topo = topology(args, n)?;
     let cost = CostModel::ib_hdr();
+    // The hier_pat column is only honest if its intra-node traffic really
+    // stays under one switch — same validation as `simulate`.
+    topo.check_placement(&placement_or_default(args, n)?)?;
     let algs: Vec<Algorithm> = vec![
         Algorithm::Ring,
         Algorithm::BruckNearFirst,
         Algorithm::Pat { aggregation: usize::MAX },
         Algorithm::Pat { aggregation: 4 },
         Algorithm::Pat { aggregation: 1 },
+        Algorithm::HierPat { aggregation: usize::MAX },
     ];
     let header: Vec<String> = std::iter::once("size".to_string())
         .chain(algs.iter().map(|a| a.name()))
@@ -275,7 +338,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for size in sizes {
         let mut row = vec![fmt_bytes(size)];
         for alg in &algs {
-            let prog = sched::generate(*alg, coll, n)?;
+            let prog = generate_for_cli(args, *alg, coll, n)?;
             let rep = sim::simulate(&prog, &topo, &cost, size)?;
             row.push(fmt_time_s(rep.total_time));
         }
@@ -291,11 +354,20 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let size = args.bytes("size", 64 * 1024)?;
     let slots = args.usize("buffer-slots", 64)?;
     let coll = collective(args)?;
-    let tuner = Tuner::default();
-    let choice = tuner.choose(n, size, slots, coll);
+    let inter_gbps = args.f64("inter-gbps", 0.0)?;
+    let tuner = Tuner {
+        inter_bw: if inter_gbps > 0.0 { Some(inter_gbps * 1e9) } else { None },
+        ..Tuner::default()
+    };
+    let placement = placement_opt(args, n)?;
+    let choice = tuner.choose_placed(n, size, slots, coll, placement.as_ref());
     println!(
-        "tune: ranks={n} chunk={} buffer_slots={slots} {coll}",
-        fmt_bytes(size)
+        "tune: ranks={n} chunk={} buffer_slots={slots} {coll}{}",
+        fmt_bytes(size),
+        match &placement {
+            Some(p) => format!(" [{}]", p.describe()),
+            None => String::new(),
+        }
     );
     let mut t = Table::new(["algorithm", "predicted"]);
     for (alg, cost) in &choice.candidates {
@@ -319,6 +391,8 @@ fn cmd_selftest(args: &Args) -> Result<()> {
             Algorithm::Pat { aggregation: 2 },
             Algorithm::Pat { aggregation: 7 },
             Algorithm::Pat { aggregation: usize::MAX },
+            Algorithm::HierPat { aggregation: 2 },
+            Algorithm::HierPat { aggregation: usize::MAX },
         ] {
             if !alg.supports(n) {
                 continue;

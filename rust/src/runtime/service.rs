@@ -113,10 +113,17 @@ impl Drop for PjrtService {
 mod tests {
     use super::*;
 
+    /// Startup failure surfaces as a clean error: either the registry
+    /// pointer ("make artifacts") with a real backend, or the stub's
+    /// backend-unavailable message.
     #[test]
     fn startup_failure_is_reported() {
         let err = PjrtService::spawn(PathBuf::from("/nonexistent")).unwrap_err();
-        assert!(err.to_string().contains("make artifacts"), "{err}");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("make artifacts") || msg.contains("unavailable"),
+            "{msg}"
+        );
     }
 }
 

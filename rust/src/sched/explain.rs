@@ -4,10 +4,11 @@
 
 use std::fmt::Write as _;
 
-use crate::core::Collective;
+use crate::core::{Collective, Placement};
 use crate::sched::pat::{self, StepPhase};
 use crate::sched::program::Program;
 use crate::sched::tree::FarFirstTree;
+use crate::sched::hier;
 
 /// Render the global step-by-step transfer table of a program, one line per
 /// message, grouped by step — the "what does each rank send when" view of
@@ -108,6 +109,65 @@ pub fn render_pat_tree(n: usize, a: usize) -> String {
     out
 }
 
+/// Render the phase structure of a hierarchical (two-level) program: step
+/// spans, message counts and byte-weighted traffic of the intra-node
+/// gather, inter-node PAT, and intra-node fan-out phases (mirrored names
+/// for reduce-scatter).
+pub fn render_hier_phases(p: &Program, pl: &Placement, a: usize) -> String {
+    let (s1, s2, s3) = hier::phase_spans(pl, a);
+    let names: [&str; 3] = match p.collective {
+        Collective::AllGather => ["intra-node gather", "inter-node PAT", "intra-node fan-out"],
+        Collective::ReduceScatter => {
+            ["intra-node fan-in", "inter-node PAT reduce", "intra-node scatter"]
+        }
+    };
+    // All-gather steps run gather → inter → fan-out; the mirror reverses
+    // the span order but phase_spans is symmetric (s1 == s3), so the step
+    // boundaries are the same in both orientations.
+    let bounds = [0, s1, s1 + s2, s1 + s2 + s3];
+    let mut msgs = [0usize; 3];
+    let mut chunks = [0usize; 3];
+    let mut cross = [0usize; 3];
+    for m in p.messages() {
+        let phase = if m.step < bounds[1] {
+            0
+        } else if m.step < bounds[2] {
+            1
+        } else {
+            2
+        };
+        msgs[phase] += 1;
+        chunks[phase] += m.chunks.len();
+        if pl.node_of(m.src) != pl.node_of(m.dst) {
+            cross[phase] += 1;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} / {} — {} ({} ranks): {} steps in 3 phases",
+        p.algorithm,
+        p.collective,
+        pl.describe(),
+        p.nranks,
+        p.steps
+    );
+    for i in 0..3 {
+        let _ = writeln!(
+            out,
+            "  phase {} {:<22} steps {:>3}..{:<3} msgs {:>5} chunk-transfers {:>6} cross-node {:>5}",
+            i + 1,
+            names[i],
+            bounds[i],
+            bounds[i + 1],
+            msgs[i],
+            chunks[i],
+            cross[i]
+        );
+    }
+    out
+}
+
 /// Render the per-root binomial-tree decomposition (Fig. 2 / Fig. 4): for
 /// each root rank, the tree its chunk follows.
 pub fn render_root_trees(p: &Program) -> String {
@@ -184,5 +244,20 @@ mod tests {
         let s = render_rank(&p, 0);
         assert!(s.contains("send ->"));
         assert!(s.contains("recv <-"));
+    }
+
+    #[test]
+    fn render_hier_phases_both_collectives() {
+        let pl = Placement::uniform(13, 4).unwrap();
+        let ag = crate::sched::hier::allgather(&pl, 2);
+        let s = render_hier_phases(&ag, &pl, 2);
+        assert!(s.contains("intra-node gather"), "{s}");
+        assert!(s.contains("inter-node PAT"), "{s}");
+        assert!(s.contains("intra-node fan-out"), "{s}");
+        assert!(s.contains("sizes=[4, 4, 4, 1]"), "{s}");
+        let rs = crate::sched::hier::reduce_scatter(&pl, 2);
+        let s = render_hier_phases(&rs, &pl, 2);
+        assert!(s.contains("intra-node fan-in"), "{s}");
+        assert!(s.contains("intra-node scatter"), "{s}");
     }
 }

@@ -1,0 +1,342 @@
+//! Hierarchical (two-level, topology-aware) PAT over a rank
+//! [`Placement`] — the production-scale extension the paper's "communicate
+//! close dimensions first" construction points at, and what NCCL itself
+//! does across NVLink domains: keep the chatty traffic inside a node, run
+//! the latency-optimal algorithm only between nodes.
+//!
+//! An all-gather program has three phases, in disjoint step ranges so the
+//! rounds render cleanly:
+//!
+//! 1. **Intra-node gather** — within each node, a near-first binomial tree
+//!    over the co-located ranks funnels every rank's chunk to the node
+//!    *leader* (each edge forwards its whole subtree's chunks, so a node of
+//!    `k` ranks needs `k-1` intra-node messages). All traffic stays under
+//!    one switch.
+//! 2. **Inter-node PAT** — the leaders run the flat PAT schedule over
+//!    *nodes*: the program for `nnodes` virtual ranks
+//!    ([`pat::rounds`]) is expanded by substituting each virtual rank with
+//!    its leader and each virtual chunk with that node's chunk set. The
+//!    aggregation factor therefore bounds how many *node chunk sets* one
+//!    transfer carries. Uneven node sizes just produce uneven chunk lists.
+//! 3. **Intra-node fan-out** — the same tree, root-down: each edge carries
+//!    everything the receiving subtree does not already hold (all chunks
+//!    minus the child's own subtree), so every rank ends with all `n`
+//!    chunks.
+//!
+//! Correctness of phase 2 follows from the flat PAT invariant by
+//! isomorphism: after phase 1 the leader of node `m` holds exactly node
+//! `m`'s chunks, which is the image of "flat rank `m` holds chunk `m`";
+//! every subsequent message is the image of a flat PAT message.
+//!
+//! Reduce-scatter is the time-and-direction mirror ([`Program::mirror`]):
+//! intra-node scatter of partial sums, inter-node PAT reduce among leaders,
+//! intra-node fan-in — so [`crate::sched::verify::verify_program`] covers it
+//! with no hierarchical-specific executor.
+//!
+//! Buffer note: unlike flat PAT, the leaders relay everything for their
+//! node — up to `n - 1` staged chunks in the all-gather, and up to `n`
+//! live accumulators in the mirrored reduce-scatter (between the fan-in
+//! and inter-node phases the leader holds a partial sum for every chunk).
+//! The hierarchy trades leader buffer space for fabric locality; the tuner
+//! only offers `HierPat` when the buffer budget covers that (see
+//! [`crate::coordinator::tuner::Tuner::choose_placed`]).
+
+use std::collections::HashSet;
+
+use crate::core::{ChunkId, Collective, Placement};
+use crate::sched::pat;
+use crate::sched::program::{Op, Program};
+use crate::sched::tree::NearFirstTree;
+
+/// Intra-node tree edges as `(parent, child)` local offsets in pre-order
+/// (every edge appears after the edge that delivers to its parent) — the
+/// fan-out execution order.
+fn preorder_edges(k: usize) -> Vec<(usize, usize)> {
+    fn visit(t: &NearFirstTree, o: usize, out: &mut Vec<(usize, usize)>) {
+        for c in t.children(o) {
+            out.push((o, c));
+            visit(t, c, out);
+        }
+    }
+    let t = NearFirstTree::new(k);
+    let mut out = Vec::new();
+    visit(&t, 0, &mut out);
+    out
+}
+
+/// Intra-node tree edges as `(child, parent)` local offsets in post-order
+/// (every edge appears after all edges inside the child's subtree) — the
+/// gather execution order.
+fn postorder_edges(k: usize) -> Vec<(usize, usize)> {
+    fn visit(t: &NearFirstTree, o: usize, out: &mut Vec<(usize, usize)>) {
+        for c in t.children(o) {
+            visit(t, c, out);
+            out.push((c, o));
+        }
+    }
+    let t = NearFirstTree::new(k);
+    let mut out = Vec::new();
+    visit(&t, 0, &mut out);
+    out
+}
+
+/// Local offsets in the subtree rooted at `o`, ascending.
+fn subtree_offsets(t: &NearFirstTree, o: usize) -> Vec<usize> {
+    let mut out = vec![o];
+    let mut i = 0;
+    while i < out.len() {
+        let cur = out[i];
+        out.extend(t.children(cur));
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Step counts of the three phases `(intra_gather, inter_pat, fan_out)` for
+/// this placement and aggregation (all-gather orientation; the mirrored
+/// reduce-scatter reverses them).
+pub fn phase_spans(pl: &Placement, a: usize) -> (usize, usize, usize) {
+    let nnodes = pl.nnodes();
+    let intra = pl.max_node_size().saturating_sub(1);
+    let inter = if nnodes > 1 {
+        pat::rounds(nnodes, pat::clamp_aggregation(nnodes, a)).len()
+    } else {
+        0
+    };
+    (intra, inter, intra)
+}
+
+/// Hierarchical PAT all-gather over `pl` with inter-node aggregation `a`.
+pub fn allgather(pl: &Placement, a: usize) -> Program {
+    let n = pl.nranks();
+    let nnodes = pl.nnodes();
+    let a_c = if nnodes > 1 {
+        pat::clamp_aggregation(nnodes, a)
+    } else {
+        1
+    };
+    let name = format!("hier_pat(a={a_c},nodes={nnodes})");
+    let mut p = Program::new(n, Collective::AllGather, name);
+    if n <= 1 {
+        return p;
+    }
+    let (s1, s2, _) = phase_spans(pl, a);
+
+    // Phase 1: intra-node gather to the leader. Edge (child -> parent)
+    // carries the child's whole subtree of chunks; post-order guarantees
+    // the child received its own subtree first.
+    for node in 0..nnodes {
+        let local = pl.ranks_of(node);
+        let k = local.len();
+        if k <= 1 {
+            continue;
+        }
+        let t = NearFirstTree::new(k);
+        for (step, &(c, par)) in postorder_edges(k).iter().enumerate() {
+            let chunks: Vec<ChunkId> =
+                subtree_offsets(&t, c).iter().map(|&o| local[o]).collect();
+            p.push(local[c], Op::Send { peer: local[par], chunks: chunks.clone(), step });
+            p.push(local[par], Op::Recv { peer: local[c], chunks, reduce: false, step });
+        }
+    }
+
+    // Phase 2: flat PAT over nodes, executed by the leaders. Virtual chunk
+    // `m` expands to node m's rank list.
+    if nnodes > 1 {
+        for (j, round) in pat::rounds(nnodes, a_c).iter().enumerate() {
+            let step = s1 + j;
+            let hop = 1usize << round.dim;
+            for i in 0..nnodes {
+                let dst = (i + hop) % nnodes;
+                let src = (i + nnodes - hop) % nnodes;
+                let send: Vec<ChunkId> = round
+                    .offsets
+                    .iter()
+                    .flat_map(|&o| pl.ranks_of((i + nnodes - o) % nnodes).iter().copied())
+                    .collect();
+                let recv: Vec<ChunkId> = round
+                    .offsets
+                    .iter()
+                    .flat_map(|&o| pl.ranks_of((src + nnodes - o) % nnodes).iter().copied())
+                    .collect();
+                p.push(pl.leader(i), Op::Send { peer: pl.leader(dst), chunks: send, step });
+                p.push(
+                    pl.leader(i),
+                    Op::Recv { peer: pl.leader(src), chunks: recv, reduce: false, step },
+                );
+            }
+        }
+    }
+
+    // Phase 3: intra-node fan-out. Edge (parent -> child) carries every
+    // chunk outside the child's subtree; pre-order guarantees the parent
+    // received its fan-out payload (or, for the leader, finished phase 2)
+    // first.
+    for node in 0..nnodes {
+        let local = pl.ranks_of(node);
+        let k = local.len();
+        if k <= 1 {
+            continue;
+        }
+        let t = NearFirstTree::new(k);
+        for (idx, &(par, c)) in preorder_edges(k).iter().enumerate() {
+            let step = s1 + s2 + idx;
+            let sub: HashSet<ChunkId> =
+                subtree_offsets(&t, c).iter().map(|&o| local[o]).collect();
+            let chunks: Vec<ChunkId> = (0..n).filter(|x| !sub.contains(x)).collect();
+            p.push(local[par], Op::Send { peer: local[c], chunks: chunks.clone(), step });
+            p.push(local[c], Op::Recv { peer: local[par], chunks, reduce: false, step });
+        }
+    }
+    p
+}
+
+/// Hierarchical PAT reduce-scatter: the mirror of the all-gather (fan-in,
+/// inter-node PAT reduce, intra-node scatter).
+pub fn reduce_scatter(pl: &Placement, a: usize) -> Program {
+    allgather(pl, a).mirror()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify::verify_program;
+
+    #[test]
+    fn correct_across_sizes_and_aggregations() {
+        for &n in &[2usize, 3, 5, 8, 12, 13, 16, 17, 24] {
+            for &k in &[1usize, 2, 3, 4, 5, 8] {
+                let pl = Placement::uniform(n, k.min(n)).unwrap();
+                for &a in &[1usize, 2, 4, usize::MAX] {
+                    let ag = allgather(&pl, a);
+                    verify_program(&ag)
+                        .unwrap_or_else(|e| panic!("ag n={n} k={k} a={a}: {e}"));
+                    let rs = reduce_scatter(&pl, a);
+                    verify_program(&rs)
+                        .unwrap_or_else(|e| panic!("rs n={n} k={k} a={a}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_uneven_nodes() {
+        let pl = Placement::from_node_sizes(&[4, 1, 5, 3]).unwrap();
+        for &a in &[1usize, 2, usize::MAX] {
+            verify_program(&allgather(&pl, a)).unwrap();
+            verify_program(&reduce_scatter(&pl, a)).unwrap();
+        }
+    }
+
+    /// With singleton nodes the hierarchy degenerates to flat PAT: same
+    /// per-rank op lists (only the program name differs).
+    #[test]
+    fn singleton_placement_equals_flat_pat() {
+        for n in [2usize, 5, 8, 13, 16] {
+            for a in [1usize, 2, usize::MAX] {
+                let pl = Placement::singletons(n).unwrap();
+                let hier = allgather(&pl, a);
+                let flat = pat::allgather(n, a);
+                assert_eq!(hier.ranks, flat.ranks, "n={n} a={a}");
+                assert_eq!(hier.steps, flat.steps, "n={n} a={a}");
+            }
+        }
+    }
+
+    /// A single node degenerates to a pure intra-node tree (no inter phase).
+    #[test]
+    fn single_node_is_tree_only() {
+        let pl = Placement::uniform(6, 6).unwrap();
+        let p = allgather(&pl, usize::MAX);
+        verify_program(&p).unwrap();
+        let (s1, s2, s3) = phase_spans(&pl, usize::MAX);
+        assert_eq!((s1, s2, s3), (5, 0, 5));
+        assert_eq!(p.steps, s1 + s2 + s3);
+        // every message stays inside the node by construction
+        for m in p.messages() {
+            assert_eq!(pl.node_of(m.src), pl.node_of(m.dst));
+        }
+    }
+
+    /// Only leaders speak across nodes, and non-leader traffic stays local.
+    #[test]
+    fn cross_node_messages_are_leader_to_leader() {
+        let pl = Placement::uniform(13, 4).unwrap();
+        let p = allgather(&pl, 2);
+        for m in p.messages() {
+            if pl.node_of(m.src) != pl.node_of(m.dst) {
+                assert!(pl.is_leader(m.src), "src {} not a leader", m.src);
+                assert!(pl.is_leader(m.dst), "dst {} not a leader", m.dst);
+            }
+        }
+    }
+
+    /// Every valid all-gather delivers each foreign chunk exactly once:
+    /// chunk transfers total n(n-1), same as the flat generators.
+    #[test]
+    fn chunk_transfer_totals() {
+        for (n, k) in [(8usize, 4usize), (13, 4), (16, 5), (9, 2)] {
+            let pl = Placement::uniform(n, k).unwrap();
+            let p = allgather(&pl, 2);
+            assert_eq!(p.stats().chunk_transfers, n * (n - 1), "n={n} k={k}");
+        }
+    }
+
+    /// Inter-node messages carry at most `a` node chunk sets.
+    #[test]
+    fn inter_node_aggregation_bounded() {
+        let pl = Placement::uniform(32, 4).unwrap();
+        for a in [1usize, 2, 4] {
+            let p = allgather(&pl, a);
+            let max_sets = p
+                .messages()
+                .iter()
+                .filter(|m| pl.node_of(m.src) != pl.node_of(m.dst))
+                .map(|m| {
+                    let nodes: HashSet<usize> =
+                        m.chunks.iter().map(|&c| pl.node_of(c)).collect();
+                    nodes.len()
+                })
+                .max()
+                .unwrap_or(0);
+            assert!(max_sets <= a, "a={a}: {max_sets} node sets in one message");
+        }
+    }
+
+    /// Leader staging is bounded by n-1 chunks for AG (its own chunk is
+    /// never staged) and n accumulators for RS (between fan-in and the
+    /// inter-node phase the leader holds a partial sum for every chunk) —
+    /// the hierarchy's buffer trade-off.
+    #[test]
+    fn occupancy_bounded() {
+        for (n, k) in [(13usize, 4usize), (16, 8), (24, 5)] {
+            let pl = Placement::uniform(n, k).unwrap();
+            for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                let (p, bound) = match coll {
+                    Collective::AllGather => (allgather(&pl, 2), n - 1),
+                    Collective::ReduceScatter => (reduce_scatter(&pl, 2), n),
+                };
+                let occ = verify_program(&p).unwrap();
+                assert!(
+                    occ.peak_slots <= bound,
+                    "{coll} n={n} k={k}: peak {} > {bound}",
+                    occ.peak_slots
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn phase_spans_cover_program() {
+        let pl = Placement::uniform(13, 4).unwrap();
+        let (s1, s2, s3) = phase_spans(&pl, 2);
+        assert_eq!(s1, 3);
+        assert_eq!(s3, 3);
+        assert!(s2 >= 1);
+        let p = allgather(&pl, 2);
+        assert_eq!(p.steps, s1 + s2 + s3);
+        let rs = reduce_scatter(&pl, 2);
+        assert_eq!(rs.steps, p.steps);
+    }
+}

@@ -14,6 +14,11 @@
 //! algorithm works the same way as all-gather, but with a reversed binomial
 //! tree", communicating close dimensions first and executing the parallel
 //! trees before the logarithmic part).
+//!
+//! [`hier`] adds the topology-aware tier: two-level schedules over a rank
+//! [`Placement`] (intra-node tree, inter-node PAT among node leaders,
+//! intra-node fan-out) generated through the placement-aware front-end
+//! [`generate_placed`].
 
 pub mod program;
 pub mod tree;
@@ -21,6 +26,7 @@ pub mod ring;
 pub mod bruck;
 pub mod recursive;
 pub mod pat;
+pub mod hier;
 pub mod verify;
 pub mod explain;
 
@@ -28,15 +34,27 @@ pub use program::{Op, Program, ProgramStats};
 pub use tree::{FarFirstTree, NearFirstTree};
 pub use verify::{verify_program, OccupancyReport};
 
-use crate::core::{Algorithm, Collective, Error, Result};
+use crate::core::{Algorithm, Collective, Error, Placement, Result};
+
+/// Default node size assumed when a hierarchical algorithm is requested
+/// without an explicit placement (contiguous 8-rank nodes — the common
+/// GPUs-per-server count).
+pub const DEFAULT_RANKS_PER_NODE: usize = 8;
 
 /// Generate a program for `algorithm` on `nranks`.
 ///
 /// For reduce-scatter, every algorithm is the mirror of its all-gather
 /// counterpart (recursive doubling mirrors to recursive halving).
+/// Placement-aware algorithms ([`Algorithm::HierPat`]) fall back to
+/// contiguous nodes of [`DEFAULT_RANKS_PER_NODE`]; use [`generate_placed`]
+/// to supply the real rank placement.
 pub fn generate(alg: Algorithm, coll: Collective, nranks: usize) -> Result<Program> {
     if nranks == 0 {
         return Err(Error::Schedule("nranks must be >= 1".into()));
+    }
+    if let Algorithm::HierPat { .. } = alg {
+        let pl = Placement::uniform(nranks, DEFAULT_RANKS_PER_NODE)?;
+        return generate_placed(alg, coll, &pl);
     }
     if !alg.supports(nranks) {
         return Err(Error::Unsupported(format!(
@@ -54,9 +72,34 @@ pub fn generate(alg: Algorithm, coll: Collective, nranks: usize) -> Result<Progr
                 "PatAuto must be resolved by the tuner before generation".into(),
             ))
         }
+        Algorithm::HierPat { .. } => unreachable!("handled above"),
     };
     Ok(match coll {
         Collective::AllGather => ag,
         Collective::ReduceScatter => ag.mirror(),
     })
+}
+
+/// Placement-aware generation front-end. [`Algorithm::HierPat`] builds its
+/// two-level schedule from `placement`; flat algorithms ignore it (their
+/// programs are placement-oblivious by construction).
+pub fn generate_placed(
+    alg: Algorithm,
+    coll: Collective,
+    placement: &Placement,
+) -> Result<Program> {
+    let nranks = placement.nranks();
+    if nranks == 0 {
+        return Err(Error::Schedule("placement must cover >= 1 rank".into()));
+    }
+    match alg {
+        Algorithm::HierPat { aggregation } => {
+            let ag = hier::allgather(placement, aggregation);
+            Ok(match coll {
+                Collective::AllGather => ag,
+                Collective::ReduceScatter => ag.mirror(),
+            })
+        }
+        _ => generate(alg, coll, nranks),
+    }
 }

@@ -42,6 +42,10 @@ pub struct SimReport {
     /// Bytes crossing each fabric tier (index = distance level; level 0 =
     /// NIC/leaf-local, top = the tapered tier the paper worries about).
     pub bytes_by_level: Vec<usize>,
+    /// Message counts per fabric tier (same indexing as `bytes_by_level`);
+    /// `msgs_by_level[1..]` are the inter-node / cross-leaf transfers a
+    /// placement-aware schedule is meant to minimize.
+    pub msgs_by_level: Vec<usize>,
     /// Heaviest per-link byte count (hot-spot load).
     pub max_link_bytes: usize,
     /// Busy fraction of the busiest link (serialization time / total time).
@@ -143,6 +147,7 @@ fn sim_inner(
         bytes_sent: 0,
         bytes_links: 0.0,
         bytes_by_level: vec![0; topo.max_level() + 1],
+        msgs_by_level: vec![0; topo.max_level() + 1],
         max_link_bytes: 0,
         busiest_link_utilization: 0.0,
         finish: vec![0.0; n],
@@ -190,6 +195,7 @@ fn sim_inner(
                 report.bytes_links += (bytes * path.len()) as f64;
                 let lvl = topo.distance_level(r, *peer);
                 report.bytes_by_level[lvl] += bytes;
+                report.msgs_by_level[lvl] += 1;
                 if let Some(tr) = trace.as_deref_mut() {
                     tr.push(TraceEvent {
                         step: *step,
@@ -380,6 +386,9 @@ mod tests {
         assert!(rep.bytes_by_level[1] > 0);
         assert!(rep.bytes_by_level[0] > rep.bytes_by_level[1]);
         assert_eq!(rep.bytes_by_level.iter().sum::<usize>(), rep.bytes_sent);
+        assert_eq!(rep.msgs_by_level.iter().sum::<usize>(), rep.messages);
+        // ring on 2 leaves of 4: exactly 2 of the 8 sends per step cross
+        assert_eq!(rep.msgs_by_level[1], 2 * 7);
     }
 
     #[test]

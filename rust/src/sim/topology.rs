@@ -6,7 +6,7 @@
 //! bandwidth so tapered tiers (the paper's "higher levels of the fabric
 //! being tapered") are expressible directly.
 
-use crate::core::{Error, Rank, Result};
+use crate::core::{Error, Placement, Rank, Result};
 use crate::sim::routing::flow_hash;
 
 pub type LinkId = usize;
@@ -96,9 +96,13 @@ impl Topology {
         taper: f64,
     ) -> Result<Topology> {
         if ranks_per_leaf == 0 || nranks % ranks_per_leaf != 0 {
-            return Err(Error::Sim(format!(
+            return Err(Error::Topology(format!(
                 "nranks={nranks} not divisible by ranks_per_leaf={ranks_per_leaf}"
             )));
+        }
+        if spines == 0 {
+            // A zero-spine fabric would panic in route() (modulo by zero).
+            return Err(Error::Topology("leaf_spine needs at least one spine".into()));
         }
         let leaves = nranks / ranks_per_leaf;
         let up_bw = nic_bw * taper;
@@ -140,9 +144,15 @@ impl Topology {
     ) -> Result<Topology> {
         let pod_size = ranks_per_leaf * leaves_per_pod;
         if pod_size == 0 || nranks % pod_size != 0 {
-            return Err(Error::Sim(format!(
+            return Err(Error::Topology(format!(
                 "nranks={nranks} not divisible by pod size {pod_size}"
             )));
+        }
+        if spines_per_pod == 0 || cores == 0 {
+            // Zero spines/cores would panic in route() (modulo by zero).
+            return Err(Error::Topology(
+                "three_level needs at least one spine per pod and one core".into(),
+            ));
         }
         let pods = nranks / pod_size;
         let leaves = pods * leaves_per_pod;
@@ -197,7 +207,7 @@ impl Topology {
         global_bw: f64,
     ) -> Result<Topology> {
         if ranks_per_group == 0 || nranks % ranks_per_group != 0 {
-            return Err(Error::Sim(format!(
+            return Err(Error::Topology(format!(
                 "nranks={nranks} not divisible by ranks_per_group={ranks_per_group}"
             )));
         }
@@ -351,6 +361,41 @@ impl Topology {
             Kind::ThreeLevel { .. } => 2,
         }
     }
+
+    /// Check that a [`Placement`] is compatible with this topology: the
+    /// rank counts match and every node's ranks sit under a single leaf
+    /// switch (distance level 0), so a hierarchical schedule's intra-node
+    /// phases never touch the fabric. A node straddling a leaf boundary —
+    /// e.g. a node size that does not divide the leaf radix — is rejected
+    /// with [`Error::Topology`] instead of silently (or panickingly)
+    /// misrouting.
+    pub fn check_placement(&self, placement: &Placement) -> Result<()> {
+        if placement.nranks() != self.nranks {
+            return Err(Error::Topology(format!(
+                "placement covers {} ranks, topology {} has {}",
+                placement.nranks(),
+                self.name,
+                self.nranks
+            )));
+        }
+        for node in 0..placement.nnodes() {
+            let ranks = placement.ranks_of(node);
+            let first = ranks[0];
+            for &r in &ranks[1..] {
+                if self.distance_level(first, r) != 0 {
+                    return Err(Error::Topology(format!(
+                        "placement node {node} (size {}) straddles a leaf of {}: \
+                         ranks {first} and {r} are {} fabric level(s) apart \
+                         (node size must divide the leaf radix)",
+                        ranks.len(),
+                        self.name,
+                        self.distance_level(first, r)
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -439,5 +484,43 @@ mod tests {
     fn divisibility_checked() {
         assert!(Topology::leaf_spine(10, 4, 2, 1e9, 1.0).is_err());
         assert!(Topology::dragonfly(10, 4, 1e9, 1e9).is_err());
+    }
+
+    /// Constructor misuse that used to reach a panic path (modulo-by-zero
+    /// in route()) is now a clean Error::Topology.
+    #[test]
+    fn degenerate_params_rejected_with_topology_error() {
+        let err = Topology::leaf_spine(8, 4, 0, 1e9, 1.0).unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        let err = Topology::three_level(16, 4, 2, 0, 2, 1e9, 1.0, 1.0).unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        let err = Topology::three_level(16, 4, 2, 2, 0, 1e9, 1.0, 1.0).unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        let err = Topology::leaf_spine(10, 4, 2, 1e9, 1.0).unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+    }
+
+    #[test]
+    fn placement_compatibility() {
+        let t = Topology::leaf_spine(16, 4, 2, 1e9, 1.0).unwrap();
+        // nodes of 4 align with the 4-rank leaves
+        t.check_placement(&Placement::uniform(16, 4).unwrap()).unwrap();
+        // nodes of 2 also fit (two nodes per leaf)
+        t.check_placement(&Placement::uniform(16, 2).unwrap()).unwrap();
+        // nodes of 5 straddle leaf boundaries
+        let err = t
+            .check_placement(&Placement::uniform(16, 5).unwrap())
+            .unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        assert!(err.to_string().contains("straddles"), "{err}");
+        // rank-count mismatch
+        let err = t
+            .check_placement(&Placement::uniform(8, 4).unwrap())
+            .unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        // the flat crossbar accepts anything (everything is level 0)
+        Topology::flat(16, 1e9)
+            .check_placement(&Placement::uniform(16, 5).unwrap())
+            .unwrap();
     }
 }

@@ -1,10 +1,12 @@
 //! P4 + global correctness matrix: every algorithm × collective × rank
 //! count in its domain, through the reference executor AND the real
 //! threaded transport, including primes and other awkward counts (paper
-//! Fig. 4 / the "any number of ranks" claim).
+//! Fig. 4 / the "any number of ranks" claim) — plus the hierarchical axis
+//! (HierPat × collectives × rank counts × node sizes, uneven included).
 
-use patcol::core::{Algorithm, Collective};
+use patcol::core::{Algorithm, Collective, Placement};
 use patcol::sched::{self, verify::verify_program};
+use patcol::sim::{simulate, CostModel, SimReport, Topology};
 use patcol::transport::{run_allgather, run_reduce_scatter, TransportOptions};
 use patcol::util::Rng;
 
@@ -143,4 +145,136 @@ fn unsupported_combinations() {
     assert!(sched::generate(Algorithm::Recursive, Collective::AllGather, 12).is_err());
     assert!(sched::generate(Algorithm::PatAuto, Collective::AllGather, 8).is_err());
     assert!(sched::generate(Algorithm::Ring, Collective::AllGather, 0).is_err());
+}
+
+/// Hierarchical axis of the matrix: HierPat × {AG, RS} × every rank count
+/// in [2, 64] × node sizes {1, 2, 4, 5, 8} (uneven tails included, e.g.
+/// 13 ranks on nodes of 4), verified through the reference executor with
+/// buffer-occupancy bounds: any valid AG delivers each foreign chunk
+/// exactly once (n(n-1) chunk transfers); hierarchical staging peaks at
+/// the leader, which relays everything for its node — at most n-1 staged
+/// chunks for AG (its own chunk is never staged) and at most n live
+/// accumulators for RS (it briefly holds a partial sum for every chunk
+/// between the fan-in and inter-node phases).
+#[test]
+fn hier_matrix_to_64() {
+    for n in 2..=64usize {
+        for &k in &[1usize, 2, 4, 5, 8] {
+            let pl = Placement::uniform(n, k.min(n)).unwrap();
+            for &a in &[2usize, usize::MAX] {
+                for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                    let p = sched::generate_placed(
+                        Algorithm::HierPat { aggregation: a },
+                        coll,
+                        &pl,
+                    )
+                    .unwrap();
+                    let occ = verify_program(&p)
+                        .unwrap_or_else(|e| panic!("hier {coll} n={n} k={k} a={a}: {e}"));
+                    let bound = match coll {
+                        Collective::AllGather => n - 1,
+                        Collective::ReduceScatter => n,
+                    };
+                    assert!(
+                        occ.peak_slots <= bound,
+                        "hier {coll} n={n} k={k} a={a}: peak {} > {bound}",
+                        occ.peak_slots
+                    );
+                    assert_eq!(
+                        p.stats().chunk_transfers,
+                        n * (n - 1),
+                        "hier {coll} n={n} k={k} a={a}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Hierarchical schedules through the real threaded transport: exact
+/// results for both collectives on uneven placements.
+#[test]
+fn hier_transport_end_to_end() {
+    let opts = TransportOptions::default();
+    for (n, k) in [(8usize, 4usize), (13, 4), (16, 5), (9, 3), (12, 8)] {
+        let pl = Placement::uniform(n, k).unwrap();
+        let chunk = 16;
+        let mut rng = Rng::new((n * 100 + k) as u64);
+        for a in [1usize, 2, usize::MAX] {
+            let alg = Algorithm::HierPat { aggregation: a };
+            let ag = sched::generate_placed(alg, Collective::AllGather, &pl).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let mut want = Vec::new();
+            for i in &inputs {
+                want.extend_from_slice(i);
+            }
+            let (outs, _) = run_allgather(&ag, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("hier ag n={n} k={k} a={a}: {e}"));
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &want, "hier ag n={n} k={k} a={a} rank={r}");
+            }
+
+            let rs = sched::generate_placed(alg, Collective::ReduceScatter, &pl).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let (outs, _) = run_reduce_scatter(&rs, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("hier rs n={n} k={k} a={a}: {e}"));
+            for r in 0..n {
+                for i in 0..chunk {
+                    let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                    assert_eq!(outs[r][i], w, "hier rs n={n} k={k} a={a} rank={r} idx={i}");
+                }
+            }
+        }
+    }
+}
+
+/// The headline hierarchy claim: on a tapered three-level fat-tree
+/// (taper 0.25 ≤ 0.5, 256 ranks, small messages), HierPat crosses the
+/// fabric strictly less than flat PAT at equal aggregation — fewer
+/// cross-leaf messages AND fewer cross-leaf bytes — and stays valid.
+#[test]
+fn hier_fewer_cross_leaf_transfers_than_flat_pat() {
+    let n = 256usize;
+    let ranks_per_leaf = 8usize;
+    // 8 pods × 4 leaves × 8 ranks; top tier tapered to 0.25.
+    let topo = Topology::three_level(n, ranks_per_leaf, 4, 4, 2, 25e9, 1.0, 0.25).unwrap();
+    let pl = Placement::uniform(n, ranks_per_leaf).unwrap();
+    topo.check_placement(&pl).unwrap();
+    let cost = CostModel::ib_hdr();
+    let chunk = 512; // small-message regime
+    let a = 4;
+
+    let flat = sched::generate(Algorithm::Pat { aggregation: a }, Collective::AllGather, n)
+        .unwrap();
+    let hier = sched::generate_placed(
+        Algorithm::HierPat { aggregation: a },
+        Collective::AllGather,
+        &pl,
+    )
+    .unwrap();
+    verify_program(&hier).unwrap();
+
+    let rep_flat = simulate(&flat, &topo, &cost, chunk).unwrap();
+    let rep_hier = simulate(&hier, &topo, &cost, chunk).unwrap();
+
+    let cross_msgs = |r: &SimReport| r.msgs_by_level[1..].iter().sum::<usize>();
+    let cross_bytes = |r: &SimReport| r.bytes_by_level[1..].iter().sum::<usize>();
+    assert!(
+        cross_msgs(&rep_hier) < cross_msgs(&rep_flat),
+        "cross-leaf msgs: hier {} !< flat {}",
+        cross_msgs(&rep_hier),
+        cross_msgs(&rep_flat)
+    );
+    assert!(
+        cross_bytes(&rep_hier) < cross_bytes(&rep_flat),
+        "cross-leaf bytes: hier {} !< flat {}",
+        cross_bytes(&rep_hier),
+        cross_bytes(&rep_flat)
+    );
+    // Sanity: the hierarchy keeps a substantial share of traffic leaf-local.
+    assert!(rep_hier.msgs_by_level[0] > 0);
 }

@@ -94,6 +94,17 @@ fn cli_binary_smoke() {
         ],
         vec!["run", "--ranks", "4", "--size", "4KiB", "--alg", "pat:2",
              "--collective", "rs"],
+        vec!["explain", "--ranks", "13", "--alg", "hier_pat:2",
+             "--ranks-per-node", "4"],
+        vec![
+            "simulate", "--ranks", "32", "--size", "64KiB", "--alg", "hier_pat",
+            "--topo", "leaf_spine", "--ranks-per-leaf", "8",
+            "--ranks-per-node", "8",
+        ],
+        vec!["run", "--ranks", "13", "--size", "4KiB", "--alg", "hier_pat:2",
+             "--placement", "4,4,5", "--collective", "rs"],
+        vec!["tune", "--ranks", "64", "--size", "1MiB", "--buffer-slots", "1024",
+             "--ranks-per-node", "8", "--inter-gbps", "25"],
     ] {
         let out = std::process::Command::new(bin)
             .args(&argv)

@@ -1,0 +1,131 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build environment has no crates.io access and no XLA shared library,
+//! so this crate provides the exact API surface `patcol::runtime` consumes
+//! while reporting the backend as unavailable: constructors that require the
+//! real runtime return [`Error`], and [`backend_available`] returns `false`
+//! so integration tests can skip cleanly instead of failing.
+//!
+//! To enable the real PJRT datapath, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual xla-rs bindings; no `patcol` source
+//! changes are required.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (only the Debug/Display surface is
+/// consumed by patcol).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `true` when a real PJRT backend is linked in. Always `false` in the stub.
+pub fn backend_available() -> bool {
+    false
+}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: PJRT/XLA backend unavailable (patcol was built with the \
+         offline `xla` stub; point the `xla` path dependency at the real \
+         bindings to enable it)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub: never constructible via a real compile).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host literal. Constructors succeed (they hold no real storage in the
+/// stub); every conversion that would need the backend fails.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!backend_available());
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
