@@ -1,0 +1,141 @@
+//! Composed all-reduce: phase pair × segment count × payload size on the
+//! 256-rank tapered three-level fat-tree.
+//!
+//! The question the `sched/compose` subsystem answers: once all-reduce is
+//! one fused RS∘AG program, how much does segment pipelining buy, and
+//! where is the crossover? Sequential composition (`:1`) serializes the
+//! full 2·log(n) round chain at full round sizes; `S` segments quarter the
+//! rounds and overlap each segment's all-gather with the next segment's
+//! reduce-scatter, and the simulator runs each segment as its own
+//! NCCL-style channel. At latency-to-mid payloads the overlapping
+//! channels fill each other's link idle gaps and pipelining wins; at
+//! bandwidth-bound payloads both phases saturate the same tapered core
+//! links and the sequential composition wins. The JSON report records
+//! the whole sweep so the crossover is machine-readable; the headline
+//! row is asserted.
+//!
+//! `--smoke` runs a minimal configuration (CI bench-rot guard).
+
+use patcol::core::{Algorithm, Collective, PhaseAlg};
+use patcol::report::Report;
+use patcol::sched;
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 64usize } else { 256usize };
+    let topo =
+        Topology::three_level(n, 8, 4, 4, 2, CostModel::ib_hdr_nic_bw(), 1.0, 0.25).unwrap();
+    let cost = CostModel::ib_hdr();
+
+    const PAT: PhaseAlg = PhaseAlg::Pat { aggregation: usize::MAX };
+    const RING: PhaseAlg = PhaseAlg::Ring;
+    let pairs: &[(PhaseAlg, PhaseAlg)] = if smoke {
+        &[(PAT, PAT)]
+    } else {
+        &[(PAT, PAT), (PAT, RING), (RING, RING)]
+    };
+    let segment_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    // Total payload per rank; per-chunk bytes = total / (n × segments).
+    let totals: &[usize] = if smoke {
+        &[64 << 10]
+    } else {
+        &[16 << 10, 64 << 10, 128 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20]
+    };
+
+    let mut report = Report::new("allreduce_compose");
+    report.param("nranks", Json::num(n as f64));
+    report.param("topology", Json::str(topo.name.clone()));
+    report.param("smoke", Json::Bool(smoke));
+
+    println!(
+        "\nall-reduce pair × segments × size on {} (tapered top tier):",
+        topo.name
+    );
+    let mut t = Table::new(["pair", "total/rank", "segments", "chunk", "time"]);
+    // (pair spec, total) -> time at segments=1, for crossover detection.
+    let mut crossover_rows: Vec<Json> = Vec::new();
+    for &(rs, ag) in pairs {
+        let pair_spec = format!("{}+{}", rs.spec(), ag.spec());
+        for &total in totals {
+            let mut t_seq: Option<f64> = None;
+            for &segments in segment_counts {
+                let chunk = (total / (n * segments)).max(1);
+                let alg = Algorithm::Compose { rs, ag, segments };
+                let prog = sched::generate(alg, Collective::AllReduce, n).unwrap();
+                let rep = simulate(&prog, &topo, &cost, chunk).unwrap();
+                if segments == 1 {
+                    t_seq = Some(rep.total_time);
+                }
+                t.row([
+                    pair_spec.clone(),
+                    fmt_bytes(total),
+                    format!("{segments}"),
+                    fmt_bytes(chunk),
+                    fmt_time_s(rep.total_time),
+                ]);
+                report.rows.push(Json::obj(vec![
+                    ("pair", Json::str(pair_spec.clone())),
+                    ("total_bytes", Json::num(total as f64)),
+                    ("segments", Json::num(segments as f64)),
+                    ("chunk_bytes", Json::num(chunk as f64)),
+                    ("time", Json::num(rep.total_time)),
+                    ("messages", Json::num(rep.messages as f64)),
+                ]));
+                if segments > 1 {
+                    if let Some(seq) = t_seq {
+                        crossover_rows.push(Json::obj(vec![
+                            ("pair", Json::str(pair_spec.clone())),
+                            ("total_bytes", Json::num(total as f64)),
+                            ("segments", Json::num(segments as f64)),
+                            ("speedup_vs_sequential", Json::num(seq / rep.total_time)),
+                        ]));
+                    }
+                }
+            }
+        }
+    }
+    print!("{}", t.render());
+    report.param("crossover", Json::Arr(crossover_rows));
+
+    // Headline (the acceptance row): pipelined pat+pat:4 beats the
+    // sequential composition at a small-to-mid payload (64 KiB per rank).
+    // Margins measured on this deterministic simulator: +5.0% at n=256,
+    // +13.3% at the n=64 smoke scale — both strict, so the assert holds
+    // in smoke mode too.
+    let total = 64 << 10;
+    let seq = {
+        let p = sched::generate(
+            Algorithm::Compose { rs: PAT, ag: PAT, segments: 1 },
+            Collective::AllReduce,
+            n,
+        )
+        .unwrap();
+        simulate(&p, &topo, &cost, total / n).unwrap().total_time
+    };
+    let piped = {
+        let p = sched::generate(
+            Algorithm::Compose { rs: PAT, ag: PAT, segments: 4 },
+            Collective::AllReduce,
+            n,
+        )
+        .unwrap();
+        simulate(&p, &topo, &cost, total / (n * 4)).unwrap().total_time
+    };
+    println!(
+        "\npat+pat:4 vs pat+pat:1 at {} per rank: {} vs {} ({:.2}x)",
+        fmt_bytes(total),
+        fmt_time_s(piped),
+        fmt_time_s(seq),
+        seq / piped
+    );
+    report.param("headline_speedup", Json::num(seq / piped));
+    assert!(
+        piped < seq,
+        "pipelining must pay at {} per rank: {piped} !< {seq}",
+        fmt_bytes(total)
+    );
+    report.save().unwrap();
+}

@@ -17,6 +17,7 @@ use patcol::util::table::{fmt_time_s, Table};
 use patcol::util::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut report = Report::new("buffer_sweep");
 
     // --- Figs. 7-9: 16 ranks, trees 8/4/2/1 -------------------------------
@@ -54,7 +55,8 @@ fn main() {
     // --- P3a: accumulator occupancy vs rank count (structural) ------------
     println!("\nreduce-scatter accumulator slots vs ranks (law: a*log2(n/a)):");
     let mut t = Table::new(["ranks", "a=1", "a=2", "a=4", "a=8"]);
-    for k in 3..=10usize {
+    let kmax = if smoke { 5usize } else { 10 };
+    for k in 3..=kmax {
         let n = 1usize << k;
         let mut row = vec![format!("{n}")];
         for a in [1usize, 2, 4, 8] {
@@ -80,7 +82,8 @@ fn main() {
     let mut t = Table::new(["chunk elems", "peak slots"]);
     let prog = pat::reduce_scatter(16, 2);
     let mut rng = Rng::new(5);
-    for chunk in [16usize, 256, 4096, 65536] {
+    let chunks: &[usize] = if smoke { &[16, 256] } else { &[16, 256, 4096, 65536] };
+    for &chunk in chunks {
         let inputs: Vec<Vec<f32>> = (0..16)
             .map(|_| (0..16 * chunk).map(|_| rng.below(100) as f32).collect())
             .collect();

@@ -24,13 +24,19 @@ fn sim_t(alg: Algorithm, n: usize, chunk: usize) -> f64 {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut report = Report::new("crossover");
     let n = 64usize;
 
     println!("\nPAT-vs-Ring crossover in size ({n} ranks):");
     let mut t = Table::new(["size/rank", "pat(auto-best)", "ring", "ratio"]);
     let mut crossover_size: Option<usize> = None;
-    for k in (6..=26).step_by(2) {
+    let ks: Vec<usize> = if smoke {
+        vec![6, 16]
+    } else {
+        (6..=26).step_by(2).collect()
+    };
+    for k in ks {
         let size = 1usize << k;
         // best PAT over aggregation choices — what the tuner would do
         let pat_best = [usize::MAX, 8, 2, 1]
@@ -65,7 +71,12 @@ fn main() {
     // with rank count (the "at scale" in the paper's title).
     println!("\nPAT advantage vs rank count (64 KiB per rank):");
     let mut t = Table::new(["ranks", "pat(full)", "ring", "speedup"]);
-    for &n in &[8usize, 32, 128, 512, 2048] {
+    let rank_sweep: &[usize] = if smoke {
+        &[8, 32]
+    } else {
+        &[8, 32, 128, 512, 2048]
+    };
+    for &n in rank_sweep {
         let pat = sim_t(Algorithm::Pat { aggregation: usize::MAX }, n, 64 << 10);
         let ring = sim_t(Algorithm::Ring, n, 64 << 10);
         t.row([

@@ -24,6 +24,7 @@ fn cross_bytes(r: &SimReport) -> usize {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let ranks_per_leaf = 8usize;
     let leaves_per_pod = 4usize;
     let taper = 0.25f64;
@@ -54,7 +55,12 @@ fn main() {
         "hier x-leaf bytes",
     ]);
 
-    for &n in &[64usize, 128, 256, 512, 1024] {
+    let rank_sweep: &[usize] = if smoke {
+        &[64]
+    } else {
+        &[64, 128, 256, 512, 1024]
+    };
+    for &n in rank_sweep {
         let topo = Topology::three_level(
             n,
             ranks_per_leaf,

@@ -16,6 +16,7 @@ use patcol::util::json::Json;
 use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let n = 64usize;
     let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
     let cost = CostModel::ib_hdr();
@@ -27,7 +28,12 @@ fn main() {
         Algorithm::Pat { aggregation: 4 },
         Algorithm::Pat { aggregation: 1 },
     ];
-    let sizes: Vec<usize> = (6..=24).step_by(2).map(|k| 1usize << k).collect();
+    let ks: Vec<usize> = if smoke {
+        vec![6, 16]
+    } else {
+        (6..=24).step_by(2).collect()
+    };
+    let sizes: Vec<usize> = ks.into_iter().map(|k| 1usize << k).collect();
 
     let mut report = Report::new("latency_vs_size");
     report.param("nranks", Json::num(n as f64));

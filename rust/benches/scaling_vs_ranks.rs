@@ -16,9 +16,14 @@ fn main() {
     // claim targets. (At larger sizes the β·n·S serialization term is
     // inherently linear for all-gather — every rank must receive (n-1)
     // chunks — so only the α part can be logarithmic.)
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let chunk = 64usize;
     let cost = CostModel::ib_hdr();
-    let ranks: Vec<usize> = vec![8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+    let ranks: Vec<usize> = if smoke {
+        vec![8, 16, 32, 64]
+    } else {
+        vec![8, 16, 32, 64, 128, 256, 512, 1024, 2048]
+    };
     let algs = [
         Algorithm::Ring,
         Algorithm::Pat { aggregation: usize::MAX },
@@ -108,14 +113,15 @@ fn main() {
         .unwrap();
         simulate(&prog, &topo, cost, chunk).unwrap().total_time
     };
-    let g_real = t_big(&cost, 2048) / t_big(&cost, 64);
-    let g_ideal = t_big(&ideal_cost, 2048) / t_big(&ideal_cost, 64);
+    let hi = if smoke { 256usize } else { 2048 };
+    let g_real = t_big(&cost, hi) / t_big(&cost, 64);
+    let g_ideal = t_big(&ideal_cost, hi) / t_big(&ideal_cost, 64);
     println!(
-        "\npat(full) growth 64→2048 ranks: {:.1}x measured vs {:.1}x with free linear part \
+        "\npat(full) growth 64→{hi} ranks: {:.1}x measured vs {:.1}x with free linear part \
          (ideal log growth = {:.1}x)",
         g_real,
         g_ideal,
-        (2048f64.log2() + 1.0) / (64f64.log2() + 1.0)
+        ((hi as f64).log2() + 1.0) / (64f64.log2() + 1.0)
     );
     report.param("growth_real", Json::num(g_real));
     report.param("growth_gamma0", Json::num(g_ideal));

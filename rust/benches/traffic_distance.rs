@@ -20,20 +20,25 @@ use patcol::util::json::Json;
 use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let n = 128usize;
     // 4 pods x 4 leaves x 8 ranks; top tier tapered to 1/4.
     let topo = Topology::three_level(n, 8, 4, 4, 2, CostModel::ib_hdr_nic_bw(), 1.0, 0.25)
         .unwrap();
     let cost = CostModel::ib_hdr();
-    let chunk = 256 << 10; // bandwidth-relevant size
-    let algs = [
-        Algorithm::Ring,
-        Algorithm::BruckNearFirst,
-        Algorithm::Recursive,
-        Algorithm::BruckFarFirst,
-        Algorithm::Pat { aggregation: 4 },
-        Algorithm::Pat { aggregation: 1 },
-    ];
+    let chunk = if smoke { 4 << 10 } else { 256 << 10 }; // bandwidth-relevant size
+    let algs: &[Algorithm] = if smoke {
+        &[Algorithm::BruckNearFirst, Algorithm::Pat { aggregation: 4 }]
+    } else {
+        &[
+            Algorithm::Ring,
+            Algorithm::BruckNearFirst,
+            Algorithm::Recursive,
+            Algorithm::BruckFarFirst,
+            Algorithm::Pat { aggregation: 4 },
+            Algorithm::Pat { aggregation: 1 },
+        ]
+    };
 
     let mut report = Report::new("traffic_distance");
     report.param("nranks", Json::num(n as f64));
@@ -53,7 +58,7 @@ fn main() {
         "bytes*links",
         "time",
     ]);
-    for alg in &algs {
+    for alg in algs {
         let prog = sched::generate(*alg, Collective::AllGather, n).unwrap();
         let rep = simulate(&prog, &topo, &cost, chunk).unwrap();
         t.row([

@@ -17,12 +17,18 @@ use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
 use patcol::util::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut report = Report::new("transport_hotpath");
-    let opts = BenchOpts::default();
+    let opts = if smoke { patcol::bench::quick() } else { BenchOpts::default() };
 
     // --- scalar reduce kernel roofline ------------------------------------
     println!("\nscalar reduction kernel (acc += x):");
-    for n in [4 << 10, 256 << 10, 4 << 20] {
+    let kernel_sizes: &[usize] = if smoke {
+        &[4 << 10]
+    } else {
+        &[4 << 10, 256 << 10, 4 << 20]
+    };
+    for &n in kernel_sizes {
         let elems = n / 4;
         let mut acc = vec![1.0f32; elems];
         let x = vec![2.0f32; elems];
@@ -52,7 +58,12 @@ fn main() {
     };
     println!("\nthreaded transport, {n} ranks (wall time per collective):");
     let mut table = Table::new(["op", "size/rank", "alg", "wall p50", "algbw", "allocs"]);
-    for &chunk_bytes in &[16usize << 10, 256 << 10, 4 << 20] {
+    let chunk_sweep: &[usize] = if smoke {
+        &[16 << 10]
+    } else {
+        &[16 << 10, 256 << 10, 4 << 20]
+    };
+    for &chunk_bytes in chunk_sweep {
         let chunk = chunk_bytes / 4;
         let mut rng = Rng::new(1);
 

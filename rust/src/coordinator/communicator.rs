@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
-use crate::core::{Algorithm, Collective, Error, Placement, Result};
+use crate::core::{Algorithm, Collective, Error, PhaseAlg, Placement, Result};
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::{PjrtService, Registry};
 use crate::sched::{self, program::Program};
@@ -141,11 +141,31 @@ impl Communicator {
 
     /// Resolve the algorithm for this call (pinned, or tuned from the
     /// message size, buffer budget, and — when configured — the rank
-    /// placement).
+    /// placement). All-reduce resolves to a composition
+    /// ([`Algorithm::Compose`]): the tuner sweeps phase pairs × segment
+    /// counts, and a pinned non-composed algorithm is lifted to the
+    /// sequential `alg+alg:1`.
     pub fn resolve(&self, coll: Collective, chunk_bytes: usize) -> Algorithm {
+        let slots = self.cfg.buffer_slots.unwrap_or(usize::MAX / 2);
+        if coll == Collective::AllReduce {
+            return match self.cfg.algorithm {
+                Some(Algorithm::PatAuto) | None => self
+                    .tuner
+                    .choose_allreduce(
+                        self.cfg.nranks,
+                        chunk_bytes,
+                        slots,
+                        self.cfg.placement.as_ref(),
+                    )
+                    .algorithm,
+                Some(alg @ Algorithm::Compose { .. }) => alg,
+                Some(alg) => PhaseAlg::from_algorithm(alg)
+                    .map(|p| Algorithm::Compose { rs: p, ag: p, segments: 1 })
+                    .unwrap_or(alg),
+            };
+        }
         match self.cfg.algorithm {
             Some(Algorithm::PatAuto) | None => {
-                let slots = self.cfg.buffer_slots.unwrap_or(usize::MAX / 2);
                 self.tuner
                     .choose_placed(
                         self.cfg.nranks,
@@ -177,12 +197,11 @@ impl Communicator {
                 return Ok(p.clone());
             }
         }
-        let prog = match alg {
-            Algorithm::HierPat { .. } => {
-                let pl = self.effective_placement()?;
-                sched::generate_placed(alg, coll, &pl)?
-            }
-            _ => sched::generate(alg, coll, self.cfg.nranks)?,
+        let prog = if alg.uses_placement() {
+            let pl = self.effective_placement()?;
+            sched::generate_placed(alg, coll, &pl)?
+        } else {
+            sched::generate(alg, coll, self.cfg.nranks)?
         };
         if self.cfg.validate {
             sched::verify::verify_program(&prog)?;
@@ -234,12 +253,26 @@ impl Communicator {
     }
 
     /// All-reduce, composed the NCCL way from the paper's two collectives:
-    /// reduce-scatter the padded input into shards, then all-gather the
-    /// shards. Every rank returns the full element-wise sum.
+    /// one fused reduce-scatter ∘ all-gather program
+    /// ([`crate::sched::compose`]), pipelined over payload segments so one
+    /// segment's all-gather overlaps the next segment's reduce-scatter.
+    /// The phase pair and segment count come from the pinned
+    /// [`Algorithm::Compose`] (`rs+ag[:segments]`) or the tuner's
+    /// pair × segment crossover sweep. Every rank returns the full
+    /// element-wise sum.
     ///
-    /// Input vectors may have any (uniform) length; shards are padded to
-    /// `ceil(len / n)` internally and the padding is stripped on return.
+    /// Input vectors may have any (uniform) length; they are padded to the
+    /// composed chunk grid (`segments × nranks` chunks) internally and the
+    /// padding is stripped on return.
     pub fn all_reduce(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(self.all_reduce_report(inputs)?.0)
+    }
+
+    /// All-reduce returning execution metadata.
+    pub fn all_reduce_report(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, CollectiveReport)> {
         let n = self.cfg.nranks;
         if inputs.len() != n {
             return Err(Error::Config(format!(
@@ -251,8 +284,14 @@ impl Communicator {
         if inputs.iter().any(|v| v.len() != len) {
             return Err(Error::Config("ragged all-reduce inputs".into()));
         }
-        let chunk = len.div_ceil(n.max(1)).max(1);
-        let padded = chunk * n;
+        // Per-chunk payload at one segment — what the tuner's crossover
+        // sweep expects.
+        let chunk_bytes = len * 4 / n.max(1);
+        let alg = self.resolve(Collective::AllReduce, chunk_bytes);
+        let prog = self.program(Collective::AllReduce, alg)?;
+        let nchunks = prog.chunk_space();
+        let chunk = len.div_ceil(nchunks).max(1);
+        let padded = chunk * nchunks;
         let padded_inputs: Vec<Vec<f32>> = inputs
             .iter()
             .map(|v| {
@@ -261,15 +300,18 @@ impl Communicator {
                 p
             })
             .collect();
-        let shards = self.reduce_scatter(&padded_inputs)?;
-        let gathered = self.all_gather(&shards)?;
-        Ok(gathered
+        let (outs, rep) = transport::run_allreduce(&prog, &padded_inputs, &self.options())?;
+        let outs = outs
             .into_iter()
             .map(|mut v| {
                 v.truncate(len);
                 v
             })
-            .collect())
+            .collect();
+        Ok((
+            outs,
+            CollectiveReport { algorithm: alg, steps: prog.steps, transport: rep },
+        ))
     }
 
     /// Reduce-scatter returning execution metadata.
@@ -369,6 +411,51 @@ mod tests {
                 let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
                 assert_eq!(out[i], want, "rank {r} idx {i}");
             }
+        }
+    }
+
+    /// A pinned `rs+ag:segments` composition drives the fused allreduce
+    /// path end to end, including odd lengths (padding) and mixed phase
+    /// generators.
+    #[test]
+    fn all_reduce_pinned_composition() {
+        let n = 7;
+        let len = 45; // not divisible by segments * n
+        let alg = Algorithm::parse("pat:2+ring:3").unwrap();
+        let c = comm(n, Some(alg));
+        let mut rng = Rng::new(21);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (outs, rep) = c.all_reduce_report(&inputs).unwrap();
+        assert_eq!(rep.algorithm, alg);
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out.len(), len, "rank {r}");
+            for i in 0..len {
+                let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(out[i], want, "rank {r} idx {i}");
+            }
+        }
+        // repeated calls reuse the cached fused program
+        c.all_reduce(&inputs).unwrap();
+        assert_eq!(c.cache.lock().unwrap().len(), 1);
+    }
+
+    /// Tuned all-reduce resolves to a composition and still produces exact
+    /// sums.
+    #[test]
+    fn all_reduce_tuned_resolves_to_composition() {
+        let c = comm(6, None);
+        let alg = c.resolve(Collective::AllReduce, 4 << 10);
+        assert!(
+            matches!(alg, Algorithm::Compose { .. }),
+            "expected a composition, got {alg}"
+        );
+        let inputs: Vec<Vec<f32>> = (0..6).map(|r| vec![r as f32; 24]).collect();
+        let outs = c.all_reduce(&inputs).unwrap();
+        let want: f32 = (0..6).map(|r| r as f32).sum();
+        for out in &outs {
+            assert!(out.iter().all(|&v| v == want));
         }
     }
 

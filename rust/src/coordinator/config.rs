@@ -9,7 +9,8 @@
 //! | key | meaning |
 //! |-----|---------|
 //! | `nranks` | world size |
-//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto`, `hier_pat`, `hier_pat:<a>` |
+//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto`, `hier_pat`, `hier_pat:<a>`, or the all-reduce composition `rs+ag[:<segments>]` (e.g. `pat+ring:4`) |
+//! | `segments` | all-reduce pipeline segment count; wraps a non-composed `algorithm` into `alg+alg:<segments>` |
 //! | `buffer_slots` | intermediate-buffer budget in chunk slots |
 //! | `datapath` | `scalar` or `pjrt` |
 //! | `artifacts` | artifact directory |
@@ -37,7 +38,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::core::{Algorithm, Error, Placement, Result};
+use crate::core::{Algorithm, Error, PhaseAlg, Placement, Result};
 use crate::coordinator::communicator::{CommConfig, DataPathKind};
 use crate::sim::CostModel;
 
@@ -123,6 +124,25 @@ impl ConfigMap {
         }
         if let Some(a) = self.get("algorithm") {
             cfg.algorithm = Some(Algorithm::parse(a)?);
+        }
+        if let Some(s) = self.get_usize("segments")? {
+            if s == 0 {
+                return Err(Error::Config("segments must be >= 1".into()));
+            }
+            cfg.algorithm = Some(match cfg.algorithm {
+                Some(Algorithm::Compose { rs, ag, .. }) => {
+                    Algorithm::Compose { rs, ag, segments: s }
+                }
+                Some(alg) => {
+                    let ph = PhaseAlg::from_algorithm(alg)?;
+                    Algorithm::Compose { rs: ph, ag: ph, segments: s }
+                }
+                None => {
+                    return Err(Error::Config(
+                        "segments requires an algorithm to compose".into(),
+                    ))
+                }
+            });
         }
         cfg.buffer_slots = self.get_usize("buffer_slots")?;
         match self.get("datapath") {
@@ -243,6 +263,40 @@ mod tests {
             .to_comm_config()
             .is_err());
         assert!(ConfigMap::parse("nranks = 8\nranks_per_node = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+    }
+
+    #[test]
+    fn segments_key_composes() {
+        use crate::core::PhaseAlg;
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat:2\nsegments = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(
+            cfg.algorithm,
+            Some(Algorithm::Compose {
+                rs: PhaseAlg::Pat { aggregation: 2 },
+                ag: PhaseAlg::Pat { aggregation: 2 },
+                segments: 4
+            })
+        );
+        // overrides the segment count of an explicit composition
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat+ring:2\nsegments = 8\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        match cfg.algorithm {
+            Some(Algorithm::Compose { segments, .. }) => assert_eq!(segments, 8),
+            other => panic!("{other:?}"),
+        }
+        assert!(ConfigMap::parse("nranks = 8\nsegments = 2\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+        assert!(ConfigMap::parse("nranks = 8\nalgorithm = pat\nsegments = 0\n")
             .unwrap()
             .to_comm_config()
             .is_err());

@@ -28,9 +28,22 @@
 //! ([`Tuner::choose_placed`]): flat PAT at latency-bound sizes, HierPat
 //! in the tapered mid-size band, Ring at the bandwidth extreme.
 
-use crate::core::{ceil_log2, Algorithm, Collective, Placement};
+use crate::core::{ceil_log2, Algorithm, Collective, PhaseAlg, Placement};
 use crate::sched::pat;
 use crate::sim::CostModel;
+
+/// Calibration constant for [`Tuner::predict_hier`] against the event
+/// simulator on tapered three-level fabrics: across the calibrated sweep
+/// (64 ranks on 8-rank nodes, 4 KiB – 256 KiB chunks, core taper 0.25,
+/// `inter_bw` set to the core-tapered uplink), the closed form stays
+/// within a factor of [`HIER_CALIBRATION_TOLERANCE`] of the simulated
+/// time in both directions. The dominant modeled-vs-simulated gaps are
+/// (a) the intra-node gather, which the closed form serializes per
+/// message while the simulator overlaps arrivals, and (b) inter-node
+/// link contention, which the closed form folds into the single
+/// `inter_bw` rate. Asserted by `tests/tuner_and_config.rs`; tightening
+/// this constant is the open calibration item in ROADMAP.md.
+pub const HIER_CALIBRATION_TOLERANCE: f64 = 6.0;
 
 /// A tuner decision with its predicted cost.
 #[derive(Debug, Clone)]
@@ -79,7 +92,9 @@ impl Tuner {
         while a <= full {
             let need = match coll {
                 Collective::AllGather => a,
-                Collective::ReduceScatter => {
+                // All-reduce staging is bounded by its reduce-scatter
+                // phase (the accumulator law), so both use the RS law.
+                Collective::ReduceScatter | Collective::AllReduce => {
                     let levels = (ceil_log2(nranks.max(2)) as usize)
                         .saturating_sub(a.trailing_zeros() as usize)
                         .max(1);
@@ -200,6 +215,134 @@ impl Tuner {
                 + fan_chunks * chunk_bytes as f64 / self.nic_bw;
         }
         t
+    }
+
+    /// Predicted wall time of one compose phase ([`PhaseAlg`]) moving
+    /// `chunk_bytes` per chunk. The Bruck/recursive baselines share the
+    /// fully-aggregated PAT shape; hierarchical phases need the placement
+    /// (flat PAT is the fallback without one). Reduce-scatter phases are
+    /// costed like their all-gather mirror plus the reduction datapath
+    /// over the received payload.
+    pub fn predict_phase(
+        &self,
+        alg: PhaseAlg,
+        nranks: usize,
+        chunk_bytes: usize,
+        coll: Collective,
+        placement: Option<&Placement>,
+    ) -> f64 {
+        let rate = self.flat_rate(placement);
+        let mut t = match alg {
+            PhaseAlg::Ring => {
+                let ring_rate = if placement.is_some_and(|pl| pl.nnodes() > 1) {
+                    self.leader_rate()
+                } else {
+                    self.nic_bw
+                };
+                self.predict_ring_at(nranks, chunk_bytes, ring_rate)
+            }
+            PhaseAlg::Pat { aggregation } => {
+                self.predict_pat_at(nranks, aggregation, chunk_bytes, rate)
+            }
+            PhaseAlg::BruckNearFirst | PhaseAlg::BruckFarFirst | PhaseAlg::Recursive => {
+                self.predict_pat_at(nranks, usize::MAX, chunk_bytes, rate)
+            }
+            PhaseAlg::HierPat { aggregation } => match placement {
+                Some(pl) => self.predict_hier(pl, aggregation, chunk_bytes),
+                None => self.predict_pat_at(nranks, aggregation, chunk_bytes, rate),
+            },
+        };
+        if coll == Collective::ReduceScatter && nranks > 1 {
+            t += self.cost.reduce_cost((nranks - 1) * chunk_bytes);
+        }
+        t
+    }
+
+    /// Predicted wall time of the pipelined composition
+    /// `rs+ag:segments` ([`Algorithm::Compose`]): `chunk_bytes` is the
+    /// per-chunk payload of ONE segment (i.e. total bytes / (nranks ×
+    /// segments)). Classic two-stage pipeline bound: the first segment
+    /// pays both phases, every further segment hides behind the slower
+    /// phase.
+    ///
+    /// Known bias: the bound assumes the two phases overlap on disjoint
+    /// resources, so it is optimistic at bandwidth-bound sizes on
+    /// strongly tapered fabrics, where both phases share the core
+    /// bottleneck and the measured crossover
+    /// (`benches/allreduce_compose.rs`) favours fewer segments.
+    /// Calibrating this against the simulator (as `predict_hier` is) is
+    /// an open ROADMAP item.
+    pub fn predict_allreduce(
+        &self,
+        rs: PhaseAlg,
+        ag: PhaseAlg,
+        segments: usize,
+        nranks: usize,
+        chunk_bytes: usize,
+        placement: Option<&Placement>,
+    ) -> f64 {
+        let segments = segments.max(1);
+        let t_rs = self.predict_phase(rs, nranks, chunk_bytes, Collective::ReduceScatter, placement);
+        let t_ag = self.predict_phase(ag, nranks, chunk_bytes, Collective::AllGather, placement);
+        t_rs + t_ag + (segments - 1) as f64 * t_rs.max(t_ag)
+    }
+
+    /// All-reduce crossover: sweep algorithm pairs × segment counts and
+    /// return the cheapest [`Algorithm::Compose`]. `chunk_bytes` is the
+    /// single-segment per-chunk payload (total bytes per rank / nranks);
+    /// each candidate with `S` segments is costed at `chunk_bytes / S`.
+    /// The buffer budget bounds the PAT aggregation exactly as for the
+    /// standalone collectives (the reduce-scatter law is the binding
+    /// one); hierarchical pairs are offered under the same leader-staging
+    /// gate as [`Tuner::choose_placed`].
+    pub fn choose_allreduce(
+        &self,
+        nranks: usize,
+        chunk_bytes: usize,
+        buffer_slots: usize,
+        placement: Option<&Placement>,
+    ) -> TunerChoice {
+        // Pipelining keeps up to two segments' buffer footprints live at
+        // once (segment i's staged finals + segment i+1's accumulators),
+        // so the aggregation is sized against half the budget.
+        let a = self.max_aggregation(
+            nranks,
+            (buffer_slots / 2).max(1),
+            Collective::ReduceScatter,
+        );
+        let mut phases = vec![
+            PhaseAlg::Pat { aggregation: a },
+            PhaseAlg::Pat { aggregation: 1 },
+            PhaseAlg::Ring,
+        ];
+        // A clamped budget makes the first two coincide; don't cost the
+        // same pair twice.
+        phases.dedup();
+        if let Some(pl) = placement {
+            if pl.nnodes() > 1 && pl.nnodes() < nranks && buffer_slots >= nranks {
+                phases.push(PhaseAlg::HierPat {
+                    aggregation: pat::clamp_aggregation(pl.nnodes(), usize::MAX),
+                });
+            }
+        }
+        let mut candidates = Vec::new();
+        for &rs in &phases {
+            for &ag in &phases {
+                for segments in [1usize, 2, 4, 8] {
+                    let seg_bytes = (chunk_bytes / segments).max(1);
+                    candidates.push((
+                        Algorithm::Compose { rs, ag, segments },
+                        self.predict_allreduce(rs, ag, segments, nranks, seg_bytes, placement),
+                    ));
+                }
+            }
+        }
+        candidates.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+        TunerChoice {
+            algorithm: candidates[0].0,
+            predicted_seconds: candidates[0].1,
+            candidates,
+        }
     }
 
     /// Choose an algorithm for `nranks`, `chunk_bytes` per rank, and a
@@ -387,6 +530,65 @@ mod tests {
                 pick.algorithm
             );
         }
+    }
+
+    /// The pipeline formula: one segment pays both phases; S segments at
+    /// tiny sizes only add serialized stages (S=1 wins), while at
+    /// bandwidth-bound sizes splitting shrinks every stage (S>1 wins) —
+    /// the segment-count crossover.
+    #[test]
+    fn allreduce_segment_crossover() {
+        let t = Tuner::default();
+        let n = 64;
+        let rs = PhaseAlg::Pat { aggregation: usize::MAX };
+        let s1 = t.predict_allreduce(rs, rs, 1, n, 1024, None);
+        let t_rs = t.predict_phase(rs, n, 1024, Collective::ReduceScatter, None);
+        let t_ag = t.predict_phase(rs, n, 1024, Collective::AllGather, None);
+        assert!((s1 - (t_rs + t_ag)).abs() < 1e-12);
+
+        let tiny = t.choose_allreduce(n, 64, 1 << 30, None);
+        match tiny.algorithm {
+            Algorithm::Compose { segments, .. } => assert_eq!(segments, 1, "{:?}", tiny.algorithm),
+            other => panic!("expected a composition, got {other:?}"),
+        }
+        let big = t.choose_allreduce(n, 4 << 20, 1 << 30, None);
+        match big.algorithm {
+            Algorithm::Compose { segments, .. } => {
+                assert!(segments > 1, "{:?}", big.algorithm)
+            }
+            other => panic!("expected a composition, got {other:?}"),
+        }
+    }
+
+    /// Hierarchical pairs obey the same leader-staging budget gate as the
+    /// standalone hierarchical candidates.
+    #[test]
+    fn allreduce_hier_pairs_gated_on_budget() {
+        let pl = Placement::uniform(64, 8).unwrap();
+        let t = Tuner {
+            inter_bw: Some(CostModel::ib_hdr_nic_bw()),
+            ..Tuner::default()
+        };
+        let tight = t.choose_allreduce(64, 1 << 20, 16, Some(&pl));
+        assert!(
+            tight.candidates.iter().all(|(alg, _)| match alg {
+                Algorithm::Compose { rs, ag, .. } => {
+                    !matches!(rs, PhaseAlg::HierPat { .. })
+                        && !matches!(ag, PhaseAlg::HierPat { .. })
+                }
+                _ => true,
+            }),
+            "{:?}",
+            tight.candidates
+        );
+        let roomy = t.choose_allreduce(64, 1 << 20, usize::MAX / 2, Some(&pl));
+        assert!(
+            roomy.candidates.iter().any(|(alg, _)| matches!(
+                alg,
+                Algorithm::Compose { rs: PhaseAlg::HierPat { .. }, .. }
+            )),
+            "hier pairs should be on offer with a roomy budget"
+        );
     }
 
     /// Hierarchical candidates need the leader staging budget (~n slots);

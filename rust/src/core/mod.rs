@@ -18,7 +18,9 @@ pub type Rank = usize;
 /// `c`'s output.
 pub type ChunkId = usize;
 
-/// The two collectives PAT implements (the paper's scope).
+/// The two collectives PAT implements (the paper's scope), plus the
+/// workload NCCL composes them into: all-reduce as reduce-scatter followed
+/// by all-gather (see [`crate::sched::compose`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Collective {
     /// Every rank contributes one chunk; every rank ends with all `n` chunks.
@@ -26,6 +28,11 @@ pub enum Collective {
     /// Every rank contributes `n` chunks; rank `r` ends with the element-wise
     /// sum over ranks of chunk `r`.
     ReduceScatter,
+    /// Every rank contributes all chunks; every rank ends with the full
+    /// element-wise sum of every chunk. Programs for this collective are
+    /// RS∘AG compositions: reducing receives until a chunk's owner holds
+    /// the complete sum, plain receives while it is rebroadcast.
+    AllReduce,
 }
 
 impl Collective {
@@ -33,6 +40,7 @@ impl Collective {
         match self {
             Collective::AllGather => "all_gather",
             Collective::ReduceScatter => "reduce_scatter",
+            Collective::AllReduce => "all_reduce",
         }
     }
 }
@@ -73,9 +81,84 @@ pub enum Algorithm {
     /// [`crate::sched::generate_placed`]); without one, contiguous nodes of
     /// 8 ranks are assumed.
     HierPat { aggregation: usize },
+    /// All-reduce composition: a reduce-scatter phase run with `rs`, an
+    /// all-gather phase run with `ag`, fused into one program with the
+    /// payload split into `segments` pipeline segments — segment `i`'s
+    /// all-gather overlaps segment `i+1`'s reduce-scatter (see
+    /// [`crate::sched::compose`]). Spelled `rs+ag[:segments]`, e.g.
+    /// `pat+ring:4`. Mixed pairs are allowed; only valid for
+    /// [`Collective::AllReduce`].
+    Compose { rs: PhaseAlg, ag: PhaseAlg, segments: usize },
+}
+
+/// A non-composed algorithm usable as one phase of [`Algorithm::Compose`].
+///
+/// Mirrors the flat/hierarchical variants of [`Algorithm`] (everything but
+/// `PatAuto`, which the tuner must resolve first, and `Compose` itself).
+/// Kept as a separate `Copy` enum so `Algorithm` stays `Copy` despite the
+/// nesting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseAlg {
+    Ring,
+    BruckNearFirst,
+    BruckFarFirst,
+    Recursive,
+    Pat { aggregation: usize },
+    HierPat { aggregation: usize },
+}
+
+impl PhaseAlg {
+    /// The equivalent stand-alone [`Algorithm`].
+    pub fn to_algorithm(self) -> Algorithm {
+        match self {
+            PhaseAlg::Ring => Algorithm::Ring,
+            PhaseAlg::BruckNearFirst => Algorithm::BruckNearFirst,
+            PhaseAlg::BruckFarFirst => Algorithm::BruckFarFirst,
+            PhaseAlg::Recursive => Algorithm::Recursive,
+            PhaseAlg::Pat { aggregation } => Algorithm::Pat { aggregation },
+            PhaseAlg::HierPat { aggregation } => Algorithm::HierPat { aggregation },
+        }
+    }
+
+    /// Convert a stand-alone algorithm into a compose phase. `PatAuto` and
+    /// nested `Compose` are rejected.
+    pub fn from_algorithm(alg: Algorithm) -> Result<PhaseAlg> {
+        match alg {
+            Algorithm::Ring => Ok(PhaseAlg::Ring),
+            Algorithm::BruckNearFirst => Ok(PhaseAlg::BruckNearFirst),
+            Algorithm::BruckFarFirst => Ok(PhaseAlg::BruckFarFirst),
+            Algorithm::Recursive => Ok(PhaseAlg::Recursive),
+            Algorithm::Pat { aggregation } => Ok(PhaseAlg::Pat { aggregation }),
+            Algorithm::HierPat { aggregation } => Ok(PhaseAlg::HierPat { aggregation }),
+            Algorithm::PatAuto | Algorithm::Compose { .. } => Err(Error::Config(format!(
+                "{alg} cannot be used as a compose phase"
+            ))),
+        }
+    }
+
+    /// Parse a phase spelling (same grammar as the flat algorithms).
+    pub fn parse(s: &str) -> Result<PhaseAlg> {
+        PhaseAlg::from_algorithm(Algorithm::parse(s)?)
+    }
+
+    /// Canonical config spelling (round-trips through [`PhaseAlg::parse`]).
+    pub fn spec(&self) -> String {
+        self.to_algorithm().spec()
+    }
+
+    /// Human-readable label (matches [`Algorithm::name`]).
+    pub fn name(&self) -> String {
+        self.to_algorithm().name()
+    }
+
+    pub fn supports(&self, nranks: usize) -> bool {
+        self.to_algorithm().supports(nranks)
+    }
 }
 
 impl Algorithm {
+    /// Human-readable label (used in program names, tables, reports).
+    /// For the canonical *parseable* spelling use [`Algorithm::spec`].
     pub fn name(&self) -> String {
         match self {
             Algorithm::Ring => "ring".into(),
@@ -91,14 +174,66 @@ impl Algorithm {
                 "hier_pat(full)".into()
             }
             Algorithm::HierPat { aggregation } => format!("hier_pat(a={aggregation})"),
+            Algorithm::Compose { rs, ag, segments } => {
+                format!("{}+{}:{segments}", rs.name(), ag.name())
+            }
+        }
+    }
+
+    /// Canonical config/CLI spelling — guaranteed to round-trip through
+    /// [`Algorithm::parse`] (`parse(a.spec()) == a`; aggregation factors at
+    /// or above `usize::MAX / 2` normalize to the bare "full" spelling).
+    /// `Display` uses this, so error messages and CLI output can be pasted
+    /// back into `--alg` / config files verbatim.
+    pub fn spec(&self) -> String {
+        match self {
+            Algorithm::Ring => "ring".into(),
+            Algorithm::BruckNearFirst => "bruck_near".into(),
+            Algorithm::BruckFarFirst => "bruck_far".into(),
+            Algorithm::Recursive => "recursive".into(),
+            Algorithm::Pat { aggregation } if *aggregation >= usize::MAX / 2 => "pat".into(),
+            Algorithm::Pat { aggregation } => format!("pat:{aggregation}"),
+            Algorithm::PatAuto => "pat_auto".into(),
+            Algorithm::HierPat { aggregation } if *aggregation >= usize::MAX / 2 => {
+                "hier_pat".into()
+            }
+            Algorithm::HierPat { aggregation } => format!("hier_pat:{aggregation}"),
+            Algorithm::Compose { rs, ag, segments } => {
+                format!("{}+{}:{segments}", rs.spec(), ag.spec())
+            }
         }
     }
 
     /// Parse a CLI/config spelling: `ring`, `bruck_near`, `bruck_far`,
     /// `recursive`, `pat`, `pat:<agg>`, `pat_auto`, `hier_pat`,
-    /// `hier_pat:<agg>`.
+    /// `hier_pat:<agg>`, or the all-reduce composition `rs+ag[:<segments>]`
+    /// (e.g. `pat+ring:4`).
+    ///
+    /// ## Composition grammar
+    ///
+    /// The text left of `+` is the reduce-scatter phase, the text right of
+    /// it the all-gather phase, and a trailing `:<int>` that leaves a valid
+    /// phase spelling behind is the segment count (default 1). A trailing
+    /// integer therefore always binds to *segments*: `pat+pat:4` is four
+    /// segments of fully-aggregated PAT; to pin the all-gather aggregation
+    /// instead, spell the segments explicitly (`pat+pat:4:1`).
     pub fn parse(s: &str) -> Result<Algorithm> {
         let s = s.trim();
+        if let Some((left, right)) = s.split_once('+') {
+            let rs = PhaseAlg::parse(left)?;
+            let (ag_spec, segments) = match right.rsplit_once(':') {
+                Some((pre, suf)) => match suf.trim().parse::<usize>() {
+                    Ok(k) if PhaseAlg::parse(pre).is_ok() => (pre, k),
+                    _ => (right, 1),
+                },
+                None => (right, 1),
+            };
+            if segments == 0 {
+                return Err(Error::Config("compose segments must be >= 1".into()));
+            }
+            let ag = PhaseAlg::parse(ag_spec)?;
+            return Ok(Algorithm::Compose { rs, ag, segments });
+        }
         if let Some(rest) = s.strip_prefix("pat:") {
             let a: usize = rest
                 .parse()
@@ -133,14 +268,29 @@ impl Algorithm {
     pub fn supports(&self, nranks: usize) -> bool {
         match self {
             Algorithm::Recursive => nranks.is_power_of_two(),
+            Algorithm::Compose { rs, ag, .. } => rs.supports(nranks) && ag.supports(nranks),
             _ => nranks >= 1,
+        }
+    }
+
+    /// Does generating this algorithm consume a rank [`Placement`]? True
+    /// for [`Algorithm::HierPat`] and for compositions with a hierarchical
+    /// phase; callers route these through
+    /// [`crate::sched::generate_placed`].
+    pub fn uses_placement(&self) -> bool {
+        match self {
+            Algorithm::HierPat { .. } => true,
+            Algorithm::Compose { rs, ag, .. } => {
+                matches!(rs, PhaseAlg::HierPat { .. }) || matches!(ag, PhaseAlg::HierPat { .. })
+            }
+            _ => false,
         }
     }
 }
 
 impl fmt::Display for Algorithm {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.name())
+        f.write_str(&self.spec())
     }
 }
 
@@ -269,5 +419,99 @@ mod tests {
         assert!(Algorithm::Recursive.supports(8));
         assert!(!Algorithm::Recursive.supports(7));
         assert!(Algorithm::Pat { aggregation: 1 }.supports(7));
+        // compose inherits both phases' constraints
+        let c = Algorithm::Compose {
+            rs: PhaseAlg::Recursive,
+            ag: PhaseAlg::Ring,
+            segments: 2,
+        };
+        assert!(c.supports(8));
+        assert!(!c.supports(7));
+    }
+
+    #[test]
+    fn compose_grammar() {
+        assert_eq!(
+            Algorithm::parse("pat+ring:4").unwrap(),
+            Algorithm::Compose {
+                rs: PhaseAlg::Pat { aggregation: usize::MAX },
+                ag: PhaseAlg::Ring,
+                segments: 4
+            }
+        );
+        // a trailing integer binds to segments, not the AG aggregation...
+        assert_eq!(
+            Algorithm::parse("pat+pat:4").unwrap(),
+            Algorithm::Compose {
+                rs: PhaseAlg::Pat { aggregation: usize::MAX },
+                ag: PhaseAlg::Pat { aggregation: usize::MAX },
+                segments: 4
+            }
+        );
+        // ...so the AG aggregation is pinned by spelling segments explicitly
+        assert_eq!(
+            Algorithm::parse("pat+pat:4:1").unwrap(),
+            Algorithm::Compose {
+                rs: PhaseAlg::Pat { aggregation: usize::MAX },
+                ag: PhaseAlg::Pat { aggregation: 4 },
+                segments: 1
+            }
+        );
+        // default segment count is 1
+        assert_eq!(
+            Algorithm::parse("hier_pat:2+ring").unwrap(),
+            Algorithm::Compose {
+                rs: PhaseAlg::HierPat { aggregation: 2 },
+                ag: PhaseAlg::Ring,
+                segments: 1
+            }
+        );
+        assert!(Algorithm::parse("pat+ring:0").is_err());
+        assert!(Algorithm::parse("pat_auto+ring").is_err());
+        assert!(Algorithm::parse("pat+nope").is_err());
+        assert!(Algorithm::parse("+ring").is_err());
+    }
+
+    /// The satellite round-trip guarantee: `parse(display(a)) == a` for
+    /// every variant, including the nested `rs+ag[:segments]` grammar.
+    /// (This is what flushed out `Display` printing the human label
+    /// `pat(a=2)` instead of the parseable spelling `pat:2` — `Display`
+    /// now delegates to [`Algorithm::spec`].)
+    #[test]
+    fn display_parse_roundtrip_fuzz() {
+        // aggregation factors at/above usize::MAX/2 normalize to the bare
+        // "full" spelling, which parses back to usize::MAX — so the fuzz
+        // universe uses small factors plus the canonical MAX.
+        let aggs = [1usize, 2, 3, 4, 7, 8, 64, usize::MAX];
+        let mut flat = vec![
+            Algorithm::Ring,
+            Algorithm::BruckNearFirst,
+            Algorithm::BruckFarFirst,
+            Algorithm::Recursive,
+            Algorithm::PatAuto,
+        ];
+        for &a in &aggs {
+            flat.push(Algorithm::Pat { aggregation: a });
+            flat.push(Algorithm::HierPat { aggregation: a });
+        }
+        let mut all = flat.clone();
+        let phases: Vec<PhaseAlg> = flat
+            .iter()
+            .filter_map(|&a| PhaseAlg::from_algorithm(a).ok())
+            .collect();
+        for &rs in &phases {
+            for &ag in &phases {
+                for segments in [1usize, 2, 3, 4, 8, 17] {
+                    all.push(Algorithm::Compose { rs, ag, segments });
+                }
+            }
+        }
+        for a in all {
+            let shown = format!("{a}");
+            assert_eq!(shown, a.spec(), "{a:?}");
+            let back = Algorithm::parse(&shown)
+                .unwrap_or_else(|e| panic!("{a:?} displayed as {shown:?}: {e}"));
+            assert_eq!(back, a, "round-trip through {shown:?}");
+        }
     }
 }

@@ -18,18 +18,56 @@
 //!   PAT among per-node leaders → intra-node fan-out; uneven node sizes
 //!   supported), selected as [`core::Algorithm::HierPat`] and generated
 //!   through the placement-aware [`sched::generate_placed`].
+//! * [`sched::compose`] — the collective-composition tier:
+//!   [`core::Collective::AllReduce`] programs fused from *any*
+//!   reduce-scatter × *any* all-gather phase pair
+//!   ([`core::Algorithm::Compose`], spelled `rs+ag[:segments]`, e.g.
+//!   `pat+ring:4`), with the payload split into pipeline segments so one
+//!   segment's all-gather overlaps the next segment's reduce-scatter —
+//!   an IR-to-IR transform (chunk renaming, step staggering, FIFO-safe
+//!   stream interleaving, mirror reuse), not a third hand-written schedule.
 //! * [`transport`] — an in-process, threaded, real-byte-moving execution
 //!   engine with staging/accumulator buffer pools (the PAT buffer-occupancy
-//!   invariants are enforced here).
+//!   invariants are enforced here; for all-reduce one pool bounds the fused
+//!   accumulator + rebroadcast-staging footprint across both phases).
 //! * [`sim`] — an event-driven network simulator (fat-tree topologies,
-//!   static ECMP routing, α-β-γ cost model with link contention) used for
-//!   at-scale evaluation.
+//!   optional NVLink-class intra-node links via
+//!   [`sim::Topology::with_intra_node`], static ECMP routing, α-β-γ cost
+//!   model with link contention) used for at-scale evaluation; its
+//!   per-step spans make composed-phase overlap directly measurable.
 //! * [`runtime`] — PJRT bridge executing AOT-compiled JAX/Pallas reduction
 //!   kernels (HLO text artifacts) on the reduce-scatter datapath.
 //! * [`coordinator`] — the public [`coordinator::Communicator`] API plus the
-//!   algorithm auto-tuner (including the flat-vs-hierarchical crossover on
-//!   tapered fabrics) and configuration (`placement` / `ranks_per_node` /
-//!   `inter_gbps` knobs).
+//!   algorithm auto-tuner (the flat-vs-hierarchical crossover on tapered
+//!   fabrics and the all-reduce pair × segment-count crossover) and
+//!   configuration (`placement` / `ranks_per_node` / `inter_gbps` /
+//!   `segments` knobs).
+//!
+//! ## Pipeline
+//!
+//! Data flows through the stack in one direction:
+//!
+//! ```text
+//!    core::Algorithm ──► sched (generate / generate_placed / compose)
+//!                              │  Program IR (per-rank Send/Recv lists)
+//!                              ▼
+//!                        sched::verify  ← ground truth: FIFO, deadlock,
+//!                              │           exact sums, buffer occupancy
+//!              ┌───────────────┴────────────────┐
+//!              ▼                                ▼
+//!        transport (real bytes,           sim (event-driven, topology +
+//!        threads, buffer pools)           α-β-γ costs, link contention)
+//!              │                                │
+//!              └───────────────┬────────────────┘
+//!                              ▼
+//!                    coordinator (tuner crossovers, Communicator,
+//!                    config/CLI) — picks algorithms from closed forms
+//!                    calibrated against the simulator
+//! ```
+//!
+//! Every generator — flat, hierarchical, or composed — emits the same IR,
+//! is validated by the same verifier, and runs unmodified on both
+//! executors; that is the invariant that keeps the layers independent.
 //!
 //! ## Quickstart
 //!

@@ -61,23 +61,25 @@ fn print_usage() {
 USAGE: patcol <command> [--options]
 
 COMMANDS
-  explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs] [--trees]
+  explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs|ar] [--trees]
             [--placement SPEC | --ranks-per-node K]
-  run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs]
+  run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--datapath scalar|pjrt] [--buffer-slots S]
             [--placement SPEC | --ranks-per-node K]
-  simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs]
+  simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--topo flat|leaf_spine|three_level|dragonfly] [--taper F]
-            [--placement SPEC | --ranks-per-node K]
+            [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
   sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
-  tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs]
+  tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs|ar]
             [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
   selftest  [--max-ranks N]
 
 ALG: ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
      | hier_pat | hier_pat:<agg>   (two-level, placement-aware)
+     | rs+ag[:<segments>]          (all-reduce composition, e.g. pat+ring:4)
 SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)
-SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)"
+SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
+--intra-gbps models NVLink-class intra-node links (with --ranks-per-node)"
     );
 }
 
@@ -85,9 +87,21 @@ fn collective(args: &Args) -> Result<Collective> {
     match args.str("collective", "ag").as_str() {
         "ag" | "allgather" | "all_gather" => Ok(Collective::AllGather),
         "rs" | "reducescatter" | "reduce_scatter" => Ok(Collective::ReduceScatter),
+        "ar" | "allreduce" | "all_reduce" => Ok(Collective::AllReduce),
         other => Err(patcol::core::Error::Config(format!(
             "unknown collective {other:?}"
         ))),
+    }
+}
+
+/// Collective for this invocation: a composed algorithm always runs as
+/// all-reduce (the only collective it can generate); the `--collective`
+/// flag is still parsed so typos keep failing loudly.
+fn collective_for(args: &Args, alg: Option<Algorithm>) -> Result<Collective> {
+    let coll = collective(args)?;
+    match alg {
+        Some(Algorithm::Compose { .. }) => Ok(Collective::AllReduce),
+        _ => Ok(coll),
     }
 }
 
@@ -121,7 +135,7 @@ fn generate_for_cli(
     coll: Collective,
     nranks: usize,
 ) -> Result<patcol::sched::Program> {
-    if let Algorithm::HierPat { .. } = alg {
+    if alg.uses_placement() {
         let pl = placement_or_default(args, nranks)?;
         sched::generate_placed(alg, coll, &pl)
     } else {
@@ -132,46 +146,84 @@ fn generate_for_cli(
 fn topology(args: &Args, nranks: usize) -> Result<Topology> {
     let nic = CostModel::ib_hdr_nic_bw();
     let taper = args.f64("taper", 1.0)?;
-    match args.str("topo", "flat").as_str() {
-        "flat" => Ok(Topology::flat(nranks, nic)),
+    let mut topo = match args.str("topo", "flat").as_str() {
+        "flat" => Topology::flat(nranks, nic),
         "leaf_spine" => {
             let g = args.usize("ranks-per-leaf", 8.min(nranks))?;
             let s = args.usize("spines", (g).max(1))?;
-            Topology::leaf_spine(nranks, g, s, nic, taper)
+            Topology::leaf_spine(nranks, g, s, nic, taper)?
         }
         "three_level" => {
             let g = args.usize("ranks-per-leaf", 8.min(nranks))?;
             let lp = args.usize("leaves-per-pod", 4)?;
             let sp = args.usize("spines-per-pod", g)?;
             let c = args.usize("cores", sp)?;
-            Topology::three_level(nranks, g, lp, sp, c, nic, 1.0, taper)
+            Topology::three_level(nranks, g, lp, sp, c, nic, 1.0, taper)?
         }
         "dragonfly" => {
             let g = args.usize("ranks-per-group", 8.min(nranks))?;
-            Topology::dragonfly(nranks, g, nic, nic * taper)
+            Topology::dragonfly(nranks, g, nic, nic * taper)?
         }
-        other => Err(patcol::core::Error::Config(format!(
-            "unknown topology {other:?}"
-        ))),
+        other => {
+            return Err(patcol::core::Error::Config(format!(
+                "unknown topology {other:?}"
+            )))
+        }
+    };
+    // NVLink-class intra-node links (`--intra-gbps`, sized by
+    // --ranks-per-node): local traffic leaves the NIC links.
+    let intra_gbps = args.f64("intra-gbps", 0.0)?;
+    if intra_gbps > 0.0 {
+        let k = args.usize("ranks-per-node", 8.min(nranks).max(1))?;
+        topo = topo.with_intra_node(k, intra_gbps * 1e9)?;
     }
+    Ok(topo)
 }
 
 fn cmd_explain(args: &Args) -> Result<()> {
     let n = args.usize("ranks", 8)?;
     let agg = args.usize("agg", usize::MAX)?;
-    let coll = collective(args)?;
     let alg = match args.opt_str("alg") {
         Some(s) => Algorithm::parse(&s)?,
         None => Algorithm::Pat { aggregation: agg },
     };
+    let coll = collective_for(args, Some(alg))?;
     let prog = generate_for_cli(args, alg, coll, n)?;
     println!("{}", explain::render_steps(&prog));
     if let Algorithm::Pat { .. } = alg {
         println!("{}", explain::render_pat_tree(n, agg));
     }
     if let Algorithm::HierPat { aggregation } = alg {
-        let pl = placement_or_default(args, n)?;
-        println!("{}", explain::render_hier_phases(&prog, &pl, aggregation));
+        // The hierarchical phase table describes a single-phase program;
+        // for all-reduce the compose view below covers both phases.
+        if coll != Collective::AllReduce {
+            let pl = placement_or_default(args, n)?;
+            println!("{}", explain::render_hier_phases(&prog, &pl, aggregation));
+        }
+    }
+    // Compose view: an explicit pair, or the lifted `alg+alg:1` an
+    // all-reduce resolves a bare algorithm to.
+    let compose_view = match alg {
+        Algorithm::Compose { rs, ag, segments } => Some((rs, ag, segments)),
+        _ if coll == Collective::AllReduce => {
+            patcol::core::PhaseAlg::from_algorithm(alg).ok().map(|p| (p, p, 1))
+        }
+        _ => None,
+    };
+    if let Some((rs, ag, segments)) = compose_view {
+        let pl = if alg.uses_placement() {
+            Some(placement_or_default(args, n)?)
+        } else {
+            placement_opt(args, n)?
+        };
+        let build = |a: Algorithm, c: Collective| match &pl {
+            Some(p) => sched::generate_placed(a, c, p),
+            None => sched::generate(a, c, n),
+        };
+        let rsp = build(rs.to_algorithm(), Collective::ReduceScatter)?;
+        let agp = build(ag.to_algorithm(), Collective::AllGather)?;
+        let layout = sched::compose::Layout::of(&rsp, &agp, segments);
+        println!("{}", explain::render_compose_phases(&prog, &layout));
     }
     if args.flag("trees") {
         println!("{}", explain::render_root_trees(&prog));
@@ -188,11 +240,11 @@ fn cmd_explain(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let n = args.usize("ranks", 8)?;
     let size = args.bytes("size", 64 * 1024)?;
-    let coll = collective(args)?;
     let alg = match args.opt_str("alg") {
         Some(s) => Some(Algorithm::parse(&s)?),
         None => None,
     };
+    let coll = collective_for(args, alg)?;
     let datapath = match args.str("datapath", "scalar").as_str() {
         "pjrt" => DataPathKind::Pjrt,
         _ => DataPathKind::Scalar,
@@ -230,6 +282,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             let (_, rep) = comm.reduce_scatter_report(&inputs)?;
             (rep, (n - 1) * chunk * 4)
         }
+        Collective::AllReduce => {
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0f32; chunk];
+                    rng.fill_f32(&mut v);
+                    v
+                })
+                .collect();
+            let (_, rep) = comm.all_reduce_report(&inputs)?;
+            // RS + AG payload per rank, the 2(n-1)/n · bytes convention
+            (rep, 2 * (n - 1) * chunk * 4 / n.max(1))
+        }
     };
     let wall = rep.transport.wall.as_secs_f64();
     println!(
@@ -251,11 +315,11 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.usize("ranks", 64)?;
     let size = args.bytes("size", 64 * 1024)?;
-    let coll = collective(args)?;
     let alg = Algorithm::parse(&args.str("alg", "pat"))?;
+    let coll = collective_for(args, Some(alg))?;
     let topo = topology(args, n)?;
     let cost = CostModel::ib_hdr();
-    if let Algorithm::HierPat { .. } = alg {
+    if alg.uses_placement() {
         // Intra-node traffic must stay under one switch; reject placements
         // that straddle fat-tree leaves up front.
         let pl = placement_or_default(args, n)?;
@@ -288,10 +352,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "{} {} ranks={} chunk={} topo={}",
         alg, coll, n, fmt_bytes(size), topo.name
     );
+    // Payload convention: AG/RS move (n-1) chunks per rank; all-reduce
+    // moves 2(n-1)/n of the full per-rank vector (chunk_space chunks).
+    let payload = match coll {
+        Collective::AllReduce => 2 * (n - 1) * prog.chunk_space() * size / n.max(1),
+        _ => (n - 1) * size,
+    };
     println!(
         "  time={}  algbw={}/s  msgs={}  bytes={}  bytes_links={:.2e}",
         fmt_time_s(rep.total_time),
-        fmt_bytes(rep.algbw((n - 1) * size) as usize),
+        fmt_bytes(rep.algbw(payload) as usize),
         rep.messages,
         fmt_bytes(rep.bytes_sent),
         rep.bytes_links,
@@ -360,7 +430,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
         ..Tuner::default()
     };
     let placement = placement_opt(args, n)?;
-    let choice = tuner.choose_placed(n, size, slots, coll, placement.as_ref());
+    let choice = if coll == Collective::AllReduce {
+        // --size is the per-rank payload; the all-reduce sweep costs
+        // candidates at the single-segment per-chunk size (size / n),
+        // matching Communicator::all_reduce_report's resolution.
+        tuner.choose_allreduce(n, (size / n.max(1)).max(1), slots, placement.as_ref())
+    } else {
+        tuner.choose_placed(n, size, slots, coll, placement.as_ref())
+    };
     println!(
         "tune: ranks={n} chunk={} buffer_slots={slots} {coll}{}",
         fmt_bytes(size),
@@ -401,6 +478,25 @@ fn cmd_selftest(args: &Args) -> Result<()> {
                 let prog = sched::generate(alg, coll, n)?;
                 sched::verify::verify_program(&prog).map_err(|e| {
                     patcol::core::Error::Verify(format!("{alg} {coll} n={n}: {e}"))
+                })?;
+                count += 1;
+            }
+        }
+    }
+    // All-reduce compositions: mixed pairs × segment counts.
+    for n in 2..=max.min(17) {
+        for spec in ["pat+pat", "pat:2+ring:2", "ring+pat:4", "hier_pat:2+pat:2"] {
+            let alg = Algorithm::parse(spec)?;
+            for segments in [1usize, 2, 4] {
+                let alg = match alg {
+                    Algorithm::Compose { rs, ag, .. } => {
+                        Algorithm::Compose { rs, ag, segments }
+                    }
+                    other => other,
+                };
+                let prog = sched::generate(alg, Collective::AllReduce, n)?;
+                sched::verify::verify_program(&prog).map_err(|e| {
+                    patcol::core::Error::Verify(format!("{alg} all_reduce n={n}: {e}"))
                 })?;
                 count += 1;
             }

@@ -1,0 +1,407 @@
+//! Collective composition: fuse a reduce-scatter program with an all-gather
+//! program into one all-reduce [`Program`], with *segment pipelining*.
+//!
+//! NCCL builds all-reduce as reduce-scatter followed by all-gather — the
+//! workload PAT's two primitives exist to serve. Run sequentially, the
+//! composition executes both phases back to back. This module pipelines
+//! the composition the way production collectives do, by *segmenting*:
+//! the payload splits into `S` equal segments, each an independent
+//! all-reduce over its own chunk space, staggered so that segment `i`'s
+//! all-gather shares its step range with segment `i+1`'s reduce-scatter.
+//!
+//! Two execution models consume the fused program:
+//!
+//! * the verifier and the threaded transport run each rank as ONE
+//!   in-order stream (the merged op order below) — correctness and the
+//!   fused staging-slot bound are checked there;
+//! * the simulator runs each segment as its own NCCL-style *channel*
+//!   (independent per-rank stream + per-channel connection), so segments
+//!   genuinely overlap in time while contending for the same links.
+//!
+//! Where it pays: at latency-to-mid payload sizes the overlapping
+//! channels fill each other's link idle gaps and `pat+pat:4` beats the
+//! sequential `pat+pat:1` on the 256-rank tapered fat-tree. At
+//! bandwidth-bound sizes both phases saturate the same tapered core
+//! links, so overlap cannot add bandwidth and the sequential composition
+//! wins — `benches/allreduce_compose.rs` measures exactly that crossover
+//! and the tuner sweeps segment counts against it.
+//!
+//! ## The IR-to-IR transform
+//!
+//! [`fuse`] takes *any* reduce-scatter program and *any* all-gather
+//! program over the same rank count (mixed generator pairs are fine:
+//! `pat+ring`, `hier_pat+pat`, …) and emits one [`Collective::AllReduce`]
+//! program:
+//!
+//! * **Chunk renaming** — segment `s` of the payload uses chunk ids
+//!   `s·n + c`; chunk `s·n + c` is owned by rank `c` (owner = id mod n),
+//!   so the segments' chunk spaces are disjoint and the verifier /
+//!   transport can execute all segments through one shared state machine.
+//! * **Step staggering** — segment `s`'s reduce-scatter occupies global
+//!   steps `[s·R, s·R + R)` and its all-gather `[(s+1)·R, (s+1)·R + A)`
+//!   (`R`/`A` = phase step counts), so segment `s`'s all-gather shares its
+//!   step range with segment `s+1`'s reduce-scatter — that is the overlap.
+//! * **FIFO-safe interleaving** — each rank's composed op list is the
+//!   merge of its 2·S per-phase streams ordered by `(global step, segment,
+//!   phase)`, preserving original in-stream order. Because every rank
+//!   merges by the same key and a message's send and recv carry the same
+//!   step in the source programs, the k-th send `s → d` still faces the
+//!   k-th recv at `d` from `s`: per-pair FIFO survives composition.
+//! * **Mirror reuse** — reduce-scatter phase programs come from
+//!   [`Program::mirror`] exactly as for the standalone collective; the
+//!   composer never re-derives a schedule, it only renames and interleaves.
+//!
+//! Receives keep their phase semantics through the `reduce` flag:
+//! reducing receives accumulate partial sums until a chunk's owner holds
+//! the complete reduction, plain receives install the rebroadcast final
+//! value (see `sched::verify::verify_program` for the reference executor
+//! and `transport::run_allreduce` for the real-byte engine).
+
+use crate::core::{ChunkId, Collective, Error, Placement, Result};
+use crate::sched::program::{Op, Program};
+
+/// Which half of the composition a step/message belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    ReduceScatter,
+    AllGather,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::ReduceScatter => "reduce-scatter",
+            Phase::AllGather => "all-gather",
+        }
+    }
+}
+
+/// The step grid of a composed program: where each segment's two phases
+/// sit, and how they overlap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    pub nranks: usize,
+    pub segments: usize,
+    /// Step count of one segment's reduce-scatter phase (the stagger).
+    pub rs_steps: usize,
+    /// Step count of one segment's all-gather phase.
+    pub ag_steps: usize,
+}
+
+impl Layout {
+    /// Layout of [`fuse`]`(rs, ag, segments)` without building the fused
+    /// program.
+    pub fn of(rs: &Program, ag: &Program, segments: usize) -> Layout {
+        Layout {
+            nranks: rs.nranks,
+            segments,
+            rs_steps: rs.steps,
+            ag_steps: ag.steps,
+        }
+    }
+
+    /// Total logical steps of the fused program.
+    pub fn total_steps(&self) -> usize {
+        if self.segments == 0 {
+            return 0;
+        }
+        self.segments * self.rs_steps + self.ag_steps
+    }
+
+    /// Global step range `[start, end)` of `segment`'s phase.
+    pub fn span(&self, segment: usize, phase: Phase) -> (usize, usize) {
+        debug_assert!(segment < self.segments);
+        let base = segment * self.rs_steps;
+        match phase {
+            Phase::ReduceScatter => (base, base + self.rs_steps),
+            Phase::AllGather => (base + self.rs_steps, base + self.rs_steps + self.ag_steps),
+        }
+    }
+
+    /// Classify a message of the fused program by its step and first chunk
+    /// id: `(segment, phase)`. The step alone is ambiguous (overlap is the
+    /// point), the chunk id pins the segment, and the step then pins the
+    /// phase.
+    pub fn classify(&self, step: usize, chunk: ChunkId) -> (usize, Phase) {
+        let segment = (chunk / self.nranks.max(1)).min(self.segments.saturating_sub(1));
+        let (_, rs_end) = self.span(segment, Phase::ReduceScatter);
+        if step < rs_end {
+            (segment, Phase::ReduceScatter)
+        } else {
+            (segment, Phase::AllGather)
+        }
+    }
+}
+
+/// The wall-clock window one (segment, phase) occupied in a simulation —
+/// built from the simulator's per-step spans so phase overlap is directly
+/// visible (segment `i`'s all-gather window intersecting segment `i+1`'s
+/// reduce-scatter window).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseWindow {
+    pub segment: usize,
+    pub phase: Phase,
+    /// Global step range `[start, end)`.
+    pub steps: (usize, usize),
+    /// Earliest link-serialization start of any message in the phase.
+    pub t_start: f64,
+    /// Latest arrival of any message in the phase.
+    pub t_end: f64,
+}
+
+/// Aggregate the simulator's per-step `(start, end)` spans (see
+/// `sim::SimReport::step_spans`) into per-(segment, phase) windows. Steps
+/// with no messages (the simulator's `(+inf, -inf)` sentinel) are skipped;
+/// phases with no traffic at all are omitted.
+pub fn phase_windows(layout: &Layout, step_spans: &[(f64, f64)]) -> Vec<PhaseWindow> {
+    let mut out = Vec::new();
+    for segment in 0..layout.segments {
+        for phase in [Phase::ReduceScatter, Phase::AllGather] {
+            let (lo, hi) = layout.span(segment, phase);
+            let mut t_start = f64::INFINITY;
+            let mut t_end = f64::NEG_INFINITY;
+            for step in lo..hi.min(step_spans.len()) {
+                let (s, e) = step_spans[step];
+                if s.is_finite() {
+                    t_start = t_start.min(s);
+                    t_end = t_end.max(e);
+                }
+            }
+            if t_start.is_finite() {
+                out.push(PhaseWindow { segment, phase, steps: (lo, hi), t_start, t_end });
+            }
+        }
+    }
+    out
+}
+
+/// Fuse a reduce-scatter program and an all-gather program over the same
+/// rank count into one pipelined all-reduce program with `segments`
+/// payload segments (see the module docs for the construction).
+pub fn fuse(rs: &Program, ag: &Program, segments: usize) -> Result<Program> {
+    if rs.collective != Collective::ReduceScatter {
+        return Err(Error::Schedule(format!(
+            "compose: reduce-scatter phase is a {} program",
+            rs.collective
+        )));
+    }
+    if ag.collective != Collective::AllGather {
+        return Err(Error::Schedule(format!(
+            "compose: all-gather phase is a {} program",
+            ag.collective
+        )));
+    }
+    if rs.nranks != ag.nranks {
+        return Err(Error::Schedule(format!(
+            "compose: phase rank counts differ ({} vs {})",
+            rs.nranks, ag.nranks
+        )));
+    }
+    if segments == 0 {
+        return Err(Error::Schedule("compose: segments must be >= 1".into()));
+    }
+    let n = rs.nranks;
+    let layout = Layout::of(rs, ag, segments);
+    let name = format!("{}+{}:{segments}", rs.algorithm, ag.algorithm);
+    let mut out = Program::new(n, Collective::AllReduce, name);
+
+    // Per rank: merge the 2·segments phase streams by (global step,
+    // segment, phase), preserving in-stream order. The merge key is the
+    // same on sender and receiver (a message's two sides share a source
+    // step), so per-pair FIFO order is preserved across the fuse.
+    struct Stream<'a> {
+        ops: &'a [Op],
+        idx: usize,
+        step_base: usize,
+        chunk_base: usize,
+        // (segment, phase-rank) merge tie-break; phase-rank orders a
+        // segment's RS before its AG if they ever share a step (R == 0).
+        key: (usize, usize),
+    }
+    for rank in 0..n {
+        let mut streams: Vec<Stream> = Vec::with_capacity(2 * segments);
+        for seg in 0..segments {
+            let (rs_lo, _) = layout.span(seg, Phase::ReduceScatter);
+            let (ag_lo, _) = layout.span(seg, Phase::AllGather);
+            streams.push(Stream {
+                ops: &rs.ranks[rank],
+                idx: 0,
+                step_base: rs_lo,
+                chunk_base: seg * n,
+                key: (seg, 0),
+            });
+            streams.push(Stream {
+                ops: &ag.ranks[rank],
+                idx: 0,
+                step_base: ag_lo,
+                chunk_base: seg * n,
+                key: (seg, 1),
+            });
+        }
+        loop {
+            let mut best: Option<(usize, (usize, usize, usize))> = None;
+            for (i, st) in streams.iter().enumerate() {
+                if let Some(op) = st.ops.get(st.idx) {
+                    let key = (st.step_base + op.step(), st.key.0, st.key.1);
+                    if best.map(|(_, bk)| key < bk).unwrap_or(true) {
+                        best = Some((i, key));
+                    }
+                }
+            }
+            let Some((i, _)) = best else { break };
+            let st = &mut streams[i];
+            let ops = st.ops; // copy of the shared slice reference
+            let op = &ops[st.idx];
+            st.idx += 1;
+            let step = st.step_base + op.step();
+            let chunk_base = st.chunk_base;
+            let remap = |chunks: &[ChunkId]| -> Vec<ChunkId> {
+                chunks.iter().map(|&c| chunk_base + c).collect()
+            };
+            let fused = match op {
+                Op::Send { peer, chunks, .. } => {
+                    Op::Send { peer: *peer, chunks: remap(chunks), step }
+                }
+                Op::Recv { peer, chunks, reduce, .. } => {
+                    Op::Recv { peer: *peer, chunks: remap(chunks), reduce: *reduce, step }
+                }
+            };
+            out.push(rank, fused);
+        }
+    }
+    Ok(out)
+}
+
+/// Convenience front-end: build the two phase programs for an algorithm
+/// pair over `nranks` (hierarchical phases use `placement`, or contiguous
+/// default-sized nodes when absent) and fuse them.
+pub fn allreduce(
+    rs: crate::core::PhaseAlg,
+    ag: crate::core::PhaseAlg,
+    segments: usize,
+    nranks: usize,
+    placement: Option<&Placement>,
+) -> Result<Program> {
+    let build = |alg: crate::core::Algorithm, coll: Collective| match placement {
+        Some(pl) => crate::sched::generate_placed(alg, coll, pl),
+        None => crate::sched::generate(alg, coll, nranks),
+    };
+    let rsp = build(rs.to_algorithm(), Collective::ReduceScatter)?;
+    let agp = build(ag.to_algorithm(), Collective::AllGather)?;
+    fuse(&rsp, &agp, segments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::PhaseAlg;
+    use crate::sched::verify::verify_program;
+    use crate::sched::{pat, ring};
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let ag = pat::allgather(8, 2);
+        let rs = pat::reduce_scatter(8, 2);
+        // wrong collectives in either slot
+        assert!(fuse(&ag, &ag, 1).is_err());
+        assert!(fuse(&rs, &rs, 1).is_err());
+        // rank mismatch
+        assert!(fuse(&pat::reduce_scatter(4, 2), &ag, 1).is_err());
+        // zero segments
+        assert!(fuse(&rs, &ag, 0).is_err());
+    }
+
+    #[test]
+    fn layout_spans_overlap_between_adjacent_segments() {
+        let rs = pat::reduce_scatter(8, 2);
+        let ag = ring::allgather(8);
+        let l = Layout::of(&rs, &ag, 3);
+        assert_eq!(l.total_steps(), 3 * rs.steps + ag.steps);
+        let (a0, a1) = l.span(0, Phase::AllGather);
+        let (r0, r1) = l.span(1, Phase::ReduceScatter);
+        // segment 0's all-gather shares its step range with segment 1's
+        // reduce-scatter — the pipelining overlap.
+        assert_eq!(a0, r0);
+        assert!(a0 < r1 && r0 < a1);
+        let p = fuse(&rs, &ag, 3).unwrap();
+        assert_eq!(p.steps, l.total_steps());
+    }
+
+    #[test]
+    fn fused_program_verifies_and_remaps_chunks() {
+        let n = 8;
+        let rs = pat::reduce_scatter(n, 2);
+        let ag = ring::allgather(n);
+        let p = fuse(&rs, &ag, 2).unwrap();
+        assert_eq!(p.collective, Collective::AllReduce);
+        assert_eq!(p.chunk_space(), 2 * n);
+        verify_program(&p).unwrap();
+        // chunk transfers: both phases move n(n-1) chunks per segment
+        assert_eq!(p.stats().chunk_transfers, 2 * 2 * n * (n - 1));
+    }
+
+    #[test]
+    fn single_segment_is_sequential_composition() {
+        let n = 6;
+        let rs = pat::reduce_scatter(n, 2);
+        let ag = pat::allgather(n, 2);
+        let p = fuse(&rs, &ag, 1).unwrap();
+        verify_program(&p).unwrap();
+        // every rank's op list is its RS ops then its AG ops
+        for r in 0..n {
+            assert_eq!(p.ranks[r].len(), rs.ranks[r].len() + ag.ranks[r].len());
+            for (i, op) in p.ranks[r].iter().enumerate() {
+                let reduce_phase = i < rs.ranks[r].len();
+                if let Op::Recv { reduce, .. } = op {
+                    assert_eq!(*reduce, reduce_phase, "rank {r} op {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_pairs_verify() {
+        for n in [2usize, 3, 7, 12, 16] {
+            for (rs, ag) in [
+                (PhaseAlg::Pat { aggregation: usize::MAX }, PhaseAlg::Ring),
+                (PhaseAlg::Ring, PhaseAlg::Pat { aggregation: 2 }),
+                (PhaseAlg::BruckFarFirst, PhaseAlg::BruckNearFirst),
+                (
+                    PhaseAlg::HierPat { aggregation: 2 },
+                    PhaseAlg::Pat { aggregation: 2 },
+                ),
+            ] {
+                for segments in [1usize, 2, 4] {
+                    let p = allreduce(rs, ag, segments, n, None).unwrap();
+                    verify_program(&p).unwrap_or_else(|e| {
+                        panic!("{}+{} n={n} s={segments}: {e}", rs.spec(), ag.spec())
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_single_rank() {
+        let p = allreduce(
+            PhaseAlg::Pat { aggregation: 1 },
+            PhaseAlg::Pat { aggregation: 1 },
+            4,
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!(p.total_ops(), 0);
+        verify_program(&p).unwrap();
+    }
+
+    #[test]
+    fn classify_disambiguates_overlapping_steps() {
+        let rs = pat::reduce_scatter(8, 2);
+        let ag = pat::allgather(8, 2);
+        let l = Layout::of(&rs, &ag, 2);
+        let overlap_step = rs.steps; // first step of seg0 AG and seg1 RS
+        assert_eq!(l.classify(overlap_step, 0), (0, Phase::AllGather));
+        assert_eq!(l.classify(overlap_step, 8), (1, Phase::ReduceScatter));
+    }
+}

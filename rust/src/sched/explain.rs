@@ -116,7 +116,9 @@ pub fn render_pat_tree(n: usize, a: usize) -> String {
 pub fn render_hier_phases(p: &Program, pl: &Placement, a: usize) -> String {
     let (s1, s2, s3) = hier::phase_spans(pl, a);
     let names: [&str; 3] = match p.collective {
-        Collective::AllGather => ["intra-node gather", "inter-node PAT", "intra-node fan-out"],
+        Collective::AllGather | Collective::AllReduce => {
+            ["intra-node gather", "inter-node PAT", "intra-node fan-out"]
+        }
         Collective::ReduceScatter => {
             ["intra-node fan-in", "inter-node PAT reduce", "intra-node scatter"]
         }
@@ -168,6 +170,55 @@ pub fn render_hier_phases(p: &Program, pl: &Placement, a: usize) -> String {
     out
 }
 
+/// Render the pipeline structure of a composed all-reduce program: one
+/// line per (segment, phase) with its step span, message count and chunk
+/// traffic. Adjacent lines sharing a step range are the pipelining overlap
+/// (segment i's all-gather running alongside segment i+1's
+/// reduce-scatter).
+pub fn render_compose_phases(p: &Program, layout: &crate::sched::compose::Layout) -> String {
+    use crate::sched::compose::Phase;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} / {} on {} ranks — {} steps, {} segment(s) (rs {} + ag {} steps each)",
+        p.algorithm,
+        p.collective,
+        p.nranks,
+        p.steps,
+        layout.segments,
+        layout.rs_steps,
+        layout.ag_steps
+    );
+    let nseg = layout.segments;
+    let mut msgs = vec![[0usize; 2]; nseg];
+    let mut chunks = vec![[0usize; 2]; nseg];
+    for m in p.messages() {
+        let Some(&c0) = m.chunks.first() else { continue };
+        let (seg, phase) = layout.classify(m.step, c0);
+        let pi = match phase {
+            Phase::ReduceScatter => 0,
+            Phase::AllGather => 1,
+        };
+        msgs[seg][pi] += 1;
+        chunks[seg][pi] += m.chunks.len();
+    }
+    for seg in 0..nseg {
+        for (pi, phase) in [Phase::ReduceScatter, Phase::AllGather].into_iter().enumerate() {
+            let (lo, hi) = layout.span(seg, phase);
+            let _ = writeln!(
+                out,
+                "  seg {seg} {:<14} steps {:>4}..{:<4} msgs {:>6} chunk-transfers {:>7}",
+                phase.as_str(),
+                lo,
+                hi,
+                msgs[seg][pi],
+                chunks[seg][pi]
+            );
+        }
+    }
+    out
+}
+
 /// Render the per-root binomial-tree decomposition (Fig. 2 / Fig. 4): for
 /// each root rank, the tree its chunk follows.
 pub fn render_root_trees(p: &Program) -> String {
@@ -183,10 +234,7 @@ pub fn render_root_trees(p: &Program) -> String {
                 edges.push((m.src, m.dst, m.step));
             }
         }
-        match p.collective {
-            Collective::AllGather => edges.sort_by_key(|e| e.2),
-            Collective::ReduceScatter => edges.sort_by_key(|e| e.2),
-        }
+        edges.sort_by_key(|e| e.2);
         for (src, dst, step) in edges {
             let _ = writeln!(out, "  step {step}: {src} -> {dst}");
         }
@@ -244,6 +292,23 @@ mod tests {
         let s = render_rank(&p, 0);
         assert!(s.contains("send ->"));
         assert!(s.contains("recv <-"));
+    }
+
+    #[test]
+    fn render_compose_lists_every_segment_phase() {
+        use crate::sched::compose::{self, Layout};
+        let rs = pat::reduce_scatter(8, 2);
+        let ag = crate::sched::ring::allgather(8);
+        let p = compose::fuse(&rs, &ag, 2).unwrap();
+        let layout = Layout::of(&rs, &ag, 2);
+        let s = render_compose_phases(&p, &layout);
+        assert!(s.contains("2 segment(s)"), "{s}");
+        assert!(s.contains("seg 0 reduce-scatter"), "{s}");
+        assert!(s.contains("seg 0 all-gather"), "{s}");
+        assert!(s.contains("seg 1 reduce-scatter"), "{s}");
+        assert!(s.contains("seg 1 all-gather"), "{s}");
+        // each phase moves n(n-1) = 56 chunks
+        assert!(s.matches(" 56").count() >= 4, "{s}");
     }
 
     #[test]

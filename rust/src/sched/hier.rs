@@ -315,7 +315,7 @@ mod tests {
             for coll in [Collective::AllGather, Collective::ReduceScatter] {
                 let (p, bound) = match coll {
                     Collective::AllGather => (allgather(&pl, 2), n - 1),
-                    Collective::ReduceScatter => (reduce_scatter(&pl, 2), n),
+                    _ => (reduce_scatter(&pl, 2), n),
                 };
                 let occ = verify_program(&p).unwrap();
                 assert!(

@@ -19,6 +19,12 @@
 //! [`Placement`] (intra-node tree, inter-node PAT among node leaders,
 //! intra-node fan-out) generated through the placement-aware front-end
 //! [`generate_placed`].
+//!
+//! [`compose`] adds the collective-composition tier: all-reduce programs
+//! fused from any reduce-scatter × any all-gather phase pair
+//! ([`Algorithm::Compose`], spelled `rs+ag[:segments]`), with the payload
+//! split into pipeline segments so one segment's all-gather overlaps the
+//! next segment's reduce-scatter.
 
 pub mod program;
 pub mod tree;
@@ -27,6 +33,7 @@ pub mod bruck;
 pub mod recursive;
 pub mod pat;
 pub mod hier;
+pub mod compose;
 pub mod verify;
 pub mod explain;
 
@@ -34,9 +41,9 @@ pub use program::{Op, Program, ProgramStats};
 pub use tree::{FarFirstTree, NearFirstTree};
 pub use verify::{verify_program, OccupancyReport};
 
-use crate::core::{Algorithm, Collective, Error, Placement, Result};
+use crate::core::{Algorithm, Collective, Error, PhaseAlg, Placement, Result};
 
-/// Default node size assumed when a hierarchical algorithm is requested
+/// Default node size assumed when a placement-aware algorithm is requested
 /// without an explicit placement (contiguous 8-rank nodes — the common
 /// GPUs-per-server count).
 pub const DEFAULT_RANKS_PER_NODE: usize = 8;
@@ -44,22 +51,70 @@ pub const DEFAULT_RANKS_PER_NODE: usize = 8;
 /// Generate a program for `algorithm` on `nranks`.
 ///
 /// For reduce-scatter, every algorithm is the mirror of its all-gather
-/// counterpart (recursive doubling mirrors to recursive halving).
-/// Placement-aware algorithms ([`Algorithm::HierPat`]) fall back to
-/// contiguous nodes of [`DEFAULT_RANKS_PER_NODE`]; use [`generate_placed`]
-/// to supply the real rank placement.
+/// counterpart (recursive doubling mirrors to recursive halving). For
+/// all-reduce, [`Algorithm::Compose`] fuses its two phases
+/// ([`compose::fuse`]); a non-composed algorithm is lifted to the
+/// single-segment symmetric composition `alg+alg:1`. Placement-aware
+/// algorithms ([`Algorithm::HierPat`], hierarchical compose phases) fall
+/// back to contiguous nodes of [`DEFAULT_RANKS_PER_NODE`]; use
+/// [`generate_placed`] to supply the real rank placement.
 pub fn generate(alg: Algorithm, coll: Collective, nranks: usize) -> Result<Program> {
     if nranks == 0 {
         return Err(Error::Schedule("nranks must be >= 1".into()));
     }
-    if let Algorithm::HierPat { .. } = alg {
+    if alg.uses_placement() {
         let pl = Placement::uniform(nranks, DEFAULT_RANKS_PER_NODE)?;
         return generate_placed(alg, coll, &pl);
     }
+    generate_inner(alg, coll, nranks, None)
+}
+
+/// Placement-aware generation front-end. [`Algorithm::HierPat`] (and
+/// compose pairs with a hierarchical phase) build their two-level schedules
+/// from `placement`; flat algorithms ignore it (their programs are
+/// placement-oblivious by construction).
+pub fn generate_placed(
+    alg: Algorithm,
+    coll: Collective,
+    placement: &Placement,
+) -> Result<Program> {
+    let nranks = placement.nranks();
+    if nranks == 0 {
+        return Err(Error::Schedule("placement must cover >= 1 rank".into()));
+    }
+    generate_inner(alg, coll, nranks, Some(placement))
+}
+
+fn generate_inner(
+    alg: Algorithm,
+    coll: Collective,
+    nranks: usize,
+    placement: Option<&Placement>,
+) -> Result<Program> {
     if !alg.supports(nranks) {
         return Err(Error::Unsupported(format!(
             "{alg} does not support nranks={nranks} (power-of-two required)"
         )));
+    }
+    if let Algorithm::Compose { rs, ag, segments } = alg {
+        if coll != Collective::AllReduce {
+            return Err(Error::Unsupported(format!(
+                "{alg} composes an all-reduce; it cannot generate {coll}"
+            )));
+        }
+        let rsp = generate_inner(rs.to_algorithm(), Collective::ReduceScatter, nranks, placement)?;
+        let agp = generate_inner(ag.to_algorithm(), Collective::AllGather, nranks, placement)?;
+        return compose::fuse(&rsp, &agp, segments);
+    }
+    if coll == Collective::AllReduce {
+        // Lift a bare algorithm to the symmetric sequential composition.
+        let ph = PhaseAlg::from_algorithm(alg)?;
+        return generate_inner(
+            Algorithm::Compose { rs: ph, ag: ph, segments: 1 },
+            coll,
+            nranks,
+            placement,
+        );
     }
     let ag = match alg {
         Algorithm::Ring => ring::allgather(nranks),
@@ -72,34 +127,22 @@ pub fn generate(alg: Algorithm, coll: Collective, nranks: usize) -> Result<Progr
                 "PatAuto must be resolved by the tuner before generation".into(),
             ))
         }
-        Algorithm::HierPat { .. } => unreachable!("handled above"),
+        Algorithm::HierPat { aggregation } => {
+            let default_pl;
+            let pl = match placement {
+                Some(pl) => pl,
+                None => {
+                    default_pl = Placement::uniform(nranks, DEFAULT_RANKS_PER_NODE)?;
+                    &default_pl
+                }
+            };
+            hier::allgather(pl, aggregation)
+        }
+        Algorithm::Compose { .. } => unreachable!("handled above"),
     };
     Ok(match coll {
         Collective::AllGather => ag,
         Collective::ReduceScatter => ag.mirror(),
+        Collective::AllReduce => unreachable!("handled above"),
     })
-}
-
-/// Placement-aware generation front-end. [`Algorithm::HierPat`] builds its
-/// two-level schedule from `placement`; flat algorithms ignore it (their
-/// programs are placement-oblivious by construction).
-pub fn generate_placed(
-    alg: Algorithm,
-    coll: Collective,
-    placement: &Placement,
-) -> Result<Program> {
-    let nranks = placement.nranks();
-    if nranks == 0 {
-        return Err(Error::Schedule("placement must cover >= 1 rank".into()));
-    }
-    match alg {
-        Algorithm::HierPat { aggregation } => {
-            let ag = hier::allgather(placement, aggregation);
-            Ok(match coll {
-                Collective::AllGather => ag,
-                Collective::ReduceScatter => ag.mirror(),
-            })
-        }
-        _ => generate(alg, coll, nranks),
-    }
 }

@@ -98,10 +98,12 @@ impl Program {
         self.ranks[rank].push(op);
     }
 
-    /// Mirror an all-gather program into the corresponding reduce-scatter
-    /// program: reverse each rank's op order, swap `Send`↔`Recv`, and set
-    /// `reduce` on the receives. Steps are renumbered so the mirrored first
-    /// step is step 0.
+    /// Mirror a program between the two primitive collectives: reverse each
+    /// rank's op order, swap `Send`↔`Recv`, and set the `reduce` flag to
+    /// match the mirrored collective (all-gather → reduce-scatter gains
+    /// reducing receives; reduce-scatter → all-gather loses them). Steps
+    /// are renumbered so the mirrored first step is step 0. The operation
+    /// is an involution: `p.mirror().mirror() == p`.
     ///
     /// Why this is correct: in a valid all-gather, every `Recv` of a chunk
     /// precedes all later `Send`s of that chunk on the same rank
@@ -111,22 +113,28 @@ impl Program {
     /// reverse consistently on both sides, so FIFO matching is preserved.
     /// This is the paper's reduce-scatter construction: reversed tree,
     /// nearest dimensions first, parallel (linear) phase before the
-    /// logarithmic phase.
+    /// logarithmic phase. The same argument read backwards takes a valid
+    /// reduce-scatter to a valid all-gather.
+    ///
+    /// All-reduce programs are compositions, not mirrors of anything —
+    /// mirroring one is a caller bug and panics.
     pub fn mirror(&self) -> Program {
-        assert_eq!(
-            self.collective,
-            Collective::AllGather,
-            "mirror() converts all-gather programs to reduce-scatter"
-        );
+        let (to, reduce_on_recv) = match self.collective {
+            Collective::AllGather => (Collective::ReduceScatter, true),
+            Collective::ReduceScatter => (Collective::AllGather, false),
+            Collective::AllReduce => {
+                panic!("mirror() is defined on all-gather/reduce-scatter programs only")
+            }
+        };
         let last = self.steps.saturating_sub(1);
-        let mut out = Program::new(self.nranks, Collective::ReduceScatter, self.algorithm.clone());
+        let mut out = Program::new(self.nranks, to, self.algorithm.clone());
         for (r, ops) in self.ranks.iter().enumerate() {
             for op in ops.iter().rev() {
                 let m = match op {
                     Op::Send { peer, chunks, step } => Op::Recv {
                         peer: *peer,
                         chunks: chunks.clone(),
-                        reduce: true,
+                        reduce: reduce_on_recv,
                         step: last - *step,
                     },
                     Op::Recv { peer, chunks, step, .. } => Op::Send {
@@ -139,6 +147,22 @@ impl Program {
             }
         }
         out
+    }
+
+    /// The chunk id space of this program: one past the largest chunk id
+    /// any op touches, and at least `nranks` (the primitive collectives'
+    /// chunk space). Composed all-reduce programs use `segments × nranks`
+    /// ids (see [`crate::sched::compose`]); the transport sizes buffers
+    /// from this.
+    pub fn chunk_space(&self) -> usize {
+        self.ranks
+            .iter()
+            .flat_map(|ops| ops.iter())
+            .flat_map(|op| op.chunks().iter().copied())
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0)
+            .max(self.nranks)
     }
 
     /// All (src, dst, chunks, step) message tuples, in global step order
@@ -268,6 +292,23 @@ mod tests {
         assert_eq!(s.chunk_transfers, 2);
         assert_eq!(s.max_aggregation, 1);
         assert_eq!(s.depth, 2);
+    }
+
+    #[test]
+    fn mirror_is_involution_on_toy() {
+        let ag = toy_ag();
+        let back = ag.mirror().mirror();
+        assert_eq!(back, ag);
+    }
+
+    #[test]
+    fn chunk_space_covers_ids_and_ranks() {
+        assert_eq!(toy_ag().chunk_space(), 2);
+        let mut p = Program::new(2, Collective::AllReduce, "t");
+        p.push(0, Op::Send { peer: 1, chunks: vec![5], step: 0 });
+        assert_eq!(p.chunk_space(), 6);
+        // opless programs fall back to nranks
+        assert_eq!(Program::new(3, Collective::AllReduce, "t").chunk_space(), 3);
     }
 
     #[test]

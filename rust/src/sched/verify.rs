@@ -19,6 +19,9 @@ pub struct OccupancyReport {
     /// All-gather: peak number of chunks held in staging (received but not
     /// yet fully forwarded, excluding the rank's own chunk) on any rank.
     /// Reduce-scatter: peak number of live accumulators on any rank.
+    /// All-reduce: peak of live accumulators plus staged (received, not yet
+    /// fully rebroadcast) final chunks on any rank — the bound the fused
+    /// program's staging slots must cover across both phases.
     pub peak_slots: usize,
     /// Rank on which the peak occurred.
     pub peak_rank: Rank,
@@ -35,7 +38,8 @@ pub fn rs_contribution(rank: Rank, chunk: ChunkId) -> i64 {
 ///    list, matching reduce flag for the collective),
 /// 2. deadlock-free completion under blocking receives,
 /// 3. data correctness (every rank owns every chunk for AG; exact reduced
-///    sums on the owner rank for RS),
+///    sums on the owner rank for RS; every rank ends with the full sum of
+///    every rank's contribution for all-reduce),
 /// 4. causality (a rank only sends chunk data it actually holds).
 ///
 /// Returns the buffer-occupancy report measured during execution.
@@ -44,12 +48,15 @@ pub fn verify_program(p: &Program) -> Result<OccupancyReport> {
     match p.collective {
         Collective::AllGather => verify_allgather(p),
         Collective::ReduceScatter => verify_reduce_scatter(p),
+        Collective::AllReduce => verify_allreduce(p),
     }
 }
 
 /// Structural FIFO check: for each ordered pair (s, d), the sequence of
 /// sends s→d equals the sequence of recvs at d from s (chunk lists in
-/// order), and reduce flags agree with the collective type.
+/// order), and reduce flags agree with the collective type (all-reduce
+/// programs mix both kinds: reducing receives in the reduce-scatter phase,
+/// plain receives in the rebroadcast phase).
 pub fn check_fifo(p: &Program) -> Result<()> {
     let mut sends: HashMap<(Rank, Rank), Vec<&Vec<ChunkId>>> = HashMap::new();
     let mut recvs: HashMap<(Rank, Rank), Vec<&Vec<ChunkId>>> = HashMap::new();
@@ -63,8 +70,12 @@ pub fn check_fifo(p: &Program) -> Result<()> {
                     sends.entry((r, *peer)).or_default().push(chunks);
                 }
                 Op::Recv { peer, chunks, reduce, .. } => {
-                    let want_reduce = p.collective == Collective::ReduceScatter;
-                    if *reduce != want_reduce {
+                    let bad = match p.collective {
+                        Collective::AllGather => *reduce,
+                        Collective::ReduceScatter => !*reduce,
+                        Collective::AllReduce => false,
+                    };
+                    if bad {
                         return Err(Error::Verify(format!(
                             "rank {r}: recv reduce={reduce} inconsistent with {}",
                             p.collective
@@ -105,7 +116,7 @@ pub fn check_fifo(p: &Program) -> Result<()> {
 fn execute<FS, FR>(p: &Program, mut on_send: FS, mut on_recv: FR) -> Result<()>
 where
     FS: FnMut(Rank, Rank, &[ChunkId]) -> Result<Vec<i64>>,
-    FR: FnMut(Rank, Rank, &[ChunkId], Vec<i64>) -> Result<()>,
+    FR: FnMut(Rank, Rank, &[ChunkId], bool, Vec<i64>) -> Result<()>,
 {
     let n = p.nranks;
     let mut pc = vec![0usize; n];
@@ -125,10 +136,10 @@ where
                         pc[r] += 1;
                         progressed = true;
                     }
-                    Op::Recv { peer, chunks, .. } => {
+                    Op::Recv { peer, chunks, reduce, .. } => {
                         let q = wires.entry((*peer, r)).or_default();
                         if let Some(payload) = q.pop_front() {
-                            on_recv(r, *peer, chunks, payload)?;
+                            on_recv(r, *peer, chunks, *reduce, payload)?;
                             pc[r] += 1;
                             progressed = true;
                         } else {
@@ -200,7 +211,7 @@ fn verify_allgather(p: &Program) -> Result<OccupancyReport> {
             }
             Ok(payload)
         },
-        |r, _src, chunks, payload| {
+        |r, _src, chunks, _reduce, payload| {
             let mut ow = owned_cell.borrow_mut();
             let mut lv = live_cell.borrow_mut();
             let mut pk = peak_cell.borrow_mut();
@@ -310,7 +321,7 @@ fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
             }
             Ok(payload)
         },
-        |r, _src, chunks, payload| {
+        |r, _src, chunks, _reduce, payload| {
             let mut ac = acc_cell.borrow_mut();
             let mut pk = peak_cell.borrow_mut();
             for (&c, v) in chunks.iter().zip(payload) {
@@ -350,6 +361,191 @@ fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
         }
     }
     Ok(peak)
+}
+
+/// All-reduce reference semantics: every rank contributes
+/// [`rs_contribution`]`(rank, chunk)` to every chunk; chunk `c` is owned by
+/// rank `c mod nranks` (the composed chunk renaming of
+/// [`crate::sched::compose`]); at completion every rank must hold, for
+/// every chunk, the exact sum of all contributions.
+///
+/// Execution model per (rank, chunk):
+/// * a **reducing recv** folds a partial sum into the rank's accumulator
+///   (reduce-scatter phase);
+/// * a **send** of a chunk the rank has no final value for pays the rank's
+///   own contribution (exactly once) plus any accumulator — the
+///   reduce-scatter contribute-and-forward. The *owner's* first such send
+///   completes the reduction and doubles as the start of the rebroadcast.
+/// * a **plain recv** installs the final value (checked against the exact
+///   expected sum on the spot, so an owner that rebroadcasts before all
+///   contributions arrived fails loudly);
+/// * later sends of a finalized chunk are relays of the final value.
+///
+/// Occupancy counts live accumulators plus staged finals (received but not
+/// yet fully re-forwarded) — the two-phase buffer footprint the transport's
+/// staging slots must cover.
+fn verify_allreduce(p: &Program) -> Result<OccupancyReport> {
+    let n = p.nranks;
+    let nchunks = p.chunk_space();
+    // Expected full sums, precomputed once per chunk (the rebroadcast
+    // check runs per received chunk — O(S·n²) installs).
+    let want: Vec<i64> = (0..nchunks)
+        .map(|c| (0..n).map(|i| rs_contribution(i, c)).sum())
+        .collect();
+
+    // acc[r]: chunk -> partial sum. fin[r]: chunk -> final value.
+    let mut acc: Vec<HashMap<ChunkId, i64>> = vec![HashMap::new(); n];
+    let mut fin: Vec<HashMap<ChunkId, i64>> = vec![HashMap::new(); n];
+    let mut contributed: Vec<HashMap<ChunkId, bool>> = vec![HashMap::new(); n];
+    // Staging lifetime of rebroadcast finals: sends of a chunk occurring
+    // after its plain recv, computed statically per rank.
+    let pending = pending_rebroadcasts(p);
+    let mut live: Vec<HashMap<ChunkId, usize>> = vec![HashMap::new(); n];
+    let mut peak = OccupancyReport { peak_slots: 0, peak_rank: 0 };
+
+    let acc_cell = std::cell::RefCell::new(&mut acc);
+    let fin_cell = std::cell::RefCell::new(&mut fin);
+    let contrib_cell = std::cell::RefCell::new(&mut contributed);
+    let live_cell = std::cell::RefCell::new(&mut live);
+    let peak_cell = std::cell::RefCell::new(&mut peak);
+
+    execute(
+        p,
+        |r, _dst, chunks| {
+            let mut ac = acc_cell.borrow_mut();
+            let mut fi = fin_cell.borrow_mut();
+            let mut ct = contrib_cell.borrow_mut();
+            let mut lv = live_cell.borrow_mut();
+            let mut payload = Vec::with_capacity(chunks.len());
+            for &c in chunks {
+                if let Some(&v) = fi[r].get(&c) {
+                    // Relay of an already-final chunk (all-gather phase).
+                    payload.push(v);
+                    if let Some(cnt) = lv[r].get_mut(&c) {
+                        *cnt -= 1;
+                        if *cnt == 0 {
+                            lv[r].remove(&c);
+                        }
+                    }
+                    continue;
+                }
+                if *ct[r].entry(c).or_insert(false) {
+                    return Err(Error::Verify(format!(
+                        "rank {r} contributes to chunk {c} twice"
+                    )));
+                }
+                ct[r].insert(c, true);
+                let v = ac[r].remove(&c).unwrap_or(0) + rs_contribution(r, c);
+                if c % n == r {
+                    // Owner: this send completes the reduction and starts
+                    // the rebroadcast.
+                    fi[r].insert(c, v);
+                }
+                payload.push(v);
+            }
+            Ok(payload)
+        },
+        |r, _src, chunks, reduce, payload| {
+            let mut ac = acc_cell.borrow_mut();
+            let mut fi = fin_cell.borrow_mut();
+            let mut lv = live_cell.borrow_mut();
+            let mut pk = peak_cell.borrow_mut();
+            if payload.len() != chunks.len() {
+                return Err(Error::Verify("payload/chunks length mismatch".into()));
+            }
+            for (&c, v) in chunks.iter().zip(payload) {
+                if reduce {
+                    if fi[r].contains_key(&c) {
+                        return Err(Error::Verify(format!(
+                            "rank {r}: reducing recv of chunk {c} after it was finalized"
+                        )));
+                    }
+                    *ac[r].entry(c).or_insert(0) += v;
+                } else {
+                    if v != want[c] {
+                        return Err(Error::Verify(format!(
+                            "rank {r} chunk {c}: rebroadcast value {v} != full sum {} \
+                             (owner rebroadcast before all contributions arrived?)",
+                            want[c]
+                        )));
+                    }
+                    if fi[r].insert(c, v).is_some() {
+                        return Err(Error::Verify(format!(
+                            "rank {r} received final chunk {c} twice"
+                        )));
+                    }
+                    let fw = pending[r].get(&c).copied().unwrap_or(0);
+                    if fw > 0 {
+                        lv[r].insert(c, fw);
+                    }
+                }
+            }
+            let occ = ac[r].len() + lv[r].len();
+            if occ > pk.peak_slots {
+                pk.peak_slots = occ;
+                pk.peak_rank = r;
+            }
+            Ok(())
+        },
+    )?;
+
+    for r in 0..n {
+        for c in 0..nchunks {
+            let got = match fin[r].get(&c) {
+                Some(&v) => v,
+                // An owner that never rebroadcast (n == 1, opless ranks)
+                // finalizes locally at completion.
+                None if c % n == r => {
+                    acc[r].remove(&c).unwrap_or(0) + rs_contribution(r, c)
+                }
+                None => {
+                    return Err(Error::Verify(format!(
+                        "all-reduce incomplete: rank {r} missing final chunk {c}"
+                    )))
+                }
+            };
+            if got != want[c] {
+                return Err(Error::Verify(format!(
+                    "all-reduce: rank {r} chunk {c} = {got} != expected {}",
+                    want[c]
+                )));
+            }
+        }
+        // Non-own accumulators must all have been consumed by sends.
+        if let Some(c) = acc[r].keys().next() {
+            return Err(Error::Verify(format!(
+                "rank {r} left with a stale accumulator for chunk {c}"
+            )));
+        }
+    }
+    Ok(peak)
+}
+
+/// For each rank, how many times each chunk is sent after its plain
+/// (non-reducing) recv — the all-reduce rebroadcast staging lifetime.
+fn pending_rebroadcasts(p: &Program) -> Vec<HashMap<ChunkId, usize>> {
+    let mut out: Vec<HashMap<ChunkId, usize>> = vec![HashMap::new(); p.nranks];
+    for (r, ops) in p.ranks.iter().enumerate() {
+        let mut seen_final: HashMap<ChunkId, bool> = HashMap::new();
+        for op in ops {
+            match op {
+                Op::Recv { chunks, reduce: false, .. } => {
+                    for &c in chunks {
+                        seen_final.insert(c, true);
+                    }
+                }
+                Op::Recv { .. } => {}
+                Op::Send { chunks, .. } => {
+                    for &c in chunks {
+                        if seen_final.get(&c).copied().unwrap_or(false) {
+                            *out[r].entry(c).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]

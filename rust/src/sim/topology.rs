@@ -28,6 +28,10 @@ pub enum LinkKind {
     Up,
     Down,
     Global,
+    /// NVLink-class intra-node egress (see [`Topology::with_intra_node`]).
+    IntraTx,
+    /// NVLink-class intra-node ingress.
+    IntraRx,
 }
 
 /// A topology instance: links plus routing.
@@ -37,6 +41,18 @@ pub struct Topology {
     pub links: Vec<Link>,
     pub name: String,
     kind: Kind,
+    /// NVLink-class intra-node tier (None = intra-node traffic rides the
+    /// NIC links, the pre-`intra_gbps` behaviour).
+    intra: Option<IntraNode>,
+}
+
+/// Modelled intra-node (NVLink-domain) links: contiguous nodes of
+/// `ranks_per_node`, one Tx and one Rx link per rank starting at link id
+/// `base`.
+#[derive(Debug, Clone)]
+struct IntraNode {
+    ranks_per_node: usize,
+    base: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -82,6 +98,7 @@ impl Topology {
             links,
             name: format!("flat({nranks})"),
             kind: Kind::Flat,
+            intra: None,
         }
     }
 
@@ -126,6 +143,7 @@ impl Topology {
             links,
             name: format!("leaf_spine({nranks},g={ranks_per_leaf},s={spines},t={taper})"),
             kind: Kind::LeafSpine { ranks_per_leaf, leaves, spines },
+            intra: None,
         })
     }
 
@@ -194,6 +212,7 @@ impl Topology {
                 spines_per_pod,
                 cores,
             },
+            intra: None,
         })
     }
 
@@ -228,7 +247,56 @@ impl Topology {
             links,
             name: format!("dragonfly({nranks},g={ranks_per_group})"),
             kind: Kind::Dragonfly { ranks_per_group, groups },
+            intra: None,
         })
+    }
+
+    /// Model NVLink-class intra-node links distinct from the leaf NICs
+    /// (the `intra_gbps` knob): ranks are grouped into contiguous nodes of
+    /// `ranks_per_node`, and every same-node message rides a dedicated
+    /// per-rank intra Tx/Rx link pair at `intra_bw` bytes/s instead of the
+    /// NIC links — so hierarchical and composed schedules stop paying NIC
+    /// serialization for local traffic.
+    ///
+    /// Nodes must sit inside one leaf switch (distance level 0): a node
+    /// straddling a leaf would teleport fabric traffic onto the NVLink
+    /// tier, so that is rejected with [`Error::Topology`].
+    pub fn with_intra_node(mut self, ranks_per_node: usize, intra_bw: f64) -> Result<Topology> {
+        if ranks_per_node == 0 {
+            return Err(Error::Topology("ranks_per_node must be >= 1".into()));
+        }
+        if !(intra_bw.is_finite() && intra_bw > 0.0) {
+            return Err(Error::Topology("intra-node bandwidth must be > 0".into()));
+        }
+        if self.intra.is_some() {
+            return Err(Error::Topology(format!(
+                "{} already has intra-node links",
+                self.name
+            )));
+        }
+        // Contiguous nodes; check each node's first and last rank share a
+        // leaf (leaves are contiguous, so the whole node does).
+        let mut lo = 0usize;
+        while lo < self.nranks {
+            let hi = (lo + ranks_per_node - 1).min(self.nranks - 1);
+            if self.distance_level(lo, hi) != 0 {
+                return Err(Error::Topology(format!(
+                    "intra-node group [{lo}, {hi}] straddles a leaf of {}",
+                    self.name
+                )));
+            }
+            lo += ranks_per_node;
+        }
+        let base = self.links.len();
+        for _ in 0..self.nranks {
+            self.links.push(Link { bandwidth: intra_bw, kind: LinkKind::IntraTx, level: 0 });
+        }
+        for _ in 0..self.nranks {
+            self.links.push(Link { bandwidth: intra_bw, kind: LinkKind::IntraRx, level: 0 });
+        }
+        self.name = format!("{}+intra(k={ranks_per_node})", self.name);
+        self.intra = Some(IntraNode { ranks_per_node, base });
+        Ok(self)
     }
 
     #[inline]
@@ -247,6 +315,11 @@ impl Topology {
         debug_assert!(src < self.nranks && dst < self.nranks);
         if src == dst {
             return vec![];
+        }
+        if let Some(intra) = &self.intra {
+            if src / intra.ranks_per_node == dst / intra.ranks_per_node {
+                return vec![intra.base + src, intra.base + self.nranks + dst];
+            }
         }
         match &self.kind {
             Kind::Flat => vec![self.nic_tx(src), self.nic_rx(dst)],
@@ -498,6 +571,55 @@ mod tests {
         assert!(matches!(err, Error::Topology(_)), "{err}");
         let err = Topology::leaf_spine(10, 4, 2, 1e9, 1.0).unwrap_err();
         assert!(matches!(err, Error::Topology(_)), "{err}");
+    }
+
+    #[test]
+    fn intra_node_links_route_local_traffic() {
+        let t = Topology::leaf_spine(16, 4, 2, 25e9, 1.0)
+            .unwrap()
+            .with_intra_node(4, 200e9)
+            .unwrap();
+        // same node: two intra links at NVLink bandwidth
+        let path = t.route(0, 3, 0);
+        assert_eq!(path.len(), 2);
+        for &l in &path {
+            assert!(matches!(
+                t.links[l].kind,
+                LinkKind::IntraTx | LinkKind::IntraRx
+            ));
+            assert!((t.links[l].bandwidth - 200e9).abs() < 1.0);
+        }
+        // distance accounting unchanged: same leaf is still level 0
+        assert_eq!(t.distance_level(0, 3), 0);
+        // cross-node traffic still rides the NICs and the fabric
+        let cross = t.route(0, 7, 0);
+        assert_eq!(t.links[cross[0]].kind, LinkKind::NicTx);
+        assert_eq!(cross.len(), 4);
+        // link ids all valid
+        for s in 0..t.nranks {
+            for d in 0..t.nranks {
+                for l in t.route(s, d, 0) {
+                    assert!(l < t.links.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intra_node_misuse_rejected() {
+        // nodes of 5 straddle 4-rank leaves
+        let err = Topology::leaf_spine(16, 4, 2, 25e9, 1.0)
+            .unwrap()
+            .with_intra_node(5, 200e9)
+            .unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        assert!(err.to_string().contains("straddles"), "{err}");
+        let t = Topology::flat(8, 25e9);
+        assert!(t.clone().with_intra_node(0, 200e9).is_err());
+        assert!(t.clone().with_intra_node(4, 0.0).is_err());
+        // double application rejected
+        let once = t.with_intra_node(4, 200e9).unwrap();
+        assert!(once.with_intra_node(4, 200e9).is_err());
     }
 
     #[test]

@@ -452,6 +452,200 @@ pub fn run_reduce_scatter(
     Ok((outputs, rep))
 }
 
+/// Run an all-reduce program (an RS∘AG composition from
+/// [`crate::sched::compose`]). `inputs[r]` holds rank r's contribution to
+/// every chunk of the composed chunk space (`chunk_space × chunk`
+/// elements, segments concatenated); every output is the full element-wise
+/// sum across ranks of the same length.
+///
+/// Execution per rank follows the composition semantics: reducing receives
+/// fold into pool-backed accumulators (the reduce-scatter phase);
+/// a send of a non-finalized chunk pays the rank's own contribution plus
+/// any accumulator (the owner's first such send completes the reduction
+/// and starts the rebroadcast); plain receives install final values in the
+/// output buffer; sends of finalized chunks relay from the output through
+/// transient staging reservations. One [`BufferPool`] per rank covers both
+/// phases, so `slot_capacity` bounds the *combined* accumulator + staging
+/// footprint — the fused program's staging-slot bound.
+pub fn run_allreduce(
+    p: &Program,
+    inputs: &[Vec<f32>],
+    opts: &TransportOptions,
+) -> Result<(Vec<Vec<f32>>, TransportReport)> {
+    if p.collective != Collective::AllReduce {
+        return Err(Error::Transport(format!(
+            "run_allreduce on a {} program",
+            p.collective
+        )));
+    }
+    let n = p.nranks;
+    if inputs.len() != n {
+        return Err(Error::Transport(format!(
+            "expected {n} inputs, got {}",
+            inputs.len()
+        )));
+    }
+    if n == 0 {
+        return Ok((vec![], TransportReport::default()));
+    }
+    let nchunks = p.chunk_space();
+    let total = inputs[0].len();
+    if total % nchunks != 0 || inputs.iter().any(|v| v.len() != total) {
+        return Err(Error::Transport(format!(
+            "all-reduce inputs must be uniform and divisible by the chunk space {nchunks}"
+        )));
+    }
+    let chunk = total / nchunks;
+    if opts.validate {
+        crate::sched::verify::verify_program(p)?;
+    }
+    let endpoints = make_endpoints(n, opts.recv_timeout);
+    let report = Mutex::new(TransportReport::default());
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); n];
+    let start = Instant::now();
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(n);
+        for (r, (ep, out_slot)) in endpoints
+            .into_iter()
+            .zip(outputs.iter_mut())
+            .enumerate()
+        {
+            let p = &p;
+            let inputs = &inputs;
+            let report = &report;
+            let opts = &*opts;
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut ep = ep;
+                let own = |c: ChunkId| &inputs[r][c * chunk..(c + 1) * chunk];
+                let mut out = vec![0f32; total];
+                let mut pool = BufferPool::new(chunk, opts.slot_capacity);
+                let mut acc: HashMap<ChunkId, Vec<f32>> = HashMap::new();
+                let mut finalized = vec![false; nchunks];
+                let mut local_bytes = 0usize;
+                let mut local_msgs = 0usize;
+
+                for op in &p.ranks[r] {
+                    match op {
+                        Op::Send { peer, chunks, .. } => {
+                            // Finalized chunks relay through staging (the
+                            // all-gather-style forward path); non-finalized
+                            // chunks are reduce-scatter contribute-sends
+                            // consuming their accumulator.
+                            let mut reserved = 0usize;
+                            if opts.staged {
+                                reserved =
+                                    chunks.iter().filter(|&&c| finalized[c]).count();
+                                pool.reserve(reserved)?;
+                            }
+                            let mut msg = ep.take_buffer(chunks.len() * chunk);
+                            for &c in chunks {
+                                if finalized[c] {
+                                    msg.extend_from_slice(&out[c * chunk..(c + 1) * chunk]);
+                                } else if c % n == r {
+                                    // Owner: fold accumulator + own
+                                    // contribution, keep the final locally,
+                                    // and broadcast it.
+                                    match acc.remove(&c) {
+                                        Some(slot) => {
+                                            opts.datapath.add_extend(&mut msg, &slot, own(c))?;
+                                            pool.release(slot);
+                                        }
+                                        None => msg.extend_from_slice(own(c)),
+                                    }
+                                    let lo = msg.len() - chunk;
+                                    out[c * chunk..(c + 1) * chunk]
+                                        .copy_from_slice(&msg[lo..]);
+                                    finalized[c] = true;
+                                } else {
+                                    match acc.remove(&c) {
+                                        Some(slot) => {
+                                            opts.datapath.add_extend(&mut msg, &slot, own(c))?;
+                                            pool.release(slot);
+                                        }
+                                        None => msg.extend_from_slice(own(c)),
+                                    }
+                                }
+                            }
+                            local_bytes += msg.len() * 4;
+                            local_msgs += 1;
+                            ep.send(*peer, msg)?;
+                            if opts.staged {
+                                pool.unreserve(reserved);
+                            }
+                        }
+                        Op::Recv { peer, chunks, reduce, .. } => {
+                            let data = ep.recv_from(*peer)?;
+                            if data.len() != chunks.len() * chunk {
+                                return Err(Error::Transport(format!(
+                                    "rank {r}: message from {peer} has {} elems, want {}",
+                                    data.len(),
+                                    chunks.len() * chunk
+                                )));
+                            }
+                            for (k, &c) in chunks.iter().enumerate() {
+                                let seg = &data[k * chunk..(k + 1) * chunk];
+                                if *reduce {
+                                    match acc.get_mut(&c) {
+                                        Some(slot) => opts.datapath.reduce_into(slot, seg)?,
+                                        None => {
+                                            let mut slot = pool.acquire()?;
+                                            slot.copy_from_slice(seg);
+                                            acc.insert(c, slot);
+                                        }
+                                    }
+                                } else {
+                                    out[c * chunk..(c + 1) * chunk].copy_from_slice(seg);
+                                    finalized[c] = true;
+                                }
+                            }
+                            ep.recycle(*peer, data);
+                        }
+                    }
+                }
+                // Owned chunks that were never broadcast (single-rank
+                // degenerate programs) finalize locally.
+                for c in 0..nchunks {
+                    if !finalized[c] {
+                        if c % n != r {
+                            return Err(Error::Transport(format!(
+                                "rank {r}: no final value for chunk {c}"
+                            )));
+                        }
+                        out[c * chunk..(c + 1) * chunk].copy_from_slice(own(c));
+                        if let Some(slot) = acc.remove(&c) {
+                            opts.datapath
+                                .reduce_into(&mut out[c * chunk..(c + 1) * chunk], &slot)?;
+                            pool.release(slot);
+                        }
+                    }
+                }
+                if !acc.is_empty() {
+                    return Err(Error::Transport(format!(
+                        "rank {r}: stale accumulators for chunks {:?}",
+                        acc.keys().collect::<Vec<_>>()
+                    )));
+                }
+                *out_slot = out;
+                let mut rep = report.lock().unwrap();
+                rep.peak_slots = rep.peak_slots.max(pool.peak());
+                rep.bytes_moved += local_bytes;
+                rep.messages += local_msgs;
+                rep.slots_allocated += pool.total_allocated();
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| Error::Transport("rank thread panicked".into()))??;
+        }
+        Ok(())
+    })?;
+
+    let mut rep = report.into_inner().unwrap();
+    rep.wall = start.elapsed();
+    Ok((outputs, rep))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -570,6 +764,62 @@ mod tests {
         let p = ring::allgather(4);
         let inputs = rs_inputs(4, 4, 1);
         assert!(run_reduce_scatter(&p, &inputs, &Default::default()).is_err());
+        assert!(run_allreduce(&p, &inputs, &Default::default()).is_err());
+    }
+
+    #[test]
+    fn allreduce_matches_reference() {
+        for n in [2usize, 3, 7, 8] {
+            for segments in [1usize, 2, 4] {
+                let rs = pat::reduce_scatter(n, 2);
+                let ag = pat::allgather(n, 2);
+                let p = crate::sched::compose::fuse(&rs, &ag, segments).unwrap();
+                let nchunks = p.chunk_space();
+                let chunk = 8;
+                let mut rng = Rng::new(n as u64 * 7 + segments as u64);
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..nchunks * chunk).map(|_| rng.below(500) as f32).collect())
+                    .collect();
+                let (outs, rep) =
+                    run_allreduce(&p, &inputs, &TransportOptions::default()).unwrap();
+                for (r, out) in outs.iter().enumerate() {
+                    for i in 0..nchunks * chunk {
+                        let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                        assert_eq!(out[i], want, "n={n} s={segments} rank={r} idx={i}");
+                    }
+                }
+                assert!(rep.messages > 0 || n == 1);
+            }
+        }
+    }
+
+    /// The fused staging bound: the reference executor's measured peak
+    /// (accumulators + staged rebroadcasts) plus one message's aggregation
+    /// is an enforceable slot capacity for the threaded engine.
+    #[test]
+    fn allreduce_respects_fused_slot_bound() {
+        let n = 16usize;
+        for segments in [1usize, 2, 4] {
+            let rs = pat::reduce_scatter(n, 2);
+            let ag = pat::allgather(n, 2);
+            let p = crate::sched::compose::fuse(&rs, &ag, segments).unwrap();
+            let occ = crate::sched::verify::verify_program(&p).unwrap();
+            let cap = occ.peak_slots + p.stats().max_aggregation + 1;
+            let opts = TransportOptions {
+                slot_capacity: Some(cap),
+                validate: false,
+                ..Default::default()
+            };
+            let nchunks = p.chunk_space();
+            let inputs: Vec<Vec<f32>> =
+                (0..n).map(|r| vec![r as f32; nchunks * 4]).collect();
+            let (_, rep) = run_allreduce(&p, &inputs, &opts).unwrap();
+            assert!(
+                rep.peak_slots <= cap,
+                "segments={segments}: peak {} > cap {cap}",
+                rep.peak_slots
+            );
+        }
     }
 
     #[test]

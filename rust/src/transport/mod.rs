@@ -18,4 +18,7 @@ pub mod datapath;
 
 pub use buffers::BufferPool;
 pub use datapath::DataPath;
-pub use engine::{run_allgather, run_allgather_into, run_reduce_scatter, TransportOptions, TransportReport};
+pub use engine::{
+    run_allgather, run_allgather_into, run_allreduce, run_reduce_scatter, TransportOptions,
+    TransportReport,
+};

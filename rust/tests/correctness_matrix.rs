@@ -4,10 +4,10 @@
 //! Fig. 4 / the "any number of ranks" claim) — plus the hierarchical axis
 //! (HierPat × collectives × rank counts × node sizes, uneven included).
 
-use patcol::core::{Algorithm, Collective, Placement};
+use patcol::core::{Algorithm, Collective, PhaseAlg, Placement};
 use patcol::sched::{self, verify::verify_program};
 use patcol::sim::{simulate, CostModel, SimReport, Topology};
-use patcol::transport::{run_allgather, run_reduce_scatter, TransportOptions};
+use patcol::transport::{run_allgather, run_allreduce, run_reduce_scatter, TransportOptions};
 use patcol::util::Rng;
 
 fn algorithms() -> Vec<Algorithm> {
@@ -173,7 +173,7 @@ fn hier_matrix_to_64() {
                         .unwrap_or_else(|e| panic!("hier {coll} n={n} k={k} a={a}: {e}"));
                     let bound = match coll {
                         Collective::AllGather => n - 1,
-                        Collective::ReduceScatter => n,
+                        _ => n,
                     };
                     assert!(
                         occ.peak_slots <= bound,
@@ -227,6 +227,139 @@ fn hier_transport_end_to_end() {
                     let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
                     assert_eq!(outs[r][i], w, "hier rs n={n} k={k} a={a} rank={r} idx={i}");
                 }
+            }
+        }
+    }
+}
+
+/// Mirror involution and verifier agreement across every generator:
+/// `mirror` is its own inverse (`mirror∘mirror == id`, field-for-field),
+/// and both orientations of every program pass the reference executor.
+#[test]
+fn mirror_involution_across_generators() {
+    let pl = Placement::uniform(13, 4).unwrap();
+    let pl9 = Placement::from_node_sizes(&[4, 1, 4]).unwrap();
+    let programs = vec![
+        patcol::sched::ring::allgather(6),
+        patcol::sched::bruck::allgather_near_first(9),
+        patcol::sched::bruck::allgather_far_first(8),
+        patcol::sched::recursive::allgather(8),
+        patcol::sched::pat::allgather(12, 2),
+        patcol::sched::pat::allgather(16, usize::MAX),
+        patcol::sched::pat::allgather(7, 1),
+        patcol::sched::hier::allgather(&pl, 2),
+        patcol::sched::hier::allgather(&pl9, usize::MAX),
+    ];
+    for p in programs {
+        let rs = p.mirror();
+        assert_eq!(rs.collective, Collective::ReduceScatter, "{}", p.algorithm);
+        let back = rs.mirror();
+        assert_eq!(back, p, "mirror∘mirror != id for {}", p.algorithm);
+        verify_program(&p).unwrap_or_else(|e| panic!("{} ag: {e}", p.algorithm));
+        verify_program(&rs).unwrap_or_else(|e| panic!("{} rs: {e}", p.algorithm));
+    }
+}
+
+/// Phase pairs for the all-reduce composition axis (mixed generators on
+/// purpose — the composer is generator-agnostic).
+fn phase_pairs() -> Vec<(PhaseAlg, PhaseAlg)> {
+    vec![
+        (
+            PhaseAlg::Pat { aggregation: usize::MAX },
+            PhaseAlg::Pat { aggregation: usize::MAX },
+        ),
+        (PhaseAlg::Pat { aggregation: 2 }, PhaseAlg::Ring),
+        (PhaseAlg::Ring, PhaseAlg::Pat { aggregation: 4 }),
+        (PhaseAlg::Ring, PhaseAlg::Ring),
+        (PhaseAlg::BruckFarFirst, PhaseAlg::BruckNearFirst),
+        (PhaseAlg::Recursive, PhaseAlg::Recursive),
+        (
+            PhaseAlg::HierPat { aggregation: 2 },
+            PhaseAlg::Pat { aggregation: 2 },
+        ),
+    ]
+}
+
+/// All-reduce axis, reference executor: every phase pair × ranks 2..=64 ×
+/// segments {1, 2, 4} verifies, and moves exactly 2·S·n·(n-1) chunk
+/// transfers (each phase delivers each foreign chunk exactly once per
+/// segment).
+#[test]
+fn allreduce_verifier_matrix_to_64() {
+    for n in 2..=64usize {
+        for &(rs, ag) in &phase_pairs() {
+            if !rs.supports(n) || !ag.supports(n) {
+                continue;
+            }
+            for segments in [1usize, 2, 4] {
+                let alg = Algorithm::Compose { rs, ag, segments };
+                let p = sched::generate(alg, Collective::AllReduce, n).unwrap();
+                verify_program(&p)
+                    .unwrap_or_else(|e| panic!("{alg} n={n} s={segments}: {e}"));
+                assert_eq!(
+                    p.stats().chunk_transfers,
+                    2 * segments * n * (n - 1),
+                    "{alg} n={n} s={segments}"
+                );
+            }
+        }
+    }
+}
+
+/// All-reduce axis, real threaded transport: ranks 2..=64 × segments
+/// {1, 2, 4} over representative pairs. The transport-executed result must
+/// equal the reference sum on every rank, under an *enforced* staging-slot
+/// capacity derived from the reference executor's measured peak (the fused
+/// two-phase staging bound) plus one in-flight message of aggregation.
+#[test]
+fn allreduce_transport_matrix_to_64() {
+    let pairs = [
+        (
+            PhaseAlg::Pat { aggregation: usize::MAX },
+            PhaseAlg::Pat { aggregation: usize::MAX },
+        ),
+        (PhaseAlg::Pat { aggregation: 2 }, PhaseAlg::Ring),
+        (PhaseAlg::Ring, PhaseAlg::Pat { aggregation: 4 }),
+        (
+            PhaseAlg::HierPat { aggregation: 2 },
+            PhaseAlg::Pat { aggregation: 2 },
+        ),
+    ];
+    let chunk = 4usize;
+    for n in 2..=64usize {
+        let mut rng = Rng::new(n as u64 * 131);
+        for &(rs, ag) in &pairs {
+            for segments in [1usize, 2, 4] {
+                let alg = Algorithm::Compose { rs, ag, segments };
+                let p = sched::generate(alg, Collective::AllReduce, n).unwrap();
+                let occ = verify_program(&p)
+                    .unwrap_or_else(|e| panic!("{alg} n={n} s={segments}: {e}"));
+                let cap = occ.peak_slots + p.stats().max_aggregation + 1;
+                let opts = TransportOptions {
+                    slot_capacity: Some(cap),
+                    validate: false,
+                    ..Default::default()
+                };
+                let nchunks = p.chunk_space();
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..nchunks * chunk).map(|_| rng.below(997) as f32).collect())
+                    .collect();
+                let (outs, rep) = run_allreduce(&p, &inputs, &opts)
+                    .unwrap_or_else(|e| panic!("{alg} n={n} s={segments}: {e}"));
+                for (r, out) in outs.iter().enumerate() {
+                    for i in 0..nchunks * chunk {
+                        let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                        assert_eq!(
+                            out[i], want,
+                            "{alg} n={n} s={segments} rank={r} idx={i}"
+                        );
+                    }
+                }
+                assert!(
+                    rep.peak_slots <= cap,
+                    "{alg} n={n} s={segments}: transport peak {} > bound {cap}",
+                    rep.peak_slots
+                );
             }
         }
     }

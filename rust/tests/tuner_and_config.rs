@@ -1,8 +1,10 @@
-//! Tuner sanity (DESIGN invariant 6) and config/CLI plumbing.
+//! Tuner sanity (DESIGN invariant 6), the hierarchical-prediction
+//! calibration, and config/CLI plumbing.
 
 use patcol::coordinator::config::{parse_bytes, ConfigMap};
+use patcol::coordinator::tuner::HIER_CALIBRATION_TOLERANCE;
 use patcol::coordinator::{CommConfig, Communicator, Tuner};
-use patcol::core::{Algorithm, Collective};
+use patcol::core::{Algorithm, Collective, Placement};
 use patcol::sched;
 use patcol::sim::{simulate, CostModel, Topology};
 
@@ -36,6 +38,44 @@ fn tuner_never_grossly_wrong() {
             assert!(
                 picked_t <= best * 1.25,
                 "n={n} size={size}: picked {picked} at {picked_t}, best {best}"
+            );
+        }
+    }
+}
+
+/// Tuner calibration (ROADMAP follow-up): `predict_hier` tracks the event
+/// simulator on a tapered three-level fabric within the documented
+/// constant [`HIER_CALIBRATION_TOLERANCE`] (both directions), across
+/// aggregations and the latency→bandwidth size band. The fabric: 64 ranks
+/// as 8-rank nodes = 8-rank leaves, 2 pods × 4 leaves, core tier tapered
+/// ×0.25; the tuner's `inter_bw` is set to the core-tapered uplink the
+/// closed form folds all contention into.
+#[test]
+fn predict_hier_tracks_simulator_on_tapered_fabric() {
+    let n = 64usize;
+    let k = 8usize;
+    let nic = CostModel::ib_hdr_nic_bw();
+    let topo = Topology::three_level(n, k, 4, 4, 2, nic, 1.0, 0.25).unwrap();
+    let pl = Placement::uniform(n, k).unwrap();
+    topo.check_placement(&pl).unwrap();
+    let cost = CostModel::ib_hdr();
+    let tuner = Tuner { inter_bw: Some(nic * 0.25), ..Tuner::default() };
+    for &a in &[2usize, usize::MAX] {
+        for &chunk in &[4usize << 10, 64 << 10, 256 << 10] {
+            let prog = sched::generate_placed(
+                Algorithm::HierPat { aggregation: a },
+                Collective::AllGather,
+                &pl,
+            )
+            .unwrap();
+            let sim_t = simulate(&prog, &topo, &cost, chunk).unwrap().total_time;
+            let pred = tuner.predict_hier(&pl, a, chunk);
+            let ratio = pred / sim_t;
+            assert!(
+                (1.0 / HIER_CALIBRATION_TOLERANCE..=HIER_CALIBRATION_TOLERANCE)
+                    .contains(&ratio),
+                "a={a} chunk={chunk}: predicted {pred:.6}s vs simulated {sim_t:.6}s \
+                 (ratio {ratio:.2} outside ×/÷{HIER_CALIBRATION_TOLERANCE})"
             );
         }
     }
@@ -105,6 +145,16 @@ fn cli_binary_smoke() {
              "--placement", "4,4,5", "--collective", "rs"],
         vec!["tune", "--ranks", "64", "--size", "1MiB", "--buffer-slots", "1024",
              "--ranks-per-node", "8", "--inter-gbps", "25"],
+        vec!["run", "--ranks", "6", "--size", "4KiB", "--alg", "pat:2+ring:2"],
+        vec!["explain", "--ranks", "8", "--alg", "pat+pat:2"],
+        vec![
+            "simulate", "--ranks", "32", "--size", "16KiB", "--alg", "pat+ring:4",
+            "--topo", "leaf_spine", "--ranks-per-leaf", "8", "--intra-gbps", "200",
+            "--ranks-per-node", "8",
+        ],
+        vec!["tune", "--ranks", "64", "--size", "64KiB", "--buffer-slots", "256",
+             "--collective", "ar"],
+        vec!["run", "--ranks", "5", "--size", "2KiB", "--collective", "ar"],
     ] {
         let out = std::process::Command::new(bin)
             .args(&argv)
