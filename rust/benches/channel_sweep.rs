@@ -1,0 +1,128 @@
+//! Channel-count sweep: C ∈ {1, 2, 4, 8} × payload size for a single
+//! all-gather split across NCCL-style channels
+//! ([`patcol::sched::channel::split`]) on the 256-rank tapered three-level
+//! fat-tree.
+//!
+//! The question the first-class channel dimension answers: when does
+//! splitting one collective across parallel connections pay? Each channel
+//! is its own proxy stream and its own statically-hashed flow, so C
+//! channels (a) spread a rank's traffic over the fabric's parallel
+//! spines/cores instead of serializing behind one ECMP choice, and (b)
+//! desynchronize, filling each other's link idle gaps. The price is C×
+//! the per-message overhead. At latency-bound sizes the overhead wins and
+//! C = 1 is best; at bandwidth-bound sizes on the tapered fabric the
+//! spreading wins and C > 1 takes over — the crossover this bench records
+//! as machine-readable JSON (`speedup_vs_single` per (C, size) row), the
+//! same shape `allreduce_compose.rs` uses for the segment crossover.
+//!
+//! `--smoke` runs a minimal configuration (CI bench-rot guard); the
+//! headline crossover assertion runs in the full configuration.
+
+use patcol::core::{Algorithm, Collective};
+use patcol::report::Report;
+use patcol::sched::{self, channel};
+use patcol::sim::{simulate, CostModel, Topology};
+use patcol::util::json::Json;
+use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 64usize } else { 256usize };
+    let topo =
+        Topology::three_level(n, 8, 4, 4, 2, CostModel::ib_hdr_nic_bw(), 1.0, 0.25).unwrap();
+    let cost = CostModel::ib_hdr();
+    let channel_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    // Per-rank chunk payload before splitting; channel C moves 1/C-sized
+    // sub-chunks of the same total.
+    let totals: &[usize] = if smoke {
+        &[4 << 20]
+    } else {
+        &[4 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20]
+    };
+    let base = sched::generate(
+        Algorithm::Pat { aggregation: usize::MAX },
+        Collective::AllGather,
+        n,
+    )
+    .unwrap();
+
+    let mut report = Report::new("channel_sweep");
+    report.param("nranks", Json::num(n as f64));
+    report.param("topology", Json::str(topo.name.clone()));
+    report.param("algorithm", Json::str(base.algorithm.clone()));
+    report.param("smoke", Json::Bool(smoke));
+
+    println!(
+        "\nall-gather channels × size on {} (tapered top tier):",
+        topo.name
+    );
+    let mut t = Table::new(["chunk/rank", "channels", "sub-chunk", "time", "vs C=1"]);
+    let mut crossover_rows: Vec<Json> = Vec::new();
+    // (largest size's single-channel time, best multi-channel time) for
+    // the headline assertion.
+    let mut headline: Option<(f64, f64)> = None;
+    for &total in totals {
+        let mut t1: Option<f64> = None;
+        let mut best_multi = f64::INFINITY;
+        for &c in channel_counts {
+            let prog = channel::split(&base, c).unwrap();
+            let sub = (total / c).max(1);
+            let rep = simulate(&prog, &topo, &cost, sub).unwrap();
+            if c == 1 {
+                t1 = Some(rep.total_time);
+            } else {
+                best_multi = best_multi.min(rep.total_time);
+            }
+            let speedup = t1.map(|s| s / rep.total_time);
+            t.row([
+                fmt_bytes(total),
+                format!("{c}"),
+                fmt_bytes(sub),
+                fmt_time_s(rep.total_time),
+                speedup.map(|s| format!("{s:.2}x")).unwrap_or_default(),
+            ]);
+            report.rows.push(Json::obj(vec![
+                ("total_bytes", Json::num(total as f64)),
+                ("channels", Json::num(c as f64)),
+                ("sub_chunk_bytes", Json::num(sub as f64)),
+                ("time", Json::num(rep.total_time)),
+                ("messages", Json::num(rep.messages as f64)),
+                ("max_link_bytes", Json::num(rep.max_link_bytes as f64)),
+            ]));
+            if c > 1 {
+                if let Some(seq) = t1 {
+                    crossover_rows.push(Json::obj(vec![
+                        ("total_bytes", Json::num(total as f64)),
+                        ("channels", Json::num(c as f64)),
+                        ("speedup_vs_single", Json::num(seq / rep.total_time)),
+                    ]));
+                }
+            }
+        }
+        headline = Some((t1.unwrap(), best_multi));
+    }
+    print!("{}", t.render());
+    report.param("crossover", Json::Arr(crossover_rows));
+
+    // Headline (the acceptance row): at the bandwidth-bound extreme
+    // (largest size in the sweep) the best multi-channel count beats the
+    // single channel on the tapered fabric — parallel connections recruit
+    // parallel links. Asserted on the full 256-rank configuration; the
+    // smoke run records without asserting (different scale, same JSON).
+    let (t_single, t_multi) = headline.unwrap();
+    println!(
+        "\nbest C>1 vs C=1 at {} per rank: {} vs {} ({:.2}x)",
+        fmt_bytes(*totals.last().unwrap()),
+        fmt_time_s(t_multi),
+        fmt_time_s(t_single),
+        t_single / t_multi
+    );
+    report.param("headline_speedup", Json::num(t_single / t_multi));
+    if !smoke {
+        assert!(
+            t_multi < t_single,
+            "multi-channel must pay at the bandwidth-bound extreme: {t_multi} !< {t_single}"
+        );
+    }
+    report.save().unwrap();
+}

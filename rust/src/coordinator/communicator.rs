@@ -51,6 +51,16 @@ pub struct CommConfig {
     /// flat-vs-hierarchical crossover (config key `inter_gbps`); `None`
     /// models a non-blocking fabric.
     pub inter_bw: Option<f64>,
+    /// Number of NCCL-style channels to split every collective across
+    /// (config key `channels`, CLI `--channels`, or the `alg*C` spelling).
+    /// `None` lets the tuner decide per call
+    /// ([`Tuner::choose_channels`] — one channel unless `parallel_links`
+    /// says the fabric has rails to recruit).
+    pub channels: Option<usize>,
+    /// Parallel fabric links per rank for the tuner's channel-count
+    /// crossover (config key `parallel_links`); `None` = 1, which keeps
+    /// auto channel selection at a single channel.
+    pub parallel_links: Option<usize>,
 }
 
 impl Default for CommConfig {
@@ -64,6 +74,8 @@ impl Default for CommConfig {
             validate: true,
             placement: None,
             inter_bw: None,
+            channels: None,
+            parallel_links: None,
         }
     }
 }
@@ -72,6 +84,8 @@ impl Default for CommConfig {
 #[derive(Debug, Clone)]
 pub struct CollectiveReport {
     pub algorithm: Algorithm,
+    /// Channels the program was split across (1 = unsplit).
+    pub channels: usize,
     pub steps: usize,
     pub transport: TransportReport,
 }
@@ -82,7 +96,7 @@ pub struct Communicator {
     datapath: DataPath,
     _service: Option<PjrtService>,
     tuner: Tuner,
-    cache: Mutex<HashMap<(Collective, String), Arc<Program>>>,
+    cache: Mutex<HashMap<(Collective, String, usize), Arc<Program>>>,
 }
 
 impl Communicator {
@@ -107,6 +121,12 @@ impl Communicator {
                 )));
             }
         }
+        if cfg.channels == Some(0) {
+            return Err(Error::Config("channels must be >= 1".into()));
+        }
+        if cfg.parallel_links == Some(0) {
+            return Err(Error::Config("parallel_links must be >= 1".into()));
+        }
         let (datapath, service) = match cfg.datapath {
             DataPathKind::Scalar => (DataPath::Scalar, None),
             DataPathKind::Pjrt => {
@@ -120,6 +140,7 @@ impl Communicator {
         };
         let tuner = Tuner {
             inter_bw: cfg.inter_bw,
+            parallel_links: cfg.parallel_links.unwrap_or(1),
             ..Tuner::default()
         };
         Ok(Communicator {
@@ -180,6 +201,24 @@ impl Communicator {
         }
     }
 
+    /// Resolve the channel count for this call: the pinned `channels`
+    /// knob, or the tuner's channel crossover
+    /// ([`Tuner::choose_channels`]) at the resolved algorithm's
+    /// aggregation — which stays at one channel unless the configured
+    /// `parallel_links` gives the extra channels links to recruit.
+    pub fn resolve_channels(&self, alg: Algorithm, chunk_bytes: usize) -> usize {
+        if let Some(c) = self.cfg.channels {
+            return c.max(1);
+        }
+        let a = match alg {
+            Algorithm::Pat { aggregation } | Algorithm::HierPat { aggregation } => aggregation,
+            _ => usize::MAX,
+        };
+        self.tuner
+            .choose_channels(self.cfg.nranks, a, chunk_bytes)
+            .channels
+    }
+
     /// The placement hierarchical programs are built from: the configured
     /// one, or contiguous default-sized nodes.
     fn effective_placement(&self) -> Result<Placement> {
@@ -189,20 +228,23 @@ impl Communicator {
         }
     }
 
-    fn program(&self, coll: Collective, alg: Algorithm) -> Result<Arc<Program>> {
-        let key = (coll, alg.name());
+    fn program(&self, coll: Collective, alg: Algorithm, channels: usize) -> Result<Arc<Program>> {
+        let key = (coll, alg.name(), channels);
         {
             let cache = self.cache.lock().unwrap();
             if let Some(p) = cache.get(&key) {
                 return Ok(p.clone());
             }
         }
-        let prog = if alg.uses_placement() {
+        let mut prog = if alg.uses_placement() {
             let pl = self.effective_placement()?;
             sched::generate_placed(alg, coll, &pl)?
         } else {
             sched::generate(alg, coll, self.cfg.nranks)?
         };
+        if channels > 1 {
+            prog = sched::channel::split(&prog, channels)?;
+        }
         if self.cfg.validate {
             sched::verify::verify_program(&prog)?;
         }
@@ -214,10 +256,19 @@ impl Communicator {
         Ok(prog)
     }
 
-    fn options(&self) -> TransportOptions {
+    /// Transport options for a program running on `channels` channels.
+    /// `buffer_slots` is denominated in single-channel chunk slots; a
+    /// C-channel program stripes chunks C× smaller, so the same byte
+    /// budget holds C× the slots — without the scaling, a budget the
+    /// tuner saturated at one channel would spuriously exhaust the pool
+    /// the moment the collective is split.
+    fn options(&self, channels: usize) -> TransportOptions {
         TransportOptions {
             datapath: self.datapath.clone(),
-            slot_capacity: self.cfg.buffer_slots,
+            slot_capacity: self
+                .cfg
+                .buffer_slots
+                .map(|b| b.saturating_mul(channels.max(1))),
             staged: true,
             // programs are verified once at cache fill, not per call
             validate: false,
@@ -231,19 +282,56 @@ impl Communicator {
         Ok(self.all_gather_report(inputs)?.0)
     }
 
-    /// All-gather returning execution metadata.
+    /// All-gather returning execution metadata. Multi-channel programs
+    /// stripe each contribution across their channels; lengths that do not
+    /// divide into the stripes are padded internally and the padding
+    /// stripped on return.
     pub fn all_gather_report(
         &self,
         inputs: &[Vec<f32>],
     ) -> Result<(Vec<Vec<f32>>, CollectiveReport)> {
-        let chunk_bytes = inputs.first().map(|v| v.len() * 4).unwrap_or(0);
+        let n = self.cfg.nranks;
+        let len = inputs.first().map(Vec::len).unwrap_or(0);
+        if inputs.iter().any(|v| v.len() != len) {
+            return Err(Error::Config("ragged all-gather inputs".into()));
+        }
+        let chunk_bytes = len * 4;
         let alg = self.resolve(Collective::AllGather, chunk_bytes);
-        let prog = self.program(Collective::AllGather, alg)?;
-        let (out, rep) = transport::run_allgather(&prog, inputs, &self.options())?;
-        Ok((
-            out,
-            CollectiveReport { algorithm: alg, steps: prog.steps, transport: rep },
-        ))
+        let channels = self.resolve_channels(alg, chunk_bytes);
+        let prog = self.program(Collective::AllGather, alg, channels)?;
+        let stripes = (prog.chunk_space() / n.max(1)).max(1);
+        let report = |rep| CollectiveReport {
+            algorithm: alg,
+            channels: prog.channels,
+            steps: prog.steps,
+            transport: rep,
+        };
+        if len % stripes == 0 {
+            let (out, rep) = transport::run_allgather(&prog, inputs, &self.options(prog.channels))?;
+            return Ok((out, report(rep)));
+        }
+        let padded = len.div_ceil(stripes) * stripes;
+        let padded_inputs: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|v| {
+                let mut p = v.clone();
+                p.resize(padded, 0.0);
+                p
+            })
+            .collect();
+        let (outs, rep) =
+            transport::run_allgather(&prog, &padded_inputs, &self.options(prog.channels))?;
+        let outs = outs
+            .into_iter()
+            .map(|o| {
+                let mut trimmed = Vec::with_capacity(n * len);
+                for s in 0..n {
+                    trimmed.extend_from_slice(&o[s * padded..s * padded + len]);
+                }
+                trimmed
+            })
+            .collect();
+        Ok((outs, report(rep)))
     }
 
     /// Reduce-scatter: `inputs[r]` holds rank r's contribution to all `n`
@@ -288,7 +376,8 @@ impl Communicator {
         // sweep expects.
         let chunk_bytes = len * 4 / n.max(1);
         let alg = self.resolve(Collective::AllReduce, chunk_bytes);
-        let prog = self.program(Collective::AllReduce, alg)?;
+        let channels = self.resolve_channels(alg, chunk_bytes);
+        let prog = self.program(Collective::AllReduce, alg, channels)?;
         let nchunks = prog.chunk_space();
         let chunk = len.div_ceil(nchunks).max(1);
         let padded = chunk * nchunks;
@@ -300,7 +389,8 @@ impl Communicator {
                 p
             })
             .collect();
-        let (outs, rep) = transport::run_allreduce(&prog, &padded_inputs, &self.options())?;
+        let (outs, rep) =
+            transport::run_allreduce(&prog, &padded_inputs, &self.options(prog.channels))?;
         let outs = outs
             .into_iter()
             .map(|mut v| {
@@ -310,27 +400,69 @@ impl Communicator {
             .collect();
         Ok((
             outs,
-            CollectiveReport { algorithm: alg, steps: prog.steps, transport: rep },
+            CollectiveReport {
+                algorithm: alg,
+                channels: prog.channels,
+                steps: prog.steps,
+                transport: rep,
+            },
         ))
     }
 
-    /// Reduce-scatter returning execution metadata.
+    /// Reduce-scatter returning execution metadata. Multi-channel
+    /// programs stripe each output slot across their channels; slot
+    /// lengths that do not divide into the stripes are padded internally
+    /// and the padding stripped on return.
     pub fn reduce_scatter_report(
         &self,
         inputs: &[Vec<f32>],
     ) -> Result<(Vec<Vec<f32>>, CollectiveReport)> {
         let n = self.cfg.nranks;
-        let chunk_bytes = inputs
-            .first()
-            .map(|v| v.len() * 4 / n.max(1))
-            .unwrap_or(0);
+        let total = inputs.first().map(Vec::len).unwrap_or(0);
+        let chunk_bytes = total * 4 / n.max(1);
         let alg = self.resolve(Collective::ReduceScatter, chunk_bytes);
-        let prog = self.program(Collective::ReduceScatter, alg)?;
-        let (out, rep) = transport::run_reduce_scatter(&prog, inputs, &self.options())?;
-        Ok((
-            out,
-            CollectiveReport { algorithm: alg, steps: prog.steps, transport: rep },
-        ))
+        let channels = self.resolve_channels(alg, chunk_bytes);
+        let prog = self.program(Collective::ReduceScatter, alg, channels)?;
+        let stripes = (prog.chunk_space() / n.max(1)).max(1);
+        let report = |rep| CollectiveReport {
+            algorithm: alg,
+            channels: prog.channels,
+            steps: prog.steps,
+            transport: rep,
+        };
+        let slot = if n > 0 && total % n == 0 { total / n } else { 0 };
+        if slot % stripes.max(1) == 0 {
+            // (Also the error path: a `total` not divisible by nranks is
+            // rejected by the transport with the pre-channel message.)
+            let (out, rep) =
+                transport::run_reduce_scatter(&prog, inputs, &self.options(prog.channels))?;
+            return Ok((out, report(rep)));
+        }
+        if inputs.iter().any(|v| v.len() != total) {
+            return Err(Error::Config("ragged reduce-scatter inputs".into()));
+        }
+        // Pad every per-rank output slot to a stripe multiple.
+        let padl = slot.div_ceil(stripes) * stripes;
+        let padded_inputs: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|v| {
+                let mut p = vec![0f32; n * padl];
+                for s in 0..n {
+                    p[s * padl..s * padl + slot].copy_from_slice(&v[s * slot..(s + 1) * slot]);
+                }
+                p
+            })
+            .collect();
+        let (outs, rep) =
+            transport::run_reduce_scatter(&prog, &padded_inputs, &self.options(prog.channels))?;
+        let outs = outs
+            .into_iter()
+            .map(|mut v| {
+                v.truncate(slot);
+                v
+            })
+            .collect();
+        Ok((outs, report(rep)))
     }
 }
 
@@ -534,5 +666,125 @@ mod tests {
             Algorithm::Pat { aggregation } => assert!(aggregation > 1),
             other => panic!("expected PAT for small messages, got {other}"),
         }
+    }
+
+    /// Pinned channels run end to end for all three collectives, including
+    /// lengths that need the stripe padding, and the report says how many
+    /// channels executed.
+    #[test]
+    fn channels_knob_end_to_end() {
+        let n = 6;
+        let c = Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+            channels: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        // len 10 is not divisible by 4 stripes -> padding path
+        let len = 10;
+        let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32 + 1.0; len]).collect();
+        let (out, rep) = c.all_gather_report(&inputs).unwrap();
+        assert_eq!(rep.channels, 4);
+        for o in &out {
+            assert_eq!(o.len(), n * len);
+            for r in 0..n {
+                assert!(o[r * len..(r + 1) * len].iter().all(|&v| v == r as f32 + 1.0));
+            }
+        }
+
+        let mut rng = Rng::new(5);
+        let slot = 7; // not divisible by 4 -> padding path
+        let rs_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..n * slot).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (rs_out, rep) = c.reduce_scatter_report(&rs_in).unwrap();
+        assert_eq!(rep.channels, 4);
+        for r in 0..n {
+            assert_eq!(rs_out[r].len(), slot);
+            for i in 0..slot {
+                let want: f32 = (0..n).map(|s| rs_in[s][r * slot + i]).sum();
+                assert_eq!(rs_out[r][i], want, "rank {r} idx {i}");
+            }
+        }
+
+        let ar_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..13).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (ar_out, rep) = c.all_reduce_report(&ar_in).unwrap();
+        assert!(rep.channels >= 4, "allreduce channels: {}", rep.channels);
+        for (r, o) in ar_out.iter().enumerate() {
+            assert_eq!(o.len(), 13, "rank {r}");
+            for i in 0..13 {
+                let want: f32 = (0..n).map(|s| ar_in[s][i]).sum();
+                assert_eq!(o[i], want, "rank {r} idx {i}");
+            }
+        }
+    }
+
+    /// A buffer budget the tuner saturates at one channel still executes
+    /// when the collective is split: the enforced capacity scales with the
+    /// channel count (same bytes — C× the slots at 1/C the slot size).
+    #[test]
+    fn buffer_budget_scales_with_channels() {
+        let n = 32;
+        // RS law: a·log2(n/a) slots — a=4 needs 4·3 = 12 at n=32; give
+        // exactly that so the single-channel budget is saturated.
+        let slots = 12;
+        for channels in [1usize, 2, 4] {
+            let c = Communicator::new(CommConfig {
+                nranks: n,
+                buffer_slots: Some(slots),
+                channels: Some(channels),
+                ..Default::default()
+            })
+            .unwrap();
+            let mut rng = Rng::new(channels as u64);
+            let chunk = 8;
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..n * chunk).map(|_| rng.below(100) as f32).collect())
+                .collect();
+            let (outs, rep) = c.reduce_scatter_report(&inputs).unwrap();
+            assert_eq!(rep.channels, channels);
+            for r in 0..n {
+                for i in 0..chunk {
+                    let want: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                    assert_eq!(outs[r][i], want, "channels={channels} rank={r}");
+                }
+            }
+        }
+    }
+
+    /// Channel auto-selection: single-link fabrics stay at one channel;
+    /// a multi-rail fabric goes multi-channel at bandwidth-bound sizes.
+    #[test]
+    fn channels_resolved_by_tuner() {
+        let flat = comm(16, Some(Algorithm::Pat { aggregation: 2 }));
+        assert_eq!(flat.resolve_channels(Algorithm::Pat { aggregation: 2 }, 4 << 20), 1);
+        let railed = Communicator::new(CommConfig {
+            nranks: 16,
+            algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+            parallel_links: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(railed.resolve_channels(Algorithm::Pat { aggregation: 2 }, 4 << 20) > 1);
+        assert_eq!(railed.resolve_channels(Algorithm::Pat { aggregation: 2 }, 16), 1);
+        // pinned wins over the tuner
+        let pinned = Communicator::new(CommConfig {
+            nranks: 16,
+            channels: Some(2),
+            parallel_links: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(pinned.resolve_channels(Algorithm::Ring, 4 << 20), 2);
+        // zero knobs rejected
+        assert!(Communicator::new(CommConfig {
+            nranks: 4,
+            channels: Some(0),
+            ..Default::default()
+        })
+        .is_err());
     }
 }

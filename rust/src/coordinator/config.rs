@@ -9,8 +9,10 @@
 //! | key | meaning |
 //! |-----|---------|
 //! | `nranks` | world size |
-//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto`, `hier_pat`, `hier_pat:<a>`, or the all-reduce composition `rs+ag[:<segments>]` (e.g. `pat+ring:4`) |
+//! | `algorithm` | `ring`, `bruck_near`, `bruck_far`, `recursive`, `pat`, `pat:<a>`, `pat_auto`, `hier_pat`, `hier_pat:<a>`, or the all-reduce composition `rs+ag[:<segments>]` (e.g. `pat+ring:4`); any spelling takes a `*<channels>` suffix (e.g. `pat*4`) |
 //! | `segments` | all-reduce pipeline segment count; wraps a non-composed `algorithm` into `alg+alg:<segments>` |
+//! | `channels` | NCCL-style channel count every collective is split across (overrides an `algorithm = alg*C` suffix) |
+//! | `parallel_links` | parallel fabric links per rank for the tuner's channel-count crossover (default 1 = auto stays single-channel) |
 //! | `buffer_slots` | intermediate-buffer budget in chunk slots |
 //! | `datapath` | `scalar` or `pjrt` |
 //! | `artifacts` | artifact directory |
@@ -38,7 +40,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::core::{Algorithm, Error, PhaseAlg, Placement, Result};
+use crate::core::{AlgSpec, Algorithm, Error, PhaseAlg, Placement, Result};
 use crate::coordinator::communicator::{CommConfig, DataPathKind};
 use crate::sim::CostModel;
 
@@ -123,7 +125,11 @@ impl ConfigMap {
             cfg.nranks = n;
         }
         if let Some(a) = self.get("algorithm") {
-            cfg.algorithm = Some(Algorithm::parse(a)?);
+            let (alg, pinned) = AlgSpec::parse_pinned(a)?;
+            cfg.algorithm = Some(alg);
+            if let Some(c) = pinned {
+                cfg.channels = Some(c);
+            }
         }
         if let Some(s) = self.get_usize("segments")? {
             if s == 0 {
@@ -143,6 +149,18 @@ impl ConfigMap {
                     ))
                 }
             });
+        }
+        if let Some(c) = self.get_usize("channels")? {
+            if c == 0 {
+                return Err(Error::Config("channels must be >= 1".into()));
+            }
+            cfg.channels = Some(c);
+        }
+        if let Some(l) = self.get_usize("parallel_links")? {
+            if l == 0 {
+                return Err(Error::Config("parallel_links must be >= 1".into()));
+            }
+            cfg.parallel_links = Some(l);
         }
         cfg.buffer_slots = self.get_usize("buffer_slots")?;
         match self.get("datapath") {
@@ -297,6 +315,60 @@ mod tests {
             .to_comm_config()
             .is_err());
         assert!(ConfigMap::parse("nranks = 8\nalgorithm = pat\nsegments = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+    }
+
+    #[test]
+    fn channels_keys() {
+        // channel suffix on the algorithm spelling
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat:2*4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.algorithm, Some(Algorithm::Pat { aggregation: 2 }));
+        assert_eq!(cfg.channels, Some(4));
+        // explicit channels key overrides the suffix
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat*4\nchannels = 2\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.channels, Some(2));
+        // an explicit *1 suffix pins single-channel (the tuner must not
+        // override it), while a bare spelling leaves the tuner free
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat*1\nparallel_links = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.channels, Some(1));
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.channels, None);
+        // parallel_links for the tuner crossover
+        let cfg = ConfigMap::parse("nranks = 8\nparallel_links = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.parallel_links, Some(4));
+        // composed spelling with channels
+        let cfg = ConfigMap::parse("nranks = 8\nalgorithm = pat+ring:2*4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        match cfg.algorithm {
+            Some(Algorithm::Compose { segments, .. }) => assert_eq!(segments, 2),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(cfg.channels, Some(4));
+        // zero rejected
+        assert!(ConfigMap::parse("nranks = 8\nchannels = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+        assert!(ConfigMap::parse("nranks = 8\nparallel_links = 0\n")
             .unwrap()
             .to_comm_config()
             .is_err());

@@ -54,6 +54,15 @@ pub struct TunerChoice {
     pub candidates: Vec<(Algorithm, f64)>,
 }
 
+/// A channel-count decision ([`Tuner::choose_channels`]).
+#[derive(Debug, Clone)]
+pub struct ChannelChoice {
+    pub channels: usize,
+    pub predicted_seconds: f64,
+    /// All evaluated candidates (channels, predicted seconds), best first.
+    pub candidates: Vec<(usize, f64)>,
+}
+
 /// Closed-form schedule cost estimator.
 #[derive(Debug, Clone)]
 pub struct Tuner {
@@ -64,6 +73,12 @@ pub struct Tuner {
     /// fabric (bytes/s); `None` models a non-blocking fabric. Only
     /// consulted by the placement-aware prediction paths.
     pub inter_bw: Option<f64>,
+    /// Parallel fabric links one rank's traffic can recruit (rails /
+    /// spine-ECMP width). Multi-channel execution scales bandwidth by
+    /// `min(channels, parallel_links)` — with 1 (the default), extra
+    /// channels only add latency, so [`Tuner::choose_channels`] stays at
+    /// one channel, the pre-channel behaviour.
+    pub parallel_links: usize,
 }
 
 impl Default for Tuner {
@@ -72,6 +87,7 @@ impl Default for Tuner {
             cost: CostModel::ib_hdr(),
             nic_bw: CostModel::ib_hdr_nic_bw(),
             inter_bw: None,
+            parallel_links: 1,
         }
     }
 }
@@ -174,6 +190,58 @@ impl Tuner {
         self.predict_pat(nranks, usize::MAX, chunk_bytes)
     }
 
+    /// Predicted wall time of a PAT(a) schedule split across `channels`
+    /// NCCL-style channels ([`crate::sched::channel::split`]): every round
+    /// posts one message per channel (latency and message-gap cost ×
+    /// channels — the channel tax at small sizes), while serialization of
+    /// the round's payload runs concurrently over `min(channels,
+    /// parallel_links)` fabric links (the bandwidth win at large sizes).
+    /// Pack cost covers the full payload either way. `channels = 1`
+    /// reduces exactly to [`Tuner::predict_pat`].
+    pub fn predict_channels(
+        &self,
+        nranks: usize,
+        a: usize,
+        chunk_bytes: usize,
+        channels: usize,
+    ) -> f64 {
+        let ch = channels.max(1);
+        let lanes = ch.min(self.parallel_links.max(1)) as f64;
+        let c = &self.cost;
+        let mut t = 0.0;
+        for round in pat::rounds(nranks, a) {
+            let k = round.offsets.len();
+            let bytes = k * chunk_bytes;
+            t += ch as f64 * (c.alpha_base + c.msg_gap)
+                + bytes as f64 / (self.nic_bw * lanes)
+                + c.pack_cost(k, bytes);
+        }
+        t
+    }
+
+    /// Channel-count crossover: sweep C ∈ {1, 2, 4, 8} for a PAT(a)
+    /// schedule and return the cheapest. Latency-bound sizes pay the
+    /// per-round channel tax and stay at C = 1; bandwidth-bound sizes on a
+    /// multi-rail fabric (`parallel_links > 1`) amortize it and move to
+    /// C ≈ `parallel_links` — more channels than links only add latency.
+    pub fn choose_channels(
+        &self,
+        nranks: usize,
+        a: usize,
+        chunk_bytes: usize,
+    ) -> ChannelChoice {
+        let mut candidates: Vec<(usize, f64)> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&ch| (ch, self.predict_channels(nranks, a, chunk_bytes, ch)))
+            .collect();
+        candidates.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap().then(x.0.cmp(&y.0)));
+        ChannelChoice {
+            channels: candidates[0].0,
+            predicted_seconds: candidates[0].1,
+            candidates,
+        }
+    }
+
     /// Predicted wall time of the hierarchical two-level schedule
     /// ([`crate::sched::hier`]): intra-node gather at NIC rate, PAT over
     /// node leaders at the leader's uplink rate (each transfer carries up
@@ -266,12 +334,12 @@ impl Tuner {
     /// phase.
     ///
     /// Known bias: the bound assumes the two phases overlap on disjoint
-    /// resources, so it is optimistic at bandwidth-bound sizes on
-    /// strongly tapered fabrics, where both phases share the core
-    /// bottleneck and the measured crossover
-    /// (`benches/allreduce_compose.rs`) favours fewer segments.
-    /// Calibrating this against the simulator (as `predict_hier` is) is
-    /// an open ROADMAP item.
+    /// resources and ignores per-channel ECMP path spreading (segments
+    /// are channels with their own flows since the channel refactor), so
+    /// it misestimates bandwidth-bound sizes on strongly tapered fabrics
+    /// — the measured sweep (`benches/allreduce_compose.rs`) peaks
+    /// mid-band. Calibrating this against the simulator (as
+    /// `predict_hier` is) is an open ROADMAP item.
     pub fn predict_allreduce(
         &self,
         rs: PhaseAlg,
@@ -530,6 +598,32 @@ mod tests {
                 pick.algorithm
             );
         }
+    }
+
+    /// Channel crossover: one channel at latency-bound sizes (the
+    /// per-round channel tax), `parallel_links` channels at
+    /// bandwidth-bound sizes on a multi-rail fabric, and never more
+    /// channels than links. A single-link fabric stays single-channel at
+    /// every size.
+    #[test]
+    fn channel_crossover_tracks_parallel_links() {
+        let quad = Tuner { parallel_links: 4, ..Tuner::default() };
+        let tiny = quad.choose_channels(64, usize::MAX, 64);
+        assert_eq!(tiny.channels, 1, "{:?}", tiny.candidates);
+        let big = quad.choose_channels(64, usize::MAX, 4 << 20);
+        assert!(big.channels > 1, "{:?}", big.candidates);
+        assert!(big.channels <= 4, "{:?}", big.candidates);
+
+        let single = Tuner::default(); // parallel_links = 1
+        for chunk in [64usize, 64 << 10, 4 << 20] {
+            let pick = single.choose_channels(64, usize::MAX, chunk);
+            assert_eq!(pick.channels, 1, "chunk={chunk}: {:?}", pick.candidates);
+        }
+        // C = 1 prediction coincides with the flat PAT prediction
+        let a = 4;
+        let p1 = quad.predict_channels(32, a, 1024, 1);
+        let flat = quad.predict_pat(32, a, 1024);
+        assert!((p1 - flat).abs() < 1e-12, "{p1} vs {flat}");
     }
 
     /// The pipeline formula: one segment pays both phases; S segments at

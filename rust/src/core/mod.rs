@@ -294,6 +294,70 @@ impl fmt::Display for Algorithm {
     }
 }
 
+/// A full schedule spec: an algorithm plus the number of NCCL-style
+/// channels its program is split across (`<alg>[*<channels>]`, e.g.
+/// `pat*4`, `pat+ring:2*4` — two-segment pat+ring all-reduce, each
+/// segment striped over 4 channels). This is what the CLI `--alg` /
+/// config `algorithm` keys actually speak; `channels == 1` is the
+/// unsplit program and prints as the bare algorithm spelling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AlgSpec {
+    pub alg: Algorithm,
+    pub channels: usize,
+}
+
+impl AlgSpec {
+    /// The single-channel spec of `alg`.
+    pub fn single(alg: Algorithm) -> AlgSpec {
+        AlgSpec { alg, channels: 1 }
+    }
+
+    /// Parse `<alg>[*<channels>]`. Everything after the last `*` must be
+    /// the channel count; the rest is the [`Algorithm`] grammar.
+    pub fn parse(s: &str) -> Result<AlgSpec> {
+        let s = s.trim();
+        match s.rsplit_once('*') {
+            Some((alg, chans)) => {
+                let channels: usize = chans.trim().parse().map_err(|_| {
+                    Error::Config(format!("bad channel count {:?} in {s:?}", chans.trim()))
+                })?;
+                if channels == 0 {
+                    return Err(Error::Config("channels must be >= 1".into()));
+                }
+                Ok(AlgSpec { alg: Algorithm::parse(alg)?, channels })
+            }
+            None => Ok(AlgSpec::single(Algorithm::parse(s)?)),
+        }
+    }
+
+    /// Parse a spelling, reporting whether the channel count was explicit:
+    /// `None` when there was no `*` suffix (callers let the tuner decide),
+    /// `Some(c)` — including `Some(1)` — when there was (the count is
+    /// pinned; `pat*1` must keep the tuner from going multi-channel). This
+    /// is the single place that knows the suffix grammar; the config and
+    /// CLI front-ends both go through it.
+    pub fn parse_pinned(s: &str) -> Result<(Algorithm, Option<usize>)> {
+        let spec = AlgSpec::parse(s)?;
+        Ok((spec.alg, s.contains('*').then_some(spec.channels)))
+    }
+
+    /// Canonical spelling — round-trips through [`AlgSpec::parse`]
+    /// (`parse(a.spec()) == a`; one channel prints bare).
+    pub fn spec(&self) -> String {
+        if self.channels == 1 {
+            self.alg.spec()
+        } else {
+            format!("{}*{}", self.alg.spec(), self.channels)
+        }
+    }
+}
+
+impl fmt::Display for AlgSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
 /// Element types supported on the datapath. The wire format is always raw
 /// little-endian bytes; reduction kernels exist for each.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -513,5 +577,71 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{a:?} displayed as {shown:?}: {e}"));
             assert_eq!(back, a, "round-trip through {shown:?}");
         }
+    }
+
+    /// The channels extension of the grammar: `parse(display(a)) == a`
+    /// over every algorithm × channel count, including composed specs like
+    /// `pat+ring:2*4`. One channel displays bare and parses back to 1.
+    #[test]
+    fn algspec_display_parse_roundtrip_fuzz() {
+        let mut algs = vec![
+            Algorithm::Ring,
+            Algorithm::BruckNearFirst,
+            Algorithm::BruckFarFirst,
+            Algorithm::Recursive,
+            Algorithm::PatAuto,
+            Algorithm::Pat { aggregation: 2 },
+            Algorithm::Pat { aggregation: usize::MAX },
+            Algorithm::HierPat { aggregation: 4 },
+        ];
+        let phases = [
+            PhaseAlg::Pat { aggregation: usize::MAX },
+            PhaseAlg::Pat { aggregation: 2 },
+            PhaseAlg::Ring,
+            PhaseAlg::HierPat { aggregation: 2 },
+        ];
+        for &rs in &phases {
+            for &ag in &phases {
+                for segments in [1usize, 2, 4, 17] {
+                    algs.push(Algorithm::Compose { rs, ag, segments });
+                }
+            }
+        }
+        for alg in algs {
+            for channels in [1usize, 2, 3, 4, 8, 64] {
+                let spec = AlgSpec { alg, channels };
+                let shown = format!("{spec}");
+                assert_eq!(shown, spec.spec(), "{spec:?}");
+                let back = AlgSpec::parse(&shown)
+                    .unwrap_or_else(|e| panic!("{spec:?} displayed as {shown:?}: {e}"));
+                assert_eq!(back, spec, "round-trip through {shown:?}");
+            }
+        }
+        // headline spellings from the issue
+        assert_eq!(
+            AlgSpec::parse("pat*4").unwrap(),
+            AlgSpec { alg: Algorithm::Pat { aggregation: usize::MAX }, channels: 4 }
+        );
+        assert_eq!(
+            AlgSpec::parse("pat+ring:2*4").unwrap(),
+            AlgSpec {
+                alg: Algorithm::Compose {
+                    rs: PhaseAlg::Pat { aggregation: usize::MAX },
+                    ag: PhaseAlg::Ring,
+                    segments: 2,
+                },
+                channels: 4,
+            }
+        );
+        // bare algorithms parse as one channel
+        assert_eq!(AlgSpec::parse("ring").unwrap(), AlgSpec::single(Algorithm::Ring));
+        // pin reporting: a `*` suffix pins (even `*1`); bare spellings don't
+        assert_eq!(AlgSpec::parse_pinned("pat*1").unwrap().1, Some(1));
+        assert_eq!(AlgSpec::parse_pinned("pat*4").unwrap().1, Some(4));
+        assert_eq!(AlgSpec::parse_pinned("pat").unwrap().1, None);
+        // rejects
+        assert!(AlgSpec::parse("pat*0").is_err());
+        assert!(AlgSpec::parse("pat*x").is_err());
+        assert!(AlgSpec::parse("*4").is_err());
     }
 }

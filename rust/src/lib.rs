@@ -26,6 +26,15 @@
 //!   segment's all-gather overlaps the next segment's reduce-scatter —
 //!   an IR-to-IR transform (chunk renaming, step staggering, FIFO-safe
 //!   stream interleaving, mirror reuse), not a third hand-written schedule.
+//! * [`sched::channel`] — the multi-channel tier: channels are a
+//!   first-class dimension of the IR (`Op::channel`; message FIFO is per
+//!   (src, dst, channel) connection), and [`sched::channel::split`] shards
+//!   *any* generated program across `C` NCCL-style channels by chunk
+//!   striping (spelled `alg*C`, e.g. `pat*4` — config/CLI `channels`
+//!   knob). Each channel is its own in-order proxy stream and its own
+//!   statically-hashed flow, so bandwidth-bound collectives recruit
+//!   parallel fabric links; compose's pipeline segments are channels of
+//!   the fused program, built on the same merge machinery.
 //! * [`transport`] — an in-process, threaded, real-byte-moving execution
 //!   engine with staging/accumulator buffer pools (the PAT buffer-occupancy
 //!   invariants are enforced here; for all-reduce one pool bounds the fused
@@ -49,25 +58,31 @@
 //!
 //! ```text
 //!    core::Algorithm ──► sched (generate / generate_placed / compose)
-//!                              │  Program IR (per-rank Send/Recv lists)
+//!                              │  Program IR (per-rank, per-channel
+//!                              │  Send/Recv streams; channel::split
+//!                              │  shards any program across C channels)
 //!                              ▼
-//!                        sched::verify  ← ground truth: FIFO, deadlock,
-//!                              │           exact sums, buffer occupancy
+//!                        sched::verify  ← ground truth: per-channel FIFO,
+//!                              │           deadlock, exact sums, occupancy
 //!              ┌───────────────┴────────────────┐
 //!              ▼                                ▼
 //!        transport (real bytes,           sim (event-driven, topology +
-//!        threads, buffer pools)           α-β-γ costs, link contention)
+//!        threads, buffer pools,           α-β-γ costs, link contention,
+//!        per-channel connections)         per-channel flows/streams)
 //!              │                                │
 //!              └───────────────┬────────────────┘
 //!                              ▼
-//!                    coordinator (tuner crossovers, Communicator,
-//!                    config/CLI) — picks algorithms from closed forms
-//!                    calibrated against the simulator
+//!                    coordinator (tuner crossovers incl. channel count,
+//!                    Communicator, config/CLI) — picks algorithms from
+//!                    closed forms calibrated against the simulator
 //! ```
 //!
-//! Every generator — flat, hierarchical, or composed — emits the same IR,
-//! is validated by the same verifier, and runs unmodified on both
-//! executors; that is the invariant that keeps the layers independent.
+//! Every generator — flat, hierarchical, composed, or channel-split —
+//! emits the same IR, is validated by the same verifier, and runs
+//! unmodified on both executors; that is the invariant that keeps the
+//! layers independent. Execution semantics of the IR: ops on one (rank,
+//! channel) retire in order, channels progress independently, and
+//! messages are FIFO per (src, dst, channel) connection.
 //!
 //! ## Quickstart
 //!

@@ -15,7 +15,7 @@
 use patcol::cli::Args;
 use patcol::coordinator::config::parse_bytes;
 use patcol::coordinator::{CommConfig, Communicator, DataPathKind, Tuner};
-use patcol::core::{Algorithm, Collective, Placement, Result};
+use patcol::core::{AlgSpec, Algorithm, Collective, Placement, Result};
 use patcol::sched::{self, explain, pat};
 use patcol::sim::{self, CostModel, Topology};
 use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
@@ -62,24 +62,28 @@ USAGE: patcol <command> [--options]
 
 COMMANDS
   explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs|ar] [--trees]
-            [--placement SPEC | --ranks-per-node K]
+            [--channels C] [--placement SPEC | --ranks-per-node K]
   run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
-            [--datapath scalar|pjrt] [--buffer-slots S]
+            [--channels C] [--datapath scalar|pjrt] [--buffer-slots S]
             [--placement SPEC | --ranks-per-node K]
   simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
-            [--topo flat|leaf_spine|three_level|dragonfly] [--taper F]
-            [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
+            [--channels C] [--topo flat|leaf_spine|three_level|dragonfly]
+            [--taper F] [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
   sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
   tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs|ar]
             [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
+            [--parallel-links L]
   selftest  [--max-ranks N]
 
 ALG: ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
      | hier_pat | hier_pat:<agg>   (two-level, placement-aware)
      | rs+ag[:<segments>]          (all-reduce composition, e.g. pat+ring:4)
+     any spelling takes *<channels> (NCCL-style channel split, e.g. pat*4)
 SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)
 SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
---intra-gbps models NVLink-class intra-node links (with --ranks-per-node)"
+--channels splits the collective across C channels (--channels overrides *C)
+--intra-gbps models NVLink-class intra-node links (with --ranks-per-node)
+--parallel-links feeds the tuner's channel-count crossover (tune)"
     );
 }
 
@@ -103,6 +107,34 @@ fn collective_for(args: &Args, alg: Option<Algorithm>) -> Result<Collective> {
         Some(Algorithm::Compose { .. }) => Ok(Collective::AllReduce),
         _ => Ok(coll),
     }
+}
+
+/// `--alg` (the [`AlgSpec`] grammar, so a `*<channels>` suffix is
+/// accepted) plus the `--channels` override. Returns the algorithm (None
+/// when `--alg` is absent) and the pinned channel count (None = let the
+/// tuner/default decide).
+fn alg_channels(args: &Args) -> Result<(Option<Algorithm>, Option<usize>)> {
+    let mut channels = None;
+    let alg = match args.opt_str("alg") {
+        Some(s) => {
+            let (alg, pinned) = AlgSpec::parse_pinned(&s)?;
+            if let Some(c) = pinned {
+                channels = Some(c);
+            }
+            Some(alg)
+        }
+        None => None,
+    };
+    if let Some(c) = args.opt_str("channels") {
+        let c: usize = c
+            .parse()
+            .map_err(|_| patcol::core::Error::Config(format!("--channels: bad integer {c:?}")))?;
+        if c == 0 {
+            return Err(patcol::core::Error::Config("--channels must be >= 1".into()));
+        }
+        channels = Some(c);
+    }
+    Ok((alg, channels))
 }
 
 /// Placement from `--placement SPEC` or `--ranks-per-node K` (None if
@@ -183,12 +215,15 @@ fn topology(args: &Args, nranks: usize) -> Result<Topology> {
 fn cmd_explain(args: &Args) -> Result<()> {
     let n = args.usize("ranks", 8)?;
     let agg = args.usize("agg", usize::MAX)?;
-    let alg = match args.opt_str("alg") {
-        Some(s) => Algorithm::parse(&s)?,
-        None => Algorithm::Pat { aggregation: agg },
-    };
+    let (alg_opt, channels) = alg_channels(args)?;
+    let alg = alg_opt.unwrap_or(Algorithm::Pat { aggregation: agg });
+    let channels = channels.unwrap_or(1);
     let coll = collective_for(args, Some(alg))?;
-    let prog = generate_for_cli(args, alg, coll, n)?;
+    // `base` keeps the single-channel view for the phase tables; `prog`
+    // is what executes (split across channels when requested) and what
+    // the step table — with its channel column — renders.
+    let base = generate_for_cli(args, alg, coll, n)?;
+    let prog = sched::channel::split(&base, channels)?;
     println!("{}", explain::render_steps(&prog));
     if let Algorithm::Pat { .. } = alg {
         println!("{}", explain::render_pat_tree(n, agg));
@@ -198,7 +233,7 @@ fn cmd_explain(args: &Args) -> Result<()> {
         // for all-reduce the compose view below covers both phases.
         if coll != Collective::AllReduce {
             let pl = placement_or_default(args, n)?;
-            println!("{}", explain::render_hier_phases(&prog, &pl, aggregation));
+            println!("{}", explain::render_hier_phases(&base, &pl, aggregation));
         }
     }
     // Compose view: an explicit pair, or the lifted `alg+alg:1` an
@@ -223,16 +258,16 @@ fn cmd_explain(args: &Args) -> Result<()> {
         let rsp = build(rs.to_algorithm(), Collective::ReduceScatter)?;
         let agp = build(ag.to_algorithm(), Collective::AllGather)?;
         let layout = sched::compose::Layout::of(&rsp, &agp, segments);
-        println!("{}", explain::render_compose_phases(&prog, &layout));
+        println!("{}", explain::render_compose_phases(&base, &layout));
     }
     if args.flag("trees") {
-        println!("{}", explain::render_root_trees(&prog));
+        println!("{}", explain::render_root_trees(&base));
     }
     let occ = sched::verify::verify_program(&prog)?;
     let s = prog.stats();
     println!(
-        "steps={} messages={} chunk_transfers={} max_aggregation={} peak_buffer_slots={}",
-        s.steps, s.messages, s.chunk_transfers, s.max_aggregation, occ.peak_slots
+        "steps={} channels={} messages={} chunk_transfers={} max_aggregation={} peak_buffer_slots={}",
+        s.steps, prog.channels, s.messages, s.chunk_transfers, s.max_aggregation, occ.peak_slots
     );
     Ok(())
 }
@@ -240,10 +275,7 @@ fn cmd_explain(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let n = args.usize("ranks", 8)?;
     let size = args.bytes("size", 64 * 1024)?;
-    let alg = match args.opt_str("alg") {
-        Some(s) => Some(Algorithm::parse(&s)?),
-        None => None,
-    };
+    let (alg, channels) = alg_channels(args)?;
     let coll = collective_for(args, alg)?;
     let datapath = match args.str("datapath", "scalar").as_str() {
         "pjrt" => DataPathKind::Pjrt,
@@ -255,6 +287,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         buffer_slots: args.opt_str("buffer-slots").map(|s| parse_bytes(&s)).transpose()?,
         datapath,
         placement: placement_opt(args, n)?,
+        channels,
         ..Default::default()
     })?;
     let chunk = (size / 4).max(1);
@@ -297,11 +330,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let wall = rep.transport.wall.as_secs_f64();
     println!(
-        "{} {} ranks={} chunk={} steps={} msgs={} bytes={} peak_slots={} wall={} algbw={}/s",
+        "{} {} ranks={} chunk={} channels={} steps={} msgs={} bytes={} peak_slots={} wall={} algbw={}/s",
         rep.algorithm,
         coll,
         n,
         fmt_bytes(size),
+        rep.channels,
         rep.steps,
         rep.transport.messages,
         fmt_bytes(rep.transport.bytes_moved),
@@ -315,7 +349,9 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.usize("ranks", 64)?;
     let size = args.bytes("size", 64 * 1024)?;
-    let alg = Algorithm::parse(&args.str("alg", "pat"))?;
+    let (alg_opt, channels) = alg_channels(args)?;
+    let alg = alg_opt.unwrap_or(Algorithm::Pat { aggregation: usize::MAX });
+    let channels = channels.unwrap_or(1);
     let coll = collective_for(args, Some(alg))?;
     let topo = topology(args, n)?;
     let cost = CostModel::ib_hdr();
@@ -325,7 +361,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let pl = placement_or_default(args, n)?;
         topo.check_placement(&pl)?;
     }
-    let prog = generate_for_cli(args, alg, coll, n)?;
+    let prog = sched::channel::split(&generate_for_cli(args, alg, coll, n)?, channels)?;
+    // `--size` is the per-rank chunk payload before splitting; each of the
+    // C stripes carries a 1/C-sized sub-chunk, rounded UP for odd sizes
+    // (pad semantics, matching the Communicator — never simulate less
+    // payload than requested).
+    let size = size.div_ceil(channels).max(1);
     let rep = if let Some(trace_path) = args.opt_str("trace") {
         use patcol::util::json::Json;
         let (rep, trace) = sim::simulate_traced(&prog, &topo, &cost, size)?;
@@ -349,14 +390,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         sim::simulate(&prog, &topo, &cost, size)?
     };
     println!(
-        "{} {} ranks={} chunk={} topo={}",
-        alg, coll, n, fmt_bytes(size), topo.name
+        "{} {} ranks={} chunk={} channels={} topo={}",
+        prog.algorithm,
+        coll,
+        n,
+        fmt_bytes(size),
+        prog.channels,
+        topo.name
     );
-    // Payload convention: AG/RS move (n-1) chunks per rank; all-reduce
-    // moves 2(n-1)/n of the full per-rank vector (chunk_space chunks).
+    // Payload convention: AG/RS move (n-1) sub-chunks per rank per channel
+    // stripe; all-reduce moves 2(n-1)/n of the full per-rank vector
+    // (chunk_space sub-chunks). `size` is the per-stripe sub-chunk here.
+    let stripes = (prog.chunk_space() / n.max(1)).max(1);
     let payload = match coll {
         Collective::AllReduce => 2 * (n - 1) * prog.chunk_space() * size / n.max(1),
-        _ => (n - 1) * size,
+        _ => (n - 1) * stripes * size,
     };
     println!(
         "  time={}  algbw={}/s  msgs={}  bytes={}  bytes_links={:.2e}",
@@ -425,8 +473,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let slots = args.usize("buffer-slots", 64)?;
     let coll = collective(args)?;
     let inter_gbps = args.f64("inter-gbps", 0.0)?;
+    let links = args.usize("parallel-links", 1)?.max(1);
     let tuner = Tuner {
         inter_bw: if inter_gbps > 0.0 { Some(inter_gbps * 1e9) } else { None },
+        parallel_links: links,
         ..Tuner::default()
     };
     let placement = placement_opt(args, n)?;
@@ -451,7 +501,22 @@ fn cmd_tune(args: &Args) -> Result<()> {
         t.row([alg.name(), fmt_time_s(*cost)]);
     }
     print!("{}", t.render());
-    println!("chosen: {}", choice.algorithm);
+    // Channel-count crossover at the chosen algorithm's aggregation:
+    // latency tax × C vs bandwidth ÷ min(C, parallel links).
+    let agg = match choice.algorithm {
+        Algorithm::Pat { aggregation } | Algorithm::HierPat { aggregation } => aggregation,
+        _ => usize::MAX,
+    };
+    let ch = tuner.choose_channels(n, agg, size);
+    let mut ct = Table::new(["channels", "predicted"]);
+    for (c, cost) in &ch.candidates {
+        ct.row([format!("{c}"), fmt_time_s(*cost)]);
+    }
+    print!("{}", ct.render());
+    println!(
+        "chosen: {} channels={} (parallel_links={links})",
+        choice.algorithm, ch.channels
+    );
     Ok(())
 }
 
@@ -499,6 +564,24 @@ fn cmd_selftest(args: &Args) -> Result<()> {
                     patcol::core::Error::Verify(format!("{alg} all_reduce n={n}: {e}"))
                 })?;
                 count += 1;
+            }
+        }
+    }
+    // Channel-split axis: primitive collectives sharded across channels.
+    for n in [2usize, 5, 8, 16, 33] {
+        if n > max {
+            continue;
+        }
+        for alg in [Algorithm::Ring, Algorithm::Pat { aggregation: 2 }] {
+            for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                let base = sched::generate(alg, coll, n)?;
+                for c in [2usize, 4] {
+                    let p = sched::channel::split(&base, c)?;
+                    sched::verify::verify_program(&p).map_err(|e| {
+                        patcol::core::Error::Verify(format!("{alg}*{c} {coll} n={n}: {e}"))
+                    })?;
+                    count += 1;
+                }
             }
         }
     }

@@ -68,8 +68,8 @@ fn push_dim_round(p: &mut Program, n: usize, d: u32, step: usize, offsets: &[usi
         let src: Rank = (i + n - hop % n) % n;
         let send_chunks: Vec<usize> = offsets.iter().map(|o| (i + n - o % n) % n).collect();
         let recv_chunks: Vec<usize> = offsets.iter().map(|o| (src + n - o % n) % n).collect();
-        p.push(i, Op::Send { peer: dst, chunks: send_chunks, step });
-        p.push(i, Op::Recv { peer: src, chunks: recv_chunks, reduce: false, step });
+        p.push(i, Op::send(dst, send_chunks, step));
+        p.push(i, Op::recv(src, recv_chunks, false, step));
     }
 }
 

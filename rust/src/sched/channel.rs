@@ -1,0 +1,299 @@
+//! First-class channels: split any collective program across NCCL-style
+//! channels, and the FIFO-safe stream-merge machinery shared with the
+//! composer.
+//!
+//! At bandwidth-bound sizes NCCL runs a single all-gather or reduce-scatter
+//! over multiple *channels* — parallel connections with their own proxy
+//! streams and (on ECMP fabrics) their own statically-hashed paths — so one
+//! collective can use parallel links instead of serializing behind a single
+//! flow. Here the channel is an IR concept ([`Op::channel`]): the splitter
+//! below takes *any* generated program (pat / ring / bruck / tree / hier,
+//! either collective, even an already-composed all-reduce) and shards it
+//! across `C` channels by **chunk striping**:
+//!
+//! * the payload splits into `C` equal stripes; stripe `k` becomes an
+//!   independent copy of the base schedule over its own chunk ids
+//!   `k·chunk_space + c` (ownership is preserved: chunk ids are owned by
+//!   `id mod nranks`, and `chunk_space` is a multiple of `nranks`);
+//! * copy `k`'s ops run on channels `k·base_channels + old_channel`, so
+//!   splitting composes with programs that already carry channels
+//!   (splitting a 2-segment all-reduce across 2 stripes yields 4 channels);
+//! * each rank's op list is the [`merge_rank_streams`] merge of its `C`
+//!   per-copy streams, keyed by `(step, stripe)` — the same FIFO-safety
+//!   argument as the composer's (see below), so the merged list is a valid
+//!   linear extension that the single-stream reference executor can run.
+//!
+//! The composer ([`crate::sched::compose`]) is a *user* of the same
+//! machinery: its pipeline segments are channels (segment `s`'s phase
+//! streams merge with `channel_base = s`), rather than a chunk-id
+//! convention for downstream layers to re-infer.
+//!
+//! ## Why the merge preserves FIFO
+//!
+//! Every stream is merged by the key `(step_base + op.step, stream index)`
+//! with in-stream order preserved. A message's send and recv carry the same
+//! source step, and live at the same stream index on their two ranks
+//! (stripe `k` everywhere, or (segment, phase) everywhere for the
+//! composer). Both endpoints therefore order any two messages of a
+//! connection identically, so the k-th send `s → d` on a channel still
+//! faces the k-th recv at `d` from `s` on that channel: per-(src, dst,
+//! channel) FIFO survives both splitting and composition.
+
+use crate::core::{ChunkId, Error, Rank, Result};
+use crate::sched::program::{Op, Program};
+
+/// One source op stream feeding [`merge_rank_streams`]: a slice of ops plus
+/// the offsets that re-home it onto the output program's step grid, chunk
+/// space and channel range.
+pub struct Stream<'a> {
+    pub ops: &'a [Op],
+    /// Added to every op's step.
+    pub step_base: usize,
+    /// Added to every chunk id.
+    pub chunk_base: usize,
+    /// Added to every op's channel.
+    pub channel_base: usize,
+}
+
+/// Merge `streams` into `out.ranks[rank]`, ordered by `(step_base +
+/// op.step, stream index)` with in-stream order preserved, remapping
+/// chunks, steps and channels by each stream's bases. Callers must build
+/// the stream list in the same order on every rank — the stream index is
+/// the tie-break that keeps both endpoints of a connection in agreement
+/// (see the module docs for the FIFO argument).
+pub fn merge_rank_streams(out: &mut Program, rank: Rank, streams: &[Stream<'_>]) {
+    let mut idx = vec![0usize; streams.len()];
+    loop {
+        let mut best: Option<(usize, (usize, usize))> = None;
+        for (i, st) in streams.iter().enumerate() {
+            if let Some(op) = st.ops.get(idx[i]) {
+                let key = (st.step_base + op.step(), i);
+                if best.map(|(_, bk)| key < bk).unwrap_or(true) {
+                    best = Some((i, key));
+                }
+            }
+        }
+        let Some((i, _)) = best else { break };
+        let st = &streams[i];
+        let op = &st.ops[idx[i]];
+        idx[i] += 1;
+        let remap = |chunks: &[ChunkId]| -> Vec<ChunkId> {
+            chunks.iter().map(|&c| st.chunk_base + c).collect()
+        };
+        let merged = match op {
+            Op::Send { peer, chunks, step, channel } => Op::Send {
+                peer: *peer,
+                chunks: remap(chunks),
+                step: st.step_base + step,
+                channel: st.channel_base + channel,
+            },
+            Op::Recv { peer, chunks, reduce, step, channel } => Op::Recv {
+                peer: *peer,
+                chunks: remap(chunks),
+                reduce: *reduce,
+                step: st.step_base + step,
+                channel: st.channel_base + channel,
+            },
+        };
+        out.push(rank, merged);
+    }
+}
+
+/// Split `p` across `channels` stripes (see the module docs). `channels ==
+/// 1` returns the program unchanged; the split program's algorithm name is
+/// `{base}*{channels}` (the CLI/config channel spelling), its chunk space
+/// `channels × chunk_space(p)`, and its channel count `channels ×
+/// p.channels`.
+pub fn split(p: &Program, channels: usize) -> Result<Program> {
+    if channels == 0 {
+        return Err(Error::Schedule("channel split requires channels >= 1".into()));
+    }
+    if channels == 1 {
+        return Ok(p.clone());
+    }
+    let base_chunks = p.chunk_space();
+    let base_channels = p.channels;
+    let mut out = Program::new(
+        p.nranks,
+        p.collective,
+        format!("{}*{channels}", p.algorithm),
+    );
+    for rank in 0..p.nranks {
+        let streams: Vec<Stream<'_>> = (0..channels)
+            .map(|k| Stream {
+                ops: &p.ranks[rank],
+                step_base: 0,
+                chunk_base: k * base_chunks,
+                channel_base: k * base_channels,
+            })
+            .collect();
+        merge_rank_streams(&mut out, rank, &streams);
+    }
+    debug_assert_eq!(out.collective, p.collective);
+    Ok(out)
+}
+
+/// The per-(rank, channel) op streams of a program — the unit the
+/// simulator and the threaded transport execute, and what tests compare
+/// when asserting two constructions are channel-for-channel identical.
+pub fn per_channel_streams(p: &Program) -> Vec<Vec<Vec<&Op>>> {
+    let nchan = p.channels.max(1);
+    let mut out: Vec<Vec<Vec<&Op>>> = vec![vec![Vec::new(); nchan]; p.nranks];
+    for (r, ops) in p.ranks.iter().enumerate() {
+        for op in ops {
+            out[r][op.channel()].push(op);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify::verify_program;
+    use crate::sched::{bruck, hier, pat, ring};
+
+    #[test]
+    fn rejects_zero_channels_and_identity_at_one() {
+        let p = pat::allgather(8, 2);
+        assert!(split(&p, 0).is_err());
+        let same = split(&p, 1).unwrap();
+        assert_eq!(same, p);
+    }
+
+    #[test]
+    fn split_structure() {
+        let p = ring::allgather(6);
+        let s = split(&p, 4).unwrap();
+        assert_eq!(s.nranks, 6);
+        assert_eq!(s.channels, 4);
+        assert_eq!(s.chunk_space(), 4 * 6);
+        assert_eq!(s.total_ops(), 4 * p.total_ops());
+        assert_eq!(s.steps, p.steps);
+        assert_eq!(s.algorithm, "ring*4");
+        // chunk transfers multiply by the channel count (each stripe moves
+        // the full n(n-1) grid of its own, 1/C-sized, chunks)
+        assert_eq!(s.stats().chunk_transfers, 4 * p.stats().chunk_transfers);
+    }
+
+    /// Every generator × both collectives × channel counts verifies after
+    /// splitting — the splitter is generator-agnostic.
+    #[test]
+    fn split_verifies_across_generators() {
+        let pl = crate::core::Placement::uniform(12, 4).unwrap();
+        let programs = vec![
+            ring::allgather(5),
+            bruck::allgather_near_first(9),
+            bruck::allgather_far_first(8),
+            crate::sched::recursive::allgather(8),
+            pat::allgather(12, 2),
+            pat::allgather(7, usize::MAX),
+            hier::allgather(&pl, 2),
+        ];
+        for p in programs {
+            for c in [2usize, 3, 4, 8] {
+                let s = split(&p, c).unwrap();
+                verify_program(&s)
+                    .unwrap_or_else(|e| panic!("{}*{c} ag: {e}", p.algorithm));
+                let srs = split(&p.mirror(), c).unwrap();
+                verify_program(&srs)
+                    .unwrap_or_else(|e| panic!("{}*{c} rs: {e}", p.algorithm));
+            }
+        }
+    }
+
+    /// Splitting and mirroring commute channel-for-channel: the mirror of
+    /// a split all-gather carries exactly the per-channel streams of the
+    /// split of the mirror (the merged interleave differs — mirroring
+    /// reverses the within-step channel order — but each channel's stream,
+    /// which is what the executors drive, is identical including steps).
+    #[test]
+    fn split_commutes_with_mirror() {
+        let p = pat::allgather(9, 2);
+        let a = split(&p, 4).unwrap().mirror();
+        let b = split(&p.mirror(), 4).unwrap();
+        assert_eq!(a.collective, b.collective);
+        assert_eq!(a.channels, b.channels);
+        let sa = per_channel_streams(&a);
+        let sb = per_channel_streams(&b);
+        for r in 0..p.nranks {
+            for k in 0..a.channels {
+                assert_eq!(sa[r][k], sb[r][k], "rank {r} channel {k}");
+            }
+        }
+    }
+
+    /// Splitting an already-composed (multi-channel) all-reduce program
+    /// multiplies the channel count and still verifies.
+    #[test]
+    fn split_composed_allreduce() {
+        let rs = pat::reduce_scatter(8, 2);
+        let ag = pat::allgather(8, 2);
+        let fused = crate::sched::compose::fuse(&rs, &ag, 2).unwrap();
+        assert_eq!(fused.channels, 2);
+        let s = split(&fused, 2).unwrap();
+        assert_eq!(s.channels, 4);
+        assert_eq!(s.chunk_space(), 2 * fused.chunk_space());
+        verify_program(&s).unwrap();
+    }
+
+    /// The regression test for the simulator's old compose-only channel
+    /// inference: a composed `S`-segment all-reduce and the channel-split
+    /// of the equivalent sequential composition carry identical
+    /// per-(rank, channel) op streams — same kinds, peers, chunks and
+    /// reduce flags, in the same per-channel order (only the step
+    /// numbering differs: compose staggers segments, split does not). The
+    /// executors drive per-channel streams, so the two programs execute
+    /// identically.
+    #[test]
+    fn compose_segments_equal_channel_split_streams() {
+        let n = 12;
+        let segments = 3;
+        let rs = pat::reduce_scatter(n, 2);
+        let ag = ring::allgather(n);
+        let composed = crate::sched::compose::fuse(&rs, &ag, segments).unwrap();
+        let sequential = crate::sched::compose::fuse(&rs, &ag, 1).unwrap();
+        let split_seq = split(&sequential, segments).unwrap();
+        assert_eq!(composed.channels, segments);
+        assert_eq!(split_seq.channels, segments);
+        let key = |op: &Op| {
+            (
+                op.is_send(),
+                op.peer(),
+                op.chunks().to_vec(),
+                matches!(op, Op::Recv { reduce: true, .. }),
+            )
+        };
+        let a = per_channel_streams(&composed);
+        let b = per_channel_streams(&split_seq);
+        for r in 0..n {
+            for k in 0..segments {
+                let sa: Vec<_> = a[r][k].iter().map(|op| key(op)).collect();
+                let sb: Vec<_> = b[r][k].iter().map(|op| key(op)).collect();
+                assert_eq!(sa, sb, "rank {r} channel {k}");
+            }
+        }
+    }
+
+    /// Chunk ownership is preserved by the stripe renaming: every chunk id
+    /// a rank sends without having received belongs to it (`id % n == r`).
+    #[test]
+    fn ownership_preserved() {
+        let s = split(&pat::allgather(10, usize::MAX), 3).unwrap();
+        let n = s.nranks;
+        for (r, ops) in s.ranks.iter().enumerate() {
+            let mut held: std::collections::HashSet<usize> =
+                (0..s.chunk_space()).filter(|c| c % n == r).collect();
+            for op in ops {
+                match op {
+                    Op::Recv { chunks, .. } => held.extend(chunks.iter().copied()),
+                    Op::Send { chunks, .. } => {
+                        for c in chunks {
+                            assert!(held.contains(c), "rank {r} sends unheld chunk {c}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -9,22 +9,29 @@
 //! all-reduce over its own chunk space, staggered so that segment `i`'s
 //! all-gather shares its step range with segment `i+1`'s reduce-scatter.
 //!
-//! Two execution models consume the fused program:
+//! Segments are **channels**: segment `s`'s ops are emitted on channel `s`
+//! ([`Op::channel`]), using the shared merge machinery of
+//! [`crate::sched::channel`] — the composer is a user of the IR's channel
+//! dimension, not a chunk-id convention downstream layers re-infer. Two
+//! execution models consume the fused program:
 //!
-//! * the verifier and the threaded transport run each rank as ONE
-//!   in-order stream (the merged op order below) — correctness and the
-//!   fused staging-slot bound are checked there;
-//! * the simulator runs each segment as its own NCCL-style *channel*
-//!   (independent per-rank stream + per-channel connection), so segments
-//!   genuinely overlap in time while contending for the same links.
+//! * the reference executor runs each rank as ONE in-order stream (the
+//!   merged op order below) — correctness and the fused staging-slot
+//!   bound are checked there;
+//! * the simulator and the threaded transport run each segment as its own
+//!   NCCL-style channel (independent per-rank stream + per-channel
+//!   connection), so segments genuinely overlap in time while contending
+//!   for the same links.
 //!
 //! Where it pays: at latency-to-mid payload sizes the overlapping
-//! channels fill each other's link idle gaps and `pat+pat:4` beats the
-//! sequential `pat+pat:1` on the 256-rank tapered fat-tree. At
-//! bandwidth-bound sizes both phases saturate the same tapered core
-//! links, so overlap cannot add bandwidth and the sequential composition
-//! wins — `benches/allreduce_compose.rs` measures exactly that crossover
-//! and the tuner sweeps segment counts against it.
+//! channels fill each other's link idle gaps — and, since segments are
+//! channels with their own statically-hashed flows, spread over distinct
+//! spines/cores — so `pat+pat:4` beats the sequential `pat+pat:1` on the
+//! 256-rank tapered fat-tree (~10% at 64 KiB/rank under the
+//! channel-salted router). At bandwidth-bound sizes both phases saturate
+//! the same tapered core links and the advantage shrinks toward the pure
+//! path-spreading gain — `benches/allreduce_compose.rs` records the
+//! whole sweep and the tuner sweeps segment counts against it.
 //!
 //! ## The IR-to-IR transform
 //!
@@ -42,11 +49,12 @@
 //!   (`R`/`A` = phase step counts), so segment `s`'s all-gather shares its
 //!   step range with segment `s+1`'s reduce-scatter — that is the overlap.
 //! * **FIFO-safe interleaving** — each rank's composed op list is the
-//!   merge of its 2·S per-phase streams ordered by `(global step, segment,
-//!   phase)`, preserving original in-stream order. Because every rank
-//!   merges by the same key and a message's send and recv carry the same
-//!   step in the source programs, the k-th send `s → d` still faces the
-//!   k-th recv at `d` from `s`: per-pair FIFO survives composition.
+//!   [`crate::sched::channel::merge_rank_streams`] merge of its 2·S
+//!   per-phase streams ordered by `(global step, segment, phase)`,
+//!   preserving original in-stream order. Because every rank merges by the
+//!   same key and a message's send and recv carry the same step in the
+//!   source programs, the k-th send `s → d` still faces the k-th recv at
+//!   `d` from `s`: per-connection FIFO survives composition.
 //! * **Mirror reuse** — reduce-scatter phase programs come from
 //!   [`Program::mirror`] exactly as for the standalone collective; the
 //!   composer never re-derives a schedule, it only renames and interleaves.
@@ -58,7 +66,8 @@
 //! and `transport::run_allreduce` for the real-byte engine).
 
 use crate::core::{ChunkId, Collective, Error, Placement, Result};
-use crate::sched::program::{Op, Program};
+use crate::sched::channel;
+use crate::sched::program::Program;
 
 /// Which half of the composition a step/message belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -200,74 +209,44 @@ pub fn fuse(rs: &Program, ag: &Program, segments: usize) -> Result<Program> {
     if segments == 0 {
         return Err(Error::Schedule("compose: segments must be >= 1".into()));
     }
+    if rs.channels > 1 || ag.channels > 1 {
+        // The segment chunk renaming assumes the phases' n-chunk space;
+        // split the *fused* program instead (channels compose that way).
+        return Err(Error::Schedule(
+            "compose: phase programs must be single-channel (apply \
+             channel::split to the fused program)"
+                .into(),
+        ));
+    }
     let n = rs.nranks;
     let layout = Layout::of(rs, ag, segments);
     let name = format!("{}+{}:{segments}", rs.algorithm, ag.algorithm);
     let mut out = Program::new(n, Collective::AllReduce, name);
 
     // Per rank: merge the 2·segments phase streams by (global step,
-    // segment, phase), preserving in-stream order. The merge key is the
-    // same on sender and receiver (a message's two sides share a source
-    // step), so per-pair FIFO order is preserved across the fuse.
-    struct Stream<'a> {
-        ops: &'a [Op],
-        idx: usize,
-        step_base: usize,
-        chunk_base: usize,
-        // (segment, phase-rank) merge tie-break; phase-rank orders a
-        // segment's RS before its AG if they ever share a step (R == 0).
-        key: (usize, usize),
-    }
+    // stream index = segment·2 + phase), preserving in-stream order — a
+    // segment's RS stream sits before its AG stream so they order
+    // correctly if they ever share a step. Segment `seg` IS channel `seg`
+    // of the fused program.
     for rank in 0..n {
-        let mut streams: Vec<Stream> = Vec::with_capacity(2 * segments);
+        let mut streams: Vec<channel::Stream<'_>> = Vec::with_capacity(2 * segments);
         for seg in 0..segments {
             let (rs_lo, _) = layout.span(seg, Phase::ReduceScatter);
             let (ag_lo, _) = layout.span(seg, Phase::AllGather);
-            streams.push(Stream {
+            streams.push(channel::Stream {
                 ops: &rs.ranks[rank],
-                idx: 0,
                 step_base: rs_lo,
                 chunk_base: seg * n,
-                key: (seg, 0),
+                channel_base: seg,
             });
-            streams.push(Stream {
+            streams.push(channel::Stream {
                 ops: &ag.ranks[rank],
-                idx: 0,
                 step_base: ag_lo,
                 chunk_base: seg * n,
-                key: (seg, 1),
+                channel_base: seg,
             });
         }
-        loop {
-            let mut best: Option<(usize, (usize, usize, usize))> = None;
-            for (i, st) in streams.iter().enumerate() {
-                if let Some(op) = st.ops.get(st.idx) {
-                    let key = (st.step_base + op.step(), st.key.0, st.key.1);
-                    if best.map(|(_, bk)| key < bk).unwrap_or(true) {
-                        best = Some((i, key));
-                    }
-                }
-            }
-            let Some((i, _)) = best else { break };
-            let st = &mut streams[i];
-            let ops = st.ops; // copy of the shared slice reference
-            let op = &ops[st.idx];
-            st.idx += 1;
-            let step = st.step_base + op.step();
-            let chunk_base = st.chunk_base;
-            let remap = |chunks: &[ChunkId]| -> Vec<ChunkId> {
-                chunks.iter().map(|&c| chunk_base + c).collect()
-            };
-            let fused = match op {
-                Op::Send { peer, chunks, .. } => {
-                    Op::Send { peer: *peer, chunks: remap(chunks), step }
-                }
-                Op::Recv { peer, chunks, reduce, .. } => {
-                    Op::Recv { peer: *peer, chunks: remap(chunks), reduce: *reduce, step }
-                }
-            };
-            out.push(rank, fused);
-        }
+        channel::merge_rank_streams(&mut out, rank, &streams);
     }
     Ok(out)
 }
@@ -295,6 +274,7 @@ pub fn allreduce(
 mod tests {
     use super::*;
     use crate::core::PhaseAlg;
+    use crate::sched::program::Op;
     use crate::sched::verify::verify_program;
     use crate::sched::{pat, ring};
 
@@ -309,6 +289,9 @@ mod tests {
         assert!(fuse(&pat::reduce_scatter(4, 2), &ag, 1).is_err());
         // zero segments
         assert!(fuse(&rs, &ag, 0).is_err());
+        // multi-channel phases: split the fused program instead
+        let split_rs = crate::sched::channel::split(&rs, 2).unwrap();
+        assert!(fuse(&split_rs, &ag, 1).is_err());
     }
 
     #[test]
@@ -338,6 +321,15 @@ mod tests {
         verify_program(&p).unwrap();
         // chunk transfers: both phases move n(n-1) chunks per segment
         assert_eq!(p.stats().chunk_transfers, 2 * 2 * n * (n - 1));
+        // segments are first-class channels: every op runs on the channel
+        // of its segment (chunk ids `seg·n + c`)
+        assert_eq!(p.channels, 2);
+        for ops in &p.ranks {
+            for op in ops {
+                let seg = op.chunks().first().map(|&c| c / n).unwrap_or(0);
+                assert_eq!(op.channel(), seg);
+            }
+        }
     }
 
     #[test]

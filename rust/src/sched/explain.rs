@@ -12,41 +12,65 @@ use crate::sched::hier;
 
 /// Render the global step-by-step transfer table of a program, one line per
 /// message, grouped by step — the "what does each rank send when" view of
-/// Figs. 1/3/5.
+/// Figs. 1/3/5. Multi-channel programs gain a channel column (the
+/// connection each message rides); single-channel output is unchanged.
 pub fn render_steps(p: &Program) -> String {
     let mut out = String::new();
-    let _ = writeln!(
-        out,
-        "{} / {} on {} ranks — {} steps",
-        p.algorithm, p.collective, p.nranks, p.steps
-    );
+    if p.channels > 1 {
+        let _ = writeln!(
+            out,
+            "{} / {} on {} ranks — {} steps, {} channels",
+            p.algorithm, p.collective, p.nranks, p.steps, p.channels
+        );
+    } else {
+        let _ = writeln!(
+            out,
+            "{} / {} on {} ranks — {} steps",
+            p.algorithm, p.collective, p.nranks, p.steps
+        );
+    }
     for (step, msgs) in p.rounds() {
         let _ = writeln!(out, "step {step}:");
         for m in msgs {
             let dist = ring_distance(m.src, m.dst, p.nranks);
-            let _ = writeln!(
-                out,
-                "  {:>3} -> {:<3} dist {:>3}  chunks {:?}",
-                m.src, m.dst, dist, m.chunks
-            );
+            if p.channels > 1 {
+                let _ = writeln!(
+                    out,
+                    "  {:>3} -> {:<3} ch {:>2}  dist {:>3}  chunks {:?}",
+                    m.src, m.dst, m.channel, dist, m.chunks
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "  {:>3} -> {:<3} dist {:>3}  chunks {:?}",
+                    m.src, m.dst, dist, m.chunks
+                );
+            }
         }
     }
     out
 }
 
 /// Render one rank's program (op-by-op), the per-rank view used to inspect
-/// FIFO order and buffer behaviour.
+/// FIFO order and buffer behaviour. Multi-channel ops carry a `/c<k>`
+/// channel tag.
 pub fn render_rank(p: &Program, rank: usize) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "rank {rank} program ({}):", p.algorithm);
+    let multi = p.channels > 1;
     for op in &p.ranks[rank] {
+        let tag = if multi {
+            format!("s{}/c{}", op.step(), op.channel())
+        } else {
+            format!("s{}", op.step())
+        };
         match op {
-            crate::sched::program::Op::Send { peer, chunks, step } => {
-                let _ = writeln!(out, "  [s{step}] send -> {peer}: {chunks:?}");
+            crate::sched::program::Op::Send { peer, chunks, .. } => {
+                let _ = writeln!(out, "  [{tag}] send -> {peer}: {chunks:?}");
             }
-            crate::sched::program::Op::Recv { peer, chunks, reduce, step } => {
+            crate::sched::program::Op::Recv { peer, chunks, reduce, .. } => {
                 let verb = if *reduce { "recv+reduce" } else { "recv" };
-                let _ = writeln!(out, "  [s{step}] {verb} <- {peer}: {chunks:?}");
+                let _ = writeln!(out, "  [{tag}] {verb} <- {peer}: {chunks:?}");
             }
         }
     }
@@ -292,6 +316,22 @@ mod tests {
         let s = render_rank(&p, 0);
         assert!(s.contains("send ->"));
         assert!(s.contains("recv <-"));
+    }
+
+    /// Multi-channel programs render a channel column; single-channel
+    /// output keeps the pre-channel (golden) format.
+    #[test]
+    fn render_channel_column() {
+        let base = pat::allgather(8, 2);
+        let single = render_steps(&base);
+        assert!(!single.contains(" ch "), "{single}");
+        let split = crate::sched::channel::split(&base, 2).unwrap();
+        let s = render_steps(&split);
+        assert!(s.contains("2 channels"), "{s}");
+        assert!(s.contains(" ch  0"), "{s}");
+        assert!(s.contains(" ch  1"), "{s}");
+        let r = render_rank(&split, 0);
+        assert!(r.contains("/c1]"), "{r}");
     }
 
     #[test]

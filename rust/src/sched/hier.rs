@@ -136,8 +136,8 @@ pub fn allgather(pl: &Placement, a: usize) -> Program {
         for (step, &(c, par)) in postorder_edges(k).iter().enumerate() {
             let chunks: Vec<ChunkId> =
                 subtree_offsets(&t, c).iter().map(|&o| local[o]).collect();
-            p.push(local[c], Op::Send { peer: local[par], chunks: chunks.clone(), step });
-            p.push(local[par], Op::Recv { peer: local[c], chunks, reduce: false, step });
+            p.push(local[c], Op::send(local[par], chunks.clone(), step));
+            p.push(local[par], Op::recv(local[c], chunks, false, step));
         }
     }
 
@@ -160,11 +160,8 @@ pub fn allgather(pl: &Placement, a: usize) -> Program {
                     .iter()
                     .flat_map(|&o| pl.ranks_of((src + nnodes - o) % nnodes).iter().copied())
                     .collect();
-                p.push(pl.leader(i), Op::Send { peer: pl.leader(dst), chunks: send, step });
-                p.push(
-                    pl.leader(i),
-                    Op::Recv { peer: pl.leader(src), chunks: recv, reduce: false, step },
-                );
+                p.push(pl.leader(i), Op::send(pl.leader(dst), send, step));
+                p.push(pl.leader(i), Op::recv(pl.leader(src), recv, false, step));
             }
         }
     }
@@ -185,8 +182,8 @@ pub fn allgather(pl: &Placement, a: usize) -> Program {
             let sub: HashSet<ChunkId> =
                 subtree_offsets(&t, c).iter().map(|&o| local[o]).collect();
             let chunks: Vec<ChunkId> = (0..n).filter(|x| !sub.contains(x)).collect();
-            p.push(local[par], Op::Send { peer: local[c], chunks: chunks.clone(), step });
-            p.push(local[c], Op::Recv { peer: local[par], chunks, reduce: false, step });
+            p.push(local[par], Op::send(local[c], chunks.clone(), step));
+            p.push(local[c], Op::recv(local[par], chunks, false, step));
         }
     }
     p

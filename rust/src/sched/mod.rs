@@ -25,6 +25,14 @@
 //! ([`Algorithm::Compose`], spelled `rs+ag[:segments]`), with the payload
 //! split into pipeline segments so one segment's all-gather overlaps the
 //! next segment's reduce-scatter.
+//!
+//! [`channel`] adds the multi-channel tier: channels are a first-class
+//! dimension of the IR ([`program::Op::channel`] — per-(rank, channel)
+//! in-order streams, FIFO per (src, dst, channel)), and
+//! [`channel::split`] shards *any* generated program across `C` channels
+//! by chunk striping (spelled `alg*C`, e.g. `pat*4`). The composer's
+//! pipeline segments are channels of the fused program, built on the same
+//! FIFO-safe stream-merge machinery.
 
 pub mod program;
 pub mod tree;
@@ -34,6 +42,7 @@ pub mod recursive;
 pub mod pat;
 pub mod hier;
 pub mod compose;
+pub mod channel;
 pub mod verify;
 pub mod explain;
 

@@ -212,8 +212,8 @@ pub fn allgather_with(n: usize, a: usize, order: LinearOrder) -> Program {
             let src: Rank = (i + n - hop) % n;
             let send: Vec<usize> = round.offsets.iter().map(|&o| (i + n - o) % n).collect();
             let recv: Vec<usize> = round.offsets.iter().map(|&o| (src + n - o) % n).collect();
-            p.push(i, Op::Send { peer: dst, chunks: send, step });
-            p.push(i, Op::Recv { peer: src, chunks: recv, reduce: false, step });
+            p.push(i, Op::send(dst, send, step));
+            p.push(i, Op::recv(src, recv, false, step));
         }
     }
     p

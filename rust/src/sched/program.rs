@@ -4,23 +4,35 @@
 //! A [`Program`] holds, for each rank, an ordered list of [`Op`]s. Execution
 //! semantics:
 //!
-//! * Ops on one rank execute in list order (a rank is single-threaded, like
-//!   one NCCL channel).
-//! * Messages between a given (src, dst) pair are FIFO; the k-th `Recv` from
-//!   a peer matches the k-th `Send` to us from that peer.
-//! * `Send` is non-blocking (buffered), `Recv` blocks — the NCCL-like model
-//!   where the sender writes into a pre-mapped remote staging buffer.
+//! * Every op belongs to a **channel** ([`Op::channel`]) — an NCCL-style
+//!   connection + proxy stream. A rank's ops on one channel execute in
+//!   list order; distinct channels are independent in-order streams that
+//!   the executors may progress concurrently (the simulator and the
+//!   threaded transport do; the reference executor conservatively runs the
+//!   merged list). Single-channel programs put everything on channel 0,
+//!   which reproduces the classic one-stream-per-rank model exactly.
+//! * Messages are FIFO per **(src, dst, channel)** — each channel is its
+//!   own connection: the k-th `Recv` from a peer on a channel matches the
+//!   k-th `Send` to us on that channel. Distinct channels of the same rank
+//!   pair are independent wires and may overtake each other.
+//! * `Send` is non-blocking (buffered), `Recv` blocks its channel — the
+//!   NCCL-like model where the sender writes into a pre-mapped remote
+//!   staging buffer.
 //!
-//! Chunk semantics depend on the collective:
+//! Chunk semantics depend on the collective. Chunk `c` is *owned* by rank
+//! `c % nranks`; multi-channel and composed programs use chunk ids beyond
+//! `nranks` (channel `k` of a split program renames chunk `c` to
+//! `k·chunk_space + c`, see [`crate::sched::channel`]), so ownership is
+//! always `id mod nranks`:
 //!
-//! * **All-gather**: rank `r` initially owns chunk `r`. `Send` transmits
-//!   copies of owned chunks; `Recv` takes ownership of new chunks. At
-//!   completion every rank owns every chunk.
+//! * **All-gather**: rank `r` initially owns its chunks (`c % n == r`).
+//!   `Send` transmits copies of owned chunks; `Recv` takes ownership of
+//!   new chunks. At completion every rank owns every chunk.
 //! * **Reduce-scatter**: rank `r` holds a contribution to *every* chunk.
 //!   `Recv { reduce: true }` folds the incoming partial sums into per-chunk
 //!   accumulators; `Send` transmits `own contribution (+ accumulator)` for
-//!   each chunk and consumes both. At completion rank `r` holds the full sum
-//!   for chunk `r` only.
+//!   each chunk and consumes both. At completion rank `r` holds the full
+//!   sum for its own chunks only.
 
 use std::collections::BTreeMap;
 
@@ -34,8 +46,11 @@ pub enum Op {
         peer: Rank,
         chunks: Vec<ChunkId>,
         /// Logical schedule step (for display/grouping; not needed for
-        /// execution, which relies on per-rank order + per-pair FIFO).
+        /// execution, which relies on per-channel order + per-connection
+        /// FIFO).
         step: usize,
+        /// The channel (connection + proxy stream) this op runs on.
+        channel: usize,
     },
     /// Receive a message of `chunks` from `peer`. `reduce` folds into
     /// accumulators (reduce-scatter) instead of taking ownership
@@ -45,13 +60,32 @@ pub enum Op {
         chunks: Vec<ChunkId>,
         reduce: bool,
         step: usize,
+        /// The channel (connection + proxy stream) this op runs on.
+        channel: usize,
     },
 }
 
 impl Op {
+    /// A send on channel 0 — what the single-channel generators emit; the
+    /// channel splitter ([`crate::sched::channel::split`]) and the composer
+    /// re-home ops onto other channels.
+    pub fn send(peer: Rank, chunks: Vec<ChunkId>, step: usize) -> Op {
+        Op::Send { peer, chunks, step, channel: 0 }
+    }
+
+    /// A receive on channel 0 (see [`Op::send`]).
+    pub fn recv(peer: Rank, chunks: Vec<ChunkId>, reduce: bool, step: usize) -> Op {
+        Op::Recv { peer, chunks, reduce, step, channel: 0 }
+    }
+
     pub fn step(&self) -> usize {
         match self {
             Op::Send { step, .. } | Op::Recv { step, .. } => *step,
+        }
+    }
+    pub fn channel(&self) -> usize {
+        match self {
+            Op::Send { channel, .. } | Op::Recv { channel, .. } => *channel,
         }
     }
     pub fn chunks(&self) -> &[ChunkId] {
@@ -76,10 +110,14 @@ pub struct Program {
     pub collective: Collective,
     /// Human-readable generator name, e.g. `pat(a=2)`.
     pub algorithm: String,
-    /// `ranks[r]` is rank `r`'s ordered op list.
+    /// `ranks[r]` is rank `r`'s ordered op list (the merge of its
+    /// per-channel streams; filter by [`Op::channel`] to recover them).
     pub ranks: Vec<Vec<Op>>,
     /// Number of logical steps (max `Op::step` + 1).
     pub steps: usize,
+    /// Number of channels (max `Op::channel` + 1, at least 1). Maintained
+    /// by [`Program::push`].
+    pub channels: usize,
 }
 
 impl Program {
@@ -90,11 +128,13 @@ impl Program {
             algorithm: algorithm.into(),
             ranks: vec![Vec::new(); nranks],
             steps: 0,
+            channels: 1,
         }
     }
 
     pub fn push(&mut self, rank: Rank, op: Op) {
         self.steps = self.steps.max(op.step() + 1);
+        self.channels = self.channels.max(op.channel() + 1);
         self.ranks[rank].push(op);
     }
 
@@ -102,17 +142,19 @@ impl Program {
     /// rank's op order, swap `Send`↔`Recv`, and set the `reduce` flag to
     /// match the mirrored collective (all-gather → reduce-scatter gains
     /// reducing receives; reduce-scatter → all-gather loses them). Steps
-    /// are renumbered so the mirrored first step is step 0. The operation
-    /// is an involution: `p.mirror().mirror() == p`.
+    /// are renumbered so the mirrored first step is step 0; channels are
+    /// preserved (the mirror of a multi-channel program runs the same
+    /// channels backwards). The operation is an involution:
+    /// `p.mirror().mirror() == p`.
     ///
     /// Why this is correct: in a valid all-gather, every `Recv` of a chunk
     /// precedes all later `Send`s of that chunk on the same rank
-    /// (causality), and per-pair FIFO matching holds. Reversal flips both:
-    /// all reduced receives of a chunk now precede its single send (the
-    /// accumulator is complete before forwarding), and per-pair sequences
-    /// reverse consistently on both sides, so FIFO matching is preserved.
-    /// This is the paper's reduce-scatter construction: reversed tree,
-    /// nearest dimensions first, parallel (linear) phase before the
+    /// (causality), and per-connection FIFO matching holds. Reversal flips
+    /// both: all reduced receives of a chunk now precede its single send
+    /// (the accumulator is complete before forwarding), and per-connection
+    /// sequences reverse consistently on both sides, so FIFO matching is
+    /// preserved. This is the paper's reduce-scatter construction: reversed
+    /// tree, nearest dimensions first, parallel (linear) phase before the
     /// logarithmic phase. The same argument read backwards takes a valid
     /// reduce-scatter to a valid all-gather.
     ///
@@ -131,16 +173,18 @@ impl Program {
         for (r, ops) in self.ranks.iter().enumerate() {
             for op in ops.iter().rev() {
                 let m = match op {
-                    Op::Send { peer, chunks, step } => Op::Recv {
+                    Op::Send { peer, chunks, step, channel } => Op::Recv {
                         peer: *peer,
                         chunks: chunks.clone(),
                         reduce: reduce_on_recv,
                         step: last - *step,
+                        channel: *channel,
                     },
-                    Op::Recv { peer, chunks, step, .. } => Op::Send {
+                    Op::Recv { peer, chunks, step, channel, .. } => Op::Send {
                         peer: *peer,
                         chunks: chunks.clone(),
                         step: last - *step,
+                        channel: *channel,
                     },
                 };
                 out.push(r, m);
@@ -152,8 +196,9 @@ impl Program {
     /// The chunk id space of this program: one past the largest chunk id
     /// any op touches, and at least `nranks` (the primitive collectives'
     /// chunk space). Composed all-reduce programs use `segments × nranks`
-    /// ids (see [`crate::sched::compose`]); the transport sizes buffers
-    /// from this.
+    /// ids (see [`crate::sched::compose`]) and channel-split programs
+    /// `channels × base` ids (see [`crate::sched::channel`]); the
+    /// transport sizes buffers from this.
     pub fn chunk_space(&self) -> usize {
         self.ranks
             .iter()
@@ -165,18 +210,20 @@ impl Program {
             .max(self.nranks)
     }
 
-    /// All (src, dst, chunks, step) message tuples, in global step order
-    /// (ties broken by src). Convenient for printing and traffic analysis.
+    /// All (src, dst, chunks, step, channel) message tuples, in global step
+    /// order (ties broken by src). Convenient for printing and traffic
+    /// analysis.
     pub fn messages(&self) -> Vec<Message> {
         let mut msgs = Vec::new();
         for (src, ops) in self.ranks.iter().enumerate() {
             for op in ops {
-                if let Op::Send { peer, chunks, step } = op {
+                if let Op::Send { peer, chunks, step, channel } = op {
                     msgs.push(Message {
                         src,
                         dst: *peer,
                         chunks: chunks.clone(),
                         step: *step,
+                        channel: *channel,
                     });
                 }
             }
@@ -232,6 +279,7 @@ pub struct Message {
     pub dst: Rank,
     pub chunks: Vec<ChunkId>,
     pub step: usize,
+    pub channel: usize,
 }
 
 /// Summary statistics of a program.
@@ -261,10 +309,10 @@ mod tests {
     fn toy_ag() -> Program {
         // 2 ranks: 0 sends chunk 0 to 1; 1 sends chunk 1 to 0.
         let mut p = Program::new(2, Collective::AllGather, "toy");
-        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
-        p.push(0, Op::Recv { peer: 1, chunks: vec![1], reduce: false, step: 0 });
-        p.push(1, Op::Send { peer: 0, chunks: vec![1], step: 0 });
-        p.push(1, Op::Recv { peer: 0, chunks: vec![0], reduce: false, step: 0 });
+        p.push(0, Op::send(1, vec![0], 0));
+        p.push(0, Op::recv(1, vec![1], false, 0));
+        p.push(1, Op::send(0, vec![1], 0));
+        p.push(1, Op::recv(0, vec![0], false, 0));
         p
     }
 
@@ -276,10 +324,7 @@ mod tests {
         // rank 0: originally [Send c0, Recv c1] -> mirrored [Send c1, Recv c0 reduce]
         assert_eq!(
             rs.ranks[0],
-            vec![
-                Op::Send { peer: 1, chunks: vec![1], step: 0 },
-                Op::Recv { peer: 1, chunks: vec![0], reduce: true, step: 0 },
-            ]
+            vec![Op::send(1, vec![1], 0), Op::recv(1, vec![0], true, 0)]
         );
         assert_eq!(rs.steps, 1);
     }
@@ -305,7 +350,7 @@ mod tests {
     fn chunk_space_covers_ids_and_ranks() {
         assert_eq!(toy_ag().chunk_space(), 2);
         let mut p = Program::new(2, Collective::AllReduce, "t");
-        p.push(0, Op::Send { peer: 1, chunks: vec![5], step: 0 });
+        p.push(0, Op::send(1, vec![5], 0));
         assert_eq!(p.chunk_space(), 6);
         // opless programs fall back to nranks
         assert_eq!(Program::new(3, Collective::AllReduce, "t").chunk_space(), 3);
@@ -314,10 +359,29 @@ mod tests {
     #[test]
     fn messages_ordered_by_step() {
         let mut p = Program::new(2, Collective::AllGather, "t");
-        p.push(1, Op::Send { peer: 0, chunks: vec![1], step: 1 });
-        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
+        p.push(1, Op::send(0, vec![1], 1));
+        p.push(0, Op::send(1, vec![0], 0));
         let m = p.messages();
         assert_eq!(m[0].step, 0);
         assert_eq!(m[1].step, 1);
+    }
+
+    /// Channels are tracked by push, surfaced in messages, and preserved —
+    /// in both directions — by the mirror.
+    #[test]
+    fn channels_tracked_and_mirrored() {
+        let mut p = Program::new(2, Collective::AllGather, "t");
+        assert_eq!(p.channels, 1);
+        p.push(0, Op::send(1, vec![0], 0));
+        p.push(1, Op::recv(0, vec![0], false, 0));
+        p.push(0, Op::Send { peer: 1, chunks: vec![2], step: 0, channel: 1 });
+        p.push(1, Op::Recv { peer: 0, chunks: vec![2], reduce: false, step: 0, channel: 1 });
+        assert_eq!(p.channels, 2);
+        let by_chan: Vec<usize> = p.messages().iter().map(|m| m.channel).collect();
+        assert_eq!(by_chan, vec![0, 1]);
+        let rs = p.mirror();
+        assert_eq!(rs.channels, 2);
+        assert_eq!(rs.ranks[0][0].channel(), 1); // reversed order, channel kept
+        assert_eq!(rs.mirror(), p);
     }
 }

@@ -36,8 +36,8 @@ pub fn try_allgather(n: usize) -> Result<Program> {
             let send: Vec<usize> = (base..base + blk).collect();
             let pbase = (partner / blk) * blk;
             let recv: Vec<usize> = (pbase..pbase + blk).collect();
-            p.push(i, Op::Send { peer: partner, chunks: send, step: d as usize });
-            p.push(i, Op::Recv { peer: partner, chunks: recv, reduce: false, step: d as usize });
+            p.push(i, Op::send(partner, send, d as usize));
+            p.push(i, Op::recv(partner, recv, false, d as usize));
         }
     }
     Ok(p)

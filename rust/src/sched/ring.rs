@@ -19,8 +19,8 @@ pub fn allgather(n: usize) -> Program {
             let prev = (i + n - 1) % n;
             let send_chunk = (i + n - s % n) % n;
             let recv_chunk = (prev + n - s % n) % n;
-            p.push(i, Op::Send { peer: next, chunks: vec![send_chunk], step: s });
-            p.push(i, Op::Recv { peer: prev, chunks: vec![recv_chunk], reduce: false, step: s });
+            p.push(i, Op::send(next, vec![send_chunk], s));
+            p.push(i, Op::recv(prev, vec![recv_chunk], false, s));
         }
     }
     p

@@ -1,11 +1,22 @@
-//! Reference executor over the program IR: correctness, FIFO matching,
-//! deadlock detection, and buffer-occupancy measurement.
+//! Reference executor over the program IR: correctness, per-channel FIFO
+//! matching, deadlock detection, and buffer-occupancy measurement.
 //!
-//! This is the ground truth every generator, the transport engine, and the
-//! simulator are validated against. Reduce-scatter is checked with exact
-//! integer arithmetic (each rank's contribution to each chunk is a distinct
-//! integer), so reduction-order questions cannot mask a miscounted or
-//! double-counted contribution.
+//! This is the ground truth every generator, the channel splitter, the
+//! transport engine, and the simulator are validated against.
+//! Reduce-scatter is checked with exact integer arithmetic (each rank's
+//! contribution to each chunk is a distinct integer), so reduction-order
+//! questions cannot mask a miscounted or double-counted contribution.
+//!
+//! Channels: messages match FIFO per **(src, dst, channel)** — each
+//! channel is its own connection (see [`crate::sched::channel`]). The
+//! executor runs each rank's merged op list as one stream, which is
+//! *stricter* than the per-channel executors (transport/sim): a program
+//! that passes here is executable by them, because the merged order is a
+//! valid linear extension of every channel's order. Occupancy is counted
+//! across all of a rank's channels together — the physical staging buffer
+//! is shared. Chunk ownership is `id % nranks` throughout, so
+//! multi-channel (striped) and composed chunk spaces verify through the
+//! same code as the primitive `nranks`-chunk programs.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -17,11 +28,14 @@ use crate::sched::program::{Op, Program};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OccupancyReport {
     /// All-gather: peak number of chunks held in staging (received but not
-    /// yet fully forwarded, excluding the rank's own chunk) on any rank.
+    /// yet fully forwarded, excluding the rank's own chunks) on any rank.
     /// Reduce-scatter: peak number of live accumulators on any rank.
     /// All-reduce: peak of live accumulators plus staged (received, not yet
     /// fully rebroadcast) final chunks on any rank — the bound the fused
-    /// program's staging slots must cover across both phases.
+    /// program's staging slots must cover across both phases. Counted
+    /// across all of a rank's channels together: the physical staging
+    /// buffer is shared, so a C-channel split peaks at up to C× the
+    /// single-channel bound (in C×-smaller chunks).
     pub peak_slots: usize,
     /// Rank on which the peak occurred.
     pub peak_rank: Rank,
@@ -34,8 +48,9 @@ pub fn rs_contribution(rank: Rank, chunk: ChunkId) -> i64 {
 }
 
 /// Verify a program end-to-end. Checks, in order:
-/// 1. per-pair FIFO consistency (k-th recv matches k-th send: same chunk
-///    list, matching reduce flag for the collective),
+/// 1. per-(src, dst, channel) FIFO consistency (k-th recv on a connection
+///    matches its k-th send: same chunk list, matching reduce flag for the
+///    collective),
 /// 2. deadlock-free completion under blocking receives,
 /// 3. data correctness (every rank owns every chunk for AG; exact reduced
 ///    sums on the owner rank for RS; every rank ends with the full sum of
@@ -52,24 +67,26 @@ pub fn verify_program(p: &Program) -> Result<OccupancyReport> {
     }
 }
 
-/// Structural FIFO check: for each ordered pair (s, d), the sequence of
-/// sends s→d equals the sequence of recvs at d from s (chunk lists in
-/// order), and reduce flags agree with the collective type (all-reduce
-/// programs mix both kinds: reducing receives in the reduce-scatter phase,
-/// plain receives in the rebroadcast phase).
+/// Structural FIFO check: for each connection (s, d, channel), the
+/// sequence of sends s→d on the channel equals the sequence of recvs at d
+/// from s on that channel (chunk lists in order), and reduce flags agree
+/// with the collective type (all-reduce programs mix both kinds: reducing
+/// receives in the reduce-scatter phase, plain receives in the rebroadcast
+/// phase). A send and recv whose channels disagree surface here as
+/// mismatched connection sequences.
 pub fn check_fifo(p: &Program) -> Result<()> {
-    let mut sends: HashMap<(Rank, Rank), Vec<&Vec<ChunkId>>> = HashMap::new();
-    let mut recvs: HashMap<(Rank, Rank), Vec<&Vec<ChunkId>>> = HashMap::new();
+    let mut sends: HashMap<(Rank, Rank, usize), Vec<&Vec<ChunkId>>> = HashMap::new();
+    let mut recvs: HashMap<(Rank, Rank, usize), Vec<&Vec<ChunkId>>> = HashMap::new();
     for (r, ops) in p.ranks.iter().enumerate() {
         for op in ops {
             match op {
-                Op::Send { peer, chunks, .. } => {
+                Op::Send { peer, chunks, channel, .. } => {
                     if *peer == r {
                         return Err(Error::Verify(format!("rank {r} sends to itself")));
                     }
-                    sends.entry((r, *peer)).or_default().push(chunks);
+                    sends.entry((r, *peer, *channel)).or_default().push(chunks);
                 }
-                Op::Recv { peer, chunks, reduce, .. } => {
+                Op::Recv { peer, chunks, reduce, channel, .. } => {
                     let bad = match p.collective {
                         Collective::AllGather => *reduce,
                         Collective::ReduceScatter => !*reduce,
@@ -81,16 +98,16 @@ pub fn check_fifo(p: &Program) -> Result<()> {
                             p.collective
                         )));
                     }
-                    recvs.entry((*peer, r)).or_default().push(chunks);
+                    recvs.entry((*peer, r, *channel)).or_default().push(chunks);
                 }
             }
         }
     }
-    for (pair, s) in &sends {
-        let r = recvs.get(pair).map(|v| v.as_slice()).unwrap_or(&[]);
+    for (conn, s) in &sends {
+        let r = recvs.get(conn).map(|v| v.as_slice()).unwrap_or(&[]);
         if s.len() != r.len() {
             return Err(Error::Verify(format!(
-                "pair {pair:?}: {} sends vs {} recvs",
+                "connection {conn:?} (src, dst, channel): {} sends vs {} recvs",
                 s.len(),
                 r.len()
             )));
@@ -98,14 +115,16 @@ pub fn check_fifo(p: &Program) -> Result<()> {
         for (k, (sc, rc)) in s.iter().zip(r.iter()).enumerate() {
             if sc != rc {
                 return Err(Error::Verify(format!(
-                    "pair {pair:?} message {k}: send chunks {sc:?} != recv chunks {rc:?}"
+                    "connection {conn:?} message {k}: send chunks {sc:?} != recv chunks {rc:?}"
                 )));
             }
         }
     }
-    for pair in recvs.keys() {
-        if !sends.contains_key(pair) {
-            return Err(Error::Verify(format!("recv with no send for pair {pair:?}")));
+    for conn in recvs.keys() {
+        if !sends.contains_key(conn) {
+            return Err(Error::Verify(format!(
+                "recv with no send for connection {conn:?} (src, dst, channel)"
+            )));
         }
     }
     Ok(())
@@ -120,8 +139,8 @@ where
 {
     let n = p.nranks;
     let mut pc = vec![0usize; n];
-    // In-flight FIFO queues per directed pair.
-    let mut wires: HashMap<(Rank, Rank), VecDeque<Vec<i64>>> = HashMap::new();
+    // In-flight FIFO queues per connection (src, dst, channel).
+    let mut wires: HashMap<(Rank, Rank, usize), VecDeque<Vec<i64>>> = HashMap::new();
     loop {
         let mut progressed = false;
         let mut all_done = true;
@@ -130,14 +149,14 @@ where
             // retire; recvs retire when the message is queued).
             while pc[r] < p.ranks[r].len() {
                 match &p.ranks[r][pc[r]] {
-                    Op::Send { peer, chunks, .. } => {
+                    Op::Send { peer, chunks, channel, .. } => {
                         let payload = on_send(r, *peer, chunks)?;
-                        wires.entry((r, *peer)).or_default().push_back(payload);
+                        wires.entry((r, *peer, *channel)).or_default().push_back(payload);
                         pc[r] += 1;
                         progressed = true;
                     }
-                    Op::Recv { peer, chunks, reduce, .. } => {
-                        let q = wires.entry((*peer, r)).or_default();
+                    Op::Recv { peer, chunks, reduce, channel, .. } => {
+                        let q = wires.entry((*peer, r, *channel)).or_default();
                         if let Some(payload) = q.pop_front() {
                             on_recv(r, *peer, chunks, *reduce, payload)?;
                             pc[r] += 1;
@@ -170,11 +189,14 @@ where
 
 fn verify_allgather(p: &Program) -> Result<OccupancyReport> {
     let n = p.nranks;
+    // Chunk space: `n` for the primitive programs, `C·n` for channel-split
+    // ones (stripe k renames chunk c to k·n + c); ownership is id mod n.
+    let nchunks = p.chunk_space();
     // owned[r][c]: value of chunk c held by rank r (i64 tag), or None.
     let mut owned: Vec<Vec<Option<i64>>> = (0..n)
         .map(|r| {
-            (0..n)
-                .map(|c| if c == r { Some(chunk_tag(c)) } else { None })
+            (0..nchunks)
+                .map(|c| if c % n == r { Some(chunk_tag(c)) } else { None })
                 .collect()
         })
         .collect();
@@ -287,11 +309,14 @@ fn chunk_tag(c: ChunkId) -> i64 {
 
 fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
     let n = p.nranks;
+    // Chunk space as for all-gather: rank r's output chunks are those with
+    // `c % n == r` (one per channel stripe).
+    let nchunks = p.chunk_space();
     // Accumulators per rank: chunk -> partial sum. Own contribution is
     // consumed exactly when the chunk is sent (or at completion for the
-    // rank's own chunk).
+    // rank's own chunks).
     let mut acc: Vec<HashMap<ChunkId, i64>> = vec![HashMap::new(); n];
-    let mut contributed: Vec<Vec<bool>> = vec![vec![false; n]; n];
+    let mut contributed: Vec<Vec<bool>> = vec![vec![false; nchunks]; n];
     let mut peak = OccupancyReport { peak_slots: 0, peak_rank: 0 };
 
     let acc_cell = std::cell::RefCell::new(&mut acc);
@@ -305,7 +330,7 @@ fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
             let mut ct = contrib_cell.borrow_mut();
             let mut payload = Vec::with_capacity(chunks.len());
             for &c in chunks {
-                if c == r {
+                if c % n == r {
                     return Err(Error::Verify(format!(
                         "rank {r} sends its own output chunk {c}"
                     )));
@@ -335,14 +360,17 @@ fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
         },
     )?;
 
-    // Completion: rank r holds exactly the full sum for chunk r.
+    // Completion: rank r holds exactly the full sum for each of its own
+    // chunks (one per channel stripe).
     for r in 0..n {
-        let own = acc[r].remove(&r).unwrap_or(0) + rs_contribution(r, r);
-        let want: i64 = (0..n).map(|i| rs_contribution(i, r)).sum();
-        if own != want {
-            return Err(Error::Verify(format!(
-                "reduce-scatter: rank {r} output {own} != expected {want}"
-            )));
+        for c in (0..nchunks).filter(|c| c % n == r) {
+            let own = acc[r].remove(&c).unwrap_or(0) + rs_contribution(r, c);
+            let want: i64 = (0..n).map(|i| rs_contribution(i, c)).sum();
+            if own != want {
+                return Err(Error::Verify(format!(
+                    "reduce-scatter: rank {r} chunk {c} output {own} != expected {want}"
+                )));
+            }
         }
         if !acc[r].is_empty() {
             return Err(Error::Verify(format!(
@@ -352,8 +380,8 @@ fn verify_reduce_scatter(p: &Program) -> Result<OccupancyReport> {
         }
         // Every rank must have contributed to every chunk exactly once
         // (either by sending it or by owning the output).
-        for c in 0..n {
-            if c != r && !contributed[r][c] {
+        for c in 0..nchunks {
+            if c % n != r && !contributed[r][c] {
                 return Err(Error::Verify(format!(
                     "rank {r} never contributed to chunk {c}"
                 )));
@@ -555,8 +583,8 @@ mod tests {
 
     fn push_pair(p: &mut Program, src: Rank, dst: Rank, chunks: Vec<ChunkId>, step: usize) {
         let reduce = p.collective == Collective::ReduceScatter;
-        p.push(src, Op::Send { peer: dst, chunks: chunks.clone(), step });
-        p.push(dst, Op::Recv { peer: src, chunks, reduce, step });
+        p.push(src, Op::send(dst, chunks.clone(), step));
+        p.push(dst, Op::recv(src, chunks, reduce, step));
     }
 
     #[test]
@@ -586,10 +614,10 @@ mod tests {
     fn detects_deadlock() {
         let mut p = Program::new(2, Collective::AllGather, "bad");
         // Both ranks recv first from each other with no sends queued.
-        p.push(0, Op::Recv { peer: 1, chunks: vec![1], reduce: false, step: 0 });
-        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
-        p.push(1, Op::Recv { peer: 0, chunks: vec![0], reduce: false, step: 0 });
-        p.push(1, Op::Send { peer: 0, chunks: vec![1], step: 0 });
+        p.push(0, Op::recv(1, vec![1], false, 0));
+        p.push(0, Op::send(1, vec![0], 0));
+        p.push(1, Op::recv(0, vec![0], false, 0));
+        p.push(1, Op::send(0, vec![1], 0));
         let err = verify_program(&p).unwrap_err();
         assert!(err.to_string().contains("deadlock"), "{err}");
     }
@@ -597,10 +625,46 @@ mod tests {
     #[test]
     fn detects_fifo_mismatch() {
         let mut p = Program::new(2, Collective::AllGather, "bad");
-        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
-        p.push(1, Op::Recv { peer: 0, chunks: vec![1], reduce: false, step: 0 });
+        p.push(0, Op::send(1, vec![0], 0));
+        p.push(1, Op::recv(0, vec![1], false, 0));
         let err = verify_program(&p).unwrap_err();
         assert!(err.to_string().contains("send chunks"), "{err}");
+    }
+
+    /// A send and recv that agree on everything but the channel are NOT a
+    /// match: channels are separate connections.
+    #[test]
+    fn detects_channel_mismatch() {
+        let mut p = Program::new(2, Collective::AllGather, "bad");
+        p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0, channel: 1 });
+        p.push(1, Op::recv(0, vec![0], false, 0)); // channel 0
+        let err = verify_program(&p).unwrap_err();
+        assert!(err.to_string().contains("connection"), "{err}");
+    }
+
+    /// A hand-built two-channel all-gather verifies, with the striped
+    /// chunk space (chunk `k·n + r` owned by rank `r`).
+    #[test]
+    fn two_channel_ag_ok() {
+        let n = 2;
+        let mut p = Program::new(n, Collective::AllGather, "2ch");
+        for k in 0..2usize {
+            for r in 0..n {
+                let peer = 1 - r;
+                p.push(r, Op::Send { peer, chunks: vec![k * n + r], step: 0, channel: k });
+                p.push(
+                    r,
+                    Op::Recv {
+                        peer,
+                        chunks: vec![k * n + peer],
+                        reduce: false,
+                        step: 0,
+                        channel: k,
+                    },
+                );
+            }
+        }
+        verify_program(&p).unwrap();
     }
 
     #[test]

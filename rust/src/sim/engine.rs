@@ -6,19 +6,22 @@
 //! * Each rank executes in-order streams (NCCL channels): ops retire in
 //!   program order within a stream; `Recv` blocks its stream, `Send` posts
 //!   and returns after the software gap `msg_gap` (NIC offload does
-//!   serialization). All-gather / reduce-scatter programs are one stream
-//!   per rank. Composed all-reduce programs run each payload *segment* as
-//!   its own channel — its own connection (per-channel FIFO wires) and
-//!   proxy stream — so segments overlap the way NCCL's multi-channel
-//!   collectives do, while still contending for the same links.
+//!   serialization). Channels are explicit in the IR ([`Op::channel`]):
+//!   every (rank, channel) is its own stream with its own connection
+//!   (per-channel FIFO wires), so channel-split collectives and composed
+//!   all-reduce segments overlap the way NCCL's multi-channel collectives
+//!   do, while still contending for the same links. Single-channel
+//!   programs reproduce the classic one-stream-per-rank model exactly.
 //! * A message traverses its link path cut-through: every link on the path
 //!   starts serializing at the same contended start time `t0 = max(ready,
 //!   max link_free)` and is busy for `bytes / bw_link`; the message arrives
 //!   at `t0 + bytes / min_bw + alpha_base + alpha_hop * hops`. Contention
 //!   is first-come-first-served per link in event-time order.
-//! * Static routing: the path for (src, dst) is fixed for the whole run
-//!   (ECMP hash, salt 0), so colliding flows collide on *every* step —
-//!   the paper's congestion mechanism.
+//! * Static routing: the path for (src, dst, channel) is fixed for the
+//!   whole run (ECMP hash, salt = channel), so colliding flows collide on
+//!   *every* step — the paper's congestion mechanism. Distinct channels
+//!   are distinct connections and hash independently, which is exactly how
+//!   multi-channel execution recruits parallel fabric links.
 //! * Non-contiguous payloads (more than one chunk per message) pay the
 //!   local pack cost at the sender and unpack cost at the receiver
 //!   (PAT's "linear part is purely local"). Reducing receives additionally
@@ -142,32 +145,15 @@ fn sim_inner(
         )));
     }
     let n = p.nranks;
-    // Channel of an op: composed all-reduce programs run each payload
-    // segment on its own channel (chunk ids are `segment·n + c`, see
-    // `sched::compose`), modelling NCCL's per-channel connections — each
-    // channel has its own proxy stream and QP, so segments progress
-    // independently while still contending on the links. Other collectives
-    // are single-channel, which reproduces the pre-channel behaviour
-    // exactly (one stream per rank, same event order).
-    let chan_of = |op: &Op| -> usize {
-        if p.collective == Collective::AllReduce {
-            op.chunks().first().map(|&c| c / n.max(1)).unwrap_or(0)
-        } else {
-            0
-        }
-    };
-    let channels = if p.collective == Collective::AllReduce {
-        (p.chunk_space().div_ceil(n.max(1))).max(1)
-    } else {
-        1
-    };
+    // Channels are explicit in the IR (`Op::channel`): composed all-reduce
+    // programs carry one channel per pipeline segment, channel-split
+    // primitives one per stripe (see `sched::channel`). Each channel has
+    // its own proxy stream and connection, so channels progress
+    // independently while still contending on the links — no more
+    // inferring channels from chunk-id conventions per collective.
+    let channels = p.channels.max(1);
     // Per-rank per-channel in-order op streams.
-    let mut streams: Vec<Vec<Vec<&Op>>> = vec![vec![Vec::new(); channels]; n];
-    for (r, ops) in p.ranks.iter().enumerate() {
-        for op in ops {
-            streams[r][chan_of(op)].push(op);
-        }
-    }
+    let streams = crate::sched::channel::per_channel_streams(p);
     let mut pc = vec![vec![0usize; channels]; n];
     let mut chan_time = vec![vec![0.0f64; channels]; n];
     let mut link_free = vec![0.0f64; topo.links.len()];
@@ -211,11 +197,14 @@ fn sim_inner(
         queued[r][k] = false;
         let op = streams[r][k][pc[r][k]];
         match op {
-            Op::Send { peer, chunks, step } => {
+            Op::Send { peer, chunks, step, .. } => {
                 let bytes = chunks.len() * chunk_bytes;
                 // Local pack for non-contiguous aggregated payloads.
                 let t_ready = t + cost.pack_cost(chunks.len(), bytes);
-                let path = topo.route(r, *peer, 0);
+                // Per-channel connections are distinct flows: the static
+                // ECMP hash is salted with the channel, so a multi-channel
+                // collective spreads over parallel spines/cores.
+                let path = topo.route(r, *peer, k as u64);
                 // Contended start: after every link on the path is free.
                 let mut t0 = t_ready;
                 let mut min_bw = f64::INFINITY;
@@ -492,6 +481,49 @@ mod tests {
                 assert!(w[0].0 <= w[1].0 + 1e-12);
             }
         }
+    }
+
+    /// A channel-split primitive collective runs through the simulator
+    /// (per-channel streams + wires), with the same bytes in C× messages.
+    #[test]
+    fn channel_split_program_simulates() {
+        use crate::sched::channel;
+        let n = 16;
+        let base = pat::allgather(n, 2);
+        let topo = Topology::leaf_spine(n, 4, 4, 25e9, 0.5).unwrap();
+        let cost = CostModel::ib_hdr();
+        let chunk = 64 << 10;
+        let rep1 = simulate(&base, &topo, &cost, chunk).unwrap();
+        for c in [2usize, 4] {
+            let split = channel::split(&base, c).unwrap();
+            let rep = simulate(&split, &topo, &cost, chunk / c).unwrap();
+            assert_eq!(rep.messages, c * rep1.messages, "c={c}");
+            assert_eq!(rep.bytes_sent, rep1.bytes_sent, "c={c}");
+            assert!(rep.total_time > 0.0);
+        }
+        // reduce-scatter side too
+        let rs = channel::split(&base.mirror(), 2).unwrap();
+        simulate(&rs, &topo, &cost, chunk / 2).unwrap();
+    }
+
+    /// Channels are distinct flows: with several spines, at least some
+    /// (src, dst) pairs route differently on different channel salts —
+    /// the mechanism that lets C > 1 recruit parallel links.
+    #[test]
+    fn channels_hash_to_distinct_paths() {
+        let topo = Topology::leaf_spine(16, 4, 4, 25e9, 1.0).unwrap();
+        let mut diverged = 0usize;
+        for src in 0..16 {
+            for dst in 0..16 {
+                if src / 4 == dst / 4 || src == dst {
+                    continue; // same leaf: fixed 2-link path
+                }
+                if topo.route(src, dst, 0) != topo.route(src, dst, 1) {
+                    diverged += 1;
+                }
+            }
+        }
+        assert!(diverged > 0, "no (src, dst) pair diverged across channel salts");
     }
 
     /// A composed all-reduce program runs through the simulator without

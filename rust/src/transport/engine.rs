@@ -1,14 +1,19 @@
 //! Threaded execution of schedule programs with real data movement.
 //!
 //! One OS thread per rank; each rank owns an mpsc receiver and cloned
-//! senders to every peer (messages carry their source, and per-source FIFO
-//! order is preserved by buffering out-of-order arrivals). `Send` never
-//! blocks; `Recv` blocks with a watchdog timeout so schedule bugs fail
-//! loudly instead of hanging the suite.
+//! senders to every peer. Messages are tagged with their **channel** and
+//! FIFO order is per (src, channel) connection — the rank thread runs a
+//! cooperative scheduler over its per-channel op streams (NCCL's
+//! per-channel proxy progress, collapsed onto one thread): each pass
+//! drives every channel as far as it can, a blocking `Recv` only stalls
+//! its own channel, and when no channel can progress the thread parks on
+//! the shared receiver with a watchdog timeout so schedule bugs fail
+//! loudly instead of hanging the suite. Single-channel programs reproduce
+//! the classic one-stream-per-rank execution exactly.
 //!
-//! All-gather writes into a full `n × chunk` receive buffer per rank; in
-//! *staged* mode (the NCCL case PAT is designed for — user buffers are not
-//! directly sendable/receivable, so every transfer goes through pre-mapped
+//! All-gather writes into a full receive buffer per rank; in *staged* mode
+//! (the NCCL case PAT is designed for — user buffers are not directly
+//! sendable/receivable, so every transfer goes through pre-mapped
 //! staging), each message's chunks transit bounded staging slots from the
 //! [`BufferPool`] around the send, enforcing the PAT aggregation bound:
 //! a schedule aggregating more chunks per transfer than the buffer holds
@@ -16,6 +21,14 @@
 //! in pool slots — the stronger constraint the paper says the algorithm
 //! was originally designed around — and folds incoming data through the
 //! configured [`DataPath`] (scalar loop or the AOT Pallas kernel via PJRT).
+//!
+//! Channel-split programs ([`crate::sched::channel::split`]) stripe the
+//! payload: a program whose chunk space is `C × nranks` moves `1/C`-sized
+//! sub-chunks, chunk `k·n + r` being stripe `k` of rank `r`'s
+//! contribution. The run functions below derive `C` from the program's
+//! chunk space, so the same entry points execute single- and
+//! multi-channel programs (inputs must split evenly into `C` stripes; the
+//! [`crate::coordinator::Communicator`] pads odd lengths).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,7 +46,11 @@ pub struct TransportOptions {
     pub datapath: DataPath,
     /// Staging/accumulator slot capacity per rank. `None` measures without
     /// enforcing. PAT schedules with aggregation `a` are expected to run
-    /// within `a` slots (claim P3, verified in tests).
+    /// within `a` slots (claim P3, verified in tests). Channels progress
+    /// independently and share the rank's pool, so the sound capacity for
+    /// a multi-channel program is the *sum* of its per-channel peaks
+    /// (C × the single-channel bound for a C-way split), not the merged
+    /// reference-executor measurement.
     pub slot_capacity: Option<usize>,
     /// All-gather: physically route forwarded chunks through staging slots
     /// (models un-registerable user buffers) instead of sending straight
@@ -75,10 +92,13 @@ pub struct TransportReport {
 
 struct WireMsg {
     src: Rank,
+    /// The connection this message rides: FIFO holds per (src, channel).
+    channel: usize,
     data: Vec<f32>,
 }
 
-/// Per-rank endpoint hiding the single-receiver / per-source-FIFO plumbing.
+/// Per-rank endpoint hiding the single-receiver / per-connection-FIFO
+/// plumbing.
 ///
 /// Wire buffers are recycled: after a receiver consumes a message it sends
 /// the (emptied) vector back to the sender's return queue, so steady-state
@@ -89,7 +109,13 @@ struct Endpoint {
     rank: Rank,
     senders: Vec<Sender<WireMsg>>,
     receiver: Receiver<WireMsg>,
-    pending: Vec<VecDeque<Vec<f32>>>,
+    /// Arrived-but-unclaimed messages per (src, channel) — the per-channel
+    /// connection FIFOs.
+    pending: HashMap<(Rank, usize), VecDeque<Vec<f32>>>,
+    /// Messages ever stashed into `pending`. The channel scheduler uses
+    /// this to notice arrivals drained mid-pass for an already-checked
+    /// channel (it must re-poll instead of blocking on the receiver).
+    stashed: u64,
     /// Return path for consumed wire buffers (indexed by original sender).
     ret_senders: Vec<Sender<Vec<f32>>>,
     ret_receiver: Receiver<Vec<f32>>,
@@ -97,15 +123,17 @@ struct Endpoint {
 }
 
 impl Endpoint {
-    fn send(&self, dst: Rank, data: Vec<f32>) -> Result<()> {
+    fn send(&self, dst: Rank, chan: usize, data: Vec<f32>) -> Result<()> {
         self.senders[dst]
-            .send(WireMsg { src: self.rank, data })
-            .map_err(|_| Error::Transport(format!("rank {dst} hung up", dst = dst)))
+            .send(WireMsg { src: self.rank, channel: chan, data })
+            .map_err(|_| Error::Transport(format!("rank {dst} hung up")))
     }
 
     /// An empty send buffer, recycled when available.
     fn take_buffer(&mut self, capacity: usize) -> Vec<f32> {
-        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() { return Vec::with_capacity(capacity); }
+        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() {
+            return Vec::with_capacity(capacity);
+        }
         while let Ok(mut v) = self.ret_receiver.try_recv() {
             if v.capacity() >= capacity {
                 v.clear();
@@ -118,36 +146,43 @@ impl Endpoint {
 
     /// Hand a consumed message buffer back to its sender for reuse.
     fn recycle(&self, src: Rank, mut data: Vec<f32>) {
-        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() { return; }
+        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() {
+            return;
+        }
         data.clear();
         let _ = self.ret_senders[src].send(data); // sender may be done; fine
     }
 
-    fn recv_from(&mut self, src: Rank) -> Result<Vec<f32>> {
-        if let Some(data) = self.pending[src].pop_front() {
-            return Ok(data);
+    fn stash(&mut self, msg: WireMsg) {
+        self.stashed += 1;
+        self.pending
+            .entry((msg.src, msg.channel))
+            .or_default()
+            .push_back(msg.data);
+    }
+
+    /// Non-blocking: drain everything that has arrived into the
+    /// per-connection FIFOs, then pop the head of (src, chan) if present.
+    fn try_recv_from(&mut self, src: Rank, chan: usize) -> Option<Vec<f32>> {
+        while let Ok(msg) = self.receiver.try_recv() {
+            self.stash(msg);
         }
-        let deadline = Instant::now() + self.timeout;
-        loop {
-            let remaining = deadline
-                .checked_duration_since(Instant::now())
-                .ok_or_else(|| {
-                    Error::Transport(format!(
-                        "rank {} timed out waiting for message from {src}",
-                        self.rank
-                    ))
-                })?;
-            let msg = self.receiver.recv_timeout(remaining).map_err(|_| {
-                Error::Transport(format!(
-                    "rank {} timed out waiting for message from {src}",
-                    self.rank
-                ))
-            })?;
-            if msg.src == src {
-                return Ok(msg.data);
-            }
-            self.pending[msg.src].push_back(msg.data);
-        }
+        self.pending.get_mut(&(src, chan)).and_then(|q| q.pop_front())
+    }
+
+    /// Block until at least one new message arrives (stashed into the
+    /// per-connection FIFOs). The watchdog timeout turns a deadlocked
+    /// schedule into an error instead of a hang.
+    fn wait_any(&mut self) -> Result<()> {
+        let msg = self.receiver.recv_timeout(self.timeout).map_err(|_| {
+            Error::Transport(format!(
+                "rank {} timed out with every channel blocked on a receive \
+                 (deadlocked or unmatched schedule?)",
+                self.rank
+            ))
+        })?;
+        self.stash(msg);
+        Ok(())
     }
 }
 
@@ -172,7 +207,8 @@ fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
             rank,
             senders: senders.clone(),
             receiver,
-            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            pending: HashMap::new(),
+            stashed: 0,
             ret_senders: ret_senders.clone(),
             ret_receiver,
             timeout,
@@ -180,9 +216,77 @@ fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
         .collect()
 }
 
+/// Drive a rank's per-channel op streams to completion (the cooperative
+/// per-channel scheduler, see the module docs). `exec` performs one op:
+/// for receives the matched wire payload is passed in; for sends it is
+/// `None` and `exec` posts the message itself via the endpoint.
+fn drive_channels<F>(ep: &mut Endpoint, ops: &[Op], channels: usize, mut exec: F) -> Result<()>
+where
+    F: FnMut(&mut Endpoint, &Op, Option<Vec<f32>>) -> Result<()>,
+{
+    let nchan = channels.max(1);
+    let mut streams: Vec<Vec<&Op>> = vec![Vec::new(); nchan];
+    for op in ops {
+        streams[op.channel()].push(op);
+    }
+    let mut pc = vec![0usize; nchan];
+    let mut remaining = ops.len();
+    while remaining > 0 {
+        let seen = ep.stashed;
+        let mut progressed = false;
+        for (k, stream) in streams.iter().enumerate() {
+            while pc[k] < stream.len() {
+                let op = stream[pc[k]];
+                let data = match op {
+                    Op::Send { .. } => None,
+                    Op::Recv { peer, .. } => match ep.try_recv_from(*peer, k) {
+                        Some(d) => Some(d),
+                        // This channel blocks; the others keep progressing.
+                        None => break,
+                    },
+                };
+                exec(ep, op, data)?;
+                pc[k] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        // Block only if the pass neither retired an op nor drained a new
+        // arrival: a message stashed mid-pass may belong to a channel
+        // checked earlier in the pass, so re-poll before parking.
+        if remaining > 0 && !progressed && ep.stashed == seen {
+            ep.wait_any()?;
+        }
+    }
+    Ok(())
+}
+
+/// The channel-striped chunk grid of a program over per-rank payloads of
+/// `elems` elements: `stripes` sub-chunks of `sub` elements each. Chunk
+/// `c` is stripe `c / nranks` of rank `c % nranks`'s payload.
+fn stripe_grid(p: &Program, elems: usize, what: &str) -> Result<(usize, usize)> {
+    let n = p.nranks.max(1);
+    let nchunks = p.chunk_space();
+    if nchunks % n != 0 {
+        return Err(Error::Transport(format!(
+            "{what}: chunk space {nchunks} is not a multiple of nranks {n}"
+        )));
+    }
+    let stripes = (nchunks / n).max(1);
+    if elems % stripes != 0 {
+        return Err(Error::Transport(format!(
+            "{what}: payload of {elems} elements does not split into {stripes} \
+             channel stripes (pad to a multiple, as the Communicator does)"
+        )));
+    }
+    Ok((stripes, elems / stripes))
+}
+
 /// Run an all-gather program. `inputs[r]` is rank r's contribution
-/// (uniform length = chunk size); returns each rank's gathered buffer of
-/// `n × chunk` elements (chunk `c` at offset `c × chunk`).
+/// (uniform length); returns each rank's gathered buffer of `n × len`
+/// elements (rank `s`'s contribution at offset `s × len`). Multi-channel
+/// programs stripe each contribution across their channels; `len` must be
+/// divisible by the channel count.
 pub fn run_allgather(
     p: &Program,
     inputs: &[Vec<f32>],
@@ -195,7 +299,7 @@ pub fn run_allgather(
 }
 
 /// Like [`run_allgather`], writing into caller-provided receive buffers
-/// (each `n × chunk` elements) — the NCCL calling convention, and the hot
+/// (each `n × len` elements) — the NCCL calling convention, and the hot
 /// path for repeated collectives: no per-call output allocation or zeroing
 /// (perf pass, EXPERIMENTS.md §Perf).
 pub fn run_allgather_into(
@@ -217,16 +321,17 @@ pub fn run_allgather_into(
             inputs.len()
         )));
     }
-    let chunk = inputs.first().map(|v| v.len()).unwrap_or(0);
-    if inputs.iter().any(|v| v.len() != chunk) {
+    let len = inputs.first().map(|v| v.len()).unwrap_or(0);
+    if inputs.iter().any(|v| v.len() != len) {
         return Err(Error::Transport("ragged input chunk sizes".into()));
     }
-    if outputs.len() != n || outputs.iter().any(|o| o.len() != n * chunk) {
+    if outputs.len() != n || outputs.iter().any(|o| o.len() != n * len) {
         return Err(Error::Transport(format!(
             "outputs must be {n} buffers of {} elements",
-            n * chunk
+            n * len
         )));
     }
+    let (_, sub) = stripe_grid(p, len, "run_allgather")?;
     if opts.validate {
         crate::sched::verify::verify_program(p)?;
     }
@@ -248,16 +353,18 @@ pub fn run_allgather_into(
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
                 let recvbuf: &mut [f32] = out_slot;
-                recvbuf[r * chunk..(r + 1) * chunk].copy_from_slice(&inputs[r]);
-                let mut pool = BufferPool::new(chunk, opts.slot_capacity);
+                recvbuf[r * len..(r + 1) * len].copy_from_slice(&inputs[r]);
+                // Chunk `c` = stripe `c / n` of rank `c % n`'s slot.
+                let off = |c: ChunkId| (c % n) * len + (c / n) * sub;
+                let mut pool = BufferPool::new(sub, opts.slot_capacity);
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                for op in &p.ranks[r] {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, |ep, op, data| {
                     match op {
-                        Op::Send { peer, chunks, .. } => {
-                            // Pack through staging: one slot per chunk of the
-                            // message is live until the send is posted,
+                        Op::Send { peer, chunks, channel, .. } => {
+                            // Pack through staging: one slot per sub-chunk of
+                            // the message is live until the send is posted,
                             // enforcing that a transfer never aggregates more
                             // than the buffer budget. The wire message itself
                             // is the staging storage (reserve() is
@@ -266,34 +373,37 @@ pub fn run_allgather_into(
                             if opts.staged {
                                 pool.reserve(chunks.len())?;
                             }
-                            let mut msg = ep.take_buffer(chunks.len() * chunk);
+                            let mut msg = ep.take_buffer(chunks.len() * sub);
                             for &c in chunks {
-                                msg.extend_from_slice(&recvbuf[c * chunk..(c + 1) * chunk]);
+                                let o = off(c);
+                                msg.extend_from_slice(&recvbuf[o..o + sub]);
                             }
                             local_bytes += msg.len() * 4;
                             local_msgs += 1;
-                            ep.send(*peer, msg)?;
+                            ep.send(*peer, *channel, msg)?;
                             if opts.staged {
                                 pool.unreserve(chunks.len());
                             }
                         }
                         Op::Recv { peer, chunks, .. } => {
-                            let data = ep.recv_from(*peer)?;
-                            if data.len() != chunks.len() * chunk {
+                            let data = data.expect("recv scheduled without payload");
+                            if data.len() != chunks.len() * sub {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
                                     data.len(),
-                                    chunks.len() * chunk
+                                    chunks.len() * sub
                                 )));
                             }
-                            for (k, &c) in chunks.iter().enumerate() {
-                                let seg = &data[k * chunk..(k + 1) * chunk];
-                                recvbuf[c * chunk..(c + 1) * chunk].copy_from_slice(seg);
+                            for (i, &c) in chunks.iter().enumerate() {
+                                let seg = &data[i * sub..(i + 1) * sub];
+                                let o = off(c);
+                                recvbuf[o..o + sub].copy_from_slice(seg);
                             }
                             ep.recycle(*peer, data);
                         }
                     }
-                }
+                    Ok(())
+                })?;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
                 rep.bytes_moved += local_bytes;
@@ -314,8 +424,9 @@ pub fn run_allgather_into(
 }
 
 /// Run a reduce-scatter program. `inputs[r]` holds rank r's contribution to
-/// all `n` chunks (`n × chunk` elements); returns each rank's reduced own
-/// chunk (`chunk` elements).
+/// all `n` output slots (`n × L` elements); returns each rank's reduced own
+/// slot (`L` elements). Multi-channel programs stripe each slot across
+/// their channels; `L` must be divisible by the channel count.
 pub fn run_reduce_scatter(
     p: &Program,
     inputs: &[Vec<f32>],
@@ -343,7 +454,8 @@ pub fn run_reduce_scatter(
             "reduce-scatter inputs must be uniform and divisible by nranks={n}"
         )));
     }
-    let chunk = total / n;
+    let l = total / n;
+    let (stripes, sub) = stripe_grid(p, l, "run_reduce_scatter")?;
     if opts.validate {
         crate::sched::verify::verify_program(p)?;
     }
@@ -365,16 +477,18 @@ pub fn run_reduce_scatter(
             let opts = &*opts;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
-                let own = |c: ChunkId| &inputs[r][c * chunk..(c + 1) * chunk];
-                let mut pool = BufferPool::new(chunk, opts.slot_capacity);
+                // Chunk `c` = stripe `c / n` of output slot `c % n`.
+                let off = |c: ChunkId| (c % n) * l + (c / n) * sub;
+                let own = |c: ChunkId| &inputs[r][off(c)..off(c) + sub];
+                let mut pool = BufferPool::new(sub, opts.slot_capacity);
                 let mut acc: HashMap<ChunkId, Vec<f32>> = HashMap::new();
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                for op in &p.ranks[r] {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, |ep, op, data| {
                     match op {
-                        Op::Send { peer, chunks, .. } => {
-                            let mut msg = ep.take_buffer(chunks.len() * chunk);
+                        Op::Send { peer, chunks, channel, .. } => {
+                            let mut msg = ep.take_buffer(chunks.len() * sub);
                             for &c in chunks {
                                 match acc.remove(&c) {
                                     Some(slot) => {
@@ -388,15 +502,15 @@ pub fn run_reduce_scatter(
                             }
                             local_bytes += msg.len() * 4;
                             local_msgs += 1;
-                            ep.send(*peer, msg)?;
+                            ep.send(*peer, *channel, msg)?;
                         }
                         Op::Recv { peer, chunks, .. } => {
-                            let data = ep.recv_from(*peer)?;
-                            if data.len() != chunks.len() * chunk {
+                            let data = data.expect("recv scheduled without payload");
+                            if data.len() != chunks.len() * sub {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
                                     data.len(),
-                                    chunks.len() * chunk
+                                    chunks.len() * sub
                                 )));
                             }
                             // (Perf-pass note: a zero-copy "steal the wire
@@ -405,8 +519,8 @@ pub fn run_reduce_scatter(
                             // the sender-side buffer recycling loop and lost
                             // ~25% on 4 MiB ring reduce-scatter; see
                             // EXPERIMENTS.md §Perf.)
-                            for (k, &c) in chunks.iter().enumerate() {
-                                let seg = &data[k * chunk..(k + 1) * chunk];
+                            for (i, &c) in chunks.iter().enumerate() {
+                                let seg = &data[i * sub..(i + 1) * sub];
                                 match acc.get_mut(&c) {
                                     Some(slot) => opts.datapath.reduce_into(slot, seg)?,
                                     None => {
@@ -419,12 +533,19 @@ pub fn run_reduce_scatter(
                             ep.recycle(*peer, data);
                         }
                     }
-                }
-                // Output: own contribution plus whatever accumulated for r.
-                let mut out = own(r).to_vec();
-                if let Some(slot) = acc.remove(&r) {
-                    opts.datapath.reduce_into(&mut out, &slot)?;
-                    pool.release(slot);
+                    Ok(())
+                })?;
+                // Output: own contribution plus whatever accumulated, one
+                // stripe per channel.
+                let mut out = vec![0f32; l];
+                for k in 0..stripes {
+                    let c = k * n + r;
+                    let dst = &mut out[k * sub..(k + 1) * sub];
+                    dst.copy_from_slice(own(c));
+                    if let Some(slot) = acc.remove(&c) {
+                        opts.datapath.reduce_into(dst, &slot)?;
+                        pool.release(slot);
+                    }
                 }
                 if !acc.is_empty() {
                     return Err(Error::Transport(format!(
@@ -453,10 +574,10 @@ pub fn run_reduce_scatter(
 }
 
 /// Run an all-reduce program (an RS∘AG composition from
-/// [`crate::sched::compose`]). `inputs[r]` holds rank r's contribution to
-/// every chunk of the composed chunk space (`chunk_space × chunk`
-/// elements, segments concatenated); every output is the full element-wise
-/// sum across ranks of the same length.
+/// [`crate::sched::compose`], possibly channel-split). `inputs[r]` holds
+/// rank r's contribution to every chunk of the composed chunk space
+/// (`chunk_space × chunk` elements, segments/stripes concatenated); every
+/// output is the full element-wise sum across ranks of the same length.
 ///
 /// Execution per rank follows the composition semantics: reducing receives
 /// fold into pool-backed accumulators (the reduce-scatter phase);
@@ -465,8 +586,9 @@ pub fn run_reduce_scatter(
 /// and starts the rebroadcast); plain receives install final values in the
 /// output buffer; sends of finalized chunks relay from the output through
 /// transient staging reservations. One [`BufferPool`] per rank covers both
-/// phases, so `slot_capacity` bounds the *combined* accumulator + staging
-/// footprint — the fused program's staging-slot bound.
+/// phases and all channels, so `slot_capacity` bounds the *combined*
+/// accumulator + staging footprint — the fused program's staging-slot
+/// bound.
 pub fn run_allreduce(
     p: &Program,
     inputs: &[Vec<f32>],
@@ -525,9 +647,9 @@ pub fn run_allreduce(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                for op in &p.ranks[r] {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, |ep, op, data| {
                     match op {
-                        Op::Send { peer, chunks, .. } => {
+                        Op::Send { peer, chunks, channel, .. } => {
                             // Finalized chunks relay through staging (the
                             // all-gather-style forward path); non-finalized
                             // chunks are reduce-scatter contribute-sends
@@ -569,13 +691,13 @@ pub fn run_allreduce(
                             }
                             local_bytes += msg.len() * 4;
                             local_msgs += 1;
-                            ep.send(*peer, msg)?;
+                            ep.send(*peer, *channel, msg)?;
                             if opts.staged {
                                 pool.unreserve(reserved);
                             }
                         }
                         Op::Recv { peer, chunks, reduce, .. } => {
-                            let data = ep.recv_from(*peer)?;
+                            let data = data.expect("recv scheduled without payload");
                             if data.len() != chunks.len() * chunk {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
@@ -583,8 +705,8 @@ pub fn run_allreduce(
                                     chunks.len() * chunk
                                 )));
                             }
-                            for (k, &c) in chunks.iter().enumerate() {
-                                let seg = &data[k * chunk..(k + 1) * chunk];
+                            for (i, &c) in chunks.iter().enumerate() {
+                                let seg = &data[i * chunk..(i + 1) * chunk];
                                 if *reduce {
                                     match acc.get_mut(&c) {
                                         Some(slot) => opts.datapath.reduce_into(slot, seg)?,
@@ -602,7 +724,8 @@ pub fn run_allreduce(
                             ep.recycle(*peer, data);
                         }
                     }
-                }
+                    Ok(())
+                })?;
                 // Owned chunks that were never broadcast (single-rank
                 // degenerate programs) finalize locally.
                 for c in 0..nchunks {
@@ -649,7 +772,7 @@ pub fn run_allreduce(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::{pat, ring};
+    use crate::sched::{channel as chan, pat, ring};
     use crate::util::Rng;
 
     fn ag_inputs(n: usize, chunk: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -704,6 +827,50 @@ mod tests {
         }
     }
 
+    /// Channel-split all-gather and reduce-scatter produce the same results
+    /// as single-channel: striping is invisible in the output.
+    #[test]
+    fn channel_split_matches_reference() {
+        for n in [2usize, 5, 8] {
+            let chunk = 24; // divisible by 1, 2, 3, 4
+            let inputs = ag_inputs(n, chunk, 100 + n as u64);
+            let mut want = Vec::new();
+            for inp in &inputs {
+                want.extend_from_slice(inp);
+            }
+            for c in [2usize, 3, 4] {
+                let p = chan::split(&pat::allgather(n, 2), c).unwrap();
+                let (outs, rep) =
+                    run_allgather(&p, &inputs, &TransportOptions::default()).unwrap();
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(o, &want, "ag n={n} c={c} rank={r}");
+                }
+                assert_eq!(rep.bytes_moved, (n - 1) * n * chunk * 4, "ag n={n} c={c}");
+
+                let prs = chan::split(&pat::reduce_scatter(n, 2), c).unwrap();
+                let rsi = rs_inputs(n, chunk, 200 + n as u64);
+                let (outs, _) =
+                    run_reduce_scatter(&prs, &rsi, &TransportOptions::default()).unwrap();
+                for r in 0..n {
+                    let want: Vec<f32> = (0..chunk)
+                        .map(|i| (0..n).map(|src| rsi[src][r * chunk + i]).sum())
+                        .collect();
+                    assert_eq!(outs[r], want, "rs n={n} c={c} rank={r}");
+                }
+            }
+        }
+    }
+
+    /// A payload that does not divide into the channel stripes is a loud
+    /// error (the Communicator pads before reaching the transport).
+    #[test]
+    fn indivisible_stripe_rejected() {
+        let p = chan::split(&ring::allgather(4), 4).unwrap();
+        let inputs = ag_inputs(4, 6, 1); // 6 % 4 != 0
+        let err = run_allgather(&p, &inputs, &TransportOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("stripe"), "{err}");
+    }
+
     /// The PAT transfer-staging bound: an aggregation-a all-gather schedule
     /// never needs more than a send-staging slots (enforced, not measured).
     #[test]
@@ -718,6 +885,25 @@ mod tests {
             let inputs = ag_inputs(n, 8, a as u64);
             let (_, rep) = run_allgather(&p, &inputs, &opts).unwrap();
             assert!(rep.peak_slots <= a, "a={a} peak={}", rep.peak_slots);
+        }
+    }
+
+    /// A C-channel split runs within C× the single-channel staging bound
+    /// (each stripe is an independent copy of the schedule, sharing the
+    /// rank's physical pool), enforced.
+    #[test]
+    fn channel_split_respects_scaled_slot_capacity() {
+        let n = 16;
+        let a = 2;
+        for c in [2usize, 4] {
+            let p = chan::split(&pat::allgather(n, a), c).unwrap();
+            let opts = TransportOptions {
+                slot_capacity: Some(a * c),
+                ..Default::default()
+            };
+            let inputs = ag_inputs(n, 8, c as u64);
+            let (_, rep) = run_allgather(&p, &inputs, &opts).unwrap();
+            assert!(rep.peak_slots <= a * c, "c={c} peak={}", rep.peak_slots);
         }
     }
 
@@ -793,9 +979,36 @@ mod tests {
         }
     }
 
-    /// The fused staging bound: the reference executor's measured peak
-    /// (accumulators + staged rebroadcasts) plus one message's aggregation
-    /// is an enforceable slot capacity for the threaded engine.
+    /// A channel-split all-reduce (split applied on top of the composition)
+    /// still sums exactly.
+    #[test]
+    fn allreduce_channel_split_matches_reference() {
+        let n = 6;
+        let rs = pat::reduce_scatter(n, 2);
+        let ag = ring::allgather(n);
+        let fused = crate::sched::compose::fuse(&rs, &ag, 2).unwrap();
+        let p = chan::split(&fused, 2).unwrap();
+        assert_eq!(p.channels, 4);
+        let nchunks = p.chunk_space();
+        let chunk = 4;
+        let mut rng = Rng::new(77);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..nchunks * chunk).map(|_| rng.below(500) as f32).collect())
+            .collect();
+        let (outs, _) = run_allreduce(&p, &inputs, &TransportOptions::default()).unwrap();
+        for (r, out) in outs.iter().enumerate() {
+            for i in 0..nchunks * chunk {
+                let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(out[i], want, "rank={r} idx={i}");
+            }
+        }
+    }
+
+    /// The fused staging bound: segment channels progress independently in
+    /// this engine, so the sound capacity is the per-segment peak (the
+    /// single-segment composition, measured by the reference executor) ×
+    /// segments — every channel simultaneously at its own worst point —
+    /// plus one in-flight message's aggregation. Enforced, not measured.
     #[test]
     fn allreduce_respects_fused_slot_bound() {
         let n = 16usize;
@@ -803,8 +1016,12 @@ mod tests {
             let rs = pat::reduce_scatter(n, 2);
             let ag = pat::allgather(n, 2);
             let p = crate::sched::compose::fuse(&rs, &ag, segments).unwrap();
-            let occ = crate::sched::verify::verify_program(&p).unwrap();
-            let cap = occ.peak_slots + p.stats().max_aggregation + 1;
+            let per_segment = {
+                let one = crate::sched::compose::fuse(&rs, &ag, 1).unwrap();
+                crate::sched::verify::verify_program(&one).unwrap().peak_slots
+            };
+            let cap = segments * per_segment + p.stats().max_aggregation + 1;
+            crate::sched::verify::verify_program(&p).unwrap();
             let opts = TransportOptions {
                 slot_capacity: Some(cap),
                 validate: false,

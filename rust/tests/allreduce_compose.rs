@@ -23,9 +23,10 @@ fn compose_prog(segments: usize, n: usize) -> patcol::sched::Program {
 /// the 256-rank tapered fat-tree, `pat+pat:4` completes strictly faster
 /// than the sequential `pat+pat:1` at equal total payload — the four
 /// segments run as independent channels whose messages fill each other's
-/// link idle gaps. (At bandwidth-bound sizes the shared tapered core makes
-/// the sequential composition win instead; the bench records that
-/// crossover.)
+/// link idle gaps and, with per-channel ECMP salts, spread over distinct
+/// spines/cores. (At bandwidth-bound sizes the overlap gain fades and the
+/// remaining advantage is the path spreading; the bench records the whole
+/// sweep.)
 #[test]
 fn pipelined_beats_sequential_on_tapered_fabric() {
     let n = 256usize;

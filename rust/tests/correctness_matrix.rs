@@ -309,8 +309,10 @@ fn allreduce_verifier_matrix_to_64() {
 /// All-reduce axis, real threaded transport: ranks 2..=64 × segments
 /// {1, 2, 4} over representative pairs. The transport-executed result must
 /// equal the reference sum on every rank, under an *enforced* staging-slot
-/// capacity derived from the reference executor's measured peak (the fused
-/// two-phase staging bound) plus one in-flight message of aggregation.
+/// capacity. Segment channels progress independently in the transport, so
+/// the sound capacity is segments × the single-segment peak (reference
+/// executor) plus one in-flight message of aggregation — all channels
+/// simultaneously at their own worst point.
 #[test]
 fn allreduce_transport_matrix_to_64() {
     let pairs = [
@@ -329,12 +331,19 @@ fn allreduce_transport_matrix_to_64() {
     for n in 2..=64usize {
         let mut rng = Rng::new(n as u64 * 131);
         for &(rs, ag) in &pairs {
+            let per_segment = {
+                let one = Algorithm::Compose { rs, ag, segments: 1 };
+                let p1 = sched::generate(one, Collective::AllReduce, n).unwrap();
+                verify_program(&p1)
+                    .unwrap_or_else(|e| panic!("{one} n={n}: {e}"))
+                    .peak_slots
+            };
             for segments in [1usize, 2, 4] {
                 let alg = Algorithm::Compose { rs, ag, segments };
                 let p = sched::generate(alg, Collective::AllReduce, n).unwrap();
-                let occ = verify_program(&p)
+                verify_program(&p)
                     .unwrap_or_else(|e| panic!("{alg} n={n} s={segments}: {e}"));
-                let cap = occ.peak_slots + p.stats().max_aggregation + 1;
+                let cap = segments * per_segment + p.stats().max_aggregation + 1;
                 let opts = TransportOptions {
                     slot_capacity: Some(cap),
                     validate: false,
@@ -358,6 +367,114 @@ fn allreduce_transport_matrix_to_64() {
                 assert!(
                     rep.peak_slots <= cap,
                     "{alg} n={n} s={segments}: transport peak {} > bound {cap}",
+                    rep.peak_slots
+                );
+            }
+        }
+    }
+}
+
+/// Channel axis, reference executor: pat and ring × {AG, RS} × every rank
+/// count in [2, 64] × channels {1, 2, 4}. Every split program verifies;
+/// chunk transfers multiply by the channel count (each stripe moves its
+/// own full n(n-1) grid of 1/C-sized chunks); and the measured occupancy
+/// never exceeds C × the single-channel peak (each stripe's staging is an
+/// independent copy sharing the rank's buffer).
+#[test]
+fn channel_verifier_matrix_to_64() {
+    for n in 2..=64usize {
+        for alg in [Algorithm::Pat { aggregation: 2 }, Algorithm::Ring] {
+            for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                let base = sched::generate(alg, coll, n).unwrap();
+                let base_occ = verify_program(&base).unwrap();
+                for c in [1usize, 2, 4] {
+                    let p = sched::channel::split(&base, c).unwrap();
+                    let occ = verify_program(&p)
+                        .unwrap_or_else(|e| panic!("{alg}*{c} {coll} n={n}: {e}"));
+                    assert_eq!(
+                        p.stats().chunk_transfers,
+                        c * n * (n - 1),
+                        "{alg}*{c} {coll} n={n}"
+                    );
+                    assert!(
+                        occ.peak_slots <= c * base_occ.peak_slots,
+                        "{alg}*{c} {coll} n={n}: peak {} > {} × {}",
+                        occ.peak_slots,
+                        c,
+                        base_occ.peak_slots
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Channel axis, real threaded transport: ranks 2..=64 × channels
+/// {1, 2, 4} × {ag, rs} for pat and ring, under an *enforced* staging-slot
+/// capacity. Channels progress independently, so the sound capacity is
+/// C × the single-channel peak (reference executor) plus one in-flight
+/// message of aggregation. Results must be exact.
+#[test]
+fn channel_transport_matrix_to_64() {
+    let chunk = 8usize; // divisible by every stripe count in the axis
+    for n in 2..=64usize {
+        let mut rng = Rng::new(n as u64 * 977);
+        for alg in [Algorithm::Pat { aggregation: 2 }, Algorithm::Ring] {
+            for c in [1usize, 2, 4] {
+                // all-gather
+                let base = sched::generate(alg, Collective::AllGather, n).unwrap();
+                let base_peak = verify_program(&base).unwrap().peak_slots;
+                let p = sched::channel::split(&base, c).unwrap();
+                verify_program(&p).unwrap();
+                let cap = c * base_peak + p.stats().max_aggregation + 1;
+                let opts = TransportOptions {
+                    slot_capacity: Some(cap),
+                    validate: false,
+                    ..Default::default()
+                };
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..chunk).map(|_| rng.below(997) as f32).collect())
+                    .collect();
+                let mut want = Vec::new();
+                for i in &inputs {
+                    want.extend_from_slice(i);
+                }
+                let (outs, rep) = run_allgather(&p, &inputs, &opts)
+                    .unwrap_or_else(|e| panic!("{alg}*{c} ag n={n}: {e}"));
+                for (r, o) in outs.iter().enumerate() {
+                    assert_eq!(o, &want, "{alg}*{c} ag n={n} rank={r}");
+                }
+                assert!(
+                    rep.peak_slots <= cap,
+                    "{alg}*{c} ag n={n}: peak {} > cap {cap}",
+                    rep.peak_slots
+                );
+
+                // reduce-scatter
+                let base_rs = base.mirror();
+                let base_peak = verify_program(&base_rs).unwrap().peak_slots;
+                let prs = sched::channel::split(&base_rs, c).unwrap();
+                verify_program(&prs).unwrap();
+                let cap = c * base_peak + prs.stats().max_aggregation + 1;
+                let opts = TransportOptions {
+                    slot_capacity: Some(cap),
+                    validate: false,
+                    ..Default::default()
+                };
+                let inputs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                    .collect();
+                let (outs, rep) = run_reduce_scatter(&prs, &inputs, &opts)
+                    .unwrap_or_else(|e| panic!("{alg}*{c} rs n={n}: {e}"));
+                for r in 0..n {
+                    for i in 0..chunk {
+                        let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                        assert_eq!(outs[r][i], w, "{alg}*{c} rs n={n} rank={r} idx={i}");
+                    }
+                }
+                assert!(
+                    rep.peak_slots <= cap,
+                    "{alg}*{c} rs n={n}: peak {} > cap {cap}",
                     rep.peak_slots
                 );
             }

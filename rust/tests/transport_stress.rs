@@ -156,9 +156,9 @@ fn pat_auto_both_regimes() {
 fn timeout_instead_of_hang() {
     // rank 0 waits for a message rank 1 never sends
     let mut p = Program::new(2, Collective::AllGather, "broken");
-    p.push(0, Op::Recv { peer: 1, chunks: vec![1], reduce: false, step: 0 });
-    p.push(0, Op::Send { peer: 1, chunks: vec![0], step: 0 });
-    p.push(1, Op::Recv { peer: 0, chunks: vec![0], reduce: false, step: 0 });
+    p.push(0, Op::recv(1, vec![1], false, 0));
+    p.push(0, Op::send(1, vec![0], 0));
+    p.push(1, Op::recv(0, vec![0], false, 0));
     let opts = TransportOptions {
         validate: false, // skip the verifier to reach the runtime watchdog
         recv_timeout: Duration::from_millis(200),

@@ -155,6 +155,15 @@ fn cli_binary_smoke() {
         vec!["tune", "--ranks", "64", "--size", "64KiB", "--buffer-slots", "256",
              "--collective", "ar"],
         vec!["run", "--ranks", "5", "--size", "2KiB", "--collective", "ar"],
+        vec!["explain", "--ranks", "8", "--alg", "pat*4"],
+        vec!["run", "--ranks", "4", "--size", "4KiB", "--alg", "pat:2",
+             "--channels", "2", "--collective", "rs"],
+        vec![
+            "simulate", "--ranks", "32", "--size", "256KiB", "--alg", "pat*4",
+            "--topo", "leaf_spine", "--ranks-per-leaf", "8", "--taper", "0.5",
+        ],
+        vec!["tune", "--ranks", "64", "--size", "4MiB", "--buffer-slots", "1024",
+             "--parallel-links", "4"],
     ] {
         let out = std::process::Command::new(bin)
             .args(&argv)
