@@ -61,6 +61,19 @@ pub struct CommConfig {
     /// crossover (config key `parallel_links`); `None` = 1, which keeps
     /// auto channel selection at a single channel.
     pub parallel_links: Option<usize>,
+    /// Number of gradient buckets every [`Communicator::all_reduce`] is
+    /// split into (config key `buckets`, CLI `--buckets` /
+    /// `--bucket-bytes`): the payload is cut into that many near-equal
+    /// buckets and runs as ONE fused bucketed program
+    /// ([`crate::sched::bucket`]) in which bucket `i+1`'s reduce-scatter
+    /// overlaps bucket `i`'s all-gather. `None` or `Some(1)` keeps the
+    /// single-operation composed path. Explicitly-batched calls go through
+    /// [`Communicator::all_reduce_batch`] regardless of this knob. Each
+    /// bucket runs on its own channel set, so combining this with a
+    /// pinned `channels > 1` is a loud error on the all-reduce path
+    /// (striping buckets further is an open follow-up); primitive
+    /// collectives on the same communicator still honor `channels`.
+    pub buckets: Option<usize>,
 }
 
 impl Default for CommConfig {
@@ -76,6 +89,7 @@ impl Default for CommConfig {
             inter_bw: None,
             channels: None,
             parallel_links: None,
+            buckets: None,
         }
     }
 }
@@ -126,6 +140,9 @@ impl Communicator {
         }
         if cfg.parallel_links == Some(0) {
             return Err(Error::Config("parallel_links must be >= 1".into()));
+        }
+        if cfg.buckets == Some(0) {
+            return Err(Error::Config("buckets must be >= 1".into()));
         }
         let (datapath, service) = match cfg.datapath {
             DataPathKind::Scalar => (DataPath::Scalar, None),
@@ -372,6 +389,32 @@ impl Communicator {
         if inputs.iter().any(|v| v.len() != len) {
             return Err(Error::Config("ragged all-reduce inputs".into()));
         }
+        if let Some(nb) = self.cfg.buckets.filter(|&b| b > 1) {
+            // Gradient bucketing: cut the payload into near-equal
+            // contiguous buckets and run them as ONE fused bucketed
+            // program (bucket i+1's reduce-scatter overlapping bucket
+            // i's all-gather) instead of one monolithic composition.
+            // The split is tuner::bucket_sizes (in element units), so
+            // execution matches the shape choose_bucketed predicts.
+            let sizes = crate::coordinator::tuner::bucket_sizes(len, nb, false);
+            let mut buckets: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nb);
+            let mut pos = 0usize;
+            for &l in &sizes {
+                buckets.push(inputs.iter().map(|v| v[pos..pos + l].to_vec()).collect());
+                pos += l;
+            }
+            let (bucket_outs, rep) = self.all_reduce_batch_report(&buckets)?;
+            let outs = (0..n)
+                .map(|r| {
+                    let mut v = Vec::with_capacity(len);
+                    for bo in &bucket_outs {
+                        v.extend_from_slice(&bo[r]);
+                    }
+                    v
+                })
+                .collect();
+            return Ok((outs, rep));
+        }
         // Per-chunk payload at one segment — what the tuner's crossover
         // sweep expects.
         let chunk_bytes = len * 4 / n.max(1);
@@ -407,6 +450,157 @@ impl Communicator {
                 transport: rep,
             },
         ))
+    }
+
+    /// Bucketed all-reduce — the gradient-bucket entry point
+    /// ([`crate::sched::bucket`]): `buckets[b]` holds bucket `b`'s `n`
+    /// per-rank tensors (lengths may differ across buckets), and the whole
+    /// batch executes as ONE fused multi-channel program in which bucket
+    /// `i+1`'s reduce-scatter overlaps bucket `i`'s all-gather and every
+    /// bucket runs on its own channels (parallel ECMP flows). Returns the
+    /// per-bucket full sums in the same `[bucket][rank]` shape.
+    pub fn all_reduce_batch(&self, buckets: &[Vec<Vec<f32>>]) -> Result<Vec<Vec<Vec<f32>>>> {
+        Ok(self.all_reduce_batch_report(buckets)?.0)
+    }
+
+    /// Bucketed all-reduce returning execution metadata. Bucket payloads
+    /// are padded to the fused chunk grid internally (bucket `b`'s
+    /// `segments × n` chunks each carry `⌈len_b / (segments·n)⌉`
+    /// elements) and the padding is stripped on return; one transport
+    /// buffer pool bounds the staging footprint across all buckets.
+    pub fn all_reduce_batch_report(
+        &self,
+        buckets: &[Vec<Vec<f32>>],
+    ) -> Result<(Vec<Vec<Vec<f32>>>, CollectiveReport)> {
+        let n = self.cfg.nranks;
+        let nb = buckets.len();
+        if nb == 0 {
+            return Err(Error::Config(
+                "all_reduce_batch needs at least one bucket".into(),
+            ));
+        }
+        let mut lens = Vec::with_capacity(nb);
+        for (b, bk) in buckets.iter().enumerate() {
+            if bk.len() != n {
+                return Err(Error::Config(format!(
+                    "bucket {b}: expected {n} inputs, got {}",
+                    bk.len()
+                )));
+            }
+            let len = bk.first().map(Vec::len).unwrap_or(0);
+            if bk.iter().any(|v| v.len() != len) {
+                return Err(Error::Config(format!("bucket {b}: ragged inputs")));
+            }
+            lens.push(len);
+        }
+        // Buckets already run on one channel set each (parallel ECMP
+        // flows per bucket); striping every bucket further across pinned
+        // channels would need a stripe-major chunk grid — a ROADMAP
+        // follow-up — so an explicit channels pin is a loud error here
+        // rather than a silently dropped knob.
+        if let Some(c) = self.cfg.channels.filter(|&c| c > 1) {
+            return Err(Error::Config(format!(
+                "channels={c} cannot be combined with bucketed all-reduce \
+                 (each bucket already runs on its own channel set)"
+            )));
+        }
+        let total: usize = lens.iter().sum();
+        // Phase resolution sees the per-chunk payload of an average
+        // bucket — the per-operation size the crossover sweep models.
+        let chunk_bytes = (total * 4 / (n.max(1) * nb)).max(1);
+        let (rs, ag, segments) = self.resolve_phases(chunk_bytes)?;
+        let prog = self.bucketed_program(rs, ag, segments, nb)?;
+        let m = segments * n; // chunks per bucket
+        let elems: Vec<usize> = lens.iter().map(|&l| l.div_ceil(m)).collect();
+        let mut chunk_elems = Vec::with_capacity(nb * m);
+        for &e in &elems {
+            chunk_elems.resize(chunk_elems.len() + m, e);
+        }
+        let padded_total: usize = chunk_elems.iter().sum();
+        let padded_inputs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut v = Vec::with_capacity(padded_total);
+                for (b, bk) in buckets.iter().enumerate() {
+                    v.extend_from_slice(&bk[r]);
+                    v.resize(v.len() + (m * elems[b] - lens[b]), 0.0);
+                }
+                v
+            })
+            .collect();
+        let (outs, rep) = transport::run_allreduce_batch(
+            &prog,
+            &chunk_elems,
+            &padded_inputs,
+            &self.options(prog.channels),
+        )?;
+        // Slice the per-bucket sums back out, dropping the padding.
+        let mut result: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(n); nb];
+        for out in outs {
+            let mut pos = 0usize;
+            for (b, bucket_out) in result.iter_mut().enumerate() {
+                bucket_out.push(out[pos..pos + lens[b]].to_vec());
+                pos += m * elems[b];
+            }
+        }
+        Ok((
+            result,
+            CollectiveReport {
+                algorithm: Algorithm::Compose { rs, ag, segments },
+                channels: prog.channels,
+                steps: prog.steps,
+                transport: rep,
+            },
+        ))
+    }
+
+    /// The (rs, ag, segments) phase triple an all-reduce call resolves to
+    /// (pinned composition, lifted bare algorithm, or the tuner's sweep).
+    fn resolve_phases(&self, chunk_bytes: usize) -> Result<(PhaseAlg, PhaseAlg, usize)> {
+        match self.resolve(Collective::AllReduce, chunk_bytes) {
+            Algorithm::Compose { rs, ag, segments } => Ok((rs, ag, segments)),
+            other => {
+                let ph = PhaseAlg::from_algorithm(other)?;
+                Ok((ph, ph, 1))
+            }
+        }
+    }
+
+    /// Cached fused program for `nb` uniform buckets of `rs+ag:segments`.
+    fn bucketed_program(
+        &self,
+        rs: PhaseAlg,
+        ag: PhaseAlg,
+        segments: usize,
+        nb: usize,
+    ) -> Result<Arc<Program>> {
+        let key = (
+            Collective::AllReduce,
+            format!("bkt{nb}:{}+{}:{segments}", rs.spec(), ag.spec()),
+            1usize,
+        );
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(p) = cache.get(&key) {
+                return Ok(p.clone());
+            }
+        }
+        let build = |alg: Algorithm, coll: Collective| -> Result<Program> {
+            if alg.uses_placement() {
+                let pl = self.effective_placement()?;
+                sched::generate_placed(alg, coll, &pl)
+            } else {
+                sched::generate(alg, coll, self.cfg.nranks)
+            }
+        };
+        let rsp = build(rs.to_algorithm(), Collective::ReduceScatter)?;
+        let agp = build(ag.to_algorithm(), Collective::AllGather)?;
+        let prog = sched::bucket::fuse(&sched::bucket::uniform(&rsp, &agp, nb, segments))?;
+        if self.cfg.validate {
+            sched::verify::verify_program(&prog)?;
+        }
+        let prog = Arc::new(prog);
+        self.cache.lock().unwrap().insert(key, prog.clone());
+        Ok(prog)
     }
 
     /// Reduce-scatter returning execution metadata. Multi-channel
@@ -753,6 +947,92 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Bucketed all-reduce end to end: unequal bucket sizes (padding
+    /// included), exact per-bucket sums, one cached fused program, and
+    /// the report exposing the per-bucket channel count.
+    #[test]
+    fn all_reduce_batch_end_to_end() {
+        let n = 6;
+        let c = comm(n, Some(Algorithm::Pat { aggregation: 2 }));
+        let mut rng = Rng::new(17);
+        // three buckets of different (and awkward) lengths
+        let lens = [10usize, 25, 7];
+        let buckets: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&l| {
+                (0..n)
+                    .map(|_| (0..l).map(|_| rng.below(100) as f32).collect())
+                    .collect()
+            })
+            .collect();
+        let (outs, rep) = c.all_reduce_batch_report(&buckets).unwrap();
+        assert_eq!(outs.len(), lens.len());
+        assert_eq!(rep.channels, lens.len());
+        for (b, &l) in lens.iter().enumerate() {
+            for (r, out) in outs[b].iter().enumerate() {
+                assert_eq!(out.len(), l, "bucket {b} rank {r}");
+                for i in 0..l {
+                    let want: f32 = (0..n).map(|s| buckets[b][s][i]).sum();
+                    assert_eq!(out[i], want, "bucket {b} rank {r} idx {i}");
+                }
+            }
+        }
+        // a second batch of the same shape reuses the cached program
+        c.all_reduce_batch(&buckets).unwrap();
+        assert_eq!(c.cache.lock().unwrap().len(), 1);
+        // empty batches are rejected
+        assert!(c.all_reduce_batch(&[]).is_err());
+    }
+
+    /// The `buckets` knob routes plain all_reduce through the fused
+    /// bucketed program and still returns exact sums on every rank.
+    #[test]
+    fn buckets_knob_splits_all_reduce() {
+        let n = 5;
+        let len = 23; // not divisible by the bucket count
+        let c = Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+            buckets: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(29);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (outs, rep) = c.all_reduce_report(&inputs).unwrap();
+        assert_eq!(rep.channels, 4, "one channel per bucket");
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out.len(), len, "rank {r}");
+            for i in 0..len {
+                let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(out[i], want, "rank {r} idx {i}");
+            }
+        }
+        // buckets = 0 is rejected at construction
+        assert!(Communicator::new(CommConfig {
+            nranks: 4,
+            buckets: Some(0),
+            ..Default::default()
+        })
+        .is_err());
+        // a pinned channel split cannot silently stack on bucketing: the
+        // combination is a loud error on the all-reduce path (ag/rs calls
+        // on the same communicator still honor the channels knob)
+        let c = Communicator::new(CommConfig {
+            nranks: 4,
+            channels: Some(2),
+            buckets: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+        let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 8]).collect();
+        let err = c.all_reduce(&inputs).unwrap_err();
+        assert!(err.to_string().contains("channel"), "{err}");
+        assert!(c.all_gather(&inputs).is_ok());
     }
 
     /// Channel auto-selection: single-link fabrics stay at one channel;

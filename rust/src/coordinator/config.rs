@@ -13,6 +13,7 @@
 //! | `segments` | all-reduce pipeline segment count; wraps a non-composed `algorithm` into `alg+alg:<segments>` |
 //! | `channels` | NCCL-style channel count every collective is split across (overrides an `algorithm = alg*C` suffix) |
 //! | `parallel_links` | parallel fabric links per rank for the tuner's channel-count crossover (default 1 = auto stays single-channel) |
+//! | `buckets` | gradient-bucket count: all-reduce payloads split into that many buckets fused into one pipelined program (CLI `--buckets` / `--bucket-bytes`) |
 //! | `buffer_slots` | intermediate-buffer budget in chunk slots |
 //! | `datapath` | `scalar` or `pjrt` |
 //! | `artifacts` | artifact directory |
@@ -161,6 +162,12 @@ impl ConfigMap {
                 return Err(Error::Config("parallel_links must be >= 1".into()));
             }
             cfg.parallel_links = Some(l);
+        }
+        if let Some(b) = self.get_usize("buckets")? {
+            if b == 0 {
+                return Err(Error::Config("buckets must be >= 1".into()));
+            }
+            cfg.buckets = Some(b);
         }
         cfg.buffer_slots = self.get_usize("buffer_slots")?;
         match self.get("datapath") {
@@ -369,6 +376,21 @@ mod tests {
             .to_comm_config()
             .is_err());
         assert!(ConfigMap::parse("nranks = 8\nparallel_links = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+    }
+
+    #[test]
+    fn buckets_key() {
+        let cfg = ConfigMap::parse("nranks = 8\nbuckets = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.buckets, Some(4));
+        let cfg = ConfigMap::parse("nranks = 8\n").unwrap().to_comm_config().unwrap();
+        assert_eq!(cfg.buckets, None);
+        assert!(ConfigMap::parse("nranks = 8\nbuckets = 0\n")
             .unwrap()
             .to_comm_config()
             .is_err());

@@ -15,4 +15,4 @@ pub mod tuner;
 pub mod config;
 
 pub use communicator::{CollectiveReport, CommConfig, Communicator, DataPathKind};
-pub use tuner::{Tuner, TunerChoice};
+pub use tuner::{BucketChoice, Tuner, TunerChoice};

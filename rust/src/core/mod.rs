@@ -295,11 +295,54 @@ impl fmt::Display for Algorithm {
 }
 
 /// A full schedule spec: an algorithm plus the number of NCCL-style
-/// channels its program is split across (`<alg>[*<channels>]`, e.g.
-/// `pat*4`, `pat+ring:2*4` — two-segment pat+ring all-reduce, each
-/// segment striped over 4 channels). This is what the CLI `--alg` /
-/// config `algorithm` keys actually speak; `channels == 1` is the
-/// unsplit program and prints as the bare algorithm spelling.
+/// channels its program is split across. This is what the CLI `--alg` /
+/// config `algorithm` keys actually speak, and the one place the whole
+/// grammar is documented:
+///
+/// ```text
+/// spec     := alg [ "*" channels ]
+/// alg      := phase                      (a primitive collective)
+///           | phase "+" phase [ ":" segments ]   (all-reduce: RS phase + AG phase)
+/// phase    := "ring" | "bruck_near" | "bruck_far" | "recursive"
+///           | "pat" [ ":" agg ] | "pat_auto"
+///           | "hier_pat" [ ":" agg ]
+/// segments := integer >= 1   (compose pipeline segments, default 1)
+/// channels := integer >= 1   (chunk-striped channel split, default 1)
+/// ```
+///
+/// Reading `pat+ring:2*4`: a fused all-reduce whose reduce-scatter phase
+/// is fully-aggregated PAT and whose all-gather phase is Ring, split into
+/// 2 pipeline segments, each striped over 4 channels (8 channels total).
+/// A trailing `:<int>` after a composition binds to *segments*, so
+/// `pat+pat:4` is four segments of fully-aggregated PAT; pin the
+/// all-gather aggregation by spelling segments explicitly
+/// (`pat+pat:4:1`). One channel prints bare; an explicit `*1` still
+/// *pins* single-channel against the tuner (see
+/// [`AlgSpec::parse_pinned`]).
+///
+/// Parsing and display round-trip exactly — `parse(spec.to_string()) ==
+/// spec` for every value, so any spelling the tool prints can be pasted
+/// back into `--alg` or a config file:
+///
+/// ```
+/// use patcol::core::AlgSpec;
+///
+/// for s in ["ring", "pat:2", "pat_auto", "hier_pat:4", "pat*4",
+///           "pat+ring:2*4", "hier_pat:2+ring:1", "pat+pat:4:1"] {
+///     let spec = AlgSpec::parse(s).unwrap();
+///     assert_eq!(spec.to_string(), s, "canonical spellings round-trip");
+///     assert_eq!(AlgSpec::parse(&spec.to_string()).unwrap(), spec);
+/// }
+///
+/// // one channel prints bare; `*1` parses back to the bare spelling
+/// let pinned = AlgSpec::parse("pat*1").unwrap();
+/// assert_eq!(pinned.channels, 1);
+/// assert_eq!(pinned.to_string(), "pat");
+///
+/// // the composed example from the grammar above
+/// let spec = AlgSpec::parse("pat+ring:2*4").unwrap();
+/// assert_eq!(spec.channels, 4);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct AlgSpec {
     pub alg: Algorithm,

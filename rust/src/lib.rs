@@ -35,6 +35,13 @@
 //!   statically-hashed flow, so bandwidth-bound collectives recruit
 //!   parallel fabric links; compose's pipeline segments are channels of
 //!   the fused program, built on the same merge machinery.
+//! * [`sched::bucket`] — the multi-*operation* tier: a batch of
+//!   back-to-back all-reduces (gradient-bucket traffic; sizes may differ
+//!   per bucket) fused into ONE program, bucket `i+1`'s reduce-scatter
+//!   overlapping bucket `i`'s all-gather, every bucket on its own
+//!   channels — compose's segment stagger generalized across operations
+//!   ([`coordinator::Communicator::all_reduce_batch`], config/CLI
+//!   `buckets` / `--bucket-bytes` knobs).
 //! * [`transport`] — an in-process, threaded, real-byte-moving execution
 //!   engine with staging/accumulator buffer pools (the PAT buffer-occupancy
 //!   invariants are enforced here; for all-reduce one pool bounds the fused
@@ -54,13 +61,17 @@
 //!
 //! ## Pipeline
 //!
-//! Data flows through the stack in one direction:
+//! Data flows through the stack in one direction (`ARCHITECTURE.md` at
+//! the repository root walks the same pipeline layer by layer with file
+//! pointers):
 //!
 //! ```text
 //!    core::Algorithm ──► sched (generate / generate_placed / compose)
 //!                              │  Program IR (per-rank, per-channel
 //!                              │  Send/Recv streams; channel::split
-//!                              │  shards any program across C channels)
+//!                              │  shards any program across C channels;
+//!                              │  bucket::fuse joins B all-reduce ops
+//!                              │  into one pipelined program)
 //!                              ▼
 //!                        sched::verify  ← ground truth: per-channel FIFO,
 //!                              │           deadlock, exact sums, occupancy
@@ -77,10 +88,10 @@
 //!                    closed forms calibrated against the simulator
 //! ```
 //!
-//! Every generator — flat, hierarchical, composed, or channel-split —
-//! emits the same IR, is validated by the same verifier, and runs
-//! unmodified on both executors; that is the invariant that keeps the
-//! layers independent. Execution semantics of the IR: ops on one (rank,
+//! Every generator — flat, hierarchical, composed, channel-split, or
+//! bucketed — emits the same IR, is validated by the same verifier, and
+//! runs unmodified on both executors; that is the invariant that keeps
+//! the layers independent. Execution semantics of the IR: ops on one (rank,
 //! channel) retire in order, channels progress independently, and
 //! messages are FIFO per (src, dst, channel) connection.
 //!

@@ -64,7 +64,8 @@ COMMANDS
   explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs|ar] [--trees]
             [--channels C] [--placement SPEC | --ranks-per-node K]
   run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
-            [--channels C] [--datapath scalar|pjrt] [--buffer-slots S]
+            [--channels C] [--buckets B | --bucket-bytes BYTES]
+            [--datapath scalar|pjrt] [--buffer-slots S]
             [--placement SPEC | --ranks-per-node K]
   simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--topo flat|leaf_spine|three_level|dragonfly]
@@ -75,13 +76,19 @@ COMMANDS
             [--parallel-links L]
   selftest  [--max-ranks N]
 
-ALG: ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
+ALG — the full grammar is alg[+alg][:<segments>][*<channels>]:
+     ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
      | hier_pat | hier_pat:<agg>   (two-level, placement-aware)
      | rs+ag[:<segments>]          (all-reduce composition, e.g. pat+ring:4)
-     any spelling takes *<channels> (NCCL-style channel split, e.g. pat*4)
+     any spelling takes *<channels> (NCCL-style channel split: pat*4,
+     pat+ring:2*4 = two pipeline segments, each striped over 4 channels)
 SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)
 SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
 --channels splits the collective across C channels (--channels overrides *C)
+--buckets B (or --bucket-bytes BYTES) splits an all-reduce payload into
+  gradient buckets fused into one pipelined program (bucket i+1's RS
+  overlaps bucket i's AG; one channel set per bucket, so --channels > 1
+  cannot stack on top)
 --intra-gbps models NVLink-class intra-node links (with --ranks-per-node)
 --parallel-links feeds the tuner's channel-count crossover (tune)"
     );
@@ -281,6 +288,29 @@ fn cmd_run(args: &Args) -> Result<()> {
         "pjrt" => DataPathKind::Pjrt,
         _ => DataPathKind::Scalar,
     };
+    // Gradient bucketing (all-reduce): a bucket count, or a target bucket
+    // size the payload is divided into — one or the other, not both.
+    let mut buckets = match args.opt_str("buckets") {
+        None => None,
+        Some(s) => {
+            let b: usize = s.parse().map_err(|_| {
+                patcol::core::Error::Config(format!("--buckets: bad integer {s:?}"))
+            })?;
+            if b == 0 {
+                return Err(patcol::core::Error::Config("--buckets must be >= 1".into()));
+            }
+            Some(b)
+        }
+    };
+    if let Some(bb) = args.opt_str("bucket-bytes") {
+        if buckets.is_some() {
+            return Err(patcol::core::Error::Config(
+                "--buckets and --bucket-bytes are mutually exclusive".into(),
+            ));
+        }
+        let bb = parse_bytes(&bb)?.max(1);
+        buckets = Some(size.div_ceil(bb).max(1));
+    }
     let comm = Communicator::new(CommConfig {
         nranks: n,
         algorithm: alg,
@@ -288,6 +318,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         datapath,
         placement: placement_opt(args, n)?,
         channels,
+        buckets,
         ..Default::default()
     })?;
     let chunk = (size / 4).max(1);
@@ -513,6 +544,26 @@ fn cmd_tune(args: &Args) -> Result<()> {
         ct.row([format!("{c}"), fmt_time_s(*cost)]);
     }
     print!("{}", ct.render());
+    if coll == Collective::AllReduce {
+        // Gradient-bucket crossover: bucket count × (equal | ramp-shaped
+        // first bucket) under the pipelined closed form, floored at the
+        // non-pipelined round/volume lower bound.
+        let bc = tuner.choose_bucketed(n, size, slots, placement.as_ref());
+        let mut bt = Table::new(["buckets", "shape", "predicted"]);
+        for (b, ramp, cost) in &bc.candidates {
+            bt.row([
+                format!("{b}"),
+                (if *ramp { "ramp" } else { "equal" }).to_string(),
+                fmt_time_s(*cost),
+            ]);
+        }
+        print!("{}", bt.render());
+        println!(
+            "bucketing: {} buckets, first {}",
+            bc.bucket_bytes.len(),
+            fmt_bytes(bc.bucket_bytes.first().copied().unwrap_or(0)),
+        );
+    }
     println!(
         "chosen: {} channels={} (parallel_links={links})",
         choice.algorithm, ch.channels
@@ -583,6 +634,25 @@ fn cmd_selftest(args: &Args) -> Result<()> {
                     count += 1;
                 }
             }
+        }
+    }
+    // Bucketed axis: back-to-back all-reduces fused into one program.
+    for n in [2usize, 5, 8, 16, 33] {
+        if n > max {
+            continue;
+        }
+        let rsp = sched::generate(
+            Algorithm::Pat { aggregation: 2 },
+            Collective::ReduceScatter,
+            n,
+        )?;
+        let agp = sched::generate(Algorithm::Pat { aggregation: 2 }, Collective::AllGather, n)?;
+        for b in [2usize, 4] {
+            let p = sched::bucket::fuse(&sched::bucket::uniform(&rsp, &agp, b, 1))?;
+            sched::verify::verify_program(&p).map_err(|e| {
+                patcol::core::Error::Verify(format!("bkt{b}(pat:2+pat:2) n={n}: {e}"))
+            })?;
+            count += 1;
         }
     }
     // Spot-check PAT tree phases against the paper's figures.

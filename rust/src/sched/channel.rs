@@ -26,7 +26,11 @@
 //! The composer ([`crate::sched::compose`]) is a *user* of the same
 //! machinery: its pipeline segments are channels (segment `s`'s phase
 //! streams merge with `channel_base = s`), rather than a chunk-id
-//! convention for downstream layers to re-infer.
+//! convention for downstream layers to re-infer. The bucket fuser
+//! ([`crate::sched::bucket`]) is the second user, merging whole
+//! *operations*: every (bucket, segment) is a channel, so one
+//! [`merge_rank_streams`] call per rank interleaves an entire
+//! gradient-bucket batch under the same FIFO argument.
 //!
 //! ## Why the merge preserves FIFO
 //!

@@ -64,6 +64,12 @@
 //! the complete reduction, plain receives install the rebroadcast final
 //! value (see `sched::verify::verify_program` for the reference executor
 //! and `transport::run_allreduce` for the real-byte engine).
+//!
+//! The same stagger generalizes across *operations*:
+//! [`crate::sched::bucket`] fuses a batch of independent all-reduces
+//! (gradient buckets, sizes may differ) by treating each bucket the way
+//! this module treats a segment — uniform single-segment buckets produce
+//! exactly this module's output.
 
 use crate::core::{ChunkId, Collective, Error, Placement, Result};
 use crate::sched::channel;

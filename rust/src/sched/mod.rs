@@ -33,6 +33,13 @@
 //! by chunk striping (spelled `alg*C`, e.g. `pat*4`). The composer's
 //! pipeline segments are channels of the fused program, built on the same
 //! FIFO-safe stream-merge machinery.
+//!
+//! [`bucket`] adds the multi-*operation* tier: a batch of back-to-back
+//! all-reduce requests (gradient-bucket traffic; sizes, segment counts
+//! and phase generators may differ per bucket) fuses into one program in
+//! which bucket `i+1`'s reduce-scatter overlaps bucket `i`'s all-gather —
+//! compose's segment stagger lifted across operations, with each bucket
+//! on its own channels so concurrent buckets recruit parallel ECMP paths.
 
 pub mod program;
 pub mod tree;
@@ -43,6 +50,7 @@ pub mod pat;
 pub mod hier;
 pub mod compose;
 pub mod channel;
+pub mod bucket;
 pub mod verify;
 pub mod explain;
 

@@ -15,8 +15,11 @@
 //! valid linear extension of every channel's order. Occupancy is counted
 //! across all of a rank's channels together — the physical staging buffer
 //! is shared. Chunk ownership is `id % nranks` throughout, so
-//! multi-channel (striped) and composed chunk spaces verify through the
-//! same code as the primitive `nranks`-chunk programs.
+//! multi-channel (striped), composed, and bucketed
+//! ([`crate::sched::bucket`] — a batch of all-reduces over one
+//! concatenated chunk space) programs verify through the same code as
+//! the primitive `nranks`-chunk programs: per-bucket reduction
+//! correctness *is* per-chunk exactness over the concatenation.
 
 use std::collections::{HashMap, VecDeque};
 

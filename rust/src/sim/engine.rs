@@ -68,6 +68,14 @@ pub struct SimReport {
     /// [`crate::sched::compose::phase_windows`] to get per-(segment,
     /// phase) time windows.
     pub step_spans: Vec<(f64, f64)>,
+    /// Wall-clock window of each channel's traffic: `(earliest
+    /// serialization start, latest arrival)` over the channel's messages,
+    /// indexed by `Op::channel`; silent channels keep the `(+inf, -inf)`
+    /// sentinel. Bucketed all-reduce programs own a disjoint channel range
+    /// per bucket, so feeding this to
+    /// [`crate::sched::bucket::bucket_windows`] makes *inter-bucket*
+    /// overlap (bucket `i+1` starting before bucket `i` ends) measurable.
+    pub channel_spans: Vec<(f64, f64)>,
 }
 
 impl SimReport {
@@ -115,6 +123,21 @@ pub fn simulate(
     cost: &CostModel,
     chunk_bytes: usize,
 ) -> Result<SimReport> {
+    let sizes = vec![chunk_bytes; p.chunk_space()];
+    sim_inner(p, topo, cost, &sizes, None)
+}
+
+/// Like [`simulate`], but with a *per-chunk* byte size (`chunk_bytes[c]`
+/// = bytes of chunk id `c`; the slice must cover the program's chunk
+/// space). This is how bucketed all-reduce programs with unequal bucket
+/// sizes are costed: each bucket's chunks carry that bucket's payload
+/// share (see [`crate::sched::bucket::BucketLayout::chunk_elems`]).
+pub fn simulate_sized(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: &[usize],
+) -> Result<SimReport> {
     sim_inner(p, topo, cost, chunk_bytes, None)
 }
 
@@ -126,7 +149,8 @@ pub fn simulate_traced(
     chunk_bytes: usize,
 ) -> Result<(SimReport, Vec<TraceEvent>)> {
     let mut trace = Vec::new();
-    let rep = sim_inner(p, topo, cost, chunk_bytes, Some(&mut trace))?;
+    let sizes = vec![chunk_bytes; p.chunk_space()];
+    let rep = sim_inner(p, topo, cost, &sizes, Some(&mut trace))?;
     trace.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
     Ok((rep, trace))
 }
@@ -135,7 +159,7 @@ fn sim_inner(
     p: &Program,
     topo: &Topology,
     cost: &CostModel,
-    chunk_bytes: usize,
+    chunk_bytes: &[usize],
     mut trace: Option<&mut Vec<TraceEvent>>,
 ) -> Result<SimReport> {
     if topo.nranks != p.nranks {
@@ -144,6 +168,14 @@ fn sim_inner(
             topo.nranks, p.nranks
         )));
     }
+    if chunk_bytes.len() < p.chunk_space() {
+        return Err(Error::Sim(format!(
+            "per-chunk sizes cover {} chunks, program uses {}",
+            chunk_bytes.len(),
+            p.chunk_space()
+        )));
+    }
+    let msg_bytes = |chunks: &[usize]| chunks.iter().map(|&c| chunk_bytes[c]).sum::<usize>();
     let n = p.nranks;
     // Channels are explicit in the IR (`Op::channel`): composed all-reduce
     // programs carry one channel per pipeline segment, channel-split
@@ -178,6 +210,7 @@ fn sim_inner(
         busiest_link_utilization: 0.0,
         finish: vec![0.0; n],
         step_spans: vec![(f64::INFINITY, f64::NEG_INFINITY); p.steps],
+        channel_spans: vec![(f64::INFINITY, f64::NEG_INFINITY); channels],
     };
 
     // Initial scheduling pass.
@@ -198,7 +231,7 @@ fn sim_inner(
         let op = streams[r][k][pc[r][k]];
         match op {
             Op::Send { peer, chunks, step, .. } => {
-                let bytes = chunks.len() * chunk_bytes;
+                let bytes = msg_bytes(chunks);
                 // Local pack for non-contiguous aggregated payloads.
                 let t_ready = t + cost.pack_cost(chunks.len(), bytes);
                 // Per-channel connections are distinct flows: the static
@@ -229,6 +262,9 @@ fn sim_inner(
                 let span = &mut report.step_spans[*step];
                 span.0 = span.0.min(t0);
                 span.1 = span.1.max(arrival);
+                let cspan = &mut report.channel_spans[k];
+                cspan.0 = cspan.0.min(t0);
+                cspan.1 = cspan.1.max(arrival);
                 let lvl = topo.distance_level(r, *peer);
                 report.bytes_by_level[lvl] += bytes;
                 report.msgs_by_level[lvl] += 1;
@@ -255,7 +291,7 @@ fn sim_inner(
                 }
             }
             Op::Recv { peer, chunks, reduce, .. } => {
-                let bytes = chunks.len() * chunk_bytes;
+                let bytes = msg_bytes(chunks);
                 let q = wires.entry((*peer, r, k)).or_default();
                 let arrival = q.pop_front().ok_or_else(|| {
                     Error::Sim(format!("rank {r} woken with empty wire from {peer}"))
@@ -524,6 +560,61 @@ mod tests {
             }
         }
         assert!(diverged > 0, "no (src, dst) pair diverged across channel salts");
+    }
+
+    /// `simulate_sized` with a uniform size vector reproduces `simulate`
+    /// exactly, and per-chunk sizes change exactly the bytes accounting.
+    #[test]
+    fn sized_simulation_matches_uniform_and_scales_bytes() {
+        let p = pat::allgather(8, 2);
+        let topo = flat(8);
+        let cost = CostModel::ib_hdr();
+        let uniform = simulate(&p, &topo, &cost, 1024).unwrap();
+        let sized = simulate_sized(&p, &topo, &cost, &vec![1024; p.chunk_space()]).unwrap();
+        assert_eq!(uniform.total_time, sized.total_time);
+        assert_eq!(uniform.bytes_sent, sized.bytes_sent);
+        // doubling one chunk's size adds exactly its extra transfers
+        let mut sizes = vec![1024usize; p.chunk_space()];
+        sizes[0] = 2048;
+        let bigger = simulate_sized(&p, &topo, &cost, &sizes).unwrap();
+        // chunk 0 is sent to the other 7 ranks exactly once each
+        assert_eq!(bigger.bytes_sent, uniform.bytes_sent + 7 * 1024);
+        // undersized vectors are a loud error
+        assert!(simulate_sized(&p, &topo, &cost, &[1024]).is_err());
+    }
+
+    /// Channel spans: every channel with traffic gets a finite window
+    /// inside the run, and a bucketed program's windows genuinely overlap
+    /// across adjacent buckets (the cross-operation pipelining).
+    #[test]
+    fn channel_spans_expose_bucket_overlap() {
+        use crate::sched::bucket::{self, BucketLayout};
+        let n = 32;
+        let rs = pat::reduce_scatter(n, usize::MAX);
+        let ag = pat::allgather(n, usize::MAX);
+        let buckets = bucket::uniform(&rs, &ag, 3, 1);
+        let p = bucket::fuse(&buckets).unwrap();
+        let layout = BucketLayout::of(&buckets);
+        let rep = simulate(&p, &flat(n), &CostModel::ib_hdr(), 32 << 10).unwrap();
+        assert_eq!(rep.channel_spans.len(), p.channels);
+        for (k, &(s, e)) in rep.channel_spans.iter().enumerate() {
+            assert!(s.is_finite() && e >= s, "channel {k}: ({s}, {e})");
+            assert!(e <= rep.total_time + 1e-12, "channel {k}");
+        }
+        let windows = bucket::bucket_windows(&layout, &rep.channel_spans);
+        assert_eq!(windows.len(), 3);
+        for w in windows.windows(2) {
+            assert!(
+                w[1].t_start < w[0].t_end && w[0].t_start < w[1].t_start,
+                "buckets {} and {} do not overlap: ({}, {}) vs ({}, {})",
+                w[0].bucket,
+                w[1].bucket,
+                w[0].t_start,
+                w[0].t_end,
+                w[1].t_start,
+                w[1].t_end
+            );
+        }
     }
 
     /// A composed all-reduce program runs through the simulator without

@@ -24,5 +24,5 @@ pub mod cost;
 pub mod engine;
 
 pub use cost::CostModel;
-pub use engine::{simulate, simulate_traced, SimReport, TraceEvent};
+pub use engine::{simulate, simulate_sized, simulate_traced, SimReport, TraceEvent};
 pub use topology::Topology;

@@ -600,6 +600,46 @@ pub fn run_allreduce(
             p.collective
         )));
     }
+    if p.nranks == 0 {
+        return Ok((vec![], TransportReport::default()));
+    }
+    let nchunks = p.chunk_space();
+    let total = inputs.first().map(Vec::len).unwrap_or(0);
+    if total % nchunks != 0 || inputs.iter().any(|v| v.len() != total) {
+        return Err(Error::Transport(format!(
+            "all-reduce inputs must be uniform and divisible by the chunk space {nchunks}"
+        )));
+    }
+    run_allreduce_batch(p, &vec![total / nchunks; nchunks], inputs, opts)
+}
+
+/// Run a (possibly bucketed, see [`crate::sched::bucket`]) all-reduce
+/// program over a *per-chunk element grid*: `chunk_elems[c]` is the
+/// element count of chunk id `c`, so buckets of different sizes execute
+/// through one program — bucket `b`'s chunks all carry `b`'s per-chunk
+/// share, and the grid for a uniform program is constant (which is
+/// exactly what [`run_allreduce`] passes). `inputs[r]` concatenates rank
+/// r's contribution to every chunk in chunk-id order (`Σ chunk_elems`
+/// elements); every output is the full element-wise sum of the same
+/// length.
+///
+/// One [`BufferPool`] per rank — slots sized to the largest chunk —
+/// covers both phases, every channel, and every bucket, so
+/// `slot_capacity` bounds the *combined* accumulator + staging footprint:
+/// the fused staging-slot bound is genuinely shared across buckets rather
+/// than provisioned per operation.
+pub fn run_allreduce_batch(
+    p: &Program,
+    chunk_elems: &[usize],
+    inputs: &[Vec<f32>],
+    opts: &TransportOptions,
+) -> Result<(Vec<Vec<f32>>, TransportReport)> {
+    if p.collective != Collective::AllReduce {
+        return Err(Error::Transport(format!(
+            "run_allreduce_batch on a {} program",
+            p.collective
+        )));
+    }
     let n = p.nranks;
     if inputs.len() != n {
         return Err(Error::Transport(format!(
@@ -610,14 +650,27 @@ pub fn run_allreduce(
     if n == 0 {
         return Ok((vec![], TransportReport::default()));
     }
-    let nchunks = p.chunk_space();
-    let total = inputs[0].len();
-    if total % nchunks != 0 || inputs.iter().any(|v| v.len() != total) {
+    let nchunks = chunk_elems.len();
+    if nchunks < p.chunk_space() {
         return Err(Error::Transport(format!(
-            "all-reduce inputs must be uniform and divisible by the chunk space {nchunks}"
+            "chunk grid covers {nchunks} chunks, program uses {}",
+            p.chunk_space()
         )));
     }
-    let chunk = total / nchunks;
+    // Prefix offsets of the chunk grid: chunk c occupies
+    // `[off[c], off[c] + chunk_elems[c])` of every rank's buffer.
+    let mut off = Vec::with_capacity(nchunks);
+    let mut total = 0usize;
+    for &e in chunk_elems {
+        off.push(total);
+        total += e;
+    }
+    if inputs.iter().any(|v| v.len() != total) {
+        return Err(Error::Transport(format!(
+            "all-reduce batch inputs must have exactly {total} elements (the chunk grid)"
+        )));
+    }
+    let slot_elems = chunk_elems.iter().copied().max().unwrap_or(0);
     if opts.validate {
         crate::sched::verify::verify_program(p)?;
     }
@@ -637,11 +690,12 @@ pub fn run_allreduce(
             let inputs = &inputs;
             let report = &report;
             let opts = &*opts;
+            let off = &off;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
-                let own = |c: ChunkId| &inputs[r][c * chunk..(c + 1) * chunk];
+                let own = |c: ChunkId| &inputs[r][off[c]..off[c] + chunk_elems[c]];
                 let mut out = vec![0f32; total];
-                let mut pool = BufferPool::new(chunk, opts.slot_capacity);
+                let mut pool = BufferPool::new(slot_elems, opts.slot_capacity);
                 let mut acc: HashMap<ChunkId, Vec<f32>> = HashMap::new();
                 let mut finalized = vec![false; nchunks];
                 let mut local_bytes = 0usize;
@@ -660,29 +714,32 @@ pub fn run_allreduce(
                                     chunks.iter().filter(|&&c| finalized[c]).count();
                                 pool.reserve(reserved)?;
                             }
-                            let mut msg = ep.take_buffer(chunks.len() * chunk);
+                            let msg_elems: usize = chunks.iter().map(|&c| chunk_elems[c]).sum();
+                            let mut msg = ep.take_buffer(msg_elems);
                             for &c in chunks {
+                                let len = chunk_elems[c];
                                 if finalized[c] {
-                                    msg.extend_from_slice(&out[c * chunk..(c + 1) * chunk]);
+                                    msg.extend_from_slice(&out[off[c]..off[c] + len]);
                                 } else if c % n == r {
                                     // Owner: fold accumulator + own
                                     // contribution, keep the final locally,
                                     // and broadcast it.
                                     match acc.remove(&c) {
                                         Some(slot) => {
-                                            opts.datapath.add_extend(&mut msg, &slot, own(c))?;
+                                            opts.datapath
+                                                .add_extend(&mut msg, &slot[..len], own(c))?;
                                             pool.release(slot);
                                         }
                                         None => msg.extend_from_slice(own(c)),
                                     }
-                                    let lo = msg.len() - chunk;
-                                    out[c * chunk..(c + 1) * chunk]
-                                        .copy_from_slice(&msg[lo..]);
+                                    let lo = msg.len() - len;
+                                    out[off[c]..off[c] + len].copy_from_slice(&msg[lo..]);
                                     finalized[c] = true;
                                 } else {
                                     match acc.remove(&c) {
                                         Some(slot) => {
-                                            opts.datapath.add_extend(&mut msg, &slot, own(c))?;
+                                            opts.datapath
+                                                .add_extend(&mut msg, &slot[..len], own(c))?;
                                             pool.release(slot);
                                         }
                                         None => msg.extend_from_slice(own(c)),
@@ -698,26 +755,31 @@ pub fn run_allreduce(
                         }
                         Op::Recv { peer, chunks, reduce, .. } => {
                             let data = data.expect("recv scheduled without payload");
-                            if data.len() != chunks.len() * chunk {
+                            let want: usize = chunks.iter().map(|&c| chunk_elems[c]).sum();
+                            if data.len() != want {
                                 return Err(Error::Transport(format!(
-                                    "rank {r}: message from {peer} has {} elems, want {}",
-                                    data.len(),
-                                    chunks.len() * chunk
+                                    "rank {r}: message from {peer} has {} elems, want {want}",
+                                    data.len()
                                 )));
                             }
-                            for (i, &c) in chunks.iter().enumerate() {
-                                let seg = &data[i * chunk..(i + 1) * chunk];
+                            let mut pos = 0usize;
+                            for &c in chunks {
+                                let len = chunk_elems[c];
+                                let seg = &data[pos..pos + len];
+                                pos += len;
                                 if *reduce {
                                     match acc.get_mut(&c) {
-                                        Some(slot) => opts.datapath.reduce_into(slot, seg)?,
+                                        Some(slot) => {
+                                            opts.datapath.reduce_into(&mut slot[..len], seg)?
+                                        }
                                         None => {
                                             let mut slot = pool.acquire()?;
-                                            slot.copy_from_slice(seg);
+                                            slot[..len].copy_from_slice(seg);
                                             acc.insert(c, slot);
                                         }
                                     }
                                 } else {
-                                    out[c * chunk..(c + 1) * chunk].copy_from_slice(seg);
+                                    out[off[c]..off[c] + len].copy_from_slice(seg);
                                     finalized[c] = true;
                                 }
                             }
@@ -735,10 +797,11 @@ pub fn run_allreduce(
                                 "rank {r}: no final value for chunk {c}"
                             )));
                         }
-                        out[c * chunk..(c + 1) * chunk].copy_from_slice(own(c));
+                        let len = chunk_elems[c];
+                        out[off[c]..off[c] + len].copy_from_slice(own(c));
                         if let Some(slot) = acc.remove(&c) {
                             opts.datapath
-                                .reduce_into(&mut out[c * chunk..(c + 1) * chunk], &slot)?;
+                                .reduce_into(&mut out[off[c]..off[c] + len], &slot[..len])?;
                             pool.release(slot);
                         }
                     }
@@ -1034,6 +1097,81 @@ mod tests {
             assert!(
                 rep.peak_slots <= cap,
                 "segments={segments}: peak {} > cap {cap}",
+                rep.peak_slots
+            );
+        }
+    }
+
+    /// A bucketed all-reduce with *unequal* bucket sizes sums exactly:
+    /// the per-chunk element grid routes each bucket's differently-sized
+    /// chunks through one shared state machine and one shared pool.
+    #[test]
+    fn allreduce_batch_unequal_buckets_match_reference() {
+        use crate::sched::bucket;
+        for n in [2usize, 3, 7, 8] {
+            let rs = pat::reduce_scatter(n, 2);
+            let ag = pat::allgather(n, 2);
+            let buckets = bucket::uniform(&rs, &ag, 3, 1);
+            let p = bucket::fuse(&buckets).unwrap();
+            let layout = bucket::BucketLayout::of(&buckets);
+            // ramp-shaped: small first bucket, growing tail
+            let chunk_elems = layout.chunk_elems(&[2, 4, 8]);
+            let total: usize = chunk_elems.iter().sum();
+            let mut rng = Rng::new(n as u64 * 13);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..total).map(|_| rng.below(500) as f32).collect())
+                .collect();
+            let (outs, rep) =
+                run_allreduce_batch(&p, &chunk_elems, &inputs, &TransportOptions::default())
+                    .unwrap();
+            for (r, out) in outs.iter().enumerate() {
+                for i in 0..total {
+                    let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                    assert_eq!(out[i], want, "n={n} rank={r} idx={i}");
+                }
+            }
+            assert!(rep.messages > 0);
+            // a grid that does not match the inputs is a loud error
+            assert!(run_allreduce_batch(
+                &p,
+                &layout.chunk_elems(&[2, 4, 9]),
+                &inputs,
+                &TransportOptions::default()
+            )
+            .is_err());
+        }
+    }
+
+    /// The fused bucketed staging bound is shared across buckets: B
+    /// single-segment buckets run within B × the single-composition peak
+    /// plus one in-flight message's aggregation, enforced.
+    #[test]
+    fn allreduce_batch_respects_shared_slot_bound() {
+        use crate::sched::bucket;
+        let n = 16usize;
+        let rs = pat::reduce_scatter(n, 2);
+        let ag = pat::allgather(n, 2);
+        let per_single = {
+            let one = crate::sched::compose::fuse(&rs, &ag, 1).unwrap();
+            crate::sched::verify::verify_program(&one).unwrap().peak_slots
+        };
+        for nb in [1usize, 2, 4] {
+            let buckets = bucket::uniform(&rs, &ag, nb, 1);
+            let p = bucket::fuse(&buckets).unwrap();
+            let layout = bucket::BucketLayout::of(&buckets);
+            let cap = nb * per_single + p.stats().max_aggregation + 1;
+            let opts = TransportOptions {
+                slot_capacity: Some(cap),
+                validate: false,
+                ..Default::default()
+            };
+            let chunk_elems = layout.chunk_elems(&vec![4; nb]);
+            let total: usize = chunk_elems.iter().sum();
+            let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; total]).collect();
+            let (_, rep) = run_allreduce_batch(&p, &chunk_elems, &inputs, &opts).unwrap();
+            assert!(
+                rep.peak_slots <= cap,
+                "nb={nb}: peak {} > cap {cap}",
                 rep.peak_slots
             );
         }

@@ -19,6 +19,6 @@ pub mod datapath;
 pub use buffers::BufferPool;
 pub use datapath::DataPath;
 pub use engine::{
-    run_allgather, run_allgather_into, run_allreduce, run_reduce_scatter, TransportOptions,
-    TransportReport,
+    run_allgather, run_allgather_into, run_allreduce, run_allreduce_batch, run_reduce_scatter,
+    TransportOptions, TransportReport,
 };
