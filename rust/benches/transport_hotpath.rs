@@ -146,5 +146,53 @@ fn main() {
         }
     }
     print!("{}", table.render());
+
+    // --- observability overhead ------------------------------------------
+    // Same op with the flight recorder off vs on. Off must stay at the
+    // baseline (the disabled path is one predicted branch, no clock
+    // reads); on pays for timestamps + ring pushes and is reported so the
+    // cost of always-on tracing is a measured number, not a guess.
+    println!("\ntracing overhead (pat(a=2) reduce-scatter, {n} ranks):");
+    {
+        let chunk_bytes: usize = if smoke { 16 << 10 } else { 256 << 10 };
+        let chunk = chunk_bytes / 4;
+        let mut rng = Rng::new(3);
+        let rs_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; n * chunk];
+                rng.fill_f32(&mut v);
+                v
+            })
+            .collect();
+        let prog = pat::reduce_scatter(n, 2);
+        let traced_opts = TransportOptions {
+            validate: false,
+            trace: true,
+            ..Default::default()
+        };
+        let off = bench(&format!("rs untraced {}", fmt_bytes(chunk_bytes)), &opts, || {
+            let out = run_reduce_scatter(black_box(&prog), black_box(&rs_in), &topts).unwrap();
+            black_box(out);
+        });
+        let on = bench(&format!("rs traced {}", fmt_bytes(chunk_bytes)), &opts, || {
+            let out =
+                run_reduce_scatter(black_box(&prog), black_box(&rs_in), &traced_opts).unwrap();
+            black_box(out);
+        });
+        let ratio = on.per_iter() / off.per_iter().max(1e-12);
+        println!(
+            "  off {}  on {}  ({ratio:.2}x)",
+            fmt_time_s(off.per_iter()),
+            fmt_time_s(on.per_iter()),
+        );
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("trace_overhead")),
+            ("chunk_bytes", Json::num(chunk_bytes as f64)),
+            ("wall_off_s", Json::num(off.per_iter())),
+            ("wall_on_s", Json::num(on.per_iter())),
+            ("ratio", Json::num(ratio)),
+        ]));
+    }
+
     report.save().unwrap();
 }

@@ -74,6 +74,13 @@ pub struct CommConfig {
     /// (striping buckets further is an open follow-up); primitive
     /// collectives on the same communicator still honor `channels`.
     pub buckets: Option<usize>,
+    /// Record the unified [`crate::obs`] event timeline on every
+    /// transport run (config key `trace`, CLI `--trace <path>`): each
+    /// [`CollectiveReport`]'s `transport.trace` then carries the merged
+    /// per-rank flight recordings, exportable with
+    /// [`crate::obs::chrome_trace`]. Off by default — the disabled
+    /// recorder costs one branch per event site.
+    pub trace: bool,
 }
 
 impl Default for CommConfig {
@@ -90,6 +97,7 @@ impl Default for CommConfig {
             channels: None,
             parallel_links: None,
             buckets: None,
+            trace: false,
         }
     }
 }
@@ -289,6 +297,7 @@ impl Communicator {
             staged: true,
             // programs are verified once at cache fill, not per call
             validate: false,
+            trace: self.cfg.trace,
             ..Default::default()
         }
     }

@@ -18,6 +18,7 @@
 //! | `datapath` | `scalar` or `pjrt` |
 //! | `artifacts` | artifact directory |
 //! | `validate` | `true`/`false` |
+//! | `trace` | `true`/`false` — capture an observability trace ([`crate::obs`]) |
 //! | `placement` | rank → node placement (grammar below) |
 //! | `ranks_per_node` | shorthand for `placement = uniform:<k>` |
 //! | `inter_gbps` | per-node uplink bandwidth for the tuner's flat-vs-hier crossover |
@@ -182,6 +183,9 @@ impl ConfigMap {
         }
         if let Some(v) = self.get_bool("validate")? {
             cfg.validate = v;
+        }
+        if let Some(v) = self.get_bool("trace")? {
+            cfg.trace = v;
         }
         if let Some(spec) = self.get("placement") {
             cfg.placement = Some(Placement::parse(spec, cfg.nranks)?);

@@ -53,6 +53,13 @@
 //!   per-step spans make composed-phase overlap directly measurable.
 //! * [`runtime`] — PJRT bridge executing AOT-compiled JAX/Pallas reduction
 //!   kernels (HLO text artifacts) on the reduce-scatter datapath.
+//! * [`obs`] — unified observability: one append-only event schema
+//!   ([`obs::Event`] / [`obs::EventKind`]) both executors emit into, a
+//!   per-(rank, channel) [`obs::Counters`] set, a lock-free per-thread
+//!   flight recorder for the transport ([`obs::FlightRecorder`], dumped
+//!   by the recv-timeout watchdog), and a Chrome trace-event exporter
+//!   ([`obs::chrome_trace`], Perfetto-loadable) — surfaced as
+//!   `patcol trace` and `--trace <path>` on `run`/`simulate`.
 //! * [`coordinator`] — the public [`coordinator::Communicator`] API plus the
 //!   algorithm auto-tuner (the flat-vs-hierarchical crossover on tapered
 //!   fabrics and the all-reduce pair × segment-count crossover) and
@@ -80,6 +87,10 @@
 //!        transport (real bytes,           sim (event-driven, topology +
 //!        threads, buffer pools,           α-β-γ costs, link contention,
 //!        per-channel connections)         per-channel flows/streams)
+//!              │                                │
+//!              │   obs (one event schema: flight-recorder rings on the
+//!              ├─── transport threads, TraceRecorder in the sim loop ───┤
+//!              │     → Trace → Chrome JSON / counters / stall blame)    │
 //!              │                                │
 //!              └───────────────┬────────────────┘
 //!                              ▼
@@ -117,6 +128,7 @@ pub mod util;
 pub mod sched;
 pub mod sim;
 pub mod transport;
+pub mod obs;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;

@@ -7,6 +7,10 @@
 //! * `run`      — execute a collective on the in-process transport with
 //!   real bytes (optionally through the PJRT Pallas datapath).
 //! * `simulate` — run a schedule through the network simulator at scale.
+//! * `trace`    — run one op on the simulator and/or the transport with the
+//!   observability layer on, write Chrome trace JSON for each executor, and
+//!   print per-(rank, channel) counters plus the Träff lower-bound
+//!   comparison.
 //! * `sweep`    — compare algorithms across sizes on the simulator.
 //! * `tune`     — show the tuner's decision for a configuration.
 //! * `selftest` — quick correctness matrix across algorithms and rank
@@ -39,6 +43,7 @@ fn main() {
         "explain" => cmd_explain(&args),
         "run" => cmd_run(&args),
         "simulate" => cmd_simulate(&args),
+        "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "tune" => cmd_tune(&args),
         "selftest" => cmd_selftest(&args),
@@ -65,11 +70,15 @@ COMMANDS
             [--channels C] [--placement SPEC | --ranks-per-node K]
   run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--buckets B | --bucket-bytes BYTES]
-            [--datapath scalar|pjrt] [--buffer-slots S]
+            [--datapath scalar|pjrt] [--buffer-slots S] [--trace PATH]
             [--placement SPEC | --ranks-per-node K]
   simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--topo flat|leaf_spine|three_level|dragonfly]
             [--taper F] [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
+            [--trace PATH]
+  trace     --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
+            [--channels C] [--exec sim|transport|both] [--out STEM]
+            [--topo ...] [--smoke]
   sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
   tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs|ar]
             [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
@@ -90,7 +99,12 @@ SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
   overlaps bucket i's AG; one channel set per bucket, so --channels > 1
   cannot stack on top)
 --intra-gbps models NVLink-class intra-node links (with --ranks-per-node)
---parallel-links feeds the tuner's channel-count crossover (tune)"
+--parallel-links feeds the tuner's channel-count crossover (tune)
+--trace PATH (run/simulate) writes the observability timeline as Chrome
+  trace-event JSON (load in Perfetto / chrome://tracing); `trace` runs one
+  op on both executors, writes STEM.sim.json / STEM.transport.json, and
+  prints per-(rank, channel) counters + the Träff lower-bound comparison
+  (--smoke: fixed 8-rank/4KiB run that re-parses its own output)"
     );
 }
 
@@ -311,6 +325,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         let bb = parse_bytes(&bb)?.max(1);
         buckets = Some(size.div_ceil(bb).max(1));
     }
+    let trace_path = args.opt_str("trace");
     let comm = Communicator::new(CommConfig {
         nranks: n,
         algorithm: alg,
@@ -319,6 +334,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         placement: placement_opt(args, n)?,
         channels,
         buckets,
+        trace: trace_path.is_some(),
         ..Default::default()
     })?;
     let chunk = (size / 4).max(1);
@@ -359,6 +375,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             (rep, 2 * (n - 1) * chunk * 4 / n.max(1))
         }
     };
+    if let Some(path) = &trace_path {
+        let trace = rep.transport.trace.as_ref().ok_or_else(|| {
+            patcol::core::Error::Transport("transport returned no trace".into())
+        })?;
+        let json = patcol::obs::chrome_trace(trace, &patcol::obs::ChannelTags::plain());
+        std::fs::write(path, json.to_pretty())?;
+        println!("trace ({} events) -> {path}", trace.events.len());
+    }
     let wall = rep.transport.wall.as_secs_f64();
     println!(
         "{} {} ranks={} chunk={} channels={} steps={} msgs={} bytes={} peak_slots={} wall={} algbw={}/s",
@@ -399,23 +423,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // payload than requested).
     let size = size.div_ceil(channels).max(1);
     let rep = if let Some(trace_path) = args.opt_str("trace") {
-        use patcol::util::json::Json;
-        let (rep, trace) = sim::simulate_traced(&prog, &topo, &cost, size)?;
-        let rows: Vec<Json> = trace
-            .iter()
-            .map(|e| {
-                Json::obj(vec![
-                    ("step", Json::num(e.step as f64)),
-                    ("src", Json::num(e.src as f64)),
-                    ("dst", Json::num(e.dst as f64)),
-                    ("bytes", Json::num(e.bytes as f64)),
-                    ("t_start", Json::num(e.t_start)),
-                    ("t_arrival", Json::num(e.t_arrival)),
-                ])
-            })
-            .collect();
-        std::fs::write(&trace_path, Json::Arr(rows).to_pretty())?;
-        println!("trace ({} messages) -> {trace_path}", trace.len());
+        let mut rec = patcol::obs::TraceRecorder::new();
+        let rep = sim::simulate_observed(&prog, &topo, &cost, size, &mut rec)?;
+        let trace = rec.finish();
+        let tags = trace_tags(args, alg, coll, n, channels)?;
+        std::fs::write(&trace_path, patcol::obs::chrome_trace(&trace, &tags).to_pretty())?;
+        println!("trace ({} events) -> {trace_path}", trace.events.len());
         rep
     } else {
         sim::simulate(&prog, &topo, &cost, size)?
@@ -457,6 +470,219 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         fmt_bytes(rep.max_link_bytes),
         rep.busiest_link_utilization * 100.0
     );
+    Ok(())
+}
+
+/// Channel tags for trace export. A composed all-reduce program's channels
+/// *are* its pipeline segments, so tag them `seg{s}` and let the
+/// [`sched::compose::Layout`] classify reduce-scatter vs all-gather
+/// phases. Anything else — including a composed program re-split across
+/// channels, where channel no longer equals segment — gets plain tags.
+fn trace_tags(
+    args: &Args,
+    alg: Algorithm,
+    coll: Collective,
+    n: usize,
+    extra_split: usize,
+) -> Result<patcol::obs::ChannelTags> {
+    use patcol::obs::ChannelTags;
+    if coll != Collective::AllReduce || extra_split > 1 {
+        return Ok(ChannelTags::plain());
+    }
+    let (rs, ag, segments) = match alg {
+        Algorithm::Compose { rs, ag, segments } => (rs, ag, segments),
+        _ => match patcol::core::PhaseAlg::from_algorithm(alg) {
+            Ok(p) => (p, p, 1),
+            Err(_) => return Ok(ChannelTags::plain()),
+        },
+    };
+    let pl = if alg.uses_placement() {
+        Some(placement_or_default(args, n)?)
+    } else {
+        placement_opt(args, n)?
+    };
+    let build = |a: Algorithm, c: Collective| match &pl {
+        Some(p) => sched::generate_placed(a, c, p),
+        None => sched::generate(a, c, n),
+    };
+    let rsp = build(rs.to_algorithm(), Collective::ReduceScatter)?;
+    let agp = build(ag.to_algorithm(), Collective::AllGather)?;
+    Ok(ChannelTags::composed(sched::compose::Layout::of(&rsp, &agp, segments)))
+}
+
+/// `patcol trace` — run one op through the observability layer on the
+/// simulator and/or the real transport, write Chrome trace-event JSON for
+/// each executor (one schema from both, Perfetto-loadable), and print the
+/// per-(rank, channel) counters plus the Träff lower-bound comparison.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use patcol::obs::{chrome_trace, ChannelTags, Trace, TraceRecorder};
+    use patcol::transport::{run_allgather, run_allreduce, run_reduce_scatter, TransportOptions};
+
+    let smoke = args.flag("smoke");
+    let n = if smoke { 8 } else { args.usize("ranks", 16)? };
+    let size = if smoke { 4 << 10 } else { args.bytes("size", 64 * 1024)? };
+    let (alg_opt, channels) = alg_channels(args)?;
+    let alg = alg_opt.unwrap_or(Algorithm::Pat { aggregation: usize::MAX });
+    let channels = channels.unwrap_or(1);
+    let coll = collective_for(args, Some(alg))?;
+    let exec = args.str("exec", "both");
+    let (want_sim, want_transport) = match exec.as_str() {
+        "sim" => (true, false),
+        "transport" => (false, true),
+        "both" => (true, true),
+        other => {
+            return Err(patcol::core::Error::Config(format!(
+                "--exec: expected sim|transport|both, got {other:?}"
+            )))
+        }
+    };
+    let out = args.str("out", "trace");
+    let prog = sched::channel::split(&generate_for_cli(args, alg, coll, n)?, channels)?;
+    let tags = trace_tags(args, alg, coll, n, channels)?;
+
+    // `--size` is the per-rank payload in bytes, divided over the chunks
+    // each rank slot is striped into (channel stripes × pipeline
+    // segments), rounded up — the same pad semantics as `run`/`simulate`.
+    let stripes = (prog.chunk_space() / n.max(1)).max(1);
+    let per = (size / 4).div_ceil(stripes).max(1); // f32 elems per sub-chunk
+    let total_bytes = n * stripes * per * 4; // full per-rank vector
+
+    fn counters_table(title: &str, trace: &Trace, tags: &ChannelTags) {
+        let mut t = Table::new([
+            "rank", "ch", "tag", "tx msgs", "tx bytes", "rx msgs", "rx bytes", "stall",
+            "reduces", "pool peak",
+        ]);
+        for (&(r, k), c) in &trace.counters {
+            t.row([
+                format!("{r}"),
+                format!("{k}"),
+                tags.tag(k).unwrap_or("-").to_string(),
+                format!("{}", c.msgs_sent),
+                fmt_bytes(c.bytes_sent),
+                format!("{}", c.msgs_recv),
+                fmt_bytes(c.bytes_recv),
+                fmt_time_s(c.stall_seconds),
+                format!("{}", c.reduce_calls),
+                format!("{}", c.pool_peak),
+            ]);
+        }
+        println!("{title} per-(rank, channel) counters:");
+        print!("{}", t.render());
+    }
+
+    println!(
+        "{} {} ranks={} payload={}/rank channels={}",
+        prog.algorithm,
+        coll,
+        n,
+        fmt_bytes(total_bytes),
+        prog.channels,
+    );
+    let mut written: Vec<String> = Vec::new();
+
+    let mut sim_time = None;
+    if want_sim {
+        let topo = topology(args, n)?;
+        let cost = CostModel::ib_hdr();
+        let mut rec = TraceRecorder::new();
+        let rep = sim::simulate_observed(&prog, &topo, &cost, per * 4, &mut rec)?;
+        let trace = rec.finish();
+        let path = format!("{out}.sim.json");
+        std::fs::write(&path, chrome_trace(&trace, &tags).to_pretty())?;
+        println!("sim trace ({} events) -> {path}", trace.events.len());
+        counters_table("sim", &trace, &tags);
+        written.push(path);
+        sim_time = Some(rep.total_time);
+    }
+
+    let mut transport_wall = None;
+    if want_transport {
+        let opts = TransportOptions { trace: true, ..Default::default() };
+        let mut rng = Rng::new(7);
+        let mut fill = |len: usize| {
+            let mut v = vec![0f32; len];
+            rng.fill_f32(&mut v);
+            v
+        };
+        let elems = stripes * per;
+        let rep = match coll {
+            Collective::AllGather => {
+                let inputs: Vec<Vec<f32>> = (0..n).map(|_| fill(elems)).collect();
+                run_allgather(&prog, &inputs, &opts)?.1
+            }
+            Collective::ReduceScatter => {
+                let inputs: Vec<Vec<f32>> = (0..n).map(|_| fill(n * elems)).collect();
+                run_reduce_scatter(&prog, &inputs, &opts)?.1
+            }
+            Collective::AllReduce => {
+                let total = prog.chunk_space() * per;
+                let inputs: Vec<Vec<f32>> = (0..n).map(|_| fill(total)).collect();
+                run_allreduce(&prog, &inputs, &opts)?.1
+            }
+        };
+        let trace = rep.trace.as_ref().ok_or_else(|| {
+            patcol::core::Error::Transport("transport returned no trace".into())
+        })?;
+        let path = format!("{out}.transport.json");
+        std::fs::write(&path, chrome_trace(trace, &tags).to_pretty())?;
+        println!("transport trace ({} events) -> {path}", trace.events.len());
+        counters_table("transport", trace, &tags);
+        written.push(path);
+        transport_wall = Some(rep.wall.as_secs_f64());
+    }
+
+    // Träff lower bounds (arXiv:2410.14234) under the default cost model:
+    // all-reduce needs 2·⌈log2 n⌉ rounds and 2(n−1)/n of the payload
+    // through every NIC; a single phase (AG/RS) needs half of each.
+    let tuner = Tuner::default();
+    let bound = match coll {
+        Collective::AllReduce => tuner.allreduce_lower_bound(n, total_bytes),
+        _ if n <= 1 => 0.0,
+        _ => {
+            let rounds = patcol::core::ceil_log2(n) as f64 * tuner.cost.alpha_base;
+            let volume = (n - 1) as f64 / n as f64 * total_bytes as f64 / tuner.nic_bw;
+            rounds.max(volume)
+        }
+    };
+    println!(
+        "Träff lower bound ({coll}, {} ranks, {} per rank): {}",
+        n,
+        fmt_bytes(total_bytes),
+        fmt_time_s(bound)
+    );
+    if let Some(t) = sim_time {
+        println!(
+            "  sim modeled time: {} ({:.2}x bound)",
+            fmt_time_s(t),
+            t / bound.max(1e-12)
+        );
+    }
+    if let Some(w) = transport_wall {
+        println!(
+            "  transport wall:   {} (in-process threads; wall clock, not the cost model)",
+            fmt_time_s(w)
+        );
+    }
+
+    if smoke {
+        // Round-trip every file we wrote through the JSON parser and check
+        // the trace is non-trivial — the CI gate for the exporter.
+        for path in &written {
+            let j = patcol::util::json::parse(&std::fs::read_to_string(path)?)?;
+            let events = j
+                .get("traceEvents")
+                .and_then(|e| e.as_arr())
+                .ok_or_else(|| {
+                    patcol::core::Error::Verify(format!("{path}: no traceEvents array"))
+                })?;
+            if !events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")) {
+                return Err(patcol::core::Error::Verify(format!(
+                    "{path}: no complete (ph=X) events in trace"
+                )));
+            }
+        }
+        println!("smoke OK: {} trace file(s) round-tripped", written.len());
+    }
     Ok(())
 }
 

@@ -1,0 +1,247 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! Maps the unified [`Trace`] onto the trace-event format: **pid = rank**,
+//! **tid = channel**, so the viewer groups spans rank → channel; metadata
+//! events name each track. Span events (`"ph":"X"`) carry the event kind
+//! as `name` and a `cat` string that appends the channel's segment/bucket
+//! tag and — when a [`crate::sched::compose::Layout`] or
+//! [`crate::sched::bucket::BucketLayout`] is supplied — the
+//! reduce-scatter/all-gather phase the message belongs to, so Perfetto's
+//! category coloring separates phases and buckets visually. Buffer-pool
+//! samples export as counter tracks (`"ph":"C"`).
+//!
+//! Timestamps: trace seconds × 1e6 (the format wants microseconds).
+
+use crate::obs::trace::{Event, EventKind, Trace, SCHEMA_VERSION};
+use crate::sched::bucket::BucketLayout;
+use crate::sched::compose::Layout;
+use crate::util::json::Json;
+
+/// How to label each channel track and classify events into
+/// segment/bucket/phase categories.
+#[derive(Debug, Clone)]
+pub struct ChannelTags {
+    tags: Vec<String>,
+    mode: TagMode,
+}
+
+#[derive(Debug, Clone)]
+enum TagMode {
+    Plain,
+    Composed(Layout),
+    Bucketed(BucketLayout),
+}
+
+impl ChannelTags {
+    /// No extra structure: channels are just channels.
+    pub fn plain() -> ChannelTags {
+        ChannelTags { tags: Vec::new(), mode: TagMode::Plain }
+    }
+
+    /// Composed all-reduce: channel `k` carries pipeline segment `k`;
+    /// events additionally classify into rs/ag phases by (step, chunk).
+    pub fn composed(layout: Layout) -> ChannelTags {
+        let tags = (0..layout.segments).map(|s| format!("seg{s}")).collect();
+        ChannelTags { tags, mode: TagMode::Composed(layout) }
+    }
+
+    /// Bucketed batch: channel `channel_base_b + s` carries bucket `b`'s
+    /// segment `s`.
+    pub fn bucketed(layout: BucketLayout) -> ChannelTags {
+        let mut tags = Vec::with_capacity(layout.channels());
+        for b in 0..layout.nbuckets() {
+            let (lo, hi) = layout.channel_range(b);
+            for k in lo..hi {
+                tags.push(format!("bucket{b}/seg{}", k - lo));
+            }
+        }
+        ChannelTags { tags, mode: TagMode::Bucketed(layout) }
+    }
+
+    /// Track label for channel `k` (`None` when untagged).
+    pub fn tag(&self, channel: usize) -> Option<&str> {
+        self.tags.get(channel).map(|s| s.as_str())
+    }
+
+    /// Phase ("reduce-scatter" / "all-gather") of a message event, when
+    /// the tag mode carries a step grid to classify against.
+    fn phase_of(&self, ev: &Event) -> Option<&'static str> {
+        let chunk = ev.chunk0?;
+        match &self.mode {
+            TagMode::Plain => None,
+            TagMode::Composed(layout) => {
+                let (_, phase) = layout.classify(ev.step, chunk);
+                Some(phase.as_str())
+            }
+            TagMode::Bucketed(layout) => {
+                let b = layout.bucket_of_chunk(chunk);
+                let local_step = ev.step.saturating_sub(layout.step_base[b]);
+                let local_chunk = chunk - layout.chunk_base[b];
+                let (_, phase) = layout.per_bucket[b].classify(local_step, local_chunk);
+                Some(phase.as_str())
+            }
+        }
+    }
+
+    /// The `cat` string for an event: kind, channel tag, phase.
+    fn cat(&self, ev: &Event) -> String {
+        let mut cat = ev.kind.name().to_string();
+        if let Some(tag) = self.tag(ev.channel) {
+            cat.push(',');
+            cat.push_str(tag);
+        }
+        if let Some(phase) = self.phase_of(ev) {
+            cat.push(',');
+            cat.push_str(phase);
+        }
+        cat
+    }
+}
+
+fn usecs(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// Export a [`Trace`] as a Chrome trace-event JSON document (object form,
+/// with `traceEvents` plus a `schema_version` stamp in `otherData`).
+pub fn chrome_trace(trace: &Trace, tags: &ChannelTags) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(trace.events.len() + 2 * trace.counters.len());
+
+    // Track-naming metadata: one process per rank, one thread per channel.
+    let mut ranks: Vec<usize> = trace.counters.keys().map(|&(r, _)| r).collect();
+    ranks.dedup();
+    for &r in &ranks {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::num(r as f64)),
+            ("args", Json::obj(vec![("name", Json::str(format!("rank {r}")))])),
+        ]));
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_sort_index")),
+            ("pid", Json::num(r as f64)),
+            ("args", Json::obj(vec![("sort_index", Json::num(r as f64))])),
+        ]));
+    }
+    for &(r, k) in trace.counters.keys() {
+        let label = match tags.tag(k) {
+            Some(t) => format!("ch{k} [{t}]"),
+            None => format!("ch{k}"),
+        };
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(r as f64)),
+            ("tid", Json::num(k as f64)),
+            ("args", Json::obj(vec![("name", Json::str(label))])),
+        ]));
+    }
+
+    for ev in &trace.events {
+        if ev.kind == EventKind::Pool {
+            // Counter track: live buffer-pool slots over time.
+            events.push(Json::obj(vec![
+                ("ph", Json::str("C")),
+                ("name", Json::str("pool live slots")),
+                ("pid", Json::num(ev.rank as f64)),
+                ("tid", Json::num(ev.channel as f64)),
+                ("ts", Json::num(usecs(ev.t_start))),
+                ("args", Json::obj(vec![("live", Json::num(ev.value as f64))])),
+            ]));
+            continue;
+        }
+        let mut args = vec![("step", Json::num(ev.step as f64))];
+        if let Some(p) = ev.peer {
+            args.push(("peer", Json::num(p as f64)));
+        }
+        if ev.chunks > 0 {
+            args.push(("chunks", Json::num(ev.chunks as f64)));
+        }
+        if let Some(c0) = ev.chunk0 {
+            args.push(("chunk0", Json::num(c0 as f64)));
+        }
+        if ev.bytes > 0 {
+            args.push(("bytes", Json::num(ev.bytes as f64)));
+        }
+        events.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(ev.kind.name())),
+            ("cat", Json::str(tags.cat(ev))),
+            ("pid", Json::num(ev.rank as f64)),
+            ("tid", Json::num(ev.channel as f64)),
+            ("ts", Json::num(usecs(ev.t_start))),
+            ("dur", Json::num(usecs(ev.duration()))),
+            ("args", Json::Obj(args.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ns")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+                ("generator", Json::str("patcol")),
+                ("dropped_events", Json::num(trace.dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRecorder;
+    use crate::util::json;
+
+    fn sample_trace() -> Trace {
+        let mut rec = TraceRecorder::new();
+        rec.record(
+            Event::span(EventKind::SendOp, 0, 0, 0, 0.0, 1e-6)
+                .with_peer(1)
+                .with_msg(&[2], 8),
+        );
+        rec.record(
+            Event::span(EventKind::Wire, 0, 0, 0, 0.0, 2e-6).with_peer(1).with_msg(&[2], 8),
+        );
+        rec.record(Event::span(EventKind::Pool, 1, 0, 0, 1e-6, 1e-6).with_value(2));
+        rec.finish()
+    }
+
+    #[test]
+    fn export_roundtrips_through_parser() {
+        let doc = chrome_trace(&sample_trace(), &ChannelTags::plain());
+        let text = doc.to_string();
+        let back = json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        assert_eq!(
+            back.get("otherData").unwrap().get("schema_version").unwrap().as_usize(),
+            Some(SCHEMA_VERSION as usize)
+        );
+        // span and counter phases both present
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("X")));
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("C")));
+        // pid/tid grouping: the wire span sits on rank 0 / channel 0
+        let wire = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("wire"))
+            .unwrap();
+        assert_eq!(wire.get("pid").unwrap().as_usize(), Some(0));
+        assert_eq!(wire.get("args").unwrap().get("peer").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn composed_tags_classify_phase() {
+        let layout = Layout { nranks: 4, segments: 2, rs_steps: 2, ag_steps: 2 };
+        let tags = ChannelTags::composed(layout);
+        assert_eq!(tags.tag(1), Some("seg1"));
+        // segment 0 (chunks 0..4): step 0 is rs, step 2 is ag
+        let rs = Event::span(EventKind::Wire, 0, 0, 0, 0.0, 1.0).with_msg(&[1], 4);
+        let ag = Event::span(EventKind::Wire, 0, 0, 2, 0.0, 1.0).with_msg(&[1], 4);
+        assert_eq!(tags.cat(&rs), "wire,seg0,reduce-scatter");
+        assert_eq!(tags.cat(&ag), "wire,seg0,all-gather");
+    }
+}

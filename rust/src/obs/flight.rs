@@ -1,0 +1,218 @@
+//! Lock-free flight recorder for the threaded transport.
+//!
+//! Each rank thread owns one `FlightRecorder` — no locks, no atomics:
+//! exclusivity comes from ownership, and the recordings are merged into
+//! one [`Trace`] when the threads join. All recorders for a run share a
+//! single `Instant` origin so their timestamps are directly comparable.
+//!
+//! Overhead discipline: when tracing is off the recorder is constructed
+//! [`FlightRecorder::disabled`] and every `record`/`pool` call is a
+//! single inlined branch on a bool — no `Instant::now()`, no allocation
+//! (the hot loops read [`FlightRecorder::enabled`] before computing
+//! timestamps). The event store is a bounded ring (default
+//! [`DEFAULT_FLIGHT_CAPACITY`]); on overflow the oldest event is dropped
+//! and counted, while the [`Counters`] keep exact totals regardless —
+//! exactly the behavior wanted from a crash/watchdog flight recorder:
+//! bounded memory, freshest history, lossless aggregates.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use crate::core::Rank;
+use crate::obs::trace::{Counters, Event, EventKind, Trace};
+
+/// Ring capacity (events) used by the transport when tracing is enabled.
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 1 << 16;
+
+/// Per-thread bounded event recorder (see module docs).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: bool,
+    origin: Instant,
+    capacity: usize,
+    ring: VecDeque<Event>,
+    dropped: u64,
+    counters: BTreeMap<(Rank, usize), Counters>,
+}
+
+impl FlightRecorder {
+    /// A recorder that drops everything — what every rank thread gets
+    /// when `TransportOptions::trace` is off.
+    pub fn disabled() -> FlightRecorder {
+        FlightRecorder {
+            enabled: false,
+            origin: Instant::now(),
+            capacity: 0,
+            ring: VecDeque::new(),
+            dropped: 0,
+            counters: BTreeMap::new(),
+        }
+    }
+
+    /// An enabled recorder stamping times relative to `origin` (pass the
+    /// same origin to every thread of a run).
+    pub fn new(origin: Instant, capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            enabled: true,
+            origin,
+            capacity: capacity.max(1),
+            ring: VecDeque::with_capacity(capacity.max(1).min(1024)),
+            dropped: 0,
+            counters: BTreeMap::new(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Seconds since the shared origin. Only call on the enabled path —
+    /// guard with [`FlightRecorder::enabled`] to keep `Instant::now()`
+    /// off the disabled hot path.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// `now()` when enabled, `0.0` (no clock read) when disabled — for
+    /// call sites that want a timestamp unconditionally.
+    #[inline]
+    pub fn now_or_zero(&self) -> f64 {
+        if self.enabled {
+            self.now()
+        } else {
+            0.0
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: Event) {
+        if !self.enabled {
+            return;
+        }
+        self.counters
+            .entry((ev.rank, ev.channel))
+            .or_default()
+            .absorb(&ev);
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    /// Record a buffer-pool occupancy sample (`live` slots) at `now`.
+    #[inline]
+    pub fn pool(&mut self, rank: Rank, channel: usize, step: usize, live: usize) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.now();
+        self.record(Event::span(EventKind::Pool, rank, channel, step, t, t).with_value(live));
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Human-readable dump of the last `n` events — what the watchdog
+    /// appends to its timeout report so a deadlock arrives pre-blamed.
+    pub fn render_tail(&self, n: usize) -> String {
+        let mut out = String::new();
+        let skip = self.ring.len().saturating_sub(n);
+        for ev in self.ring.iter().skip(skip) {
+            let peer = ev
+                .peer
+                .map(|p| format!(" peer={p}"))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  [{:>12.6}s] {:<6} rank={} ch={} step={}{}{}{}\n",
+                ev.t_start,
+                ev.kind.name(),
+                ev.rank,
+                ev.channel,
+                ev.step,
+                peer,
+                if ev.bytes > 0 { format!(" bytes={}", ev.bytes) } else { String::new() },
+                if ev.kind == EventKind::Pool {
+                    format!(" live={}", ev.value)
+                } else {
+                    String::new()
+                },
+            ));
+        }
+        out
+    }
+
+    /// Consume into a sorted [`Trace`] fragment (one thread's view).
+    pub fn finish(self) -> Trace {
+        let mut t = Trace {
+            events: self.ring.into_iter().collect(),
+            counters: self.counters,
+            dropped: self.dropped,
+        };
+        t.sort();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut fr = FlightRecorder::disabled();
+        assert!(!fr.enabled());
+        fr.record(Event::span(EventKind::SendOp, 0, 0, 0, 0.0, 1.0));
+        fr.pool(0, 0, 0, 7);
+        assert!(fr.is_empty());
+        let t = fr.finish();
+        assert!(t.events.is_empty());
+        assert!(t.counters.is_empty());
+    }
+
+    #[test]
+    fn ring_drops_oldest_but_counters_stay_exact() {
+        let mut fr = FlightRecorder::new(Instant::now(), 4);
+        for i in 0..10 {
+            fr.record(
+                Event::span(EventKind::SendOp, 0, 0, i, i as f64, i as f64 + 1.0).with_bytes(8),
+            );
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.dropped(), 6);
+        let t = fr.finish();
+        assert_eq!(t.events.len(), 4);
+        assert_eq!(t.events[0].step, 6, "oldest events were dropped");
+        assert_eq!(t.dropped, 6);
+        // aggregates never drop
+        let c = t.counters_for(0, 0);
+        assert_eq!(c.msgs_sent, 10);
+        assert_eq!(c.bytes_sent, 80);
+    }
+
+    #[test]
+    fn tail_renders_events() {
+        let mut fr = FlightRecorder::new(Instant::now(), 16);
+        fr.record(
+            Event::span(EventKind::RecvOp, 3, 1, 2, 0.5, 0.75)
+                .with_peer(7)
+                .with_bytes(64),
+        );
+        let tail = fr.render_tail(8);
+        assert!(tail.contains("recv"));
+        assert!(tail.contains("rank=3"));
+        assert!(tail.contains("ch=1"));
+        assert!(tail.contains("peer=7"));
+    }
+}

@@ -1,0 +1,61 @@
+//! obs — unified observability: one timeline schema for both executors.
+//!
+//! Every claim in the paper is a statement about *when* and *how much*:
+//! logarithmic rounds (P1), minimized long-distance traffic (P2),
+//! log-bounded buffers (P3). This module makes those quantities
+//! recordable on both execution paths with a single schema, so the
+//! simulator's predictions and the threaded transport's measurements are
+//! directly comparable in the same viewer:
+//!
+//! * [`trace`] — the [`Event`] schema, per-(rank, channel) [`Counters`],
+//!   and the unbounded [`TraceRecorder`] the simulator writes into.
+//! * [`flight`] — the bounded, lock-free per-thread [`FlightRecorder`]
+//!   the transport's rank threads write into (near-zero overhead when
+//!   disabled; its tail is dumped by the watchdog on a recv timeout).
+//! * [`chrome`] — Chrome trace-event JSON export
+//!   ([`chrome_trace`], Perfetto-loadable), spans grouped rank → channel
+//!   with segment/bucket/phase categories via [`ChannelTags`].
+//!
+//! # Event schema
+//!
+//! One flat record ([`Event`]) covers both executors. Fields:
+//! `kind`, `rank`, `channel`, `step`, `peer`, `chunks`, `chunk0`,
+//! `bytes`, `value`, `t_start`, `t_end` (seconds from the run origin).
+//! Kinds ([`EventKind`]):
+//!
+//! | kind     | span                                        | emitted by    |
+//! |----------|---------------------------------------------|---------------|
+//! | `send`   | a `Send` op occupying its channel stream    | sim, transport|
+//! | `recv`   | a `Recv` op: match + unpack (+ reduce)      | sim, transport|
+//! | `wire`   | message in flight, src rank → `peer`        | sim, transport|
+//! | `stall`  | channel blocked on an unmatched receive     | sim, transport|
+//! | `reduce` | one reduction-kernel invocation             | sim, transport|
+//! | `pool`   | buffer-pool occupancy sample (`value`=live) | transport     |
+//!
+//! # Stability guarantee
+//!
+//! The schema is **append-only**: existing fields and kind names keep
+//! their meaning across versions; new fields or kinds may appear, and
+//! each addition bumps [`SCHEMA_VERSION`] (stamped into every exported
+//! Chrome trace under `otherData.schema_version`, and into bench report
+//! JSON). Consumers should ignore unknown fields/kinds and may key on
+//! `schema_version` for anything stricter. Both executors are required
+//! to emit the *same* schema — a test asserts the kind/field sets of a
+//! simulator trace and a transport trace of the same program agree.
+//!
+//! ```
+//! use patcol::obs::{ChannelTags, chrome_trace, Event, EventKind, TraceRecorder};
+//! let mut rec = TraceRecorder::new();
+//! rec.record(Event::span(EventKind::Wire, 0, 0, 0, 0.0, 1e-6).with_peer(1));
+//! let trace = rec.finish();
+//! let doc = chrome_trace(&trace, &ChannelTags::plain());
+//! assert!(doc.to_string().contains("traceEvents"));
+//! ```
+
+pub mod chrome;
+pub mod flight;
+pub mod trace;
+
+pub use chrome::{chrome_trace, ChannelTags};
+pub use flight::{FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
+pub use trace::{Counters, Event, EventKind, Trace, TraceRecorder, SCHEMA_VERSION};

@@ -1,0 +1,366 @@
+//! The unified event schema and the recorders that fill it.
+//!
+//! One flat [`Event`] struct covers every executor (the discrete-event
+//! simulator and the threaded transport): a `kind` discriminant, the
+//! (rank, channel, step) coordinates every event carries, optional
+//! message fields (peer, chunk count, first chunk id, bytes), and a
+//! `[t_start, t_end]` window in seconds from the run origin. Executors
+//! that cannot produce a given kind simply never emit it — the *schema*
+//! is identical either way, which is what lets one exporter and one
+//! counter set serve both.
+
+use std::collections::BTreeMap;
+
+use crate::core::{ChunkId, Rank};
+
+/// Version of the event schema (also stamped into exported Chrome
+/// traces). Bumped whenever a field is added; see the stability guarantee
+/// in [`crate::obs`].
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// What an [`Event`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// A `Send` op occupying its (rank, channel) stream: pack + post.
+    SendOp,
+    /// A `Recv` op occupying its stream: match + unpack (+ reduce).
+    RecvOp,
+    /// A message in flight: serialization start → arrival (simulator) or
+    /// post → FIFO match (transport). `rank` is the *source*, `peer` the
+    /// destination.
+    Wire,
+    /// A channel blocked on an unmatched receive. In the transport this
+    /// is time the whole rank thread spent parked, attributed to each
+    /// channel that was blocked during the park.
+    Stall,
+    /// One reduction-kernel invocation on the receive datapath.
+    Reduce,
+    /// Buffer-pool occupancy sample: `value` = live slots after a
+    /// transition (counter event, `t_start == t_end`).
+    Pool,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::SendOp => "send",
+            EventKind::RecvOp => "recv",
+            EventKind::Wire => "wire",
+            EventKind::Stall => "stall",
+            EventKind::Reduce => "reduce",
+            EventKind::Pool => "pool",
+        }
+    }
+}
+
+/// One timeline event. Fields that do not apply to a kind hold their
+/// neutral value (`None` / `0`); see [`EventKind`] for which apply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Emitting rank (for [`EventKind::Wire`]: the source rank).
+    pub rank: Rank,
+    pub channel: usize,
+    pub step: usize,
+    /// Message peer (Wire: destination; SendOp/RecvOp/Stall: remote rank).
+    pub peer: Option<Rank>,
+    /// Chunks aggregated into the message (0 for non-message events).
+    pub chunks: usize,
+    /// First chunk id of the message — what pins a composed event to its
+    /// pipeline segment / bucket (see [`crate::sched::compose::Layout`]).
+    pub chunk0: Option<ChunkId>,
+    /// Payload bytes (message and reduce events).
+    pub bytes: usize,
+    /// Kind-specific magnitude (Pool: live slots after the transition).
+    pub value: usize,
+    /// Seconds from the run origin.
+    pub t_start: f64,
+    /// Seconds from the run origin (`== t_start` for counter samples).
+    pub t_end: f64,
+}
+
+impl Event {
+    /// A bare span of `kind` at (rank, channel, step) — message fields
+    /// default to empty; chain the `with_*` builders below.
+    pub fn span(
+        kind: EventKind,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+        t_start: f64,
+        t_end: f64,
+    ) -> Event {
+        Event {
+            kind,
+            rank,
+            channel,
+            step,
+            peer: None,
+            chunks: 0,
+            chunk0: None,
+            bytes: 0,
+            value: 0,
+            t_start,
+            t_end,
+        }
+    }
+
+    pub fn with_peer(mut self, peer: Rank) -> Event {
+        self.peer = Some(peer);
+        self
+    }
+
+    /// Attach message payload facts: chunk count, first chunk id, bytes.
+    pub fn with_msg(mut self, chunks: &[ChunkId], bytes: usize) -> Event {
+        self.chunks = chunks.len();
+        self.chunk0 = chunks.first().copied();
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn with_bytes(mut self, bytes: usize) -> Event {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn with_value(mut self, value: usize) -> Event {
+        self.value = value;
+        self
+    }
+
+    pub fn duration(&self) -> f64 {
+        (self.t_end - self.t_start).max(0.0)
+    }
+}
+
+/// Per-(rank, channel) aggregate counters, maintained incrementally as
+/// events are recorded — cheap to read even when the event ring has
+/// wrapped (the counters never drop).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Counters {
+    pub bytes_sent: usize,
+    pub bytes_recv: usize,
+    pub msgs_sent: usize,
+    pub msgs_recv: usize,
+    /// Total seconds this channel sat blocked on unmatched receives.
+    pub stall_seconds: f64,
+    /// Total seconds spent in reduction-kernel invocations.
+    pub reduce_seconds: f64,
+    pub reduce_calls: usize,
+    /// Peak buffer-pool occupancy observed while this channel was active.
+    pub pool_peak: usize,
+}
+
+impl Counters {
+    /// Fold one event into the counter set.
+    pub fn absorb(&mut self, ev: &Event) {
+        match ev.kind {
+            EventKind::SendOp => {
+                self.msgs_sent += 1;
+                self.bytes_sent += ev.bytes;
+            }
+            EventKind::RecvOp => {
+                self.msgs_recv += 1;
+                self.bytes_recv += ev.bytes;
+            }
+            EventKind::Stall => self.stall_seconds += ev.duration(),
+            EventKind::Reduce => {
+                self.reduce_calls += 1;
+                self.reduce_seconds += ev.duration();
+            }
+            EventKind::Pool => self.pool_peak = self.pool_peak.max(ev.value),
+            EventKind::Wire => {}
+        }
+    }
+
+    /// Element-wise sum (for run totals).
+    pub fn merge(&mut self, other: &Counters) {
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_recv += other.bytes_recv;
+        self.msgs_sent += other.msgs_sent;
+        self.msgs_recv += other.msgs_recv;
+        self.stall_seconds += other.stall_seconds;
+        self.reduce_seconds += other.reduce_seconds;
+        self.reduce_calls += other.reduce_calls;
+        self.pool_peak = self.pool_peak.max(other.pool_peak);
+    }
+}
+
+/// A finished recording: the merged event timeline plus the per-(rank,
+/// channel) counters — the thing [`crate::transport::TransportReport`]
+/// carries and the Chrome exporter consumes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Events sorted by `t_start` (after [`Trace::sort`] / merge).
+    pub events: Vec<Event>,
+    pub counters: BTreeMap<(Rank, usize), Counters>,
+    /// Events lost to flight-recorder ring wrap (0 for unbounded
+    /// recorders; counters above are *not* affected by drops).
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Merge another trace (e.g. one rank thread's flight recording) into
+    /// this one. Call [`Trace::sort`] once after the last absorb.
+    pub fn absorb(&mut self, other: Trace) {
+        self.events.extend(other.events);
+        for (k, c) in other.counters {
+            self.counters.entry(k).or_default().merge(&c);
+        }
+        self.dropped += other.dropped;
+    }
+
+    pub fn sort(&mut self) {
+        self.events
+            .sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
+    }
+
+    pub fn counters_for(&self, rank: Rank, channel: usize) -> Counters {
+        self.counters.get(&(rank, channel)).copied().unwrap_or_default()
+    }
+
+    /// Sum of every (rank, channel) counter set.
+    pub fn totals(&self) -> Counters {
+        let mut t = Counters::default();
+        for c in self.counters.values() {
+            t.merge(c);
+        }
+        t
+    }
+
+    /// Derived view: wall-clock window of each logical step over the
+    /// trace's [`EventKind::Wire`] events — `(earliest start, latest
+    /// end)`, `(+inf, -inf)` sentinel for silent steps. For a simulator
+    /// trace this reproduces `SimReport::step_spans` exactly.
+    pub fn step_spans(&self, steps: usize) -> Vec<(f64, f64)> {
+        let mut spans = vec![(f64::INFINITY, f64::NEG_INFINITY); steps];
+        for ev in self.events.iter().filter(|e| e.kind == EventKind::Wire) {
+            if let Some(s) = spans.get_mut(ev.step) {
+                s.0 = s.0.min(ev.t_start);
+                s.1 = s.1.max(ev.t_end);
+            }
+        }
+        spans
+    }
+
+    /// Derived view: wall-clock window of each channel's wire traffic
+    /// (see [`Trace::step_spans`]); reproduces `SimReport::channel_spans`
+    /// for simulator traces.
+    pub fn channel_spans(&self, channels: usize) -> Vec<(f64, f64)> {
+        let mut spans = vec![(f64::INFINITY, f64::NEG_INFINITY); channels];
+        for ev in self.events.iter().filter(|e| e.kind == EventKind::Wire) {
+            if let Some(s) = spans.get_mut(ev.channel) {
+                s.0 = s.0.min(ev.t_start);
+                s.1 = s.1.max(ev.t_end);
+            }
+        }
+        spans
+    }
+}
+
+/// Unbounded recorder — what the simulator writes into (the discrete
+/// event loop is single-threaded, so no ring or thread-locality games
+/// are needed; the transport uses [`crate::obs::FlightRecorder`]).
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    events: Vec<Event>,
+    counters: BTreeMap<(Rank, usize), Counters>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::default()
+    }
+
+    pub fn record(&mut self, ev: Event) {
+        self.counters
+            .entry((ev.rank, ev.channel))
+            .or_default()
+            .absorb(&ev);
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Consume into a sorted [`Trace`].
+    pub fn finish(self) -> Trace {
+        let mut t = Trace { events: self.events, counters: self.counters, dropped: 0 };
+        t.sort();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire(rank: Rank, channel: usize, step: usize, t0: f64, t1: f64) -> Event {
+        Event::span(EventKind::Wire, rank, channel, step, t0, t1)
+            .with_peer(rank + 1)
+            .with_msg(&[3, 7], 128)
+    }
+
+    #[test]
+    fn counters_accumulate_per_kind() {
+        let mut rec = TraceRecorder::new();
+        rec.record(Event::span(EventKind::SendOp, 0, 0, 0, 0.0, 1.0).with_bytes(100));
+        rec.record(Event::span(EventKind::SendOp, 0, 0, 1, 1.0, 2.0).with_bytes(50));
+        rec.record(Event::span(EventKind::RecvOp, 0, 0, 1, 2.0, 3.0).with_bytes(70));
+        rec.record(Event::span(EventKind::Stall, 0, 0, 1, 3.0, 3.5));
+        rec.record(Event::span(EventKind::Reduce, 0, 0, 1, 3.5, 4.0).with_bytes(70));
+        rec.record(Event::span(EventKind::Pool, 0, 0, 1, 4.0, 4.0).with_value(3));
+        rec.record(Event::span(EventKind::Pool, 0, 0, 2, 4.5, 4.5).with_value(2));
+        // a second channel keeps its own row
+        rec.record(Event::span(EventKind::SendOp, 0, 1, 0, 0.0, 1.0).with_bytes(9));
+        let trace = rec.finish();
+        let c = trace.counters_for(0, 0);
+        assert_eq!(c.msgs_sent, 2);
+        assert_eq!(c.bytes_sent, 150);
+        assert_eq!(c.msgs_recv, 1);
+        assert_eq!(c.bytes_recv, 70);
+        assert!((c.stall_seconds - 0.5).abs() < 1e-12);
+        assert_eq!(c.reduce_calls, 1);
+        assert!((c.reduce_seconds - 0.5).abs() < 1e-12);
+        assert_eq!(c.pool_peak, 3);
+        assert_eq!(trace.counters_for(0, 1).bytes_sent, 9);
+        assert_eq!(trace.totals().bytes_sent, 159);
+    }
+
+    #[test]
+    fn derived_spans_cover_wire_events_only() {
+        let mut rec = TraceRecorder::new();
+        rec.record(wire(0, 0, 0, 1.0, 2.0));
+        rec.record(wire(1, 0, 0, 0.5, 1.5));
+        rec.record(wire(0, 1, 2, 3.0, 4.0));
+        // non-wire events must not disturb the spans
+        rec.record(Event::span(EventKind::Stall, 0, 0, 0, 0.0, 9.0));
+        let trace = rec.finish();
+        let steps = trace.step_spans(3);
+        assert_eq!(steps[0], (0.5, 2.0));
+        assert!(!steps[1].0.is_finite(), "silent step keeps the sentinel");
+        assert_eq!(steps[2], (3.0, 4.0));
+        let chans = trace.channel_spans(2);
+        assert_eq!(chans[0], (0.5, 2.0));
+        assert_eq!(chans[1], (3.0, 4.0));
+    }
+
+    #[test]
+    fn absorb_merges_and_sorts() {
+        let mut a = TraceRecorder::new();
+        a.record(wire(0, 0, 0, 2.0, 3.0));
+        let mut b = TraceRecorder::new();
+        b.record(wire(1, 0, 0, 1.0, 2.0));
+        let mut t = a.finish();
+        t.absorb(b.finish());
+        t.sort();
+        assert_eq!(t.events.len(), 2);
+        assert!(t.events[0].t_start <= t.events[1].t_start);
+        assert_eq!(t.counters.len(), 2);
+    }
+}

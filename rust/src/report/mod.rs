@@ -32,6 +32,10 @@ impl Report {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            // Stamped so downstream consumers of archived bench JSON can
+            // tell which observability/event vocabulary produced it (the
+            // append-only guarantee in [`crate::obs`]).
+            ("schema_version", Json::num(crate::obs::SCHEMA_VERSION)),
             ("name", Json::str(self.name.clone())),
             (
                 "params",
@@ -85,6 +89,10 @@ mod tests {
         let text = std::fs::read_to_string(path).unwrap();
         let back = json::parse(&text).unwrap();
         assert_eq!(back.get("name").unwrap().as_str(), Some("unit_test_report"));
+        assert_eq!(
+            back.get("schema_version").unwrap().as_usize(),
+            Some(crate::obs::SCHEMA_VERSION as usize)
+        );
         assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(
             back.get("params").unwrap().get("nranks").unwrap().as_usize(),

@@ -31,6 +31,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::core::{Error, Rank, Result};
+use crate::obs::{Event, EventKind, TraceRecorder};
 use crate::sched::program::{Op, Program};
 use crate::sim::cost::CostModel;
 use crate::sim::topology::Topology;
@@ -124,7 +125,7 @@ pub fn simulate(
     chunk_bytes: usize,
 ) -> Result<SimReport> {
     let sizes = vec![chunk_bytes; p.chunk_space()];
-    sim_inner(p, topo, cost, &sizes, None)
+    sim_inner(p, topo, cost, &sizes, None, None)
 }
 
 /// Like [`simulate`], but with a *per-chunk* byte size (`chunk_bytes[c]`
@@ -138,7 +139,7 @@ pub fn simulate_sized(
     cost: &CostModel,
     chunk_bytes: &[usize],
 ) -> Result<SimReport> {
-    sim_inner(p, topo, cost, chunk_bytes, None)
+    sim_inner(p, topo, cost, chunk_bytes, None, None)
 }
 
 /// Like [`simulate`], additionally returning the per-message timeline.
@@ -150,9 +151,25 @@ pub fn simulate_traced(
 ) -> Result<(SimReport, Vec<TraceEvent>)> {
     let mut trace = Vec::new();
     let sizes = vec![chunk_bytes; p.chunk_space()];
-    let rep = sim_inner(p, topo, cost, &sizes, Some(&mut trace))?;
+    let rep = sim_inner(p, topo, cost, &sizes, Some(&mut trace), None)?;
     trace.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
     Ok((rep, trace))
+}
+
+/// Like [`simulate`], additionally recording the full unified event
+/// timeline (op spans, wire transit, stalls, reductions — the same
+/// [`crate::obs`] schema the transport emits) into `rec`. The report's
+/// `step_spans` / `channel_spans` become derived views of the trace:
+/// [`crate::obs::Trace::step_spans`] reproduces them exactly.
+pub fn simulate_observed(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: usize,
+    rec: &mut TraceRecorder,
+) -> Result<SimReport> {
+    let sizes = vec![chunk_bytes; p.chunk_space()];
+    sim_inner(p, topo, cost, &sizes, None, Some(rec))
 }
 
 fn sim_inner(
@@ -161,6 +178,7 @@ fn sim_inner(
     cost: &CostModel,
     chunk_bytes: &[usize],
     mut trace: Option<&mut Vec<TraceEvent>>,
+    mut obs: Option<&mut TraceRecorder>,
 ) -> Result<SimReport> {
     if topo.nranks != p.nranks {
         return Err(Error::Sim(format!(
@@ -279,6 +297,20 @@ fn sim_inner(
                         t_arrival: arrival,
                     });
                 }
+                if let Some(o) = obs.as_deref_mut() {
+                    // The op occupies its stream from wake to pack-done +
+                    // posting gap; the wire span is contended start → arrival.
+                    o.record(
+                        Event::span(EventKind::SendOp, r, k, *step, t, t_ready + cost.msg_gap)
+                            .with_peer(*peer)
+                            .with_msg(chunks, bytes),
+                    );
+                    o.record(
+                        Event::span(EventKind::Wire, r, k, *step, t0, arrival)
+                            .with_peer(*peer)
+                            .with_msg(chunks, bytes),
+                    );
+                }
 
                 // Wake the peer stream if it is blocked on this wire.
                 if let Some((d, dk)) = blocked.remove(&(r, *peer, k)) {
@@ -290,8 +322,9 @@ fn sim_inner(
                     }
                 }
             }
-            Op::Recv { peer, chunks, reduce, .. } => {
+            Op::Recv { peer, chunks, reduce, step, .. } => {
                 let bytes = msg_bytes(chunks);
+                let ready = chan_time[r][k];
                 let q = wires.entry((*peer, r, k)).or_default();
                 let arrival = q.pop_front().ok_or_else(|| {
                     Error::Sim(format!("rank {r} woken with empty wire from {peer}"))
@@ -301,6 +334,34 @@ fn sim_inner(
                     tdone += cost.reduce_cost(bytes);
                 }
                 chan_time[r][k] = tdone;
+                if let Some(o) = obs.as_deref_mut() {
+                    // The stream was free at `ready` but could not retire
+                    // this Recv until `t` — blocked on the wire.
+                    if t > ready {
+                        o.record(
+                            Event::span(EventKind::Stall, r, k, *step, ready, t)
+                                .with_peer(*peer),
+                        );
+                    }
+                    o.record(
+                        Event::span(EventKind::RecvOp, r, k, *step, t, tdone)
+                            .with_peer(*peer)
+                            .with_msg(chunks, bytes),
+                    );
+                    if *reduce {
+                        o.record(
+                            Event::span(
+                                EventKind::Reduce,
+                                r,
+                                k,
+                                *step,
+                                tdone - cost.reduce_cost(bytes),
+                                tdone,
+                            )
+                            .with_bytes(bytes),
+                        );
+                    }
+                }
             }
         }
         pc[r][k] += 1;
@@ -615,6 +676,53 @@ mod tests {
                 w[1].t_end
             );
         }
+    }
+
+    /// The unified trace subsumes the report's step/channel spans: the
+    /// derived views computed from wire events reproduce them exactly,
+    /// and the per-(rank, channel) counters account for every message.
+    #[test]
+    fn observed_trace_subsumes_report_spans() {
+        use crate::obs::{EventKind, TraceRecorder};
+        use crate::sched::channel;
+        let p = channel::split(&pat::allgather(16, 2), 2).unwrap();
+        let topo = flat(16);
+        let cost = CostModel::ib_hdr();
+        let mut rec = TraceRecorder::new();
+        let rep = simulate_observed(&p, &topo, &cost, 1024, &mut rec).unwrap();
+        let baseline = simulate(&p, &topo, &cost, 1024).unwrap();
+        assert_eq!(rep.total_time, baseline.total_time, "observing must not perturb");
+        let trace = rec.finish();
+        // derived views == report fields (including empty-step sentinels)
+        let derived_steps = trace.step_spans(p.steps);
+        for (s, (&a, &b)) in derived_steps.iter().zip(rep.step_spans.iter()).enumerate() {
+            if a.0.is_finite() || b.0.is_finite() {
+                assert_eq!(a, b, "step {s}");
+            }
+        }
+        assert_eq!(trace.channel_spans(p.channels), rep.channel_spans);
+        // counters: every simulated message was recorded once, both sides
+        let totals = trace.totals();
+        assert_eq!(totals.msgs_sent, rep.messages);
+        assert_eq!(totals.msgs_recv, rep.messages);
+        assert_eq!(totals.bytes_sent, rep.bytes_sent);
+        let wires = trace.events.iter().filter(|e| e.kind == EventKind::Wire).count();
+        assert_eq!(wires, rep.messages);
+        // a 16-rank PAT run genuinely blocks on receives somewhere
+        assert!(totals.stall_seconds > 0.0, "expected at least one stall");
+    }
+
+    /// Reducing receives emit reduce-kernel events in the unified trace.
+    #[test]
+    fn observed_trace_records_reductions() {
+        use crate::obs::{EventKind, TraceRecorder};
+        let p = pat::reduce_scatter(8, 2);
+        let mut rec = TraceRecorder::new();
+        simulate_observed(&p, &flat(8), &CostModel::ib_hdr(), 512, &mut rec).unwrap();
+        let trace = rec.finish();
+        let reduces = trace.events.iter().filter(|e| e.kind == EventKind::Reduce).count();
+        assert!(reduces > 0);
+        assert_eq!(trace.totals().reduce_calls, reduces);
     }
 
     /// A composed all-reduce program runs through the simulator without

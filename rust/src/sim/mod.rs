@@ -17,6 +17,12 @@
 //! * [`engine`] — executes a [`crate::sched::Program`] against a topology +
 //!   cost model, tracking per-link busy intervals (contention) and per-rank
 //!   serialization, producing completion time and traffic metrics.
+//!
+//! [`engine::simulate_observed`] additionally emits the unified
+//! [`crate::obs`] event timeline (op spans, wire transit, stalls,
+//! reductions) from the discrete-event loop — the same schema the threaded
+//! transport records, so simulated and measured timelines load side by
+//! side in the same trace viewer.
 
 pub mod topology;
 pub mod routing;
@@ -24,5 +30,7 @@ pub mod cost;
 pub mod engine;
 
 pub use cost::CostModel;
-pub use engine::{simulate, simulate_sized, simulate_traced, SimReport, TraceEvent};
+pub use engine::{
+    simulate, simulate_observed, simulate_sized, simulate_traced, SimReport, TraceEvent,
+};
 pub use topology::Topology;

@@ -7,7 +7,8 @@
 //! records the high-water mark — the quantity the paper claims stays
 //! logarithmic in rank count and independent of operation size.
 
-use crate::core::{Error, Result};
+use crate::core::{Error, Rank, Result};
+use crate::obs::FlightRecorder;
 
 /// A pool of `capacity` chunk-sized slots (`None` = unbounded, measuring
 /// only).
@@ -105,6 +106,64 @@ impl BufferPool {
     pub fn unreserve(&mut self, slots: usize) {
         debug_assert!(self.live >= slots);
         self.live -= slots;
+    }
+
+    // Traced variants: same transitions, plus a pool-occupancy sample into
+    // the flight recorder (a no-op branch when tracing is off). The sample
+    // carries the op coordinates so occupancy is attributable to the
+    // (rank, channel, step) that moved it.
+
+    /// [`BufferPool::acquire`] + occupancy sample.
+    pub fn acquire_traced(
+        &mut self,
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) -> Result<Vec<f32>> {
+        let slot = self.acquire()?;
+        fr.pool(rank, channel, step, self.live);
+        Ok(slot)
+    }
+
+    /// [`BufferPool::release`] + occupancy sample.
+    pub fn release_traced(
+        &mut self,
+        slot: Vec<f32>,
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) {
+        self.release(slot);
+        fr.pool(rank, channel, step, self.live);
+    }
+
+    /// [`BufferPool::reserve`] + occupancy sample.
+    pub fn reserve_traced(
+        &mut self,
+        slots: usize,
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) -> Result<()> {
+        self.reserve(slots)?;
+        fr.pool(rank, channel, step, self.live);
+        Ok(())
+    }
+
+    /// [`BufferPool::unreserve`] + occupancy sample.
+    pub fn unreserve_traced(
+        &mut self,
+        slots: usize,
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) {
+        self.unreserve(slots);
+        fr.pool(rank, channel, step, self.live);
     }
 }
 

@@ -12,7 +12,8 @@
 //!   the analog of kernels serializing on a device stream). Three-layer
 //!   path: Pallas (L1) → jax graph (L2) → rust runtime (L3).
 
-use crate::core::Result;
+use crate::core::{Rank, Result};
+use crate::obs::{Event, EventKind, FlightRecorder};
 use crate::runtime::PjrtHandle;
 
 /// Reduction backend used by the transport engine.
@@ -54,6 +55,58 @@ impl DataPath {
                 h.reduce_into(&mut out[base..], b)
             }
         }
+    }
+
+    /// [`DataPath::reduce_into`] wrapped in a reduce-kernel span when the
+    /// flight recorder is enabled (single branch + no clock reads when
+    /// disabled — the hot path stays untouched).
+    #[allow(clippy::too_many_arguments)]
+    pub fn reduce_into_traced(
+        &self,
+        acc: &mut [f32],
+        x: &[f32],
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) -> Result<()> {
+        if !fr.enabled() {
+            return self.reduce_into(acc, x);
+        }
+        let t0 = fr.now();
+        self.reduce_into(acc, x)?;
+        let t1 = fr.now();
+        fr.record(
+            Event::span(EventKind::Reduce, rank, channel, step, t0, t1)
+                .with_bytes(std::mem::size_of_val(x)),
+        );
+        Ok(())
+    }
+
+    /// [`DataPath::add_extend`] wrapped in a reduce-kernel span (see
+    /// [`DataPath::reduce_into_traced`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_extend_traced(
+        &self,
+        out: &mut Vec<f32>,
+        a: &[f32],
+        b: &[f32],
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) -> Result<()> {
+        if !fr.enabled() {
+            return self.add_extend(out, a, b);
+        }
+        let t0 = fr.now();
+        self.add_extend(out, a, b)?;
+        let t1 = fr.now();
+        fr.record(
+            Event::span(EventKind::Reduce, rank, channel, step, t0, t1)
+                .with_bytes(std::mem::size_of_val(b)),
+        );
+        Ok(())
     }
 
     pub fn name(&self) -> &'static str {

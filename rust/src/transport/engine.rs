@@ -36,6 +36,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::core::{ChunkId, Collective, Error, Rank, Result};
+use crate::obs::{Event, EventKind, FlightRecorder, Trace, DEFAULT_FLIGHT_CAPACITY};
 use crate::sched::program::{Op, Program};
 use crate::transport::buffers::BufferPool;
 use crate::transport::datapath::DataPath;
@@ -61,6 +62,11 @@ pub struct TransportOptions {
     pub validate: bool,
     /// Watchdog for blocking receives.
     pub recv_timeout: Duration,
+    /// Record the unified [`crate::obs`] event timeline: each rank thread
+    /// keeps a lock-free [`FlightRecorder`] ring, merged into
+    /// [`TransportReport::trace`] at join. When off (the default) every
+    /// recording call is a single inlined branch — no clock reads.
+    pub trace: bool,
 }
 
 impl Default for TransportOptions {
@@ -71,6 +77,7 @@ impl Default for TransportOptions {
             staged: true,
             validate: true,
             recv_timeout: Duration::from_secs(30),
+            trace: false,
         }
     }
 }
@@ -88,12 +95,19 @@ pub struct TransportReport {
     pub wall: Duration,
     /// Sum of distinct slot vectors allocated (allocation pressure).
     pub slots_allocated: usize,
+    /// The unified event timeline (merged across rank threads, sorted by
+    /// start time), present when [`TransportOptions::trace`] was set.
+    pub trace: Option<Trace>,
 }
 
 struct WireMsg {
     src: Rank,
     /// The connection this message rides: FIFO holds per (src, channel).
     channel: usize,
+    /// Post time (seconds from the run origin; 0.0 when tracing is off).
+    /// Travels with the message so the receiver can record the wire span
+    /// post → FIFO match against the shared clock.
+    t_sent: f64,
     data: Vec<f32>,
 }
 
@@ -110,8 +124,8 @@ struct Endpoint {
     senders: Vec<Sender<WireMsg>>,
     receiver: Receiver<WireMsg>,
     /// Arrived-but-unclaimed messages per (src, channel) — the per-channel
-    /// connection FIFOs.
-    pending: HashMap<(Rank, usize), VecDeque<Vec<f32>>>,
+    /// connection FIFOs, each entry `(t_sent, payload)`.
+    pending: HashMap<(Rank, usize), VecDeque<(f64, Vec<f32>)>>,
     /// Messages ever stashed into `pending`. The channel scheduler uses
     /// this to notice arrivals drained mid-pass for an already-checked
     /// channel (it must re-poll instead of blocking on the receiver).
@@ -123,9 +137,9 @@ struct Endpoint {
 }
 
 impl Endpoint {
-    fn send(&self, dst: Rank, chan: usize, data: Vec<f32>) -> Result<()> {
+    fn send(&self, dst: Rank, chan: usize, data: Vec<f32>, t_sent: f64) -> Result<()> {
         self.senders[dst]
-            .send(WireMsg { src: self.rank, channel: chan, data })
+            .send(WireMsg { src: self.rank, channel: chan, t_sent, data })
             .map_err(|_| Error::Transport(format!("rank {dst} hung up")))
     }
 
@@ -158,16 +172,21 @@ impl Endpoint {
         self.pending
             .entry((msg.src, msg.channel))
             .or_default()
-            .push_back(msg.data);
+            .push_back((msg.t_sent, msg.data));
     }
 
     /// Non-blocking: drain everything that has arrived into the
     /// per-connection FIFOs, then pop the head of (src, chan) if present.
-    fn try_recv_from(&mut self, src: Rank, chan: usize) -> Option<Vec<f32>> {
+    fn try_recv_from(&mut self, src: Rank, chan: usize) -> Option<(f64, Vec<f32>)> {
         while let Ok(msg) = self.receiver.try_recv() {
             self.stash(msg);
         }
         self.pending.get_mut(&(src, chan)).and_then(|q| q.pop_front())
+    }
+
+    /// Queued-but-unclaimed messages on the (src, chan) connection FIFO.
+    fn fifo_depth(&self, src: Rank, chan: usize) -> usize {
+        self.pending.get(&(src, chan)).map_or(0, |q| q.len())
     }
 
     /// Block until at least one new message arrives (stashed into the
@@ -218,11 +237,19 @@ fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
 
 /// Drive a rank's per-channel op streams to completion (the cooperative
 /// per-channel scheduler, see the module docs). `exec` performs one op:
-/// for receives the matched wire payload is passed in; for sends it is
-/// `None` and `exec` posts the message itself via the endpoint.
-fn drive_channels<F>(ep: &mut Endpoint, ops: &[Op], channels: usize, mut exec: F) -> Result<()>
+/// for receives the matched `(t_sent, payload)` is passed in; for sends
+/// it is `None` and `exec` posts the message itself via the endpoint.
+/// `fr` is the rank's flight recorder: park intervals become per-channel
+/// stall events, and a watchdog timeout dumps its tail into the error.
+fn drive_channels<F>(
+    ep: &mut Endpoint,
+    ops: &[Op],
+    channels: usize,
+    fr: &mut FlightRecorder,
+    mut exec: F,
+) -> Result<()>
 where
-    F: FnMut(&mut Endpoint, &Op, Option<Vec<f32>>) -> Result<()>,
+    F: FnMut(&mut Endpoint, &Op, Option<(f64, Vec<f32>)>, &mut FlightRecorder) -> Result<()>,
 {
     let nchan = channels.max(1);
     let mut streams: Vec<Vec<&Op>> = vec![Vec::new(); nchan];
@@ -245,7 +272,7 @@ where
                         None => break,
                     },
                 };
-                exec(ep, op, data)?;
+                exec(ep, op, data, fr)?;
                 pc[k] += 1;
                 remaining -= 1;
                 progressed = true;
@@ -255,10 +282,61 @@ where
         // arrival: a message stashed mid-pass may belong to a channel
         // checked earlier in the pass, so re-poll before parking.
         if remaining > 0 && !progressed && ep.stashed == seen {
-            ep.wait_any()?;
+            let t_park = fr.now_or_zero();
+            if ep.wait_any().is_err() {
+                return Err(blame_timeout(ep, &streams, &pc, fr));
+            }
+            if fr.enabled() {
+                // The whole rank thread was parked; every channel whose
+                // head is an unmatched Recv was stalled for the interval.
+                let t_wake = fr.now();
+                for (k, stream) in streams.iter().enumerate() {
+                    if pc[k] >= stream.len() {
+                        continue;
+                    }
+                    if let Op::Recv { peer, step, .. } = stream[pc[k]] {
+                        fr.record(
+                            Event::span(EventKind::Stall, ep.rank, k, *step, t_park, t_wake)
+                                .with_peer(*peer),
+                        );
+                    }
+                }
+            }
         }
     }
     Ok(())
+}
+
+/// Build the watchdog's blamed stall report: which (rank, channel, step)
+/// is blocked on which peer, how deep each pending connection FIFO is,
+/// and — when tracing — the flight recorder's tail. Works with tracing
+/// off; the per-channel blame needs no recorded history.
+fn blame_timeout(ep: &Endpoint, streams: &[Vec<&Op>], pc: &[usize], fr: &FlightRecorder) -> Error {
+    let mut msg = format!(
+        "rank {} timed out with every channel blocked on a receive \
+         (deadlocked or unmatched schedule?)",
+        ep.rank
+    );
+    for (k, stream) in streams.iter().enumerate() {
+        if pc[k] >= stream.len() {
+            continue;
+        }
+        if let Op::Recv { peer, chunks, step, .. } = stream[pc[k]] {
+            msg.push_str(&format!(
+                "\n  channel {k}: op {}/{} blocked on recv from rank {peer} at step {step} \
+                 ({} chunks; {} message(s) queued on that connection)",
+                pc[k],
+                stream.len(),
+                chunks.len(),
+                ep.fifo_depth(*peer, k)
+            ));
+        }
+    }
+    if fr.enabled() && !fr.is_empty() {
+        msg.push_str("\nflight recorder tail:\n");
+        msg.push_str(&fr.render_tail(16));
+    }
+    Error::Transport(msg)
 }
 
 /// The channel-striped chunk grid of a program over per-rank payloads of
@@ -352,6 +430,11 @@ pub fn run_allgather_into(
             let opts = &*opts;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
+                let mut fr = if opts.trace {
+                    FlightRecorder::new(start, DEFAULT_FLIGHT_CAPACITY)
+                } else {
+                    FlightRecorder::disabled()
+                };
                 let recvbuf: &mut [f32] = out_slot;
                 recvbuf[r * len..(r + 1) * len].copy_from_slice(&inputs[r]);
                 // Chunk `c` = stripe `c / n` of rank `c % n`'s slot.
@@ -360,9 +443,10 @@ pub fn run_allgather_into(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, |ep, op, data| {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, op, data, fr| {
                     match op {
-                        Op::Send { peer, chunks, channel, .. } => {
+                        Op::Send { peer, chunks, channel, step } => {
+                            let t0 = fr.now_or_zero();
                             // Pack through staging: one slot per sub-chunk of
                             // the message is live until the send is posted,
                             // enforcing that a transfer never aggregates more
@@ -371,22 +455,30 @@ pub fn run_allgather_into(
                             // accounting-only), so packing costs exactly one
                             // copy of the payload.
                             if opts.staged {
-                                pool.reserve(chunks.len())?;
+                                pool.reserve_traced(chunks.len(), fr, r, *channel, *step)?;
                             }
                             let mut msg = ep.take_buffer(chunks.len() * sub);
                             for &c in chunks {
                                 let o = off(c);
                                 msg.extend_from_slice(&recvbuf[o..o + sub]);
                             }
-                            local_bytes += msg.len() * 4;
+                            let bytes = msg.len() * 4;
+                            local_bytes += bytes;
                             local_msgs += 1;
-                            ep.send(*peer, *channel, msg)?;
+                            ep.send(*peer, *channel, msg, t0)?;
                             if opts.staged {
-                                pool.unreserve(chunks.len());
+                                pool.unreserve_traced(chunks.len(), fr, r, *channel, *step);
+                            }
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::SendOp, r, *channel, *step, t0, fr.now())
+                                        .with_peer(*peer)
+                                        .with_msg(chunks, bytes),
+                                );
                             }
                         }
-                        Op::Recv { peer, chunks, .. } => {
-                            let data = data.expect("recv scheduled without payload");
+                        Op::Recv { peer, chunks, channel, step, .. } => {
+                            let (t_sent, data) = data.expect("recv scheduled without payload");
                             if data.len() != chunks.len() * sub {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
@@ -394,12 +486,31 @@ pub fn run_allgather_into(
                                     chunks.len() * sub
                                 )));
                             }
+                            let bytes = data.len() * 4;
+                            let t0 = fr.now_or_zero();
+                            if fr.enabled() {
+                                // Wire span: peer's post time → FIFO match,
+                                // recorded by the receiving side against the
+                                // shared run origin.
+                                fr.record(
+                                    Event::span(EventKind::Wire, *peer, *channel, *step, t_sent, t0)
+                                        .with_peer(r)
+                                        .with_msg(chunks, bytes),
+                                );
+                            }
                             for (i, &c) in chunks.iter().enumerate() {
                                 let seg = &data[i * sub..(i + 1) * sub];
                                 let o = off(c);
                                 recvbuf[o..o + sub].copy_from_slice(seg);
                             }
                             ep.recycle(*peer, data);
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::RecvOp, r, *channel, *step, t0, fr.now())
+                                        .with_peer(*peer)
+                                        .with_msg(chunks, bytes),
+                                );
+                            }
                         }
                     }
                     Ok(())
@@ -409,6 +520,9 @@ pub fn run_allgather_into(
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
+                if opts.trace {
+                    rep.trace.get_or_insert_with(Trace::default).absorb(fr.finish());
+                }
                 Ok(())
             }));
         }
@@ -420,6 +534,9 @@ pub fn run_allgather_into(
 
     let mut rep = report.into_inner().unwrap();
     rep.wall = start.elapsed();
+    if let Some(t) = rep.trace.as_mut() {
+        t.sort();
+    }
     Ok(rep)
 }
 
@@ -477,6 +594,11 @@ pub fn run_reduce_scatter(
             let opts = &*opts;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
+                let mut fr = if opts.trace {
+                    FlightRecorder::new(start, DEFAULT_FLIGHT_CAPACITY)
+                } else {
+                    FlightRecorder::disabled()
+                };
                 // Chunk `c` = stripe `c / n` of output slot `c % n`.
                 let off = |c: ChunkId| (c % n) * l + (c / n) * sub;
                 let own = |c: ChunkId| &inputs[r][off(c)..off(c) + sub];
@@ -485,33 +607,53 @@ pub fn run_reduce_scatter(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, |ep, op, data| {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, op, data, fr| {
                     match op {
-                        Op::Send { peer, chunks, channel, .. } => {
+                        Op::Send { peer, chunks, channel, step } => {
+                            let t0 = fr.now_or_zero();
                             let mut msg = ep.take_buffer(chunks.len() * sub);
                             for &c in chunks {
                                 match acc.remove(&c) {
                                     Some(slot) => {
                                         // fused accumulator + own contribution
                                         // straight into the wire buffer
-                                        opts.datapath.add_extend(&mut msg, &slot, own(c))?;
-                                        pool.release(slot);
+                                        opts.datapath.add_extend_traced(
+                                            &mut msg, &slot, own(c), fr, r, *channel, *step,
+                                        )?;
+                                        pool.release_traced(slot, fr, r, *channel, *step);
                                     }
                                     None => msg.extend_from_slice(own(c)),
                                 }
                             }
-                            local_bytes += msg.len() * 4;
+                            let bytes = msg.len() * 4;
+                            local_bytes += bytes;
                             local_msgs += 1;
-                            ep.send(*peer, *channel, msg)?;
+                            ep.send(*peer, *channel, msg, t0)?;
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::SendOp, r, *channel, *step, t0, fr.now())
+                                        .with_peer(*peer)
+                                        .with_msg(chunks, bytes),
+                                );
+                            }
                         }
-                        Op::Recv { peer, chunks, .. } => {
-                            let data = data.expect("recv scheduled without payload");
+                        Op::Recv { peer, chunks, channel, step, .. } => {
+                            let (t_sent, data) = data.expect("recv scheduled without payload");
                             if data.len() != chunks.len() * sub {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
                                     data.len(),
                                     chunks.len() * sub
                                 )));
+                            }
+                            let bytes = data.len() * 4;
+                            let t0 = fr.now_or_zero();
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::Wire, *peer, *channel, *step, t_sent, t0)
+                                        .with_peer(r)
+                                        .with_msg(chunks, bytes),
+                                );
                             }
                             // (Perf-pass note: a zero-copy "steal the wire
                             // buffer as accumulator" variant was tried for
@@ -522,15 +664,25 @@ pub fn run_reduce_scatter(
                             for (i, &c) in chunks.iter().enumerate() {
                                 let seg = &data[i * sub..(i + 1) * sub];
                                 match acc.get_mut(&c) {
-                                    Some(slot) => opts.datapath.reduce_into(slot, seg)?,
+                                    Some(slot) => opts.datapath.reduce_into_traced(
+                                        slot, seg, fr, r, *channel, *step,
+                                    )?,
                                     None => {
-                                        let mut slot = pool.acquire()?;
+                                        let mut slot =
+                                            pool.acquire_traced(fr, r, *channel, *step)?;
                                         slot.copy_from_slice(seg);
                                         acc.insert(c, slot);
                                     }
                                 }
                             }
                             ep.recycle(*peer, data);
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::RecvOp, r, *channel, *step, t0, fr.now())
+                                        .with_peer(*peer)
+                                        .with_msg(chunks, bytes),
+                                );
+                            }
                         }
                     }
                     Ok(())
@@ -559,6 +711,9 @@ pub fn run_reduce_scatter(
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
+                if opts.trace {
+                    rep.trace.get_or_insert_with(Trace::default).absorb(fr.finish());
+                }
                 Ok(())
             }));
         }
@@ -570,6 +725,9 @@ pub fn run_reduce_scatter(
 
     let mut rep = report.into_inner().unwrap();
     rep.wall = start.elapsed();
+    if let Some(t) = rep.trace.as_mut() {
+        t.sort();
+    }
     Ok((outputs, rep))
 }
 
@@ -693,6 +851,11 @@ pub fn run_allreduce_batch(
             let off = &off;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
+                let mut fr = if opts.trace {
+                    FlightRecorder::new(start, DEFAULT_FLIGHT_CAPACITY)
+                } else {
+                    FlightRecorder::disabled()
+                };
                 let own = |c: ChunkId| &inputs[r][off[c]..off[c] + chunk_elems[c]];
                 let mut out = vec![0f32; total];
                 let mut pool = BufferPool::new(slot_elems, opts.slot_capacity);
@@ -701,9 +864,10 @@ pub fn run_allreduce_batch(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, |ep, op, data| {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, op, data, fr| {
                     match op {
-                        Op::Send { peer, chunks, channel, .. } => {
+                        Op::Send { peer, chunks, channel, step } => {
+                            let t0 = fr.now_or_zero();
                             // Finalized chunks relay through staging (the
                             // all-gather-style forward path); non-finalized
                             // chunks are reduce-scatter contribute-sends
@@ -712,7 +876,7 @@ pub fn run_allreduce_batch(
                             if opts.staged {
                                 reserved =
                                     chunks.iter().filter(|&&c| finalized[c]).count();
-                                pool.reserve(reserved)?;
+                                pool.reserve_traced(reserved, fr, r, *channel, *step)?;
                             }
                             let msg_elems: usize = chunks.iter().map(|&c| chunk_elems[c]).sum();
                             let mut msg = ep.take_buffer(msg_elems);
@@ -726,9 +890,11 @@ pub fn run_allreduce_batch(
                                     // and broadcast it.
                                     match acc.remove(&c) {
                                         Some(slot) => {
-                                            opts.datapath
-                                                .add_extend(&mut msg, &slot[..len], own(c))?;
-                                            pool.release(slot);
+                                            opts.datapath.add_extend_traced(
+                                                &mut msg, &slot[..len], own(c),
+                                                fr, r, *channel, *step,
+                                            )?;
+                                            pool.release_traced(slot, fr, r, *channel, *step);
                                         }
                                         None => msg.extend_from_slice(own(c)),
                                     }
@@ -738,29 +904,48 @@ pub fn run_allreduce_batch(
                                 } else {
                                     match acc.remove(&c) {
                                         Some(slot) => {
-                                            opts.datapath
-                                                .add_extend(&mut msg, &slot[..len], own(c))?;
-                                            pool.release(slot);
+                                            opts.datapath.add_extend_traced(
+                                                &mut msg, &slot[..len], own(c),
+                                                fr, r, *channel, *step,
+                                            )?;
+                                            pool.release_traced(slot, fr, r, *channel, *step);
                                         }
                                         None => msg.extend_from_slice(own(c)),
                                     }
                                 }
                             }
-                            local_bytes += msg.len() * 4;
+                            let bytes = msg.len() * 4;
+                            local_bytes += bytes;
                             local_msgs += 1;
-                            ep.send(*peer, *channel, msg)?;
+                            ep.send(*peer, *channel, msg, t0)?;
                             if opts.staged {
-                                pool.unreserve(reserved);
+                                pool.unreserve_traced(reserved, fr, r, *channel, *step);
+                            }
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::SendOp, r, *channel, *step, t0, fr.now())
+                                        .with_peer(*peer)
+                                        .with_msg(chunks, bytes),
+                                );
                             }
                         }
-                        Op::Recv { peer, chunks, reduce, .. } => {
-                            let data = data.expect("recv scheduled without payload");
+                        Op::Recv { peer, chunks, reduce, channel, step } => {
+                            let (t_sent, data) = data.expect("recv scheduled without payload");
                             let want: usize = chunks.iter().map(|&c| chunk_elems[c]).sum();
                             if data.len() != want {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {want}",
                                     data.len()
                                 )));
+                            }
+                            let bytes = data.len() * 4;
+                            let t0 = fr.now_or_zero();
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::Wire, *peer, *channel, *step, t_sent, t0)
+                                        .with_peer(r)
+                                        .with_msg(chunks, bytes),
+                                );
                             }
                             let mut pos = 0usize;
                             for &c in chunks {
@@ -769,11 +954,12 @@ pub fn run_allreduce_batch(
                                 pos += len;
                                 if *reduce {
                                     match acc.get_mut(&c) {
-                                        Some(slot) => {
-                                            opts.datapath.reduce_into(&mut slot[..len], seg)?
-                                        }
+                                        Some(slot) => opts.datapath.reduce_into_traced(
+                                            &mut slot[..len], seg, fr, r, *channel, *step,
+                                        )?,
                                         None => {
-                                            let mut slot = pool.acquire()?;
+                                            let mut slot =
+                                                pool.acquire_traced(fr, r, *channel, *step)?;
                                             slot[..len].copy_from_slice(seg);
                                             acc.insert(c, slot);
                                         }
@@ -784,6 +970,13 @@ pub fn run_allreduce_batch(
                                 }
                             }
                             ep.recycle(*peer, data);
+                            if fr.enabled() {
+                                fr.record(
+                                    Event::span(EventKind::RecvOp, r, *channel, *step, t0, fr.now())
+                                        .with_peer(*peer)
+                                        .with_msg(chunks, bytes),
+                                );
+                            }
                         }
                     }
                     Ok(())
@@ -818,6 +1011,9 @@ pub fn run_allreduce_batch(
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
+                if opts.trace {
+                    rep.trace.get_or_insert_with(Trace::default).absorb(fr.finish());
+                }
                 Ok(())
             }));
         }
@@ -829,6 +1025,9 @@ pub fn run_allreduce_batch(
 
     let mut rep = report.into_inner().unwrap();
     rep.wall = start.elapsed();
+    if let Some(t) = rep.trace.as_mut() {
+        t.sort();
+    }
     Ok((outputs, rep))
 }
 
@@ -1175,6 +1374,70 @@ mod tests {
                 rep.peak_slots
             );
         }
+    }
+
+    /// Tracing on: the merged trace accounts for every message on both
+    /// sides, records pool occupancy (RS accumulators), and its per-rank
+    /// pool-peak counters match the report's enforced peak.
+    #[test]
+    fn traced_run_accounts_for_every_message() {
+        use crate::obs::EventKind;
+        let n = 16;
+        let p = pat::reduce_scatter(n, 2);
+        let inputs = rs_inputs(n, 8, 5);
+        let opts = TransportOptions { trace: true, ..Default::default() };
+        let (_, rep) = run_reduce_scatter(&p, &inputs, &opts).unwrap();
+        let trace = rep.trace.as_ref().expect("trace requested");
+        let totals = trace.totals();
+        assert_eq!(totals.msgs_sent, rep.messages);
+        assert_eq!(totals.msgs_recv, rep.messages);
+        assert_eq!(totals.bytes_sent, rep.bytes_moved);
+        assert_eq!(totals.bytes_recv, rep.bytes_moved);
+        let wires = trace.events.iter().filter(|e| e.kind == EventKind::Wire).count();
+        assert_eq!(wires, rep.messages);
+        assert!(totals.reduce_calls > 0, "RS must invoke the reduce kernel");
+        assert!(totals.pool_peak > 0, "RS must sample accumulator occupancy");
+        assert_eq!(totals.pool_peak, rep.peak_slots, "counter peak == enforced peak");
+        // events are globally sorted and windows are sane
+        for w in trace.events.windows(2) {
+            assert!(w[0].t_start <= w[1].t_start);
+        }
+        for ev in &trace.events {
+            assert!(ev.t_end >= ev.t_start, "{ev:?}");
+        }
+    }
+
+    /// Tracing off: the report carries no trace and runs stay correct
+    /// (the disabled recorder is a pure pass-through).
+    #[test]
+    fn untraced_run_has_no_trace() {
+        let n = 8;
+        let inputs = ag_inputs(n, 16, 2);
+        let (_, rep) =
+            run_allgather(&pat::allgather(n, 2), &inputs, &TransportOptions::default()).unwrap();
+        assert!(rep.trace.is_none());
+    }
+
+    /// Satellite: the watchdog names the blocked (rank, channel, step),
+    /// the peer, and the pending FIFO depth — with tracing off.
+    #[test]
+    fn watchdog_blames_blocked_channel() {
+        let mut p = Program::new(2, Collective::AllGather, "broken");
+        p.push(0, Op::recv(1, vec![1], false, 3));
+        p.push(0, Op::send(1, vec![0], 3));
+        p.push(1, Op::recv(0, vec![0], false, 3));
+        let opts = TransportOptions {
+            validate: false,
+            recv_timeout: Duration::from_millis(100),
+            ..Default::default()
+        };
+        let inputs = vec![vec![1.0f32], vec![2.0f32]];
+        let err = run_allgather(&p, &inputs, &opts).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(err.contains("channel 0"), "{err}");
+        assert!(err.contains("step 3"), "{err}");
+        assert!(err.contains("blocked on recv from rank"), "{err}");
+        assert!(err.contains("queued on that connection"), "{err}");
     }
 
     #[test]

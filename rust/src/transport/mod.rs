@@ -11,6 +11,16 @@
 //! * [`datapath`] — the receive-side reduction: either a pure-rust scalar
 //!   loop or the AOT-compiled Pallas kernel via PJRT
 //!   ([`crate::runtime::Registry::reduce_f32`]).
+//!
+//! With [`TransportOptions::trace`] set, every rank thread keeps a
+//! lock-free [`crate::obs::FlightRecorder`] ring (shared `Instant`
+//! origin, merged into [`TransportReport::trace`] at join): op spans,
+//! wire post→match windows, whole-thread park intervals attributed to
+//! each blocked channel, buffer-pool occupancy samples, and
+//! reduce-kernel invocations — the same [`crate::obs`] schema the
+//! simulator emits. A watchdog recv timeout dumps the recorder's tail
+//! plus a per-channel blame report (blocked step, peer, pending FIFO
+//! depth), which names the deadlock instead of just reporting it.
 
 pub mod engine;
 pub mod buffers;

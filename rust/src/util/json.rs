@@ -157,7 +157,12 @@ impl Json {
 }
 
 fn write_num(out: &mut String, x: f64) {
-    if x.fract() == 0.0 && x.abs() < 9e15 {
+    // JSON has no inf/NaN literals; `{x}` would emit `inf`/`NaN` and
+    // corrupt the document (e.g. the `(+inf, -inf)` sentinels of empty
+    // step spans). Emit null, which every consumer already handles.
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 9e15 {
         let _ = write!(out, "{}", x as i64);
     } else {
         let _ = write!(out, "{x}");
@@ -415,6 +420,24 @@ mod tests {
             ("obj", Json::obj(vec![("k", Json::str("v"))])),
         ]);
         assert_eq!(parse(&v.to_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn nonfinite_serializes_as_null_and_roundtrips() {
+        // the empty-step sentinel shape from SimReport::step_spans
+        let v = Json::arr(vec![
+            Json::num(f64::INFINITY),
+            Json::num(f64::NEG_INFINITY),
+            Json::num(f64::NAN),
+            Json::num(1.5),
+        ]);
+        let s = v.to_string();
+        assert_eq!(s, "[null,null,null,1.5]");
+        let back = parse(&s).unwrap();
+        assert_eq!(
+            back,
+            Json::arr(vec![Json::Null, Json::Null, Json::Null, Json::num(1.5)])
+        );
     }
 
     #[test]

@@ -635,3 +635,44 @@ fn hier_fewer_cross_leaf_transfers_than_flat_pat() {
     // Sanity: the hierarchy keeps a substantial share of traffic leaf-local.
     assert!(rep_hier.msgs_by_level[0] > 0);
 }
+
+/// Claim P3 through the observability layer: the pool high-water counters
+/// sampled at every buffer-pool transition on the real transport stay
+/// within the reference verifier's measured occupancy bound — the traced
+/// numbers are the enforced numbers, not an approximation. Counters are
+/// keyed by (rank, channel) but sample rank-wide occupancy (channels on a
+/// rank share one pool), so this sweeps single-channel programs where the
+/// two coincide.
+#[test]
+fn traced_pool_high_water_within_verifier_bound() {
+    let opts = TransportOptions { trace: true, ..Default::default() };
+    for n in [4usize, 7, 8, 13, 16] {
+        let chunk = 12;
+        let mut rng = Rng::new(n as u64 * 67);
+        for a in [1usize, 2, 4, usize::MAX] {
+            let alg = Algorithm::Pat { aggregation: a };
+            if !alg.supports(n) {
+                continue;
+            }
+            let rs = sched::generate(alg, Collective::ReduceScatter, n).unwrap();
+            let occ = verify_program(&rs).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let (_, rep) = run_reduce_scatter(&rs, &inputs, &opts).unwrap();
+            let trace = rep.trace.as_ref().expect("trace requested");
+            let sampled = trace.counters.values().map(|c| c.pool_peak).max().unwrap_or(0);
+            assert_eq!(
+                sampled, rep.peak_slots,
+                "pat(a={a}) rs n={n}: sampled high water {sampled} != enforced peak {}",
+                rep.peak_slots
+            );
+            assert!(
+                sampled <= occ.peak_slots,
+                "pat(a={a}) rs n={n}: traced pool high water {sampled} exceeds verifier \
+                 occupancy bound {}",
+                occ.peak_slots
+            );
+        }
+    }
+}

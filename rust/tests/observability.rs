@@ -1,0 +1,182 @@
+//! One observability schema from both executors (the PR's acceptance
+//! criterion): run the same 16-rank PAT all-reduce through the network
+//! simulator and the threaded transport with tracing on, export both
+//! timelines as Chrome trace-event JSON, re-parse them, and check the two
+//! documents speak the same schema — same top-level shape, same
+//! `schema_version`, identical field sets for every event kind they
+//! share — and that the two executors account for the same traffic.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use patcol::core::{Algorithm, Collective};
+use patcol::obs::{chrome_trace, ChannelTags, Trace, TraceRecorder, SCHEMA_VERSION};
+use patcol::sched;
+use patcol::sim::{self, CostModel, Topology};
+use patcol::transport::{run_allreduce, TransportOptions};
+use patcol::util::json::{self, Json};
+use patcol::util::Rng;
+
+const N: usize = 16;
+const PER: usize = 32; // f32 elems per chunk
+
+fn program() -> sched::Program {
+    // Lifts to the fused pat+pat:1 composition — reduce-scatter phase then
+    // all-gather phase through one program.
+    sched::generate(
+        Algorithm::Pat { aggregation: usize::MAX },
+        Collective::AllReduce,
+        N,
+    )
+    .unwrap()
+}
+
+fn tags() -> ChannelTags {
+    let alg = Algorithm::Pat { aggregation: usize::MAX };
+    let rsp = sched::generate(alg, Collective::ReduceScatter, N).unwrap();
+    let agp = sched::generate(alg, Collective::AllGather, N).unwrap();
+    ChannelTags::composed(sched::compose::Layout::of(&rsp, &agp, 1))
+}
+
+fn sim_trace(p: &sched::Program) -> Trace {
+    let topo = Topology::flat(N, CostModel::ib_hdr_nic_bw());
+    let mut rec = TraceRecorder::new();
+    sim::simulate_observed(p, &topo, &CostModel::ib_hdr(), PER * 4, &mut rec).unwrap();
+    rec.finish()
+}
+
+fn transport_trace(p: &sched::Program) -> Trace {
+    let total = p.chunk_space() * PER;
+    let mut rng = Rng::new(11);
+    let inputs: Vec<Vec<f32>> = (0..N)
+        .map(|_| {
+            let mut v = vec![0f32; total];
+            rng.fill_f32(&mut v);
+            v
+        })
+        .collect();
+    let opts = TransportOptions { trace: true, ..Default::default() };
+    let (_, rep) = run_allreduce(p, &inputs, &opts).unwrap();
+    rep.trace.expect("trace requested")
+}
+
+/// Export → pretty text → re-parse, i.e. exactly what a consumer reads.
+fn exported(trace: &Trace) -> Json {
+    json::parse(&chrome_trace(trace, &tags()).to_pretty()).unwrap()
+}
+
+/// Event schema of a Chrome trace document: for each `(ph, name)` kind,
+/// the set of field keys it carries (args flattened as `args.*`).
+/// Metadata (`ph == "M"`) records name processes/threads, not timeline
+/// events, and are not part of the event schema.
+fn schema_of(doc: &Json) -> BTreeMap<String, BTreeSet<String>> {
+    let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut schema: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for e in evs {
+        let obj = e.as_obj().unwrap();
+        let ph = obj.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            continue;
+        }
+        let name = obj.get("name").unwrap().as_str().unwrap();
+        let keys = schema.entry(format!("{ph}:{name}")).or_default();
+        for (k, v) in obj {
+            if k == "args" {
+                for ak in v.as_obj().unwrap().keys() {
+                    keys.insert(format!("args.{ak}"));
+                }
+            } else {
+                keys.insert(k.clone());
+            }
+        }
+    }
+    schema
+}
+
+#[test]
+fn both_executors_emit_one_schema() {
+    let p = program();
+    let st = sim_trace(&p);
+    let tt = transport_trace(&p);
+
+    let sim_doc = exported(&st);
+    let tp_doc = exported(&tt);
+
+    // Top-level shape + stamped schema version, both documents.
+    for doc in [&sim_doc, &tp_doc] {
+        assert_eq!(
+            doc.get("otherData")
+                .and_then(|o| o.get("schema_version"))
+                .and_then(|v| v.as_usize()),
+            Some(SCHEMA_VERSION as usize)
+        );
+        assert!(doc.get("displayTimeUnit").is_some());
+        assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    let ss = schema_of(&sim_doc);
+    let ts = schema_of(&tp_doc);
+
+    // The core timeline kinds come out of both executors.
+    for kind in ["X:send", "X:recv", "X:wire", "X:reduce"] {
+        assert!(ss.contains_key(kind), "sim missing {kind}: {:?}", ss.keys());
+        assert!(ts.contains_key(kind), "transport missing {kind}: {:?}", ts.keys());
+    }
+    // Pool occupancy is transport-only (the simulator has no buffer pool).
+    assert!(ts.contains_key("C:pool live slots"));
+    assert!(!ss.contains_key("C:pool live slots"));
+
+    // Every kind both executors emit carries identical field sets — the
+    // "identical schema" acceptance criterion.
+    for (kind, sim_keys) in &ss {
+        if let Some(tp_keys) = ts.get(kind) {
+            assert_eq!(
+                sim_keys, tp_keys,
+                "field sets diverge for event kind {kind}"
+            );
+        }
+    }
+
+    // Same program on both executors ⇒ the counters must account for the
+    // same traffic, message for message and byte for byte.
+    let (s_tot, t_tot) = (st.totals(), tt.totals());
+    assert_eq!(s_tot.msgs_sent, t_tot.msgs_sent);
+    assert_eq!(s_tot.msgs_recv, t_tot.msgs_recv);
+    assert_eq!(s_tot.bytes_sent, t_tot.bytes_sent);
+    assert_eq!(s_tot.bytes_recv, t_tot.bytes_recv);
+    assert!(s_tot.reduce_calls > 0 && t_tot.reduce_calls > 0);
+}
+
+#[test]
+fn spans_are_well_formed_and_grouped() {
+    let p = program();
+    for trace in [sim_trace(&p), transport_trace(&p)] {
+        let doc = exported(&trace);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut process_names = 0usize;
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            match ph {
+                "M" => {
+                    if e.get("name").unwrap().as_str() == Some("process_name") {
+                        process_names += 1;
+                    }
+                }
+                "X" => {
+                    // Perfetto needs pid/tid/ts/dur; durations are
+                    // non-negative microseconds.
+                    let pid = e.get("pid").unwrap().as_usize().unwrap();
+                    assert!(pid < N);
+                    assert!(e.get("tid").unwrap().as_usize().is_some());
+                    assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+                    assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                }
+                "C" => {
+                    assert!(e.get("args").unwrap().get("live").is_some());
+                }
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+        // One process-name record per rank: the rank → channel grouping.
+        assert_eq!(process_names, N);
+    }
+}
