@@ -5,13 +5,22 @@
 //! * the scalar reduction kernel's memory bandwidth,
 //! * end-to-end all-gather / reduce-scatter wall time and effective
 //!   algorithm bandwidth across sizes on 8 threaded ranks,
-//! * allocation pressure (pool slots allocated per op).
+//! * allocation pressure (pool slots allocated per op),
+//! * the reduction-service request ABI: the pre-arena owned round trip
+//!   (clone both operands in, copy the reply back) vs the slice-descriptor
+//!   path, across shard counts — the regression gate `--smoke` asserts a
+//!   ≥ 2× floor on,
+//! * the arena send path (2-rank all-gather, one wire descriptor), and
+//! * the zero-allocation steady state on a warm arena cache.
 
 use patcol::bench::{bench, black_box, BenchOpts};
 use patcol::report::Report;
+use patcol::runtime::PjrtService;
 use patcol::sched::{pat, ring};
 use patcol::transport::datapath::scalar_add;
-use patcol::transport::{run_allgather, run_allgather_into, run_reduce_scatter, TransportOptions};
+use patcol::transport::{
+    run_allgather, run_allgather_into, run_reduce_scatter, ArenaCache, TransportOptions,
+};
 use patcol::util::json::Json;
 use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
 use patcol::util::Rng;
@@ -192,6 +201,162 @@ fn main() {
             ("wall_on_s", Json::num(on.per_iter())),
             ("ratio", Json::num(ratio)),
         ]));
+    }
+
+    // --- reduction-service ABI: owned round trip vs slice descriptors ----
+    // The scalar-backend service exercises the exact same request routing,
+    // thread hops, and reply plumbing as the PJRT backend, so the ABI
+    // delta measured here is the datapath's, not the kernel's. The owned
+    // baseline replays the pre-arena hot path: clone both operands into
+    // the request, receive an owned reply, copy it back into the
+    // accumulator (~3 extra passes over each operand). The slice path
+    // sends pointer+len descriptors and reduces in place.
+    println!("\nreduction-service ABI (1 MiB operands, scalar-backend shards):");
+    let (owned_gbps, slice2_gbps) = {
+        let elems = (1usize << 20) / 4;
+        let mut rng = Rng::new(5);
+        let mut acc = vec![0f32; elems];
+        rng.fill_f32(&mut acc);
+        let mut x = vec![0f32; elems];
+        rng.fill_f32(&mut x);
+        // 2 operand reads + 1 accumulator write per logical reduce
+        let bytes = 3.0 * (elems * 4) as f64;
+
+        let owned = {
+            let (_svc, h) = PjrtService::spawn_scalar(1).unwrap();
+            let m = bench("reduce owned abi, 1 shard", &opts, || {
+                let a = black_box(&acc).to_vec();
+                let b = black_box(&x).to_vec();
+                let out = h.reduce_owned(a, b).unwrap();
+                acc.copy_from_slice(black_box(&out));
+            });
+            let gbps = bytes / m.per_iter() / 1e9;
+            println!("  owned @1 shard  {}  ({gbps:.2} GB/s)", m.line());
+            report.rows.push(Json::obj(vec![
+                ("kind", Json::str("reduce_path")),
+                ("abi", Json::str("owned")),
+                ("shards", Json::num(1.0)),
+                ("bytes", Json::num((elems * 4) as f64)),
+                ("wall_s", Json::num(m.per_iter())),
+                ("gbps", Json::num(gbps)),
+            ]));
+            gbps
+        };
+        let mut slice2 = 0.0f64;
+        for shards in [2usize, 4] {
+            let (_svc, h) = PjrtService::spawn_scalar(shards).unwrap();
+            let mut rank = 0usize;
+            let m = bench(&format!("reduce slice abi, {shards} shards"), &opts, || {
+                rank = rank.wrapping_add(1);
+                h.reduce_into_routed(rank, 0, black_box(&mut acc), black_box(&x))
+                    .unwrap();
+            });
+            let gbps = bytes / m.per_iter() / 1e9;
+            println!("  slice @{shards} shards {}  ({gbps:.2} GB/s)", m.line());
+            report.rows.push(Json::obj(vec![
+                ("kind", Json::str("reduce_path")),
+                ("abi", Json::str("slice")),
+                ("shards", Json::num(shards as f64)),
+                ("bytes", Json::num((elems * 4) as f64)),
+                ("wall_s", Json::num(m.per_iter())),
+                ("gbps", Json::num(gbps)),
+            ]));
+            if shards == 2 {
+                slice2 = gbps;
+            }
+        }
+        (owned, slice2)
+    };
+
+    // --- arena send path (2-rank all-gather, one wire descriptor) ---------
+    println!("\narena send path (2 ranks, single-chunk all-gather):");
+    {
+        let chunk_bytes: usize = if smoke { 1 << 20 } else { 4 << 20 };
+        let chunk = chunk_bytes / 4;
+        let mut rng = Rng::new(9);
+        let ag_in: Vec<Vec<f32>> = (0..2)
+            .map(|_| {
+                let mut v = vec![0f32; chunk];
+                rng.fill_f32(&mut v);
+                v
+            })
+            .collect();
+        let prog = ring::allgather(2);
+        let aopts = TransportOptions {
+            validate: false,
+            arena: Some(ArenaCache::new()),
+            ..Default::default()
+        };
+        let mut outputs: Vec<Vec<f32>> = vec![vec![0f32; 2 * chunk]; 2];
+        // warm the cache so the measured loop is the steady state
+        run_allgather_into(&prog, &ag_in, &mut outputs, &aopts).unwrap();
+        let m = bench(&format!("send path {}", fmt_bytes(chunk_bytes)), &opts, || {
+            run_allgather_into(
+                black_box(&prog),
+                black_box(&ag_in),
+                black_box(&mut outputs),
+                &aopts,
+            )
+            .unwrap();
+        });
+        let payload = chunk_bytes as f64; // (n-1) chunks per rank at n=2
+        let gbps = payload / m.per_iter() / 1e9;
+        println!("  {}  ({gbps:.2} GB/s)", m.line());
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("send_path")),
+            ("chunk_bytes", Json::num(chunk_bytes as f64)),
+            ("wall_s", Json::num(m.per_iter())),
+            ("gbps", Json::num(gbps)),
+        ]));
+    }
+
+    // --- zero-allocation steady state -------------------------------------
+    // One warm cache, two runs: the first populates the arena, the second
+    // must allocate nothing at all (no fresh arena, no heap-fallback pool
+    // slots) — the same invariant tests/observability.rs gates on.
+    println!("\nsteady-state allocations (pat(a=2) reduce-scatter, warm arena):");
+    let steady_allocs = {
+        let chunk = (16usize << 10) / 4;
+        let mut rng = Rng::new(13);
+        let rs_in: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0f32; n * chunk];
+                rng.fill_f32(&mut v);
+                v
+            })
+            .collect();
+        let prog = pat::reduce_scatter(n, 2);
+        let aopts = TransportOptions {
+            validate: false,
+            arena: Some(ArenaCache::new()),
+            ..Default::default()
+        };
+        let (_, rep1) = run_reduce_scatter(&prog, &rs_in, &aopts).unwrap();
+        let (_, rep2) = run_reduce_scatter(&prog, &rs_in, &aopts).unwrap();
+        println!(
+            "  run 1: arenas {} pool-heap {}   run 2: arenas {} pool-heap {}",
+            rep1.arena_allocs, rep1.slots_allocated, rep2.arena_allocs, rep2.slots_allocated
+        );
+        report.rows.push(Json::obj(vec![
+            ("kind", Json::str("steady_state")),
+            ("arena_allocs_cold", Json::num(rep1.arena_allocs as f64)),
+            ("arena_allocs_warm", Json::num(rep2.arena_allocs as f64)),
+            ("pool_heap_warm", Json::num(rep2.slots_allocated as f64)),
+            ("arena_hw_bytes", Json::num(rep2.arena_hw_bytes as f64)),
+        ]));
+        rep2.arena_allocs + rep2.slots_allocated
+    };
+
+    if smoke {
+        assert!(
+            slice2_gbps >= 2.0 * owned_gbps,
+            "reduce-path floor: slice@2 {slice2_gbps:.2} GB/s < 2x owned@1 {owned_gbps:.2} GB/s"
+        );
+        assert_eq!(steady_allocs, 0, "steady state allocated on the warm path");
+        println!(
+            "\nsmoke OK: reduce path {:.1}x owned baseline, steady-state allocs 0",
+            slice2_gbps / owned_gbps.max(1e-12)
+        );
     }
 
     report.save().unwrap();

@@ -12,9 +12,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::core::{Algorithm, Collective, Error, PhaseAlg, Placement, Result};
 use crate::coordinator::tuner::Tuner;
-use crate::runtime::{PjrtService, Registry};
+use crate::runtime::{default_reduce_shards, PjrtService, Registry};
 use crate::sched::{self, program::Program};
-use crate::transport::{self, DataPath, TransportOptions, TransportReport};
+use crate::transport::{self, ArenaCache, DataPath, TransportOptions, TransportReport};
 
 /// Which reduction backend the communicator uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -36,6 +36,12 @@ pub struct CommConfig {
     /// and is enforced by the transport buffer pool).
     pub buffer_slots: Option<usize>,
     pub datapath: DataPathKind,
+    /// Shard count for the PJRT reduction service (config key
+    /// `reduce_shards`, CLI `--reduce-shards`): worker threads each owning
+    /// a PJRT client, with requests routed by `(rank, channel)` hash.
+    /// `None` auto-sizes to `min(cores, nranks)`
+    /// ([`default_reduce_shards`]). Ignored on the scalar datapath.
+    pub reduce_shards: Option<usize>,
     /// Artifact directory for the PJRT datapath (default: $PATCOL_ARTIFACTS
     /// or ./artifacts).
     pub artifacts_dir: Option<PathBuf>,
@@ -90,6 +96,7 @@ impl Default for CommConfig {
             algorithm: None,
             buffer_slots: None,
             datapath: DataPathKind::Scalar,
+            reduce_shards: None,
             artifacts_dir: None,
             validate: true,
             placement: None,
@@ -119,6 +126,10 @@ pub struct Communicator {
     _service: Option<PjrtService>,
     tuner: Tuner,
     cache: Mutex<HashMap<(Collective, String, usize), Arc<Program>>>,
+    /// Shared transport arena: every collective on this communicator
+    /// leases the same page-aligned backing allocation, so steady-state
+    /// calls run with zero datapath allocations.
+    arena: ArenaCache,
 }
 
 impl Communicator {
@@ -152,6 +163,9 @@ impl Communicator {
         if cfg.buckets == Some(0) {
             return Err(Error::Config("buckets must be >= 1".into()));
         }
+        if cfg.reduce_shards == Some(0) {
+            return Err(Error::Config("reduce_shards must be >= 1".into()));
+        }
         let (datapath, service) = match cfg.datapath {
             DataPathKind::Scalar => (DataPath::Scalar, None),
             DataPathKind::Pjrt => {
@@ -159,7 +173,10 @@ impl Communicator {
                     .artifacts_dir
                     .clone()
                     .unwrap_or_else(Registry::default_dir);
-                let (svc, handle) = PjrtService::spawn(dir)?;
+                let shards = cfg
+                    .reduce_shards
+                    .unwrap_or_else(|| default_reduce_shards(cfg.nranks));
+                let (svc, handle) = PjrtService::spawn_sharded(dir, shards)?;
                 (DataPath::Pjrt(handle), Some(svc))
             }
         };
@@ -174,6 +191,7 @@ impl Communicator {
             _service: service,
             tuner,
             cache: Mutex::new(HashMap::new()),
+            arena: ArenaCache::new(),
         })
     }
 
@@ -298,6 +316,7 @@ impl Communicator {
             // programs are verified once at cache fill, not per call
             validate: false,
             trace: self.cfg.trace,
+            arena: Some(self.arena.clone()),
             ..Default::default()
         }
     }
@@ -807,6 +826,13 @@ mod tests {
         assert!(Communicator::new(CommConfig {
             nranks: 6,
             placement: Some(crate::core::Placement::uniform(8, 4).unwrap()),
+            ..Default::default()
+        })
+        .is_err());
+        // zero reduction-service shards
+        assert!(Communicator::new(CommConfig {
+            nranks: 4,
+            reduce_shards: Some(0),
             ..Default::default()
         })
         .is_err());

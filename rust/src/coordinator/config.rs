@@ -16,6 +16,7 @@
 //! | `buckets` | gradient-bucket count: all-reduce payloads split into that many buckets fused into one pipelined program (CLI `--buckets` / `--bucket-bytes`) |
 //! | `buffer_slots` | intermediate-buffer budget in chunk slots |
 //! | `datapath` | `scalar` or `pjrt` |
+//! | `reduce_shards` | PJRT reduction-service shard count (worker threads, each owning a client); default = `min(cores, nranks)` |
 //! | `artifacts` | artifact directory |
 //! | `validate` | `true`/`false` |
 //! | `trace` | `true`/`false` — capture an observability trace ([`crate::obs`]) |
@@ -171,6 +172,12 @@ impl ConfigMap {
             cfg.buckets = Some(b);
         }
         cfg.buffer_slots = self.get_usize("buffer_slots")?;
+        if let Some(s) = self.get_usize("reduce_shards")? {
+            if s == 0 {
+                return Err(Error::Config("reduce_shards must be >= 1".into()));
+            }
+            cfg.reduce_shards = Some(s);
+        }
         match self.get("datapath") {
             Some("pjrt") => cfg.datapath = DataPathKind::Pjrt,
             Some("scalar") | None => {}
@@ -395,6 +402,21 @@ mod tests {
         let cfg = ConfigMap::parse("nranks = 8\n").unwrap().to_comm_config().unwrap();
         assert_eq!(cfg.buckets, None);
         assert!(ConfigMap::parse("nranks = 8\nbuckets = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+    }
+
+    #[test]
+    fn reduce_shards_key() {
+        let cfg = ConfigMap::parse("nranks = 8\nreduce_shards = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.reduce_shards, Some(4));
+        let cfg = ConfigMap::parse("nranks = 8\n").unwrap().to_comm_config().unwrap();
+        assert_eq!(cfg.reduce_shards, None);
+        assert!(ConfigMap::parse("nranks = 8\nreduce_shards = 0\n")
             .unwrap()
             .to_comm_config()
             .is_err());

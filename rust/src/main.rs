@@ -70,8 +70,8 @@ COMMANDS
             [--channels C] [--placement SPEC | --ranks-per-node K]
   run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--buckets B | --bucket-bytes BYTES]
-            [--datapath scalar|pjrt] [--buffer-slots S] [--trace PATH]
-            [--placement SPEC | --ranks-per-node K]
+            [--datapath scalar|pjrt] [--reduce-shards N] [--buffer-slots S]
+            [--trace PATH] [--placement SPEC | --ranks-per-node K]
   simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--topo flat|leaf_spine|three_level|dragonfly]
             [--taper F] [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
@@ -98,6 +98,9 @@ SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
   gradient buckets fused into one pipelined program (bucket i+1's RS
   overlaps bucket i's AG; one channel set per bucket, so --channels > 1
   cannot stack on top)
+--reduce-shards sizes the PJRT reduction service (worker threads, each
+  owning a client; requests route by (rank, channel) hash); default =
+  min(cores, ranks)
 --intra-gbps models NVLink-class intra-node links (with --ranks-per-node)
 --parallel-links feeds the tuner's channel-count crossover (tune)
 --trace PATH (run/simulate) writes the observability timeline as Chrome
@@ -325,12 +328,27 @@ fn cmd_run(args: &Args) -> Result<()> {
         let bb = parse_bytes(&bb)?.max(1);
         buckets = Some(size.div_ceil(bb).max(1));
     }
+    let reduce_shards = match args.opt_str("reduce-shards") {
+        None => None,
+        Some(s) => {
+            let r: usize = s.parse().map_err(|_| {
+                patcol::core::Error::Config(format!("--reduce-shards: bad integer {s:?}"))
+            })?;
+            if r == 0 {
+                return Err(patcol::core::Error::Config(
+                    "--reduce-shards must be >= 1".into(),
+                ));
+            }
+            Some(r)
+        }
+    };
     let trace_path = args.opt_str("trace");
     let comm = Communicator::new(CommConfig {
         nranks: n,
         algorithm: alg,
         buffer_slots: args.opt_str("buffer-slots").map(|s| parse_bytes(&s)).transpose()?,
         datapath,
+        reduce_shards,
         placement: placement_opt(args, n)?,
         channels,
         buckets,
@@ -550,7 +568,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     fn counters_table(title: &str, trace: &Trace, tags: &ChannelTags) {
         let mut t = Table::new([
             "rank", "ch", "tag", "tx msgs", "tx bytes", "rx msgs", "rx bytes", "stall",
-            "reduces", "pool peak",
+            "reduces", "pool peak", "arena hw", "allocs",
         ]);
         for (&(r, k), c) in &trace.counters {
             t.row([
@@ -564,6 +582,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 fmt_time_s(c.stall_seconds),
                 format!("{}", c.reduce_calls),
                 format!("{}", c.pool_peak),
+                fmt_bytes(c.arena_hw_bytes),
+                format!("{}", c.allocs),
             ]);
         }
         println!("{title} per-(rank, channel) counters:");

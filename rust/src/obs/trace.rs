@@ -16,7 +16,7 @@ use crate::core::{ChunkId, Rank};
 /// Version of the event schema (also stamped into exported Chrome
 /// traces). Bumped whenever a field is added; see the stability guarantee
 /// in [`crate::obs`].
-pub const SCHEMA_VERSION: u32 = 1;
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// What an [`Event`] describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -149,6 +149,15 @@ pub struct Counters {
     pub reduce_calls: usize,
     /// Peak buffer-pool occupancy observed while this channel was active.
     pub pool_peak: usize,
+    /// Arena high-water mark in bytes: the largest footprint (pool slots +
+    /// wire regions) this rank actually touched. Set at thread join by the
+    /// transport (schema v2); 0 for executors without an arena.
+    pub arena_hw_bytes: usize,
+    /// Heap allocations on the steady-state datapath (pool slots that
+    /// fell back to the heap). Set at thread join by the transport
+    /// (schema v2); the zero-alloc gate asserts this stays 0 on a warm
+    /// arena cache.
+    pub allocs: usize,
 }
 
 impl Counters {
@@ -183,6 +192,8 @@ impl Counters {
         self.reduce_seconds += other.reduce_seconds;
         self.reduce_calls += other.reduce_calls;
         self.pool_peak = self.pool_peak.max(other.pool_peak);
+        self.arena_hw_bytes = self.arena_hw_bytes.max(other.arena_hw_bytes);
+        self.allocs += other.allocs;
     }
 }
 

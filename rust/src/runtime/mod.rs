@@ -13,4 +13,4 @@ pub mod service;
 
 pub use artifacts::{ArtifactKind, ArtifactMeta, Registry};
 pub use client::{Executable, PjrtContext};
-pub use service::{PjrtHandle, PjrtService};
+pub use service::{default_reduce_shards, PjrtHandle, PjrtService};

@@ -1,112 +1,345 @@
-//! PJRT datapath service.
+//! PJRT datapath service, sharded.
 //!
-//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so a single
-//! dedicated service thread owns the [`Registry`] and executes reduction
-//! requests on behalf of all rank threads — the moral equivalent of kernels
-//! serializing onto one accelerator stream. Rank threads hold a cloneable
-//! [`PjrtHandle`] and block on a reply channel per call.
+//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so
+//! dedicated service threads own the [`Registry`] clients and execute
+//! reduction requests on behalf of all rank threads — the moral
+//! equivalent of kernels serializing onto accelerator streams. The
+//! service runs `shards` worker threads (one PJRT client each);
+//! requests are routed by a `(rank, channel)` hash so one rank-channel
+//! stream always lands on the same worker (preserving per-stream
+//! ordering) while distinct streams spread across shards.
 //!
-//! The perf pass can shard requests over several service threads (one
-//! client each) if the single stream becomes the bottleneck; see
-//! EXPERIMENTS.md §Perf.
+//! The request ABI is slice-based: rank threads pass `(pointer, len)`
+//! descriptors into buffers they own for the duration of the call and
+//! block on a per-thread reply channel, so a reduction moves each
+//! operand exactly once (the worker reads `x`, reads and writes `acc`)
+//! instead of the old owned-`Vec` ABI's three full copies per call
+//! (`acc.to_vec()`, `x.to_vec()`, `copy_from_slice` on reply). The
+//! owned ABI survives as [`PjrtHandle::reduce_owned`] so the bench can
+//! measure the gap.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::core::{Error, Result};
 use crate::runtime::artifacts::Registry;
 use crate::runtime::client::PjrtContext;
+use crate::transport::datapath::{scalar_add, scalar_add_into};
+
+/// A mutable slice descriptor that crosses the service channel. The
+/// caller guarantees the buffer outlives the call (it blocks on the
+/// reply before releasing the borrow).
+#[derive(Clone, Copy)]
+struct SlicePtr {
+    ptr: *mut f32,
+    len: usize,
+}
+// SAFETY: the pointed-to buffer is exclusively lent to the worker for
+// the duration of one request; the caller blocks until the reply.
+unsafe impl Send for SlicePtr {}
+
+impl SlicePtr {
+    fn of(s: &mut [f32]) -> SlicePtr {
+        SlicePtr { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    ///
+    /// Only callable while the originating borrow is still alive (the
+    /// caller is blocked on the reply channel) and from at most one
+    /// thread.
+    unsafe fn slice<'a>(self) -> &'a mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+/// Shared-slice counterpart of [`SlicePtr`].
+#[derive(Clone, Copy)]
+struct ConstSlicePtr {
+    ptr: *const f32,
+    len: usize,
+}
+// SAFETY: as for SlicePtr — lent for the duration of one request.
+unsafe impl Send for ConstSlicePtr {}
+
+impl ConstSlicePtr {
+    fn of(s: &[f32]) -> ConstSlicePtr {
+        ConstSlicePtr { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    ///
+    /// Only callable while the originating borrow is still alive (the
+    /// caller is blocked on the reply channel).
+    unsafe fn slice<'a>(self) -> &'a [f32] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
 
 enum Request {
-    /// acc += x elementwise; replies with the updated acc.
+    /// Legacy owned ABI: acc += x elementwise; replies with the updated
+    /// acc. Three copies per call — kept as the bench baseline.
     Reduce {
         acc: Vec<f32>,
         x: Vec<f32>,
         reply: Sender<Result<Vec<f32>>>,
     },
+    /// Zero-copy ABI: acc += x in place through slice descriptors.
+    ReduceInPlace {
+        acc: SlicePtr,
+        x: ConstSlicePtr,
+        reply: Sender<Result<()>>,
+    },
+    /// Zero-copy fused 3-operand form: out = a + b.
+    AddInto {
+        out: SlicePtr,
+        a: ConstSlicePtr,
+        b: ConstSlicePtr,
+        reply: Sender<Result<()>>,
+    },
     Shutdown,
 }
 
-/// Cloneable, `Send` handle to the PJRT service thread.
-#[derive(Clone)]
-pub struct PjrtHandle {
-    tx: Sender<Request>,
+/// What a worker thread reduces with.
+enum Backend {
+    /// Pure-rust lane-chunked kernel — lets the sharded slice ABI run
+    /// (and be benchmarked) without PJRT artifacts.
+    Scalar,
+    /// The AOT Pallas kernels through a per-shard PJRT client.
+    Registry(Registry),
 }
 
-impl PjrtHandle {
-    /// `acc += x` through the AOT Pallas reduce kernel.
-    pub fn reduce_into(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
-        let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Request::Reduce {
-                acc: acc.to_vec(),
-                x: x.to_vec(),
-                reply: reply_tx,
-            })
-            .map_err(|_| Error::Runtime("pjrt service is down".into()))?;
-        let out = reply_rx
-            .recv()
-            .map_err(|_| Error::Runtime("pjrt service dropped reply".into()))??;
-        acc.copy_from_slice(&out);
-        Ok(())
+impl Backend {
+    fn reduce(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        match self {
+            Backend::Scalar => {
+                scalar_add(acc, x);
+                Ok(())
+            }
+            Backend::Registry(reg) => reg.reduce_f32(acc, x),
+        }
+    }
+
+    fn add_into(&self, out: &mut [f32], a: &[f32], b: &[f32]) -> Result<()> {
+        match self {
+            Backend::Scalar => {
+                scalar_add_into(out, a, b);
+                Ok(())
+            }
+            Backend::Registry(reg) => {
+                out.copy_from_slice(a);
+                reg.reduce_f32(out, b)
+            }
+        }
     }
 }
 
-/// Owns the service thread; dropping shuts it down.
+enum BackendSpec {
+    Scalar,
+    Artifacts(PathBuf),
+}
+
+thread_local! {
+    /// Per-caller reply channel, reused across calls: the worker always
+    /// replies exactly once per request before taking the next, so the
+    /// receiver is fully drained between calls.
+    static REPLY: (Sender<Result<()>>, Receiver<Result<()>>) = channel();
+}
+
+/// Cloneable, `Send` handle to the sharded PJRT service.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    txs: Arc<Vec<Sender<Request>>>,
+}
+
+impl PjrtHandle {
+    fn shard(&self, rank: usize, channel: usize) -> &Sender<Request> {
+        &self.txs[rank.wrapping_mul(31).wrapping_add(channel) % self.txs.len()]
+    }
+
+    fn call(&self, rank: usize, channel: usize, make: impl FnOnce(Sender<Result<()>>) -> Request) -> Result<()> {
+        REPLY.with(|(tx, rx)| {
+            self.shard(rank, channel)
+                .send(make(tx.clone()))
+                .map_err(|_| Error::Runtime("pjrt service is down".into()))?;
+            rx.recv()
+                .map_err(|_| Error::Runtime("pjrt service dropped reply".into()))?
+        })
+    }
+
+    /// `acc += x` through the reduce kernel (shard 0).
+    pub fn reduce_into(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        self.reduce_into_routed(0, 0, acc, x)
+    }
+
+    /// `acc += x`, routed to the `(rank, channel)` shard. Zero-copy: the
+    /// worker operates on the caller's buffers through the slice ABI.
+    pub fn reduce_into_routed(
+        &self,
+        rank: usize,
+        channel: usize,
+        acc: &mut [f32],
+        x: &[f32],
+    ) -> Result<()> {
+        let (accp, xp) = (SlicePtr::of(acc), ConstSlicePtr::of(x));
+        self.call(rank, channel, |reply| Request::ReduceInPlace { acc: accp, x: xp, reply })
+    }
+
+    /// `out = a + b`, routed to the `(rank, channel)` shard — the fused
+    /// 3-operand form: one read of each operand, one write.
+    pub fn add_into_routed(
+        &self,
+        rank: usize,
+        channel: usize,
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<()> {
+        let (outp, ap, bp) = (SlicePtr::of(out), ConstSlicePtr::of(a), ConstSlicePtr::of(b));
+        self.call(rank, channel, |reply| Request::AddInto { out: outp, a: ap, b: bp, reply })
+    }
+
+    /// The legacy owned-`Vec` ABI (shard 0): ships both operands by
+    /// value and the result back. Three full copies per call — kept
+    /// only so `benches/transport_hotpath.rs` can measure the slice
+    /// ABI's gain against it.
+    pub fn reduce_owned(&self, acc: Vec<f32>, x: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = channel();
+        self.txs[0]
+            .send(Request::Reduce { acc, x, reply: reply_tx })
+            .map_err(|_| Error::Runtime("pjrt service is down".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt service dropped reply".into()))?
+    }
+
+    /// Number of service shards behind this handle.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+/// Owns the service threads; dropping shuts them down.
 pub struct PjrtService {
-    tx: Sender<Request>,
-    join: Option<JoinHandle<()>>,
+    txs: Vec<Sender<Request>>,
+    joins: Vec<JoinHandle<()>>,
 }
 
 impl PjrtService {
-    /// Spawn the service over the artifact directory (must contain
-    /// `manifest.json`; see `make artifacts`). Fails fast if the registry
-    /// cannot be loaded.
+    /// Spawn a single-shard service over the artifact directory (must
+    /// contain `manifest.json`; see `make artifacts`). Fails fast if the
+    /// registry cannot be loaded.
     pub fn spawn(artifact_dir: PathBuf) -> Result<(PjrtService, PjrtHandle)> {
-        let (tx, rx) = channel::<Request>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || {
-                let reg = match PjrtContext::cpu()
-                    .and_then(|ctx| Registry::load(ctx, &artifact_dir))
-                {
-                    Ok(r) => {
-                        let _ = ready_tx.send(Ok(()));
-                        r
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Reduce { mut acc, x, reply } => {
-                            let res = reg.reduce_f32(&mut acc, &x).map(|()| acc);
-                            let _ = reply.send(res);
+        Self::spawn_sharded(artifact_dir, 1)
+    }
+
+    /// Spawn `shards` service threads, each owning its own PJRT client
+    /// over the artifact directory.
+    pub fn spawn_sharded(artifact_dir: PathBuf, shards: usize) -> Result<(PjrtService, PjrtHandle)> {
+        Self::spawn_workers(BackendSpec::Artifacts(artifact_dir), shards)
+    }
+
+    /// Spawn `shards` service threads over the pure-rust scalar backend
+    /// — the sharded slice ABI without PJRT artifacts (bench/CI path).
+    pub fn spawn_scalar(shards: usize) -> Result<(PjrtService, PjrtHandle)> {
+        Self::spawn_workers(BackendSpec::Scalar, shards)
+    }
+
+    fn spawn_workers(spec: BackendSpec, shards: usize) -> Result<(PjrtService, PjrtHandle)> {
+        let shards = shards.max(1);
+        let mut txs = Vec::with_capacity(shards);
+        let mut joins = Vec::with_capacity(shards);
+        let mut readies = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let (tx, rx) = channel::<Request>();
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let dir = match &spec {
+                BackendSpec::Scalar => None,
+                BackendSpec::Artifacts(d) => Some(d.clone()),
+            };
+            let join = std::thread::Builder::new()
+                .name(format!("pjrt-service-{i}"))
+                .spawn(move || {
+                    let backend = match dir {
+                        None => {
+                            let _ = ready_tx.send(Ok(()));
+                            Backend::Scalar
                         }
-                        Request::Shutdown => break,
+                        Some(dir) => match PjrtContext::cpu()
+                            .and_then(|ctx| Registry::load(ctx, &dir))
+                        {
+                            Ok(r) => {
+                                let _ = ready_tx.send(Ok(()));
+                                Backend::Registry(r)
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        },
+                    };
+                    while let Ok(req) = rx.recv() {
+                        match req {
+                            Request::Reduce { mut acc, x, reply } => {
+                                let res = backend.reduce(&mut acc, &x).map(|()| acc);
+                                let _ = reply.send(res);
+                            }
+                            Request::ReduceInPlace { acc, x, reply } => {
+                                // SAFETY: the caller blocks on `reply`
+                                // with both borrows alive until we send.
+                                let res = unsafe { backend.reduce(acc.slice(), x.slice()) };
+                                let _ = reply.send(res);
+                            }
+                            Request::AddInto { out, a, b, reply } => {
+                                // SAFETY: as above — exclusive lease
+                                // until the reply is sent.
+                                let res =
+                                    unsafe { backend.add_into(out.slice(), a.slice(), b.slice()) };
+                                let _ = reply.send(res);
+                            }
+                            Request::Shutdown => break,
+                        }
                     }
-                }
-            })
-            .map_err(|e| Error::Runtime(format!("spawn pjrt service: {e}")))?;
-        ready_rx
-            .recv()
-            .map_err(|_| Error::Runtime("pjrt service died during startup".into()))??;
-        let handle = PjrtHandle { tx: tx.clone() };
-        Ok((PjrtService { tx, join: Some(join) }, handle))
+                })
+                .map_err(|e| Error::Runtime(format!("spawn pjrt service: {e}")))?;
+            joins.push(join);
+            txs.push(tx);
+            readies.push(ready_rx);
+        }
+        // Wait for every worker to come up (or fail fast on the first
+        // startup error — remaining workers are shut down by Drop of the
+        // partially-built service's channels going out of scope).
+        for ready_rx in readies {
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Runtime("pjrt service died during startup".into()))??;
+        }
+        let service = PjrtService { txs: txs.clone(), joins };
+        let handle = PjrtHandle { txs: Arc::new(txs) };
+        Ok((service, handle))
     }
 }
 
 impl Drop for PjrtService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
+        for tx in &self.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
+}
+
+/// Default reduction-shard count: `min(cores, ranks)`, at least one.
+pub fn default_reduce_shards(nranks: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(nranks.max(1))
+        .max(1)
 }
 
 #[cfg(test)]
@@ -125,16 +358,48 @@ mod tests {
             "{msg}"
         );
     }
+
+    /// The sharded scalar backend serves all three request forms, and
+    /// routing spreads streams without breaking results.
+    #[test]
+    fn scalar_shards_reduce_and_add() {
+        let (_svc, h) = PjrtService::spawn_scalar(3).unwrap();
+        assert_eq!(h.shards(), 3);
+        let mut acc = vec![1.0f32; 64];
+        h.reduce_into_routed(2, 1, &mut acc, &[4.0; 64]).unwrap();
+        assert!(acc.iter().all(|&v| v == 5.0));
+        let mut out = vec![0.0f32; 33];
+        h.add_into_routed(5, 0, &mut out, &[2.0; 33], &[3.0; 33]).unwrap();
+        assert!(out.iter().all(|&v| v == 5.0));
+        // the legacy owned ABI still answers (bench baseline)
+        let res = h.reduce_owned(vec![1.0; 16], vec![2.0; 16]).unwrap();
+        assert!(res.iter().all(|&v| v == 3.0));
+        // many routed calls across shards stay correct
+        for r in 0..16usize {
+            let mut a = vec![r as f32; 8];
+            h.reduce_into_routed(r, r % 4, &mut a, &[1.0; 8]).unwrap();
+            assert!(a.iter().all(|&v| v == r as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn default_shards_bounded_by_ranks() {
+        assert_eq!(default_reduce_shards(1), 1);
+        assert!(default_reduce_shards(64) >= 1);
+        assert!(default_reduce_shards(2) <= 2);
+        // nranks = 0 still yields a valid shard count
+        assert_eq!(default_reduce_shards(0), 1);
+    }
 }
 
 impl std::fmt::Debug for PjrtHandle {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str("PjrtHandle")
+        write!(f, "PjrtHandle({} shards)", self.txs.len())
     }
 }
 
 impl std::fmt::Debug for PjrtService {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str("PjrtService")
+        write!(f, "PjrtService({} shards)", self.txs.len())
     }
 }

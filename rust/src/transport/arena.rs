@@ -1,0 +1,264 @@
+//! The transport arena: one contiguous, page-aligned allocation per
+//! communicator backing the whole datapath — wire messages, staging
+//! slots, and accumulators — so the steady-state hot path performs
+//! **zero** heap allocations per operation.
+//!
+//! Layout (computed per run by the engine, see
+//! [`crate::transport::engine`]): the accumulator/staging slot grid
+//! comes first (one region of `slots × slot_elems` per rank), followed
+//! by one single-use wire region per `Send` op. Because every wire
+//! region is dedicated to exactly one message, send/recv exchange plain
+//! `(offset, len)` descriptors over the mpsc channels and the receiver
+//! reads the payload directly out of the arena — no owned `Vec<f32>`
+//! ever crosses a wire, and no recycling protocol can starve (the
+//! pitfall that sank an earlier buffer-stealing variant).
+//!
+//! Safety model: the engine hands out **disjoint** `(offset, len)`
+//! regions — slot leases and wire regions never overlap — and the mpsc
+//! `send`/`recv` pair provides the happens-before edge between the
+//! writer finishing a wire region and the reader first touching it.
+//! [`ArenaCache`] guards the one remaining aliasing hazard (two
+//! concurrent runs on one communicator) with a busy flag: the second
+//! run gets a private arena instead of a shared one.
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::ptr::NonNull;
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Error, Result};
+
+/// Arena alignment in bytes — one page, so the grid starts
+/// cache-line- and page-aligned regardless of allocator behavior.
+pub const ARENA_ALIGN: usize = 4096;
+
+/// A fixed-size, page-aligned `f32` arena. Regions are addressed by
+/// `(offset, len)` descriptors; disjointness of live regions is the
+/// engine's responsibility (see the module docs for the safety model).
+#[derive(Debug)]
+pub struct Arena {
+    ptr: NonNull<f32>,
+    elems: usize,
+}
+
+// SAFETY: the engine only hands out disjoint (offset, len) regions to
+// different threads, and cross-thread handoff of a region always rides
+// an mpsc send/recv pair, which provides the necessary happens-before
+// edge. The arena itself is plain memory with no interior state.
+unsafe impl Send for Arena {}
+unsafe impl Sync for Arena {}
+
+impl Arena {
+    /// Allocate a zeroed arena of `elems` f32 slots. A zero-element
+    /// arena allocates nothing (all valid descriptors are `(0, 0)`).
+    pub fn new(elems: usize) -> Result<Arena> {
+        if elems == 0 {
+            return Ok(Arena { ptr: NonNull::dangling(), elems: 0 });
+        }
+        let layout = Layout::from_size_align(elems * 4, ARENA_ALIGN)
+            .map_err(|e| Error::Transport(format!("arena layout: {e}")))?;
+        // SAFETY: layout has non-zero size (elems > 0).
+        let raw = unsafe { alloc_zeroed(layout) };
+        let ptr = NonNull::new(raw as *mut f32).ok_or_else(|| {
+            Error::Transport(format!("arena allocation of {} bytes failed", elems * 4))
+        })?;
+        Ok(Arena { ptr, elems })
+    }
+
+    /// Number of f32 slots.
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Preallocated footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.elems * 4
+    }
+
+    /// Read a region.
+    ///
+    /// # Safety
+    ///
+    /// `off + len <= elems()`, and no live `&mut` region may overlap
+    /// `(off, len)`. The engine guarantees both by handing out disjoint
+    /// descriptors (module docs).
+    pub unsafe fn slice(&self, off: usize, len: usize) -> &[f32] {
+        debug_assert!(off + len <= self.elems, "arena read {off}+{len} > {}", self.elems);
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr().add(off), len) }
+    }
+
+    /// Mutably borrow a region.
+    ///
+    /// # Safety
+    ///
+    /// `off + len <= elems()`, and `(off, len)` must not overlap any
+    /// other live region (shared or mutable). The engine guarantees
+    /// this by handing out disjoint descriptors (module docs).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, off: usize, len: usize) -> &mut [f32] {
+        debug_assert!(off + len <= self.elems, "arena write {off}+{len} > {}", self.elems);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr().add(off), len) }
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        if self.elems > 0 {
+            // SAFETY: allocated in `new` with this exact layout.
+            unsafe {
+                let layout = Layout::from_size_align_unchecked(self.elems * 4, ARENA_ALIGN);
+                dealloc(self.ptr.as_ptr() as *mut u8, layout);
+            }
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    arena: Option<Arc<Arena>>,
+    /// A run currently holds a lease on the cached arena. While set,
+    /// `checkout` builds private arenas so two concurrent runs on one
+    /// communicator can never alias the shared grid.
+    busy: bool,
+}
+
+/// Per-communicator arena cache: the first run allocates, steady-state
+/// runs of the same (or smaller) footprint reuse the allocation with
+/// zero heap traffic. Clone shares the cache.
+#[derive(Clone, Debug, Default)]
+pub struct ArenaCache {
+    inner: Arc<Mutex<CacheInner>>,
+}
+
+impl ArenaCache {
+    pub fn new() -> ArenaCache {
+        ArenaCache::default()
+    }
+
+    /// Lease an arena of at least `min_elems` slots. Reuses the cached
+    /// arena when it is big enough and not already leased; otherwise
+    /// allocates (publishing the new arena unless the cache is busy).
+    /// `ArenaLease::fresh` says whether this checkout allocated.
+    pub fn checkout(&self, min_elems: usize) -> Result<ArenaLease> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.busy {
+            // A concurrent run holds the cached arena; do not alias it.
+            return ArenaLease::private(Arena::new(min_elems)?);
+        }
+        if let Some(a) = &inner.arena {
+            if a.elems() >= min_elems {
+                inner.busy = true;
+                return Ok(ArenaLease {
+                    arena: a.clone(),
+                    fresh: false,
+                    cache: Some(self.inner.clone()),
+                });
+            }
+        }
+        let arena = Arc::new(Arena::new(min_elems)?);
+        inner.arena = Some(arena.clone());
+        inner.busy = true;
+        Ok(ArenaLease { arena, fresh: true, cache: Some(self.inner.clone()) })
+    }
+}
+
+/// An exclusive lease on an arena for the duration of one transport
+/// run. Dropping the lease returns the arena to its cache (if any).
+#[derive(Debug)]
+pub struct ArenaLease {
+    arena: Arc<Arena>,
+    fresh: bool,
+    cache: Option<Arc<Mutex<CacheInner>>>,
+}
+
+impl ArenaLease {
+    /// A lease over a one-shot private arena (no cache behind it).
+    pub fn private(arena: Arena) -> Result<ArenaLease> {
+        Ok(ArenaLease { arena: Arc::new(arena), fresh: true, cache: None })
+    }
+
+    pub fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    /// Did this checkout allocate (true), or reuse a cached arena
+    /// (false)? Steady state on a warm cache is `false`.
+    pub fn fresh(&self) -> bool {
+        self.fresh
+    }
+}
+
+impl Drop for ArenaLease {
+    fn drop(&mut self) {
+        if let Some(cache) = &self.cache {
+            cache.lock().unwrap().busy = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_zeroed_and_addressable() {
+        let a = Arena::new(1024).unwrap();
+        assert_eq!(a.elems(), 1024);
+        assert_eq!(a.bytes(), 4096);
+        // SAFETY: disjoint regions within bounds.
+        unsafe {
+            assert!(a.slice(0, 1024).iter().all(|&v| v == 0.0));
+            a.slice_mut(10, 4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+            assert_eq!(a.slice(10, 4), &[1.0, 2.0, 3.0, 4.0]);
+            assert_eq!(a.slice(14, 1), &[0.0]);
+        }
+        // page alignment
+        assert_eq!(unsafe { a.slice(0, 0) }.as_ptr() as usize % ARENA_ALIGN, 0);
+    }
+
+    #[test]
+    fn zero_size_arena_is_valid() {
+        let a = Arena::new(0).unwrap();
+        assert_eq!(a.elems(), 0);
+        assert_eq!(unsafe { a.slice(0, 0) }.len(), 0);
+    }
+
+    #[test]
+    fn cache_reuses_when_big_enough() {
+        let cache = ArenaCache::new();
+        let first = cache.checkout(100).unwrap();
+        assert!(first.fresh());
+        let ptr = Arc::as_ptr(first.arena());
+        drop(first);
+        // same footprint: reused, no allocation
+        let second = cache.checkout(100).unwrap();
+        assert!(!second.fresh());
+        assert_eq!(Arc::as_ptr(second.arena()), ptr);
+        drop(second);
+        // smaller footprint: still reused
+        let third = cache.checkout(10).unwrap();
+        assert!(!third.fresh());
+        // bigger footprint: reallocated and republished
+        drop(third);
+        let fourth = cache.checkout(1000).unwrap();
+        assert!(fourth.fresh());
+        assert!(fourth.arena().elems() >= 1000);
+        drop(fourth);
+        let fifth = cache.checkout(1000).unwrap();
+        assert!(!fifth.fresh());
+    }
+
+    #[test]
+    fn concurrent_checkout_never_aliases() {
+        let cache = ArenaCache::new();
+        let first = cache.checkout(64).unwrap();
+        // second concurrent lease must not share the busy arena
+        let second = cache.checkout(64).unwrap();
+        assert!(second.fresh());
+        assert_ne!(Arc::as_ptr(first.arena()), Arc::as_ptr(second.arena()));
+        drop(first);
+        drop(second);
+        // cache recovered: the published arena is leasable again
+        let third = cache.checkout(64).unwrap();
+        assert!(!third.fresh());
+    }
+}

@@ -1,4 +1,5 @@
-//! Bounded intermediate-buffer pool with occupancy accounting.
+//! Bounded intermediate-buffer pool with occupancy accounting, carved
+//! from the transport [`Arena`](crate::transport::arena::Arena).
 //!
 //! PAT exists because intermediate buffers are scarce: NCCL pre-maps a
 //! fixed-size staging region per peer, and the aggregation factor is
@@ -6,28 +7,127 @@
 //! (one chunk each), fails fast if a schedule exceeds its capacity, and
 //! records the high-water mark — the quantity the paper claims stays
 //! logarithmic in rank count and independent of operation size.
+//!
+//! ## Offset math
+//!
+//! The arena holds two kinds of regions, both addressed by `(offset,
+//! len)` descriptors; the engine computes the layout once per run.
+//!
+//! **Equal chunk grids** (primitive, composed, and channel-split
+//! programs): the striped payload places chunk `c` of a `nchunks`-chunk
+//! space at element offset
+//!
+//! ```text
+//! off(c) = (c mod n) · L  +  (c div n) · sub        (within a payload)
+//! ```
+//!
+//! where `n` is the rank count, `L = payload / n` the per-slot length,
+//! and `sub = L / stripes` the per-stripe sublength — i.e. stripe `k`
+//! of rank slot `r` for chunk `c = k·n + r`. This is the same layout
+//! every program shape shares because ownership is `c mod n`
+//! everywhere.
+//!
+//! **Sized chunk grids** (bucketed programs, where bucket payloads
+//! differ): chunk `c` lives at the prefix sum of the per-chunk element
+//! grid, `off(c) = Σ_{i<c} elems[i]`, and slots are sized
+//! `max(elems)`.
+//!
+//! **Pool slots**: a pool backed by an arena region at base `B` with
+//! `S` slots of `slot_elems` elements each places slot `i` at
+//! `B + i · slot_elems`. Slot storage is reused through a free list of
+//! offsets — acquire/release moves descriptors, never bytes — so the
+//! steady-state path performs zero heap allocations; if a run
+//! legitimately needs more live slots than the arena region holds
+//! (unbounded pools measuring occupancy), the pool falls back to heap
+//! vectors and counts each one in [`BufferPool::total_allocated`].
+
+use std::sync::Arc;
 
 use crate::core::{Error, Rank, Result};
 use crate::obs::FlightRecorder;
+use crate::transport::arena::Arena;
+
+/// One staging/accumulator slot: an arena region descriptor, or a heap
+/// vector when the arena region is exhausted. Carries its own `Arc` to
+/// the arena so access never borrows the pool.
+#[derive(Debug)]
+pub enum Slot {
+    Arena { arena: Arc<Arena>, off: usize, len: usize },
+    Heap(Vec<f32>),
+}
+
+impl Slot {
+    /// Mutable view of the slot's storage.
+    pub fn data(&mut self) -> &mut [f32] {
+        match self {
+            // SAFETY: the pool hands out disjoint arena regions and the
+            // slot holds exclusive access until released (module docs).
+            Slot::Arena { arena, off, len } => unsafe { arena.slice_mut(*off, *len) },
+            Slot::Heap(v) => v,
+        }
+    }
+
+    /// Shared view of the slot's storage.
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            // SAFETY: as in `data` — the region is exclusively leased.
+            Slot::Arena { arena, off, len } => unsafe { arena.slice(*off, *len) },
+            Slot::Heap(v) => v,
+        }
+    }
+}
 
 /// A pool of `capacity` chunk-sized slots (`None` = unbounded, measuring
-/// only).
+/// only), backed by an arena region when one is configured.
 #[derive(Debug)]
 pub struct BufferPool {
     slot_elems: usize,
     capacity: Option<usize>,
-    free: Vec<Vec<f32>>,
+    /// Arena backing: `(arena, base_offset, slot_count)`.
+    storage: Option<(Arc<Arena>, usize, usize)>,
+    /// Next never-carved arena slot index.
+    next: usize,
+    /// Released arena slot offsets, ready for reuse.
+    free_offs: Vec<usize>,
+    /// Released heap slots, ready for reuse.
+    free_heap: Vec<Vec<f32>>,
     live: usize,
     peak: usize,
     allocated: usize,
 }
 
 impl BufferPool {
+    /// Heap-only pool (no arena region).
     pub fn new(slot_elems: usize, capacity: Option<usize>) -> BufferPool {
         BufferPool {
             slot_elems,
             capacity,
-            free: Vec::new(),
+            storage: None,
+            next: 0,
+            free_offs: Vec::new(),
+            free_heap: Vec::new(),
+            live: 0,
+            peak: 0,
+            allocated: 0,
+        }
+    }
+
+    /// Pool over the arena region `[base, base + slots · slot_elems)`.
+    pub fn with_arena(
+        slot_elems: usize,
+        capacity: Option<usize>,
+        arena: Arc<Arena>,
+        base: usize,
+        slots: usize,
+    ) -> BufferPool {
+        debug_assert!(base + slots * slot_elems <= arena.elems());
+        BufferPool {
+            slot_elems,
+            capacity,
+            storage: Some((arena, base, slots)),
+            next: 0,
+            free_offs: Vec::new(),
+            free_heap: Vec::new(),
             live: 0,
             peak: 0,
             allocated: 0,
@@ -37,7 +137,7 @@ impl BufferPool {
     /// Acquire a zeroed slot. Errors if the configured capacity would be
     /// exceeded — a PAT schedule that violates its own aggregation bound is
     /// a bug, not a condition to absorb.
-    pub fn acquire(&mut self) -> Result<Vec<f32>> {
+    pub fn acquire(&mut self) -> Result<Slot> {
         if let Some(cap) = self.capacity {
             if self.live >= cap {
                 return Err(Error::Transport(format!(
@@ -48,23 +148,48 @@ impl BufferPool {
         }
         self.live += 1;
         self.peak = self.peak.max(self.live);
-        match self.free.pop() {
+        if let Some((arena, base, slots)) = &self.storage {
+            let off = match self.free_offs.pop() {
+                Some(off) => Some(off),
+                None if self.next < *slots => {
+                    let off = *base + self.next * self.slot_elems;
+                    self.next += 1;
+                    Some(off)
+                }
+                None => None,
+            };
+            if let Some(off) = off {
+                let mut slot =
+                    Slot::Arena { arena: arena.clone(), off, len: self.slot_elems };
+                slot.data().fill(0.0);
+                return Ok(slot);
+            }
+        }
+        match self.free_heap.pop() {
             Some(mut v) => {
                 v.fill(0.0);
-                Ok(v)
+                Ok(Slot::Heap(v))
             }
             None => {
                 self.allocated += 1;
-                Ok(vec![0.0; self.slot_elems])
+                Ok(Slot::Heap(vec![0.0; self.slot_elems]))
             }
         }
     }
 
     /// Return a slot to the pool.
-    pub fn release(&mut self, slot: Vec<f32>) {
-        debug_assert_eq!(slot.len(), self.slot_elems);
+    pub fn release(&mut self, slot: Slot) {
         self.live -= 1;
-        self.free.push(slot);
+        match slot {
+            Slot::Arena { off, len, .. } => {
+                debug_assert_eq!(len, self.slot_elems);
+                self.free_offs.push(off);
+            }
+            Slot::Heap(v) => {
+                debug_assert_eq!(v.len(), self.slot_elems);
+                self.free_heap.push(v);
+            }
+        }
     }
 
     /// Current live slots.
@@ -77,8 +202,9 @@ impl BufferPool {
         self.peak
     }
 
-    /// Distinct vectors ever allocated (allocation pressure metric for the
-    /// perf pass — steady-state should reuse, not allocate).
+    /// Heap vectors ever allocated — the allocation-pressure metric the
+    /// perf pass gates on. Zero on the steady-state arena path; nonzero
+    /// only when the pool outgrew its arena region (or has none).
     pub fn total_allocated(&self) -> usize {
         self.allocated
     }
@@ -120,7 +246,7 @@ impl BufferPool {
         rank: Rank,
         channel: usize,
         step: usize,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<Slot> {
         let slot = self.acquire()?;
         fr.pool(rank, channel, step, self.live);
         Ok(slot)
@@ -129,7 +255,7 @@ impl BufferPool {
     /// [`BufferPool::release`] + occupancy sample.
     pub fn release_traced(
         &mut self,
-        slot: Vec<f32>,
+        slot: Slot,
         fr: &mut FlightRecorder,
         rank: Rank,
         channel: usize,
@@ -192,10 +318,10 @@ mod tests {
     fn acquired_slots_are_zeroed() {
         let mut p = BufferPool::new(4, None);
         let mut a = p.acquire().unwrap();
-        a.fill(7.0);
+        a.data().fill(7.0);
         p.release(a);
         let b = p.acquire().unwrap();
-        assert!(b.iter().all(|&x| x == 0.0));
+        assert!(b.as_slice().iter().all(|&x| x == 0.0));
         p.release(b);
     }
 
@@ -204,6 +330,58 @@ mod tests {
         let mut p = BufferPool::new(1, None);
         let slots: Vec<_> = (0..100).map(|_| p.acquire().unwrap()).collect();
         assert_eq!(p.peak(), 100);
+        for s in slots {
+            p.release(s);
+        }
+    }
+
+    #[test]
+    fn arena_backed_pool_is_allocation_free() {
+        let arena = Arc::new(Arena::new(64).unwrap());
+        // region [16, 16 + 3·8): 3 slots of 8 elems
+        let mut p = BufferPool::with_arena(8, Some(4), arena.clone(), 16, 3);
+        let mut a = p.acquire().unwrap();
+        a.data().fill(5.0);
+        let b = p.acquire().unwrap();
+        let c = p.acquire().unwrap();
+        assert!(matches!(a, Slot::Arena { .. }));
+        assert!(matches!(c, Slot::Arena { .. }));
+        // the 4th live slot exceeds the 3-slot region: heap fallback
+        let d = p.acquire().unwrap();
+        assert!(matches!(d, Slot::Heap(_)));
+        assert_eq!(p.total_allocated(), 1);
+        assert_eq!(p.peak(), 4);
+        p.release(a);
+        // reused arena slot comes back zeroed
+        let e = p.acquire().unwrap();
+        assert!(matches!(e, Slot::Arena { .. }));
+        assert!(e.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(p.total_allocated(), 1);
+        p.release(b);
+        p.release(c);
+        p.release(d);
+        p.release(e);
+        assert_eq!(p.live(), 0);
+    }
+
+    #[test]
+    fn arena_slots_are_disjoint() {
+        let arena = Arc::new(Arena::new(32).unwrap());
+        let mut p = BufferPool::with_arena(4, None, arena, 0, 8);
+        let mut offs = Vec::new();
+        let slots: Vec<_> = (0..8).map(|_| p.acquire().unwrap()).collect();
+        for s in &slots {
+            match s {
+                Slot::Arena { off, len, .. } => {
+                    assert_eq!(*len, 4);
+                    offs.push(*off);
+                }
+                Slot::Heap(_) => panic!("expected arena slots"),
+            }
+        }
+        offs.sort_unstable();
+        offs.dedup();
+        assert_eq!(offs.len(), 8, "slot offsets overlap");
         for s in slots {
             p.release(s);
         }

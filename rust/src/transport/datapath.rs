@@ -4,13 +4,15 @@
 //! compute hot-spot the paper's NCCL implementation runs as a GPU kernel.
 //! Two implementations:
 //!
-//! * [`DataPath::Scalar`] — a plain rust loop (auto-vectorized); the
-//!   baseline and fallback.
+//! * [`DataPath::Scalar`] — a lane-chunked pure-rust kernel (fixed-width
+//!   inner loops LLVM vectorizes reliably); the baseline and fallback.
 //! * [`DataPath::Pjrt`] — the AOT-compiled Pallas reduce kernel executed
-//!   through the PJRT service thread ([`crate::runtime::PjrtHandle`]; the
-//!   `xla` crate's handles are not `Send`, so one thread owns the client —
-//!   the analog of kernels serializing on a device stream). Three-layer
-//!   path: Pallas (L1) → jax graph (L2) → rust runtime (L3).
+//!   through the sharded PJRT service ([`crate::runtime::PjrtHandle`];
+//!   the `xla` crate's handles are not `Send`, so dedicated threads own
+//!   the clients — the analog of kernels serializing on device streams).
+//!   Requests route by `(rank, channel)` hash and pass slice
+//!   descriptors, so the service reads each operand exactly once.
+//!   Three-layer path: Pallas (L1) → jax graph (L2) → rust runtime (L3).
 
 use crate::core::{Rank, Result};
 use crate::obs::{Event, EventKind, FlightRecorder};
@@ -21,27 +23,67 @@ use crate::runtime::PjrtHandle;
 pub enum DataPath {
     /// Pure-rust elementwise add.
     Scalar,
-    /// AOT Pallas kernel via the PJRT service thread.
+    /// AOT Pallas kernel via the sharded PJRT service.
     Pjrt(PjrtHandle),
 }
 
 impl DataPath {
-    /// `acc[i] += x[i]` for all i.
+    /// `acc[i] += x[i]` for all i (shard 0 on the PJRT path).
     pub fn reduce_into(&self, acc: &mut [f32], x: &[f32]) -> Result<()> {
+        self.reduce_into_at(0, 0, acc, x)
+    }
+
+    /// `acc[i] += x[i]`, routed to the `(rank, channel)` service shard on
+    /// the PJRT path.
+    pub fn reduce_into_at(
+        &self,
+        rank: Rank,
+        channel: usize,
+        acc: &mut [f32],
+        x: &[f32],
+    ) -> Result<()> {
         debug_assert_eq!(acc.len(), x.len());
         match self {
             DataPath::Scalar => {
                 scalar_add(acc, x);
                 Ok(())
             }
-            DataPath::Pjrt(h) => h.reduce_into(acc, x),
+            DataPath::Pjrt(h) => h.reduce_into_routed(rank, channel, acc, x),
         }
     }
 
-    /// Append `a + b` to `out` (3-operand fused form for the send path:
-    /// one read of each operand, one write of the destination — versus the
-    /// reduce-into-slot-then-copy sequence's extra round trip; perf pass,
-    /// EXPERIMENTS.md §Perf).
+    /// `out[i] = a[i] + b[i]` — the 3-operand fused form over a
+    /// preallocated destination (the arena send path): one read of each
+    /// operand, one write of the destination, on both backends.
+    pub fn add_into(&self, out: &mut [f32], a: &[f32], b: &[f32]) -> Result<()> {
+        self.add_into_at(0, 0, out, a, b)
+    }
+
+    /// [`DataPath::add_into`], routed to the `(rank, channel)` service
+    /// shard on the PJRT path.
+    pub fn add_into_at(
+        &self,
+        rank: Rank,
+        channel: usize,
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<()> {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(out.len(), a.len());
+        match self {
+            DataPath::Scalar => {
+                scalar_add_into(out, a, b);
+                Ok(())
+            }
+            DataPath::Pjrt(h) => h.add_into_routed(rank, channel, out, a, b),
+        }
+    }
+
+    /// Append `a + b` to `out` (3-operand fused form for growable
+    /// destinations). On the PJRT path the suffix is resized once and the
+    /// sum runs through the sharded slice ABI — one read of each operand,
+    /// no service round trip over owned vectors.
     pub fn add_extend(&self, out: &mut Vec<f32>, a: &[f32], b: &[f32]) -> Result<()> {
         debug_assert_eq!(a.len(), b.len());
         match self {
@@ -51,14 +93,14 @@ impl DataPath {
             }
             DataPath::Pjrt(h) => {
                 let base = out.len();
-                out.extend_from_slice(a);
-                h.reduce_into(&mut out[base..], b)
+                out.resize(base + a.len(), 0.0);
+                h.add_into_routed(0, 0, &mut out[base..], a, b)
             }
         }
     }
 
-    /// [`DataPath::reduce_into`] wrapped in a reduce-kernel span when the
-    /// flight recorder is enabled (single branch + no clock reads when
+    /// [`DataPath::reduce_into_at`] wrapped in a reduce-kernel span when
+    /// the flight recorder is enabled (single branch + no clock reads when
     /// disabled — the hot path stays untouched).
     #[allow(clippy::too_many_arguments)]
     pub fn reduce_into_traced(
@@ -71,14 +113,40 @@ impl DataPath {
         step: usize,
     ) -> Result<()> {
         if !fr.enabled() {
-            return self.reduce_into(acc, x);
+            return self.reduce_into_at(rank, channel, acc, x);
         }
         let t0 = fr.now();
-        self.reduce_into(acc, x)?;
+        self.reduce_into_at(rank, channel, acc, x)?;
         let t1 = fr.now();
         fr.record(
             Event::span(EventKind::Reduce, rank, channel, step, t0, t1)
                 .with_bytes(std::mem::size_of_val(x)),
+        );
+        Ok(())
+    }
+
+    /// [`DataPath::add_into_at`] wrapped in a reduce-kernel span (see
+    /// [`DataPath::reduce_into_traced`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_into_traced(
+        &self,
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        fr: &mut FlightRecorder,
+        rank: Rank,
+        channel: usize,
+        step: usize,
+    ) -> Result<()> {
+        if !fr.enabled() {
+            return self.add_into_at(rank, channel, out, a, b);
+        }
+        let t0 = fr.now();
+        self.add_into_at(rank, channel, out, a, b)?;
+        let t1 = fr.now();
+        fr.record(
+            Event::span(EventKind::Reduce, rank, channel, step, t0, t1)
+                .with_bytes(std::mem::size_of_val(b)),
         );
         Ok(())
     }
@@ -117,11 +185,46 @@ impl DataPath {
     }
 }
 
-/// The scalar kernel, split out so benches can target it directly.
+/// Lane width of the scalar kernels. Fixed-width inner loops over
+/// `chunks_exact` give LLVM a compile-time trip count, which vectorizes
+/// reliably where a plain zip loop sometimes does not.
+const LANES: usize = 8;
+
+/// The scalar kernel, split out so benches can target it directly:
+/// `acc[i] += x[i]` over fixed-width lanes plus a scalar remainder.
 #[inline]
 pub fn scalar_add(acc: &mut [f32], x: &[f32]) {
-    for (a, b) in acc.iter_mut().zip(x.iter()) {
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut xc) {
+        for i in 0..LANES {
+            a[i] += b[i];
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
         *a += *b;
+    }
+}
+
+/// 3-operand scalar kernel: `out[i] = a[i] + b[i]` over fixed-width
+/// lanes plus a scalar remainder.
+#[inline]
+pub fn scalar_add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((o, x), y) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..LANES {
+            o[i] = x[i] + y[i];
+        }
+    }
+    for ((o, x), y) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = *x + *y;
     }
 }
 
@@ -134,6 +237,37 @@ mod tests {
         let mut acc = vec![1.0, 2.0, 3.0];
         DataPath::Scalar.reduce_into(&mut acc, &[10.0, 20.0, 30.0]).unwrap();
         assert_eq!(acc, vec![11.0, 22.0, 33.0]);
+    }
+
+    /// Lengths straddling the lane width exercise both the lane loop and
+    /// the remainder.
+    #[test]
+    fn lane_kernels_cover_remainders() {
+        for len in [0usize, 1, 7, 8, 9, 19, 64, 65] {
+            let mut acc: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let x: Vec<f32> = (0..len).map(|i| 2.0 * i as f32).collect();
+            scalar_add(&mut acc, &x);
+            for (i, &v) in acc.iter().enumerate() {
+                assert_eq!(v, 3.0 * i as f32, "len {len} idx {i}");
+            }
+            let mut out = vec![0.0f32; len];
+            scalar_add_into(&mut out, &acc, &x);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, 5.0 * i as f32, "len {len} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_into_and_extend_match() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [10.0f32, 20.0, 30.0, 40.0, 50.0];
+        let mut out = vec![0.0f32; 5];
+        DataPath::Scalar.add_into(&mut out, &a, &b).unwrap();
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0, 55.0]);
+        let mut grown = vec![7.0f32];
+        DataPath::Scalar.add_extend(&mut grown, &a, &b).unwrap();
+        assert_eq!(grown, vec![7.0, 11.0, 22.0, 33.0, 44.0, 55.0]);
     }
 
     #[test]

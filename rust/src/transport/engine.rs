@@ -5,22 +5,38 @@
 //! FIFO order is per (src, channel) connection — the rank thread runs a
 //! cooperative scheduler over its per-channel op streams (NCCL's
 //! per-channel proxy progress, collapsed onto one thread): each pass
-//! drives every channel as far as it can, a blocking `Recv` only stalls
-//! its own channel, and when no channel can progress the thread parks on
-//! the shared receiver with a watchdog timeout so schedule bugs fail
-//! loudly instead of hanging the suite. Single-channel programs reproduce
-//! the classic one-stream-per-rank execution exactly.
+//! first posts **every ready send across all channels in one batched
+//! sweep** (one scheduler wakeup drains the whole send frontier, the
+//! way NCCL's proxy posts all ready work per progress call), then
+//! drives each channel as far as it can; a blocking `Recv` only stalls
+//! its own channel, and when no channel can progress the thread parks
+//! on the shared receiver with a watchdog timeout so schedule bugs fail
+//! loudly instead of hanging the suite. Single-channel programs
+//! reproduce the classic one-stream-per-rank execution exactly.
 //!
-//! All-gather writes into a full receive buffer per rank; in *staged* mode
-//! (the NCCL case PAT is designed for — user buffers are not directly
-//! sendable/receivable, so every transfer goes through pre-mapped
-//! staging), each message's chunks transit bounded staging slots from the
-//! [`BufferPool`] around the send, enforcing the PAT aggregation bound:
-//! a schedule aggregating more chunks per transfer than the buffer holds
-//! fails loudly. Reduce-scatter keeps *persistent* per-chunk accumulators
-//! in pool slots — the stronger constraint the paper says the algorithm
-//! was originally designed around — and folds incoming data through the
-//! configured [`DataPath`] (scalar loop or the AOT Pallas kernel via PJRT).
+//! **Zero-copy arena datapath**: every run computes a static layout over
+//! one page-aligned [`Arena`] — a staging/accumulator slot region per
+//! rank followed by one single-use wire region per `Send` op — and the
+//! wires carry plain `(offset, len)` descriptors instead of owned
+//! vectors. Senders pack (or fuse-reduce) directly into their wire
+//! region; receivers read payloads straight out of the arena; the mpsc
+//! descriptor handoff provides the happens-before edge. With a
+//! [`TransportOptions::arena`] cache configured (the
+//! [`crate::coordinator::Communicator`] does this), steady-state
+//! operations perform **zero heap allocations**: the arena is leased
+//! from the cache, and the [`BufferPool`] carves slots from it.
+//!
+//! All-gather writes into a full receive buffer per rank; in *staged*
+//! mode (the NCCL case PAT is designed for — user buffers are not
+//! directly sendable/receivable, so every transfer goes through
+//! pre-mapped staging), each message's chunks transit bounded staging
+//! slots from the [`BufferPool`] around the send, enforcing the PAT
+//! aggregation bound: a schedule aggregating more chunks per transfer
+//! than the buffer holds fails loudly. Reduce-scatter keeps *persistent*
+//! per-chunk accumulators in pool slots — the stronger constraint the
+//! paper says the algorithm was originally designed around — and folds
+//! incoming data through the configured [`DataPath`] (scalar loop or the
+//! AOT Pallas kernel via the sharded PJRT service).
 //!
 //! Channel-split programs ([`crate::sched::channel::split`]) stripe the
 //! payload: a program whose chunk space is `C × nranks` moves `1/C`-sized
@@ -30,14 +46,15 @@
 //! multi-channel programs (inputs must split evenly into `C` stripes; the
 //! [`crate::coordinator::Communicator`] pads odd lengths).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::core::{ChunkId, Collective, Error, Rank, Result};
 use crate::obs::{Event, EventKind, FlightRecorder, Trace, DEFAULT_FLIGHT_CAPACITY};
 use crate::sched::program::{Op, Program};
+use crate::transport::arena::{Arena, ArenaCache, ArenaLease};
 use crate::transport::buffers::BufferPool;
 use crate::transport::datapath::DataPath;
 
@@ -67,6 +84,12 @@ pub struct TransportOptions {
     /// [`TransportReport::trace`] at join. When off (the default) every
     /// recording call is a single inlined branch — no clock reads.
     pub trace: bool,
+    /// Arena cache backing the run's wire regions and pool slots. `None`
+    /// (the default) allocates a private one-shot arena per run; a shared
+    /// [`ArenaCache`] (one per communicator) makes repeated operations of
+    /// the same footprint allocation-free —
+    /// [`TransportReport::arena_allocs`] is 0 on the warm path.
+    pub arena: Option<ArenaCache>,
 }
 
 impl Default for TransportOptions {
@@ -78,6 +101,7 @@ impl Default for TransportOptions {
             validate: true,
             recv_timeout: Duration::from_secs(30),
             trace: false,
+            arena: None,
         }
     }
 }
@@ -93,13 +117,25 @@ pub struct TransportReport {
     pub messages: usize,
     /// Wall-clock duration of the collective.
     pub wall: Duration,
-    /// Sum of distinct slot vectors allocated (allocation pressure).
+    /// Heap-allocated slot vectors (allocation pressure). Zero on the
+    /// arena path — the perf gate the steady state is held to.
     pub slots_allocated: usize,
+    /// Preallocated arena footprint in bytes for this run.
+    pub arena_bytes: usize,
+    /// Arena high-water mark: the largest per-rank footprint actually
+    /// touched — peak pool slots plus that rank's wire regions, in bytes.
+    pub arena_hw_bytes: usize,
+    /// Arenas allocated by this run: 1 when the cache was cold (or no
+    /// cache was configured), 0 on the warm steady-state path.
+    pub arena_allocs: usize,
     /// The unified event timeline (merged across rank threads, sorted by
     /// start time), present when [`TransportOptions::trace`] was set.
     pub trace: Option<Trace>,
 }
 
+/// A wire message is a **descriptor**: the payload already sits in the
+/// shared arena, written there by the sender before the descriptor is
+/// posted (the mpsc send/recv pair is the happens-before edge).
 struct WireMsg {
     src: Rank,
     /// The connection this message rides: FIFO holds per (src, channel).
@@ -108,63 +144,35 @@ struct WireMsg {
     /// Travels with the message so the receiver can record the wire span
     /// post → FIFO match against the shared clock.
     t_sent: f64,
-    data: Vec<f32>,
+    /// Payload region in the arena.
+    off: usize,
+    len: usize,
 }
 
 /// Per-rank endpoint hiding the single-receiver / per-connection-FIFO
-/// plumbing.
-///
-/// Wire buffers are recycled: after a receiver consumes a message it sends
-/// the (emptied) vector back to the sender's return queue, so steady-state
-/// traffic reuses warm pages instead of faulting fresh ones in — the
-/// dominant cost for multi-MiB messages on this host (perf pass,
-/// EXPERIMENTS.md §Perf).
+/// plumbing. Only `(offset, len)` descriptors cross the channels — no
+/// payload bytes, no buffer-return protocol (every wire region is
+/// single-use within a run, so there is nothing to recycle and no
+/// recycling loop to starve).
 struct Endpoint {
     rank: Rank,
     senders: Vec<Sender<WireMsg>>,
     receiver: Receiver<WireMsg>,
     /// Arrived-but-unclaimed messages per (src, channel) — the per-channel
-    /// connection FIFOs, each entry `(t_sent, payload)`.
-    pending: HashMap<(Rank, usize), VecDeque<(f64, Vec<f32>)>>,
+    /// connection FIFOs, each entry `(t_sent, (off, len))`.
+    pending: HashMap<(Rank, usize), VecDeque<(f64, (usize, usize))>>,
     /// Messages ever stashed into `pending`. The channel scheduler uses
     /// this to notice arrivals drained mid-pass for an already-checked
     /// channel (it must re-poll instead of blocking on the receiver).
     stashed: u64,
-    /// Return path for consumed wire buffers (indexed by original sender).
-    ret_senders: Vec<Sender<Vec<f32>>>,
-    ret_receiver: Receiver<Vec<f32>>,
     timeout: Duration,
 }
 
 impl Endpoint {
-    fn send(&self, dst: Rank, chan: usize, data: Vec<f32>, t_sent: f64) -> Result<()> {
+    fn send(&self, dst: Rank, chan: usize, off: usize, len: usize, t_sent: f64) -> Result<()> {
         self.senders[dst]
-            .send(WireMsg { src: self.rank, channel: chan, t_sent, data })
+            .send(WireMsg { src: self.rank, channel: chan, t_sent, off, len })
             .map_err(|_| Error::Transport(format!("rank {dst} hung up")))
-    }
-
-    /// An empty send buffer, recycled when available.
-    fn take_buffer(&mut self, capacity: usize) -> Vec<f32> {
-        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() {
-            return Vec::with_capacity(capacity);
-        }
-        while let Ok(mut v) = self.ret_receiver.try_recv() {
-            if v.capacity() >= capacity {
-                v.clear();
-                return v;
-            }
-            // undersized stragglers are dropped
-        }
-        Vec::with_capacity(capacity)
-    }
-
-    /// Hand a consumed message buffer back to its sender for reuse.
-    fn recycle(&self, src: Rank, mut data: Vec<f32>) {
-        if std::env::var_os("PATCOL_NO_RECYCLE").is_some() {
-            return;
-        }
-        data.clear();
-        let _ = self.ret_senders[src].send(data); // sender may be done; fine
     }
 
     fn stash(&mut self, msg: WireMsg) {
@@ -172,12 +180,12 @@ impl Endpoint {
         self.pending
             .entry((msg.src, msg.channel))
             .or_default()
-            .push_back((msg.t_sent, msg.data));
+            .push_back((msg.t_sent, (msg.off, msg.len)));
     }
 
     /// Non-blocking: drain everything that has arrived into the
     /// per-connection FIFOs, then pop the head of (src, chan) if present.
-    fn try_recv_from(&mut self, src: Rank, chan: usize) -> Option<(f64, Vec<f32>)> {
+    fn try_recv_from(&mut self, src: Rank, chan: usize) -> Option<(f64, (usize, usize))> {
         while let Ok(msg) = self.receiver.try_recv() {
             self.stash(msg);
         }
@@ -208,39 +216,35 @@ impl Endpoint {
 fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
     let mut senders = Vec::with_capacity(n);
     let mut receivers = Vec::with_capacity(n);
-    let mut ret_senders = Vec::with_capacity(n);
-    let mut ret_receivers = Vec::with_capacity(n);
     for _ in 0..n {
         let (tx, rx) = channel();
         senders.push(tx);
         receivers.push(rx);
-        let (rtx, rrx) = channel();
-        ret_senders.push(rtx);
-        ret_receivers.push(rrx);
     }
     receivers
         .into_iter()
-        .zip(ret_receivers)
         .enumerate()
-        .map(|(rank, (receiver, ret_receiver))| Endpoint {
+        .map(|(rank, receiver)| Endpoint {
             rank,
             senders: senders.clone(),
             receiver,
             pending: HashMap::new(),
             stashed: 0,
-            ret_senders: ret_senders.clone(),
-            ret_receiver,
             timeout,
         })
         .collect()
 }
 
 /// Drive a rank's per-channel op streams to completion (the cooperative
-/// per-channel scheduler, see the module docs). `exec` performs one op:
-/// for receives the matched `(t_sent, payload)` is passed in; for sends
-/// it is `None` and `exec` posts the message itself via the endpoint.
-/// `fr` is the rank's flight recorder: park intervals become per-channel
-/// stall events, and a watchdog timeout dumps its tail into the error.
+/// per-channel scheduler, see the module docs). `exec` performs one op,
+/// identified by its **global index** in the rank's op list (the arena
+/// layout is indexed the same way): for receives the matched
+/// `(t_sent, (off, len))` descriptor is passed in; for sends it is `None`
+/// and `exec` posts the message itself via the endpoint. Each pass opens
+/// with a batched send sweep — every channel's ready sends post in one
+/// wakeup before any receive is polled. `fr` is the rank's flight
+/// recorder: park intervals become per-channel stall events, and a
+/// watchdog timeout dumps its tail into the error.
 fn drive_channels<F>(
     ep: &mut Endpoint,
     ops: &[Op],
@@ -249,21 +253,42 @@ fn drive_channels<F>(
     mut exec: F,
 ) -> Result<()>
 where
-    F: FnMut(&mut Endpoint, &Op, Option<(f64, Vec<f32>)>, &mut FlightRecorder) -> Result<()>,
+    F: FnMut(
+        &mut Endpoint,
+        usize,
+        &Op,
+        Option<(f64, (usize, usize))>,
+        &mut FlightRecorder,
+    ) -> Result<()>,
 {
     let nchan = channels.max(1);
-    let mut streams: Vec<Vec<&Op>> = vec![Vec::new(); nchan];
-    for op in ops {
-        streams[op.channel()].push(op);
+    let mut streams: Vec<Vec<(usize, &Op)>> = vec![Vec::new(); nchan];
+    for (i, op) in ops.iter().enumerate() {
+        streams[op.channel()].push((i, op));
     }
     let mut pc = vec![0usize; nchan];
     let mut remaining = ops.len();
     while remaining > 0 {
         let seen = ep.stashed;
         let mut progressed = false;
+        // Batched dispatch: post every ready send across every channel
+        // before polling a single receive — one wakeup drains the whole
+        // send frontier, so peers' receives match sooner.
         for (k, stream) in streams.iter().enumerate() {
             while pc[k] < stream.len() {
-                let op = stream[pc[k]];
+                let (idx, op) = stream[pc[k]];
+                if !matches!(op, Op::Send { .. }) {
+                    break;
+                }
+                exec(ep, idx, op, None, fr)?;
+                pc[k] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        for (k, stream) in streams.iter().enumerate() {
+            while pc[k] < stream.len() {
+                let (idx, op) = stream[pc[k]];
                 let data = match op {
                     Op::Send { .. } => None,
                     Op::Recv { peer, .. } => match ep.try_recv_from(*peer, k) {
@@ -272,7 +297,7 @@ where
                         None => break,
                     },
                 };
-                exec(ep, op, data, fr)?;
+                exec(ep, idx, op, data, fr)?;
                 pc[k] += 1;
                 remaining -= 1;
                 progressed = true;
@@ -294,7 +319,7 @@ where
                     if pc[k] >= stream.len() {
                         continue;
                     }
-                    if let Op::Recv { peer, step, .. } = stream[pc[k]] {
+                    if let Op::Recv { peer, step, .. } = stream[pc[k]].1 {
                         fr.record(
                             Event::span(EventKind::Stall, ep.rank, k, *step, t_park, t_wake)
                                 .with_peer(*peer),
@@ -311,7 +336,12 @@ where
 /// is blocked on which peer, how deep each pending connection FIFO is,
 /// and — when tracing — the flight recorder's tail. Works with tracing
 /// off; the per-channel blame needs no recorded history.
-fn blame_timeout(ep: &Endpoint, streams: &[Vec<&Op>], pc: &[usize], fr: &FlightRecorder) -> Error {
+fn blame_timeout(
+    ep: &Endpoint,
+    streams: &[Vec<(usize, &Op)>],
+    pc: &[usize],
+    fr: &FlightRecorder,
+) -> Error {
     let mut msg = format!(
         "rank {} timed out with every channel blocked on a receive \
          (deadlocked or unmatched schedule?)",
@@ -321,7 +351,7 @@ fn blame_timeout(ep: &Endpoint, streams: &[Vec<&Op>], pc: &[usize], fr: &FlightR
         if pc[k] >= stream.len() {
             continue;
         }
-        if let Op::Recv { peer, chunks, step, .. } = stream[pc[k]] {
+        if let Op::Recv { peer, chunks, step, .. } = stream[pc[k]].1 {
             msg.push_str(&format!(
                 "\n  channel {k}: op {}/{} blocked on recv from rank {peer} at step {step} \
                  ({} chunks; {} message(s) queued on that connection)",
@@ -358,6 +388,80 @@ fn stripe_grid(p: &Program, elems: usize, what: &str) -> Result<(usize, usize)> 
         )));
     }
     Ok((stripes, elems / stripes))
+}
+
+/// The static arena layout of one run: per rank, a pool-slot region
+/// (sized to the schedule's distinct reduce-receive chunks, clamped to
+/// the slot capacity) followed by one dedicated wire region per `Send`
+/// op. Because regions are disjoint by construction and each wire region
+/// backs exactly one message, descriptors can be handed across threads
+/// with no further coordination.
+struct ArenaPlan {
+    /// Per-rank pool region: `(base_offset, slot_count)`.
+    pool: Vec<(usize, usize)>,
+    /// Per-rank, per-op wire region offset (`usize::MAX` on receives —
+    /// the descriptor arrives on the wire).
+    send_off: Vec<Vec<usize>>,
+    /// Per-rank total wire elements (the rank's send footprint).
+    wire: Vec<usize>,
+    /// Total arena elements.
+    total: usize,
+}
+
+/// Compute the [`ArenaPlan`] for a program. `msg_elems` sizes a send's
+/// wire region from its chunk list; `slot_recv` says which receives
+/// consume a persistent pool slot (reduce-receives — their distinct
+/// chunk count bounds the rank's simultaneously-live accumulators, so
+/// carving exactly that many slots guarantees the pool never falls back
+/// to the heap, and clamping to `cap` stays sufficient because the pool
+/// errors out at `cap` live slots anyway).
+fn plan_arena(
+    p: &Program,
+    slot_elems: usize,
+    cap: Option<usize>,
+    msg_elems: impl Fn(&[ChunkId]) -> usize,
+    slot_recv: impl Fn(&Op) -> bool,
+) -> ArenaPlan {
+    let mut pool = Vec::with_capacity(p.ranks.len());
+    let mut send_off = Vec::with_capacity(p.ranks.len());
+    let mut wire = Vec::with_capacity(p.ranks.len());
+    let mut cursor = 0usize;
+    for ops in &p.ranks {
+        let mut distinct: HashSet<ChunkId> = HashSet::new();
+        for op in ops {
+            if slot_recv(op) {
+                if let Op::Recv { chunks, .. } = op {
+                    distinct.extend(chunks.iter().copied());
+                }
+            }
+        }
+        let slots = cap.map_or(distinct.len(), |c| distinct.len().min(c));
+        pool.push((cursor, slots));
+        cursor += slots * slot_elems;
+        let base = cursor;
+        let mut offs = Vec::with_capacity(ops.len());
+        for op in ops {
+            match op {
+                Op::Send { chunks, .. } => {
+                    offs.push(cursor);
+                    cursor += msg_elems(chunks);
+                }
+                Op::Recv { .. } => offs.push(usize::MAX),
+            }
+        }
+        send_off.push(offs);
+        wire.push(cursor - base);
+    }
+    ArenaPlan { pool, send_off, wire, total: cursor }
+}
+
+/// Lease the run's arena: from the configured cache (warm steady state
+/// reuses the allocation) or a private one-shot arena.
+fn lease_arena(opts: &TransportOptions, elems: usize) -> Result<ArenaLease> {
+    match &opts.arena {
+        Some(cache) => cache.checkout(elems),
+        None => ArenaLease::private(Arena::new(elems)?),
+    }
 }
 
 /// Run an all-gather program. `inputs[r]` is rank r's contribution
@@ -413,8 +517,17 @@ pub fn run_allgather_into(
     if opts.validate {
         crate::sched::verify::verify_program(p)?;
     }
+    // All-gather never acquires persistent slots (staging is
+    // accounting-only around the send; the wire region is the storage).
+    let plan = plan_arena(p, sub, opts.slot_capacity, |chunks| chunks.len() * sub, |_| false);
+    let lease = lease_arena(opts, plan.total)?;
+    let arena = lease.arena().clone();
     let endpoints = make_endpoints(n, opts.recv_timeout);
-    let report = Mutex::new(TransportReport::default());
+    let report = Mutex::new(TransportReport {
+        arena_bytes: arena.bytes(),
+        arena_allocs: if lease.fresh() { 1 } else { 0 },
+        ..Default::default()
+    });
     let start = Instant::now();
 
     std::thread::scope(|s| -> Result<()> {
@@ -428,6 +541,8 @@ pub fn run_allgather_into(
             let inputs = &inputs;
             let report = &report;
             let opts = &*opts;
+            let plan = &plan;
+            let arena = &arena;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
                 let mut fr = if opts.trace {
@@ -439,33 +554,47 @@ pub fn run_allgather_into(
                 recvbuf[r * len..(r + 1) * len].copy_from_slice(&inputs[r]);
                 // Chunk `c` = stripe `c / n` of rank `c % n`'s slot.
                 let off = |c: ChunkId| (c % n) * len + (c / n) * sub;
-                let mut pool = BufferPool::new(sub, opts.slot_capacity);
+                let (pool_base, pool_slots) = plan.pool[r];
+                let mut pool = BufferPool::with_arena(
+                    sub,
+                    opts.slot_capacity,
+                    arena.clone(),
+                    pool_base,
+                    pool_slots,
+                );
+                let send_off = &plan.send_off[r];
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, op, data, fr| {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, idx, op, data, fr| {
                     match op {
                         Op::Send { peer, chunks, channel, step } => {
                             let t0 = fr.now_or_zero();
                             // Pack through staging: one slot per sub-chunk of
                             // the message is live until the send is posted,
                             // enforcing that a transfer never aggregates more
-                            // than the buffer budget. The wire message itself
+                            // than the buffer budget. The wire region itself
                             // is the staging storage (reserve() is
                             // accounting-only), so packing costs exactly one
                             // copy of the payload.
                             if opts.staged {
                                 pool.reserve_traced(chunks.len(), fr, r, *channel, *step)?;
                             }
-                            let mut msg = ep.take_buffer(chunks.len() * sub);
-                            for &c in chunks {
+                            let woff = send_off[idx];
+                            let wlen = chunks.len() * sub;
+                            // SAFETY: this wire region is dedicated to this
+                            // op by the plan; nobody else touches it until
+                            // the descriptor is posted below.
+                            let msg = unsafe { arena.slice_mut(woff, wlen) };
+                            for (i, &c) in chunks.iter().enumerate() {
                                 let o = off(c);
-                                msg.extend_from_slice(&recvbuf[o..o + sub]);
+                                msg[i * sub..(i + 1) * sub]
+                                    .copy_from_slice(&recvbuf[o..o + sub]);
                             }
-                            let bytes = msg.len() * 4;
+                            let bytes = wlen * 4;
                             local_bytes += bytes;
                             local_msgs += 1;
-                            ep.send(*peer, *channel, msg, t0)?;
+                            ep.send(*peer, *channel, woff, wlen, t0)?;
                             if opts.staged {
                                 pool.unreserve_traced(chunks.len(), fr, r, *channel, *step);
                             }
@@ -478,15 +607,20 @@ pub fn run_allgather_into(
                             }
                         }
                         Op::Recv { peer, chunks, channel, step, .. } => {
-                            let (t_sent, data) = data.expect("recv scheduled without payload");
-                            if data.len() != chunks.len() * sub {
+                            let (t_sent, (doff, dlen)) =
+                                data.expect("recv scheduled without payload");
+                            if dlen != chunks.len() * sub {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
-                                    data.len(),
+                                    dlen,
                                     chunks.len() * sub
                                 )));
                             }
-                            let bytes = data.len() * 4;
+                            // SAFETY: the sender finished writing this
+                            // single-use wire region before posting the
+                            // descriptor (mpsc happens-before).
+                            let data = unsafe { arena.slice(doff, dlen) };
+                            let bytes = dlen * 4;
                             let t0 = fr.now_or_zero();
                             if fr.enabled() {
                                 // Wire span: peer's post time → FIFO match,
@@ -503,7 +637,6 @@ pub fn run_allgather_into(
                                 let o = off(c);
                                 recvbuf[o..o + sub].copy_from_slice(seg);
                             }
-                            ep.recycle(*peer, data);
                             if fr.enabled() {
                                 fr.record(
                                     Event::span(EventKind::RecvOp, r, *channel, *step, t0, fr.now())
@@ -515,13 +648,19 @@ pub fn run_allgather_into(
                     }
                     Ok(())
                 })?;
+                let hw = (pool.peak() * sub + plan.wire[r]) * 4;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
+                rep.arena_hw_bytes = rep.arena_hw_bytes.max(hw);
                 if opts.trace {
-                    rep.trace.get_or_insert_with(Trace::default).absorb(fr.finish());
+                    let mut t = fr.finish();
+                    let c = t.counters.entry((r, 0)).or_default();
+                    c.arena_hw_bytes = c.arena_hw_bytes.max(hw);
+                    c.allocs += pool.total_allocated();
+                    rep.trace.get_or_insert_with(Trace::default).absorb(t);
                 }
                 Ok(())
             }));
@@ -537,6 +676,7 @@ pub fn run_allgather_into(
     if let Some(t) = rep.trace.as_mut() {
         t.sort();
     }
+    drop(lease);
     Ok(rep)
 }
 
@@ -576,8 +716,22 @@ pub fn run_reduce_scatter(
     if opts.validate {
         crate::sched::verify::verify_program(p)?;
     }
+    // Every RS receive folds into a persistent accumulator slot.
+    let plan = plan_arena(
+        p,
+        sub,
+        opts.slot_capacity,
+        |chunks| chunks.len() * sub,
+        |op| matches!(op, Op::Recv { .. }),
+    );
+    let lease = lease_arena(opts, plan.total)?;
+    let arena = lease.arena().clone();
     let endpoints = make_endpoints(n, opts.recv_timeout);
-    let report = Mutex::new(TransportReport::default());
+    let report = Mutex::new(TransportReport {
+        arena_bytes: arena.bytes(),
+        arena_allocs: if lease.fresh() { 1 } else { 0 },
+        ..Default::default()
+    });
     let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); n];
     let start = Instant::now();
 
@@ -592,6 +746,8 @@ pub fn run_reduce_scatter(
             let inputs = &inputs;
             let report = &report;
             let opts = &*opts;
+            let plan = &plan;
+            let arena = &arena;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
                 let mut fr = if opts.trace {
@@ -602,33 +758,46 @@ pub fn run_reduce_scatter(
                 // Chunk `c` = stripe `c / n` of output slot `c % n`.
                 let off = |c: ChunkId| (c % n) * l + (c / n) * sub;
                 let own = |c: ChunkId| &inputs[r][off(c)..off(c) + sub];
-                let mut pool = BufferPool::new(sub, opts.slot_capacity);
-                let mut acc: HashMap<ChunkId, Vec<f32>> = HashMap::new();
+                let (pool_base, pool_slots) = plan.pool[r];
+                let mut pool = BufferPool::with_arena(
+                    sub,
+                    opts.slot_capacity,
+                    arena.clone(),
+                    pool_base,
+                    pool_slots,
+                );
+                let send_off = &plan.send_off[r];
+                let mut acc: HashMap<ChunkId, crate::transport::buffers::Slot> = HashMap::new();
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, op, data, fr| {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, idx, op, data, fr| {
                     match op {
                         Op::Send { peer, chunks, channel, step } => {
                             let t0 = fr.now_or_zero();
-                            let mut msg = ep.take_buffer(chunks.len() * sub);
-                            for &c in chunks {
+                            let woff = send_off[idx];
+                            let wlen = chunks.len() * sub;
+                            // SAFETY: dedicated single-use wire region
+                            // (disjoint from every pool slot by the plan).
+                            let msg = unsafe { arena.slice_mut(woff, wlen) };
+                            for (i, &c) in chunks.iter().enumerate() {
+                                let dst = &mut msg[i * sub..(i + 1) * sub];
                                 match acc.remove(&c) {
                                     Some(slot) => {
                                         // fused accumulator + own contribution
-                                        // straight into the wire buffer
-                                        opts.datapath.add_extend_traced(
-                                            &mut msg, &slot, own(c), fr, r, *channel, *step,
+                                        // straight into the wire region
+                                        opts.datapath.add_into_traced(
+                                            dst, slot.as_slice(), own(c), fr, r, *channel, *step,
                                         )?;
                                         pool.release_traced(slot, fr, r, *channel, *step);
                                     }
-                                    None => msg.extend_from_slice(own(c)),
+                                    None => dst.copy_from_slice(own(c)),
                                 }
                             }
-                            let bytes = msg.len() * 4;
+                            let bytes = wlen * 4;
                             local_bytes += bytes;
                             local_msgs += 1;
-                            ep.send(*peer, *channel, msg, t0)?;
+                            ep.send(*peer, *channel, woff, wlen, t0)?;
                             if fr.enabled() {
                                 fr.record(
                                     Event::span(EventKind::SendOp, r, *channel, *step, t0, fr.now())
@@ -638,15 +807,19 @@ pub fn run_reduce_scatter(
                             }
                         }
                         Op::Recv { peer, chunks, channel, step, .. } => {
-                            let (t_sent, data) = data.expect("recv scheduled without payload");
-                            if data.len() != chunks.len() * sub {
+                            let (t_sent, (doff, dlen)) =
+                                data.expect("recv scheduled without payload");
+                            if dlen != chunks.len() * sub {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {}",
-                                    data.len(),
+                                    dlen,
                                     chunks.len() * sub
                                 )));
                             }
-                            let bytes = data.len() * 4;
+                            // SAFETY: single-use region, written before the
+                            // descriptor was posted (mpsc happens-before).
+                            let data = unsafe { arena.slice(doff, dlen) };
+                            let bytes = dlen * 4;
                             let t0 = fr.now_or_zero();
                             if fr.enabled() {
                                 fr.record(
@@ -655,27 +828,20 @@ pub fn run_reduce_scatter(
                                         .with_msg(chunks, bytes),
                                 );
                             }
-                            // (Perf-pass note: a zero-copy "steal the wire
-                            // buffer as accumulator" variant was tried for
-                            // single-chunk messages and reverted — it starves
-                            // the sender-side buffer recycling loop and lost
-                            // ~25% on 4 MiB ring reduce-scatter; see
-                            // EXPERIMENTS.md §Perf.)
                             for (i, &c) in chunks.iter().enumerate() {
                                 let seg = &data[i * sub..(i + 1) * sub];
                                 match acc.get_mut(&c) {
                                     Some(slot) => opts.datapath.reduce_into_traced(
-                                        slot, seg, fr, r, *channel, *step,
+                                        slot.data(), seg, fr, r, *channel, *step,
                                     )?,
                                     None => {
                                         let mut slot =
                                             pool.acquire_traced(fr, r, *channel, *step)?;
-                                        slot.copy_from_slice(seg);
+                                        slot.data().copy_from_slice(seg);
                                         acc.insert(c, slot);
                                     }
                                 }
                             }
-                            ep.recycle(*peer, data);
                             if fr.enabled() {
                                 fr.record(
                                     Event::span(EventKind::RecvOp, r, *channel, *step, t0, fr.now())
@@ -695,7 +861,7 @@ pub fn run_reduce_scatter(
                     let dst = &mut out[k * sub..(k + 1) * sub];
                     dst.copy_from_slice(own(c));
                     if let Some(slot) = acc.remove(&c) {
-                        opts.datapath.reduce_into(dst, &slot)?;
+                        opts.datapath.reduce_into(dst, slot.as_slice())?;
                         pool.release(slot);
                     }
                 }
@@ -706,13 +872,19 @@ pub fn run_reduce_scatter(
                     )));
                 }
                 *out_slot = out;
+                let hw = (pool.peak() * sub + plan.wire[r]) * 4;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
+                rep.arena_hw_bytes = rep.arena_hw_bytes.max(hw);
                 if opts.trace {
-                    rep.trace.get_or_insert_with(Trace::default).absorb(fr.finish());
+                    let mut t = fr.finish();
+                    let c = t.counters.entry((r, 0)).or_default();
+                    c.arena_hw_bytes = c.arena_hw_bytes.max(hw);
+                    c.allocs += pool.total_allocated();
+                    rep.trace.get_or_insert_with(Trace::default).absorb(t);
                 }
                 Ok(())
             }));
@@ -728,6 +900,7 @@ pub fn run_reduce_scatter(
     if let Some(t) = rep.trace.as_mut() {
         t.sort();
     }
+    drop(lease);
     Ok((outputs, rep))
 }
 
@@ -785,7 +958,9 @@ pub fn run_allreduce(
 /// covers both phases, every channel, and every bucket, so
 /// `slot_capacity` bounds the *combined* accumulator + staging footprint:
 /// the fused staging-slot bound is genuinely shared across buckets rather
-/// than provisioned per operation.
+/// than provisioned per operation. The arena plan sizes wire regions per
+/// send from the same grid, so unequal buckets ride the zero-copy path
+/// too.
 pub fn run_allreduce_batch(
     p: &Program,
     chunk_elems: &[usize],
@@ -832,8 +1007,23 @@ pub fn run_allreduce_batch(
     if opts.validate {
         crate::sched::verify::verify_program(p)?;
     }
+    // Only reduce-receives hold persistent accumulator slots; plain
+    // receives install straight into the output buffer.
+    let plan = plan_arena(
+        p,
+        slot_elems,
+        opts.slot_capacity,
+        |chunks| chunks.iter().map(|&c| chunk_elems[c]).sum(),
+        |op| matches!(op, Op::Recv { reduce: true, .. }),
+    );
+    let lease = lease_arena(opts, plan.total)?;
+    let arena = lease.arena().clone();
     let endpoints = make_endpoints(n, opts.recv_timeout);
-    let report = Mutex::new(TransportReport::default());
+    let report = Mutex::new(TransportReport {
+        arena_bytes: arena.bytes(),
+        arena_allocs: if lease.fresh() { 1 } else { 0 },
+        ..Default::default()
+    });
     let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); n];
     let start = Instant::now();
 
@@ -849,6 +1039,8 @@ pub fn run_allreduce_batch(
             let report = &report;
             let opts = &*opts;
             let off = &off;
+            let plan = &plan;
+            let arena = &arena;
             handles.push(s.spawn(move || -> Result<()> {
                 let mut ep = ep;
                 let mut fr = if opts.trace {
@@ -858,13 +1050,21 @@ pub fn run_allreduce_batch(
                 };
                 let own = |c: ChunkId| &inputs[r][off[c]..off[c] + chunk_elems[c]];
                 let mut out = vec![0f32; total];
-                let mut pool = BufferPool::new(slot_elems, opts.slot_capacity);
-                let mut acc: HashMap<ChunkId, Vec<f32>> = HashMap::new();
+                let (pool_base, pool_slots) = plan.pool[r];
+                let mut pool = BufferPool::with_arena(
+                    slot_elems,
+                    opts.slot_capacity,
+                    arena.clone(),
+                    pool_base,
+                    pool_slots,
+                );
+                let send_off = &plan.send_off[r];
+                let mut acc: HashMap<ChunkId, crate::transport::buffers::Slot> = HashMap::new();
                 let mut finalized = vec![false; nchunks];
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, op, data, fr| {
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, idx, op, data, fr| {
                     match op {
                         Op::Send { peer, chunks, channel, step } => {
                             let t0 = fr.now_or_zero();
@@ -878,46 +1078,52 @@ pub fn run_allreduce_batch(
                                     chunks.iter().filter(|&&c| finalized[c]).count();
                                 pool.reserve_traced(reserved, fr, r, *channel, *step)?;
                             }
-                            let msg_elems: usize = chunks.iter().map(|&c| chunk_elems[c]).sum();
-                            let mut msg = ep.take_buffer(msg_elems);
+                            let woff = send_off[idx];
+                            let wlen: usize =
+                                chunks.iter().map(|&c| chunk_elems[c]).sum();
+                            // SAFETY: dedicated single-use wire region
+                            // (disjoint from every pool slot by the plan).
+                            let msg = unsafe { arena.slice_mut(woff, wlen) };
+                            let mut pos = 0usize;
                             for &c in chunks {
                                 let len = chunk_elems[c];
+                                let dst = &mut msg[pos..pos + len];
+                                pos += len;
                                 if finalized[c] {
-                                    msg.extend_from_slice(&out[off[c]..off[c] + len]);
+                                    dst.copy_from_slice(&out[off[c]..off[c] + len]);
                                 } else if c % n == r {
                                     // Owner: fold accumulator + own
                                     // contribution, keep the final locally,
                                     // and broadcast it.
                                     match acc.remove(&c) {
                                         Some(slot) => {
-                                            opts.datapath.add_extend_traced(
-                                                &mut msg, &slot[..len], own(c),
+                                            opts.datapath.add_into_traced(
+                                                dst, &slot.as_slice()[..len], own(c),
                                                 fr, r, *channel, *step,
                                             )?;
                                             pool.release_traced(slot, fr, r, *channel, *step);
                                         }
-                                        None => msg.extend_from_slice(own(c)),
+                                        None => dst.copy_from_slice(own(c)),
                                     }
-                                    let lo = msg.len() - len;
-                                    out[off[c]..off[c] + len].copy_from_slice(&msg[lo..]);
+                                    out[off[c]..off[c] + len].copy_from_slice(dst);
                                     finalized[c] = true;
                                 } else {
                                     match acc.remove(&c) {
                                         Some(slot) => {
-                                            opts.datapath.add_extend_traced(
-                                                &mut msg, &slot[..len], own(c),
+                                            opts.datapath.add_into_traced(
+                                                dst, &slot.as_slice()[..len], own(c),
                                                 fr, r, *channel, *step,
                                             )?;
                                             pool.release_traced(slot, fr, r, *channel, *step);
                                         }
-                                        None => msg.extend_from_slice(own(c)),
+                                        None => dst.copy_from_slice(own(c)),
                                     }
                                 }
                             }
-                            let bytes = msg.len() * 4;
+                            let bytes = wlen * 4;
                             local_bytes += bytes;
                             local_msgs += 1;
-                            ep.send(*peer, *channel, msg, t0)?;
+                            ep.send(*peer, *channel, woff, wlen, t0)?;
                             if opts.staged {
                                 pool.unreserve_traced(reserved, fr, r, *channel, *step);
                             }
@@ -930,15 +1136,19 @@ pub fn run_allreduce_batch(
                             }
                         }
                         Op::Recv { peer, chunks, reduce, channel, step } => {
-                            let (t_sent, data) = data.expect("recv scheduled without payload");
+                            let (t_sent, (doff, dlen)) =
+                                data.expect("recv scheduled without payload");
                             let want: usize = chunks.iter().map(|&c| chunk_elems[c]).sum();
-                            if data.len() != want {
+                            if dlen != want {
                                 return Err(Error::Transport(format!(
                                     "rank {r}: message from {peer} has {} elems, want {want}",
-                                    data.len()
+                                    dlen
                                 )));
                             }
-                            let bytes = data.len() * 4;
+                            // SAFETY: single-use region, written before the
+                            // descriptor was posted (mpsc happens-before).
+                            let data = unsafe { arena.slice(doff, dlen) };
+                            let bytes = dlen * 4;
                             let t0 = fr.now_or_zero();
                             if fr.enabled() {
                                 fr.record(
@@ -955,12 +1165,12 @@ pub fn run_allreduce_batch(
                                 if *reduce {
                                     match acc.get_mut(&c) {
                                         Some(slot) => opts.datapath.reduce_into_traced(
-                                            &mut slot[..len], seg, fr, r, *channel, *step,
+                                            &mut slot.data()[..len], seg, fr, r, *channel, *step,
                                         )?,
                                         None => {
                                             let mut slot =
                                                 pool.acquire_traced(fr, r, *channel, *step)?;
-                                            slot[..len].copy_from_slice(seg);
+                                            slot.data()[..len].copy_from_slice(seg);
                                             acc.insert(c, slot);
                                         }
                                     }
@@ -969,7 +1179,6 @@ pub fn run_allreduce_batch(
                                     finalized[c] = true;
                                 }
                             }
-                            ep.recycle(*peer, data);
                             if fr.enabled() {
                                 fr.record(
                                     Event::span(EventKind::RecvOp, r, *channel, *step, t0, fr.now())
@@ -993,8 +1202,10 @@ pub fn run_allreduce_batch(
                         let len = chunk_elems[c];
                         out[off[c]..off[c] + len].copy_from_slice(own(c));
                         if let Some(slot) = acc.remove(&c) {
-                            opts.datapath
-                                .reduce_into(&mut out[off[c]..off[c] + len], &slot[..len])?;
+                            opts.datapath.reduce_into(
+                                &mut out[off[c]..off[c] + len],
+                                &slot.as_slice()[..len],
+                            )?;
                             pool.release(slot);
                         }
                     }
@@ -1006,13 +1217,19 @@ pub fn run_allreduce_batch(
                     )));
                 }
                 *out_slot = out;
+                let hw = (pool.peak() * slot_elems + plan.wire[r]) * 4;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
+                rep.arena_hw_bytes = rep.arena_hw_bytes.max(hw);
                 if opts.trace {
-                    rep.trace.get_or_insert_with(Trace::default).absorb(fr.finish());
+                    let mut t = fr.finish();
+                    let c = t.counters.entry((r, 0)).or_default();
+                    c.arena_hw_bytes = c.arena_hw_bytes.max(hw);
+                    c.allocs += pool.total_allocated();
+                    rep.trace.get_or_insert_with(Trace::default).absorb(t);
                 }
                 Ok(())
             }));
@@ -1028,6 +1245,7 @@ pub fn run_allreduce_batch(
     if let Some(t) = rep.trace.as_mut() {
         t.sort();
     }
+    drop(lease);
     Ok((outputs, rep))
 }
 
@@ -1452,5 +1670,41 @@ mod tests {
         };
         let err = run_allgather(&p, &inputs, &opts).unwrap_err();
         assert!(err.to_string().contains("exhausted"), "{err}");
+    }
+
+    /// Tentpole: a shared [`ArenaCache`] makes the second run of the same
+    /// collective allocation-free — the arena is reused (`arena_allocs ==
+    /// 0`), no pool slot falls back to the heap (`slots_allocated == 0`),
+    /// the high-water mark fits inside the preallocated footprint, and
+    /// results stay exact.
+    #[test]
+    fn arena_cache_reuse_reports_zero_allocs() {
+        let n = 8;
+        let chunk = 16;
+        let p = pat::reduce_scatter(n, 2);
+        let inputs = rs_inputs(n, chunk, 42);
+        let opts = TransportOptions {
+            arena: Some(ArenaCache::new()),
+            ..Default::default()
+        };
+        let (_, rep1) = run_reduce_scatter(&p, &inputs, &opts).unwrap();
+        assert_eq!(rep1.arena_allocs, 1, "cold cache allocates exactly once");
+        assert!(rep1.arena_bytes > 0);
+        let (outs, rep2) = run_reduce_scatter(&p, &inputs, &opts).unwrap();
+        assert_eq!(rep2.arena_allocs, 0, "warm cache must not allocate an arena");
+        assert_eq!(rep2.slots_allocated, 0, "steady state must not heap-allocate slots");
+        assert!(rep2.arena_hw_bytes > 0);
+        assert!(
+            rep2.arena_hw_bytes <= rep2.arena_bytes,
+            "hw {} > footprint {}",
+            rep2.arena_hw_bytes,
+            rep2.arena_bytes
+        );
+        for r in 0..n {
+            let want: Vec<f32> = (0..chunk)
+                .map(|i| (0..n).map(|src| inputs[src][r * chunk + i]).sum())
+                .collect();
+            assert_eq!(outs[r], want, "rank={r}");
+        }
     }
 }

@@ -4,13 +4,20 @@
 //!
 //! * [`engine`] — one OS thread per rank, FIFO channels per directed pair,
 //!   blocking receives, non-blocking sends (the NCCL model where senders
-//!   write into pre-mapped remote staging buffers).
-//! * [`buffers`] — the bounded intermediate-buffer pool. PAT's defining
-//!   constraint is that staging/accumulator space is limited; the pool
-//!   enforces the bound and records peak occupancy (paper claim P3).
-//! * [`datapath`] — the receive-side reduction: either a pure-rust scalar
-//!   loop or the AOT-compiled Pallas kernel via PJRT
-//!   ([`crate::runtime::Registry::reduce_f32`]).
+//!   write into pre-mapped remote staging buffers). Wires carry
+//!   `(offset, len)` descriptors into the shared arena, not owned
+//!   vectors, and `drive_channels` batches every ready send per
+//!   scheduler wakeup.
+//! * [`arena`] — the preallocated page-aligned allocation behind the
+//!   whole datapath (wire regions + staging slots); a per-communicator
+//!   [`ArenaCache`] makes the steady-state path allocation-free.
+//! * [`buffers`] — the bounded intermediate-buffer pool, carved from the
+//!   arena. PAT's defining constraint is that staging/accumulator space
+//!   is limited; the pool enforces the bound and records peak occupancy
+//!   (paper claim P3).
+//! * [`datapath`] — the receive-side reduction: either a pure-rust
+//!   lane-chunked scalar kernel or the AOT-compiled Pallas kernel via the
+//!   sharded PJRT service ([`crate::runtime::PjrtService`]).
 //!
 //! With [`TransportOptions::trace`] set, every rank thread keeps a
 //! lock-free [`crate::obs::FlightRecorder`] ring (shared `Instant`
@@ -22,11 +29,13 @@
 //! plus a per-channel blame report (blocked step, peer, pending FIFO
 //! depth), which names the deadlock instead of just reporting it.
 
+pub mod arena;
 pub mod engine;
 pub mod buffers;
 pub mod datapath;
 
-pub use buffers::BufferPool;
+pub use arena::{Arena, ArenaCache, ArenaLease};
+pub use buffers::{BufferPool, Slot};
 pub use datapath::DataPath;
 pub use engine::{
     run_allgather, run_allgather_into, run_allreduce, run_allreduce_batch, run_reduce_scatter,

@@ -636,6 +636,176 @@ fn hier_fewer_cross_leaf_transfers_than_flat_pat() {
     assert!(rep_hier.msgs_by_level[0] > 0);
 }
 
+/// Arena-datapath axis: the zero-copy transport (one shared
+/// [`patcol::transport::ArenaCache`] leased across the WHOLE sweep, so
+/// later runs hit the warm path) over pat(a=2) × ranks 2..=64 × channels
+/// {1, 2, 4} × {ag, rs}, under the same enforced staging caps as the
+/// heap-era matrix. Results must be bit-identical to the reference sums,
+/// no run may fall back to heap-allocated slots, and the recorded arena
+/// high-water mark must stay within the leased footprint on the
+/// reduce-scatter path (where pool occupancy is physical slots, not
+/// reserve accounting). All-reduce and bucketed programs join the axis at
+/// a rank subset.
+#[test]
+fn arena_transport_matrix_to_64() {
+    let cache = patcol::transport::ArenaCache::new();
+    let chunk = 8usize; // divisible by every stripe count in the axis
+    let alg = Algorithm::Pat { aggregation: 2 };
+    for n in 2..=64usize {
+        let mut rng = Rng::new(n as u64 * 389);
+        for c in [1usize, 2, 4] {
+            // all-gather
+            let base = sched::generate(alg, Collective::AllGather, n).unwrap();
+            let base_peak = verify_program(&base).unwrap().peak_slots;
+            let p = sched::channel::split(&base, c).unwrap();
+            let cap = c * base_peak + p.stats().max_aggregation + 1;
+            let opts = TransportOptions {
+                slot_capacity: Some(cap),
+                validate: false,
+                arena: Some(cache.clone()),
+                ..Default::default()
+            };
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let mut want = Vec::new();
+            for i in &inputs {
+                want.extend_from_slice(i);
+            }
+            let (outs, rep) = run_allgather(&p, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("arena {alg}*{c} ag n={n}: {e}"));
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o, &want, "arena {alg}*{c} ag n={n} rank={r}");
+            }
+            assert!(
+                rep.peak_slots <= cap,
+                "arena {alg}*{c} ag n={n}: peak {} > cap {cap}",
+                rep.peak_slots
+            );
+            assert_eq!(
+                rep.slots_allocated, 0,
+                "arena {alg}*{c} ag n={n}: fell back to the heap"
+            );
+
+            // reduce-scatter
+            let base_rs = base.mirror();
+            let base_peak = verify_program(&base_rs).unwrap().peak_slots;
+            let prs = sched::channel::split(&base_rs, c).unwrap();
+            let cap = c * base_peak + prs.stats().max_aggregation + 1;
+            let opts = TransportOptions {
+                slot_capacity: Some(cap),
+                validate: false,
+                arena: Some(cache.clone()),
+                ..Default::default()
+            };
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let (outs, rep) = run_reduce_scatter(&prs, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("arena {alg}*{c} rs n={n}: {e}"));
+            for r in 0..n {
+                for i in 0..chunk {
+                    let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                    assert_eq!(outs[r][i], w, "arena {alg}*{c} rs n={n} rank={r} idx={i}");
+                }
+            }
+            assert!(
+                rep.peak_slots <= cap,
+                "arena {alg}*{c} rs n={n}: peak {} > cap {cap}",
+                rep.peak_slots
+            );
+            assert_eq!(
+                rep.slots_allocated, 0,
+                "arena {alg}*{c} rs n={n}: fell back to the heap"
+            );
+            assert!(
+                rep.arena_hw_bytes <= rep.arena_bytes,
+                "arena {alg}*{c} rs n={n}: high-water {} > footprint {}",
+                rep.arena_hw_bytes,
+                rep.arena_bytes
+            );
+        }
+    }
+
+    // All-reduce and bucketed programs on the same shared cache.
+    for n in [2usize, 3, 5, 8, 13, 16, 32, 64] {
+        let mut rng = Rng::new(n as u64 * 523);
+        let chunk = 4usize;
+        let rs_ph = PhaseAlg::Pat { aggregation: 2 };
+        let ag_ph = PhaseAlg::Pat { aggregation: 2 };
+        let per_segment = {
+            let one = Algorithm::Compose { rs: rs_ph, ag: ag_ph, segments: 1 };
+            let p1 = sched::generate(one, Collective::AllReduce, n).unwrap();
+            verify_program(&p1).unwrap().peak_slots
+        };
+        let segments = 2usize;
+        let alg = Algorithm::Compose { rs: rs_ph, ag: ag_ph, segments };
+        let p = sched::generate(alg, Collective::AllReduce, n).unwrap();
+        let cap = segments * per_segment + p.stats().max_aggregation + 1;
+        let opts = TransportOptions {
+            slot_capacity: Some(cap),
+            validate: false,
+            arena: Some(cache.clone()),
+            ..Default::default()
+        };
+        let nchunks = p.chunk_space();
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..nchunks * chunk).map(|_| rng.below(997) as f32).collect())
+            .collect();
+        let (outs, rep) = run_allreduce(&p, &inputs, &opts)
+            .unwrap_or_else(|e| panic!("arena {alg} n={n}: {e}"));
+        for (r, out) in outs.iter().enumerate() {
+            for i in 0..nchunks * chunk {
+                let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(out[i], want, "arena {alg} n={n} rank={r} idx={i}");
+            }
+        }
+        assert!(rep.peak_slots <= cap, "arena {alg} n={n}: peak > cap");
+        assert_eq!(rep.slots_allocated, 0, "arena {alg} n={n}: heap fallback");
+
+        // bucketed
+        let rsp = sched::generate(
+            Algorithm::Pat { aggregation: 2 },
+            Collective::ReduceScatter,
+            n,
+        )
+        .unwrap();
+        let agp =
+            sched::generate(Algorithm::Pat { aggregation: 2 }, Collective::AllGather, n).unwrap();
+        let per_single = {
+            let one = sched::compose::fuse(&rsp, &agp, 1).unwrap();
+            verify_program(&one).unwrap().peak_slots
+        };
+        let nb = 2usize;
+        let buckets = bucket::uniform(&rsp, &agp, nb, 1);
+        let pb = bucket::fuse(&buckets).unwrap();
+        let layout = BucketLayout::of(&buckets);
+        let cap = nb * per_single + pb.stats().max_aggregation + 1;
+        let opts = TransportOptions {
+            slot_capacity: Some(cap),
+            validate: false,
+            arena: Some(cache.clone()),
+            ..Default::default()
+        };
+        let elems: Vec<usize> = (0..nb).map(|b| 2 * (b + 1)).collect();
+        let chunk_elems = layout.chunk_elems(&elems);
+        let total: usize = chunk_elems.iter().sum();
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..total).map(|_| rng.below(997) as f32).collect())
+            .collect();
+        let (outs, rep) = run_allreduce_batch(&pb, &chunk_elems, &inputs, &opts)
+            .unwrap_or_else(|e| panic!("arena bkt{nb} n={n}: {e}"));
+        for (r, out) in outs.iter().enumerate() {
+            for i in 0..total {
+                let want: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                assert_eq!(out[i], want, "arena bkt{nb} n={n} rank={r} idx={i}");
+            }
+        }
+        assert!(rep.peak_slots <= cap, "arena bkt{nb} n={n}: peak > cap");
+        assert_eq!(rep.slots_allocated, 0, "arena bkt{nb} n={n}: heap fallback");
+    }
+}
+
 /// Claim P3 through the observability layer: the pool high-water counters
 /// sampled at every buffer-pool transition on the real transport stay
 /// within the reference verifier's measured occupancy bound — the traced

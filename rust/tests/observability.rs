@@ -146,6 +146,59 @@ fn both_executors_emit_one_schema() {
     assert!(s_tot.reduce_calls > 0 && t_tot.reduce_calls > 0);
 }
 
+/// Arena steady state, observed: with a warm shared
+/// [`patcol::transport::ArenaCache`], the second run of the same
+/// reduce-scatter performs zero datapath allocations — the report says so,
+/// and the v2 trace counters (`allocs`, `arena_hw_bytes`) record the same
+/// story per (rank, channel).
+#[test]
+fn steady_state_records_zero_allocs() {
+    use patcol::transport::{run_reduce_scatter, ArenaCache};
+
+    let p = sched::generate(
+        Algorithm::Pat { aggregation: usize::MAX },
+        Collective::ReduceScatter,
+        N,
+    )
+    .unwrap();
+    let total = p.chunk_space() * PER;
+    let mut rng = Rng::new(23);
+    let inputs: Vec<Vec<f32>> = (0..N)
+        .map(|_| {
+            let mut v = vec![0f32; total];
+            rng.fill_f32(&mut v);
+            v
+        })
+        .collect();
+    let opts = TransportOptions {
+        trace: true,
+        arena: Some(ArenaCache::new()),
+        ..Default::default()
+    };
+
+    let (out1, rep1) = run_reduce_scatter(&p, &inputs, &opts).unwrap();
+    assert_eq!(rep1.arena_allocs, 1, "cold cache allocates exactly one arena");
+    assert!(rep1.arena_bytes > 0);
+
+    let (out2, rep2) = run_reduce_scatter(&p, &inputs, &opts).unwrap();
+    assert_eq!(out1, out2, "warm run diverged");
+    assert_eq!(rep2.arena_allocs, 0, "warm cache re-allocated the arena");
+    assert_eq!(rep2.slots_allocated, 0, "steady state fell back to the heap");
+    assert!(rep2.arena_hw_bytes > 0, "high-water mark not recorded");
+    assert!(
+        rep2.arena_hw_bytes <= rep2.arena_bytes,
+        "high-water {} exceeds the arena footprint {}",
+        rep2.arena_hw_bytes,
+        rep2.arena_bytes
+    );
+
+    // The same facts flow through the trace counters (schema v2 fields).
+    let trace = rep2.trace.expect("trace requested");
+    let tot = trace.totals();
+    assert_eq!(tot.allocs, 0, "trace counters saw steady-state allocations");
+    assert!(tot.arena_hw_bytes > 0, "trace counters missing arena high-water");
+}
+
 #[test]
 fn spans_are_well_formed_and_grouped() {
     let p = program();

@@ -1,7 +1,6 @@
-//! Transport robustness: repeated operations (buffer-recycling
-//! steady-state), wider worlds, concurrent communicators, auto-tuned
-//! algorithm paths, and failure behaviour (timeouts surface as errors, not
-//! hangs).
+//! Transport robustness: repeated operations (arena-reuse steady-state),
+//! wider worlds, concurrent communicators, auto-tuned algorithm paths,
+//! and failure behaviour (timeouts surface as errors, not hangs).
 
 use std::time::Duration;
 
@@ -169,10 +168,12 @@ fn timeout_instead_of_hang() {
     assert!(err.to_string().contains("timed out"), "{err}");
 }
 
-/// Recycling kill-switch still yields correct results.
+/// Arena reuse across calls: a shared [`patcol::transport::ArenaCache`]
+/// leases the same backing allocation to every run, results stay exact,
+/// and after the first call the steady state allocates nothing (no fresh
+/// arena, no heap-fallback pool slots).
 #[test]
-fn no_recycle_env_correct() {
-    std::env::set_var("PATCOL_NO_RECYCLE", "1");
+fn arena_reuse_steady_state_correct() {
     let n = 8;
     let prog = pat::reduce_scatter(n, 2);
     let mut rng = Rng::new(3);
@@ -180,14 +181,25 @@ fn no_recycle_env_correct() {
     let inputs: Vec<Vec<f32>> = (0..n)
         .map(|_| (0..n * chunk).map(|_| rng.below(100) as f32).collect())
         .collect();
-    let (outs, _) = run_reduce_scatter(&prog, &inputs, &TransportOptions::default()).unwrap();
-    for r in 0..n {
-        for i in 0..chunk {
-            let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
-            assert_eq!(outs[r][i], w);
+    let opts = TransportOptions {
+        arena: Some(patcol::transport::ArenaCache::new()),
+        ..Default::default()
+    };
+    for round in 0..5 {
+        let (outs, rep) = run_reduce_scatter(&prog, &inputs, &opts).unwrap();
+        for r in 0..n {
+            for i in 0..chunk {
+                let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                assert_eq!(outs[r][i], w, "round {round} rank {r} idx {i}");
+            }
         }
+        if round == 0 {
+            assert_eq!(rep.arena_allocs, 1, "first call populates the cache");
+        } else {
+            assert_eq!(rep.arena_allocs, 0, "round {round} re-allocated the arena");
+        }
+        assert_eq!(rep.slots_allocated, 0, "round {round} fell back to the heap");
     }
-    std::env::remove_var("PATCOL_NO_RECYCLE");
 }
 
 /// all_reduce at awkward lengths (not divisible by nranks), repeated.
