@@ -121,5 +121,30 @@ fn main() {
         pat1_b / ring_b
     );
     report.param("large_parity", Json::num(pat1_b / ring_b));
+
+    // Träff optimality gaps (deterministic, simulator-derived): PAT's
+    // modeled time over the single-phase all-gather lower bound —
+    // max(⌈log2 n⌉ rounds, (n−1)/n of the payload through one NIC) — at
+    // the latency-bound and bandwidth-bound ends of the sweep. Param
+    // names end in `_gap_pct` so the bench-baseline harness
+    // (obs::baseline::optimality_gaps) picks them up and CI gates their
+    // growth against the committed BENCH_8.json.
+    let tuner = patcol::coordinator::Tuner::default();
+    let ag_bound = |size: usize| {
+        let total_bytes = n * size;
+        let rounds = patcol::core::ceil_log2(n) as f64 * tuner.cost.alpha_base;
+        let volume = (n - 1) as f64 / n as f64 * total_bytes as f64 / tuner.nic_bw;
+        rounds.max(volume)
+    };
+    let gap = |t: f64, bound: f64| 100.0 * (t - bound) / bound.max(1e-30);
+    let small_gap = gap(pat, ag_bound(small));
+    let large_gap = gap(pat1_b, ag_bound(big));
+    println!(
+        "Träff gap: pat(full) @ {} = {small_gap:.1}%, pat(a=1) @ {} = {large_gap:.1}%",
+        fmt_bytes(small),
+        fmt_bytes(big)
+    );
+    report.param("pat_small_gap_pct", Json::num(small_gap));
+    report.param("pat_large_gap_pct", Json::num(large_gap));
     report.save().unwrap();
 }

@@ -1,41 +1,50 @@
 //! Minimal CLI argument parser (clap is unavailable offline): a
-//! subcommand plus `--key value` / `--flag` pairs with typed accessors and
-//! generated usage text.
+//! subcommand, positional operands, plus `--key value` / `--flag` pairs
+//! with typed accessors and generated usage text.
 
 use std::collections::BTreeMap;
 
 use crate::core::{Error, Result};
 use crate::coordinator::config::parse_bytes;
 
-/// Parsed command line: subcommand + options.
+/// Parsed command line: subcommand + positionals + options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
+    positional: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
     /// Parse `argv[1..]`: first token is the subcommand; `--key value`
-    /// pairs and bare `--flag`s follow.
+    /// pairs and bare `--flag`s follow. Bare tokens outside an option
+    /// position are positional operands (`patcol analyze TRACE.json`),
+    /// in order.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut it = argv.into_iter().peekable();
         let command = it.next().unwrap_or_default();
+        let mut positional = Vec::new();
         let mut opts = BTreeMap::new();
         let mut flags = Vec::new();
         while let Some(tok) = it.next() {
-            let key = tok
-                .strip_prefix("--")
-                .ok_or_else(|| Error::Config(format!("expected --option, got {tok:?}")))?
-                .to_string();
+            let Some(key) = tok.strip_prefix("--") else {
+                positional.push(tok);
+                continue;
+            };
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
-                    opts.insert(key, it.next().unwrap());
+                    opts.insert(key.to_string(), it.next().unwrap());
                 }
-                _ => flags.push(key),
+                _ => flags.push(key.to_string()),
             }
         }
-        Ok(Args { command, opts, flags })
+        Ok(Args { command, positional, opts, flags })
+    }
+
+    /// Positional operands, in command-line order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -134,7 +143,15 @@ mod tests {
     }
 
     #[test]
-    fn rejects_positional_garbage() {
-        assert!(Args::parse(vec!["run".into(), "oops".into()]).is_err());
+    fn collects_positionals() {
+        let a = args("analyze trace.json --json --ranks 16");
+        assert_eq!(a.positional(), ["trace.json"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.usize("ranks", 0).unwrap(), 16);
+        // an option value is consumed by its option, not made positional
+        let a = args("run --alg pat extra.json");
+        assert_eq!(a.str("alg", ""), "pat");
+        assert_eq!(a.positional(), ["extra.json"]);
+        assert!(args("run").positional().is_empty());
     }
 }

@@ -87,6 +87,13 @@ pub struct CommConfig {
     /// [`crate::obs::chrome_trace`]. Off by default — the disabled
     /// recorder costs one branch per event site.
     pub trace: bool,
+    /// Append one [`crate::obs::calib::CalibRecord`] (tuner prediction vs
+    /// transport wall time) to this JSONL history per collective call
+    /// (config key `calib_history`, CLI `--calib-history <path>`). The
+    /// drift trends over this file are what justify tightening the
+    /// tuner's `*_CALIBRATION_TOLERANCE` constants. `None` records
+    /// nothing.
+    pub calib_history: Option<PathBuf>,
 }
 
 impl Default for CommConfig {
@@ -105,6 +112,7 @@ impl Default for CommConfig {
             parallel_links: None,
             buckets: None,
             trace: false,
+            calib_history: None,
         }
     }
 }
@@ -321,6 +329,65 @@ impl Communicator {
         }
     }
 
+    /// Record one predicted-vs-measured calibration point into the
+    /// configured drift history ([`crate::obs::calib`]). The prediction
+    /// is recomputed from the tuner's closed form for the *resolved*
+    /// algorithm — the same formula the crossover sweep ranked it by —
+    /// so the residual measures model error, not selection error.
+    /// Best-effort: an unwritable history warns on stderr rather than
+    /// failing a collective that already produced correct output.
+    fn record_calib(&self, coll: Collective, alg: Algorithm, chunk_bytes: usize, rep: &CollectiveReport) {
+        if self.cfg.calib_history.is_none() {
+            return;
+        }
+        let pl = self.cfg.placement.as_ref();
+        let predicted_s = match (coll, alg) {
+            (Collective::AllReduce, Algorithm::Compose { rs, ag, segments }) => {
+                let seg_bytes = (chunk_bytes / segments.max(1)).max(1);
+                self.tuner
+                    .predict_allreduce(rs, ag, segments, self.cfg.nranks, seg_bytes, pl)
+            }
+            (_, alg) => match PhaseAlg::from_algorithm(alg) {
+                Ok(ph) => self.tuner.predict_phase(ph, self.cfg.nranks, chunk_bytes, coll, pl),
+                // No closed form for this spelling — nothing to compare.
+                Err(_) => return,
+            },
+        };
+        let bytes = match coll {
+            Collective::AllGather => chunk_bytes,
+            _ => chunk_bytes.saturating_mul(self.cfg.nranks),
+        };
+        self.append_calib(coll, alg.name(), bytes, predicted_s, rep);
+    }
+
+    fn append_calib(
+        &self,
+        coll: Collective,
+        alg: String,
+        bytes: usize,
+        predicted_s: f64,
+        rep: &CollectiveReport,
+    ) {
+        let Some(path) = &self.cfg.calib_history else { return };
+        let rec = crate::obs::calib::CalibRecord {
+            collective: match coll {
+                Collective::AllGather => "allgather",
+                Collective::ReduceScatter => "reduce_scatter",
+                Collective::AllReduce => "allreduce",
+            }
+            .into(),
+            alg,
+            nranks: self.cfg.nranks,
+            bytes,
+            channels: rep.channels,
+            predicted_us: predicted_s * 1e6,
+            measured_us: rep.transport.wall.as_secs_f64() * 1e6,
+        };
+        if let Err(e) = crate::obs::calib::append(path, &rec) {
+            eprintln!("[calib] cannot append to {}: {e}", path.display());
+        }
+    }
+
     /// All-gather: `inputs[r]` is rank r's contribution; every output is
     /// the concatenation of all contributions.
     pub fn all_gather(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
@@ -353,7 +420,9 @@ impl Communicator {
         };
         if len % stripes == 0 {
             let (out, rep) = transport::run_allgather(&prog, inputs, &self.options(prog.channels))?;
-            return Ok((out, report(rep)));
+            let cr = report(rep);
+            self.record_calib(Collective::AllGather, alg, chunk_bytes, &cr);
+            return Ok((out, cr));
         }
         let padded = len.div_ceil(stripes) * stripes;
         let padded_inputs: Vec<Vec<f32>> = inputs
@@ -376,7 +445,9 @@ impl Communicator {
                 trimmed
             })
             .collect();
-        Ok((outs, report(rep)))
+        let cr = report(rep);
+        self.record_calib(Collective::AllGather, alg, chunk_bytes, &cr);
+        Ok((outs, cr))
     }
 
     /// Reduce-scatter: `inputs[r]` holds rank r's contribution to all `n`
@@ -469,15 +540,14 @@ impl Communicator {
                 v
             })
             .collect();
-        Ok((
-            outs,
-            CollectiveReport {
-                algorithm: alg,
-                channels: prog.channels,
-                steps: prog.steps,
-                transport: rep,
-            },
-        ))
+        let cr = CollectiveReport {
+            algorithm: alg,
+            channels: prog.channels,
+            steps: prog.steps,
+            transport: rep,
+        };
+        self.record_calib(Collective::AllReduce, alg, chunk_bytes, &cr);
+        Ok((outs, cr))
     }
 
     /// Bucketed all-reduce — the gradient-bucket entry point
@@ -570,15 +640,31 @@ impl Communicator {
                 pos += m * elems[b];
             }
         }
-        Ok((
-            result,
-            CollectiveReport {
-                algorithm: Algorithm::Compose { rs, ag, segments },
-                channels: prog.channels,
-                steps: prog.steps,
-                transport: rep,
-            },
-        ))
+        let cr = CollectiveReport {
+            algorithm: Algorithm::Compose { rs, ag, segments },
+            channels: prog.channels,
+            steps: prog.steps,
+            transport: rep,
+        };
+        if self.cfg.calib_history.is_some() {
+            let bucket_bytes: Vec<usize> = lens.iter().map(|&l| l * 4).collect();
+            let predicted_s = self.tuner.predict_bucketed(
+                rs,
+                ag,
+                &bucket_bytes,
+                segments,
+                n,
+                self.cfg.placement.as_ref(),
+            );
+            self.append_calib(
+                Collective::AllReduce,
+                format!("bkt{nb}:{}+{}:{segments}", rs.spec(), ag.spec()),
+                total * 4,
+                predicted_s,
+                &cr,
+            );
+        }
+        Ok((result, cr))
     }
 
     /// The (rs, ag, segments) phase triple an all-reduce call resolves to
@@ -658,7 +744,9 @@ impl Communicator {
             // rejected by the transport with the pre-channel message.)
             let (out, rep) =
                 transport::run_reduce_scatter(&prog, inputs, &self.options(prog.channels))?;
-            return Ok((out, report(rep)));
+            let cr = report(rep);
+            self.record_calib(Collective::ReduceScatter, alg, chunk_bytes, &cr);
+            return Ok((out, cr));
         }
         if inputs.iter().any(|v| v.len() != total) {
             return Err(Error::Config("ragged reduce-scatter inputs".into()));
@@ -684,7 +772,9 @@ impl Communicator {
                 v
             })
             .collect();
-        Ok((outs, report(rep)))
+        let cr = report(rep);
+        self.record_calib(Collective::ReduceScatter, alg, chunk_bytes, &cr);
+        Ok((outs, cr))
     }
 }
 
@@ -1068,6 +1158,42 @@ mod tests {
         let err = c.all_reduce(&inputs).unwrap_err();
         assert!(err.to_string().contains("channel"), "{err}");
         assert!(c.all_gather(&inputs).is_ok());
+    }
+
+    /// With `calib_history` set, every collective call appends one
+    /// predicted-vs-measured record; predictions are positive and keyed
+    /// by the resolved algorithm.
+    #[test]
+    fn calib_history_records_every_collective() {
+        let path = std::env::temp_dir().join(format!(
+            "patcol_comm_calib_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let n = 8;
+        let c = Communicator::new(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+            calib_history: Some(path.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 16]).collect();
+        c.all_gather(&inputs).unwrap();
+        let rs_in: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; n * 4]).collect();
+        c.reduce_scatter(&rs_in).unwrap();
+        c.all_reduce(&inputs).unwrap();
+        let recs = crate::obs::calib::load(&path);
+        assert_eq!(recs.len(), 3, "one record per collective call");
+        let colls: Vec<&str> = recs.iter().map(|r| r.collective.as_str()).collect();
+        assert_eq!(colls, ["allgather", "reduce_scatter", "allreduce"]);
+        for r in &recs {
+            assert_eq!(r.nranks, n);
+            assert!(r.predicted_us > 0.0, "{:?}", r);
+            assert!(r.measured_us > 0.0, "{:?}", r);
+        }
+        assert!(recs[0].alg.contains("pat"), "{}", recs[0].alg);
+        std::fs::remove_file(&path).unwrap();
     }
 
     /// Channel auto-selection: single-link fabrics stay at one channel;

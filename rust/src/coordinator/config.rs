@@ -20,6 +20,7 @@
 //! | `artifacts` | artifact directory |
 //! | `validate` | `true`/`false` |
 //! | `trace` | `true`/`false` — capture an observability trace ([`crate::obs`]) |
+//! | `calib_history` | JSONL file appended with one predicted-vs-measured [`crate::obs::calib::CalibRecord`] per collective call |
 //! | `placement` | rank → node placement (grammar below) |
 //! | `ranks_per_node` | shorthand for `placement = uniform:<k>` |
 //! | `inter_gbps` | per-node uplink bandwidth for the tuner's flat-vs-hier crossover |
@@ -193,6 +194,9 @@ impl ConfigMap {
         }
         if let Some(v) = self.get_bool("trace")? {
             cfg.trace = v;
+        }
+        if let Some(p) = self.get("calib_history") {
+            cfg.calib_history = Some(PathBuf::from(p));
         }
         if let Some(spec) = self.get("placement") {
             cfg.placement = Some(Placement::parse(spec, cfg.nranks)?);
@@ -405,6 +409,17 @@ mod tests {
             .unwrap()
             .to_comm_config()
             .is_err());
+    }
+
+    #[test]
+    fn calib_history_key() {
+        let cfg = ConfigMap::parse("nranks = 8\ncalib_history = runs/calib.jsonl\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.calib_history, Some(PathBuf::from("runs/calib.jsonl")));
+        let cfg = ConfigMap::parse("nranks = 8\n").unwrap().to_comm_config().unwrap();
+        assert_eq!(cfg.calib_history, None);
     }
 
     #[test]

@@ -42,7 +42,11 @@ use crate::sim::CostModel;
 /// message while the simulator overlaps arrivals, and (b) inter-node
 /// link contention, which the closed form folds into the single
 /// `inter_bw` rate. Asserted by `tests/tuner_and_config.rs`; tightening
-/// this constant is the open calibration item in ROADMAP.md.
+/// this constant is the open calibration item in ROADMAP.md — progress
+/// on it is measurable from the calibration-drift history
+/// ([`crate::obs::calib`]): run with `--calib-history FILE` and watch
+/// the per-key mean residual in
+/// [`crate::obs::calib::drift_summary`] shrink.
 pub const HIER_CALIBRATION_TOLERANCE: f64 = 6.0;
 
 /// Calibration constant for [`Tuner::predict_channels`] against the event
@@ -62,7 +66,10 @@ pub const HIER_CALIBRATION_TOLERANCE: f64 = 6.0;
 /// flows of one leaf can stack on one spine uplink, stretching the
 /// simulated time a further few-fold). Asserted by
 /// `tests/tuner_and_config.rs`; tightening this constant means modeling
-/// collision probability, not just rail count, in the closed form.
+/// collision probability, not just rail count, in the closed form. Like
+/// the hierarchy tolerance, drift is now recordable: the
+/// [`crate::obs::calib`] history keys on channel count, so per-C
+/// residual trends fall out of `drift_summary`.
 pub const CHANNEL_CALIBRATION_TOLERANCE: f64 = 10.0;
 
 /// A tuner decision with its predicted cost.

@@ -11,6 +11,12 @@
 //!   observability layer on, write Chrome trace JSON for each executor, and
 //!   print per-(rank, channel) counters plus the Träff lower-bound
 //!   comparison.
+//! * `analyze`  — read an exported Chrome trace back and report the
+//!   critical path (wire/reduce/stall/wait decomposition), the stall
+//!   taxonomy and occupancy percentiles, and the Träff optimality gap.
+//! * `baseline` — compare a bench-baseline document (written by running
+//!   the bench suite with `PATCOL_BASELINE` set) against the committed
+//!   one; exits nonzero on regressions — the CI gate.
 //! * `sweep`    — compare algorithms across sizes on the simulator.
 //! * `tune`     — show the tuner's decision for a configuration.
 //! * `selftest` — quick correctness matrix across algorithms and rank
@@ -44,6 +50,8 @@ fn main() {
         "run" => cmd_run(&args),
         "simulate" => cmd_simulate(&args),
         "trace" => cmd_trace(&args),
+        "analyze" => cmd_analyze(&args),
+        "baseline" => cmd_baseline(&args),
         "sweep" => cmd_sweep(&args),
         "tune" => cmd_tune(&args),
         "selftest" => cmd_selftest(&args),
@@ -79,6 +87,9 @@ COMMANDS
   trace     --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--exec sim|transport|both] [--out STEM]
             [--topo ...] [--smoke]
+  analyze   TRACE.json [--json] [--bytes BYTES] [--ranks N]
+            [--collective ag|rs|ar]
+  baseline  --current FILE [--committed FILE]
   sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
   tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs|ar]
             [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
@@ -107,12 +118,22 @@ SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
   trace-event JSON (load in Perfetto / chrome://tracing); `trace` runs one
   op on both executors, writes STEM.sim.json / STEM.transport.json, and
   prints per-(rank, channel) counters + the Träff lower-bound comparison
-  (--smoke: fixed 8-rank/4KiB run that re-parses its own output)"
+  (--smoke: fixed 8-rank/4KiB run that re-parses its own output)
+--calib-history PATH (run) appends one predicted-vs-measured record per
+  collective to a JSONL drift history (see obs::calib)
+`analyze` reads a trace either executor exported and prints the critical
+  path with its send/wire/recv/reduce/stall/wait decomposition, per-step
+  buckets, stall taxonomy, occupancy percentiles, and the Träff
+  optimality gap (--bytes overrides the payload estimate; --json for
+  machine-readable output)
+`baseline` compares the bench document written under PATCOL_BASELINE
+  against the committed one (default BENCH_8.json) and exits nonzero on
+  any regression"
     );
 }
 
-fn collective(args: &Args) -> Result<Collective> {
-    match args.str("collective", "ag").as_str() {
+fn parse_collective(s: &str) -> Result<Collective> {
+    match s {
         "ag" | "allgather" | "all_gather" => Ok(Collective::AllGather),
         "rs" | "reducescatter" | "reduce_scatter" => Ok(Collective::ReduceScatter),
         "ar" | "allreduce" | "all_reduce" => Ok(Collective::AllReduce),
@@ -120,6 +141,10 @@ fn collective(args: &Args) -> Result<Collective> {
             "unknown collective {other:?}"
         ))),
     }
+}
+
+fn collective(args: &Args) -> Result<Collective> {
+    parse_collective(&args.str("collective", "ag"))
 }
 
 /// Collective for this invocation: a composed algorithm always runs as
@@ -353,6 +378,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         channels,
         buckets,
         trace: trace_path.is_some(),
+        calib_history: args.opt_str("calib-history").map(std::path::PathBuf::from),
         ..Default::default()
     })?;
     let chunk = (size / 4).max(1);
@@ -488,6 +514,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         fmt_bytes(rep.max_link_bytes),
         rep.busiest_link_utilization * 100.0
     );
+    // Fabric contention (obs::metrics LinkStat): how long messages queued
+    // behind busy links, and where. Zero on an uncontended run.
+    let mut contended: Vec<_> = rep
+        .link_stats
+        .iter()
+        .filter(|l| l.contended_s > 0.0)
+        .collect();
+    if !contended.is_empty() {
+        let total: f64 = contended.iter().map(|l| l.contended_s).sum();
+        contended.sort_by(|a, b| b.contended_s.total_cmp(&a.contended_s));
+        println!(
+            "  contention: {} of {} links queued messages, {} total queueing",
+            contended.len(),
+            rep.link_stats.len(),
+            fmt_time_s(total)
+        );
+        for l in contended.iter().take(3) {
+            println!(
+                "    link {}: {} queued, {:.0}% busy, {} carried",
+                l.link,
+                fmt_time_s(l.contended_s),
+                l.utilization * 100.0,
+                fmt_bytes(l.bytes)
+            );
+        }
+    }
     Ok(())
 }
 
@@ -566,9 +618,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let total_bytes = n * stripes * per * 4; // full per-rank vector
 
     fn counters_table(title: &str, trace: &Trace, tags: &ChannelTags) {
+        // Critical-path share per (rank, channel): how much of the
+        // timed chain's covered time ran on this stream (obs::critpath).
+        let share = patcol::obs::critical_path(trace)
+            .map(|cp| cp.share)
+            .unwrap_or_default();
         let mut t = Table::new([
             "rank", "ch", "tag", "tx msgs", "tx bytes", "rx msgs", "rx bytes", "stall",
-            "reduces", "pool peak", "arena hw", "allocs",
+            "crit %", "reduces", "pool peak", "arena hw", "allocs",
         ]);
         for (&(r, k), c) in &trace.counters {
             t.row([
@@ -580,6 +637,10 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 format!("{}", c.msgs_recv),
                 fmt_bytes(c.bytes_recv),
                 fmt_time_s(c.stall_seconds),
+                match share.get(&(r, k)) {
+                    Some(f) => format!("{:.0}%", f * 100.0),
+                    None => "-".to_string(),
+                },
                 format!("{}", c.reduce_calls),
                 format!("{}", c.pool_peak),
                 fmt_bytes(c.arena_hw_bytes),
@@ -704,6 +765,241 @@ fn cmd_trace(args: &Args) -> Result<()> {
         println!("smoke OK: {} trace file(s) round-tripped", written.len());
     }
     Ok(())
+}
+
+/// `patcol analyze` — read an exported Chrome trace (either executor's)
+/// back through [`patcol::obs::import_chrome_trace`] and report what the
+/// timeline *means*: the critical path and its decomposition
+/// ([`patcol::obs::critpath`]), the aggregate stall/occupancy metrics
+/// ([`patcol::obs::metrics`]), and the elapsed time against Träff's
+/// lower bound as an optimality-gap percentage.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use patcol::obs::{critical_path, import_chrome_trace, metrics};
+    use patcol::util::json::Json;
+
+    let path = args
+        .positional()
+        .first()
+        .cloned()
+        .or_else(|| args.opt_str("trace"))
+        .ok_or_else(|| {
+            patcol::core::Error::Config("usage: patcol analyze TRACE.json [--json]".into())
+        })?;
+    let doc = patcol::util::json::parse(&std::fs::read_to_string(&path)?)?;
+    let trace = import_chrome_trace(&doc)?;
+    let cp = critical_path(&trace).ok_or_else(|| {
+        patcol::core::Error::Verify(format!("{path}: trace has no op spans to analyze"))
+    })?;
+    let m = metrics(&trace);
+
+    // World shape: inferred from the trace, overridable for padded or
+    // partial captures.
+    let inferred_n = trace.events.iter().map(|e| e.rank + 1).max().unwrap_or(1);
+    let n = args.usize("ranks", inferred_n)?;
+    let coll = parse_collective(&args.str("collective", "ar"))?;
+    // Per-rank payload for the lower bound: `--bytes`, or estimated from
+    // the recorded wire traffic by inverting the volume convention
+    // (all-reduce moves 2(n-1)/n of the payload per NIC, AG/RS (n-1)/n).
+    let wire_bytes: usize = trace.counters.values().map(|c| c.bytes_sent).sum();
+    let est = if n > 1 {
+        let per_rank = wire_bytes / n;
+        match coll {
+            Collective::AllReduce => per_rank * n / (2 * (n - 1)),
+            _ => per_rank * n / (n - 1),
+        }
+    } else {
+        wire_bytes
+    };
+    let bytes = args.bytes("bytes", est)?;
+
+    let tuner = Tuner::default();
+    let bound = match coll {
+        Collective::AllReduce => tuner.allreduce_lower_bound(n, bytes),
+        _ if n <= 1 => 0.0,
+        _ => {
+            let rounds = patcol::core::ceil_log2(n) as f64 * tuner.cost.alpha_base;
+            let volume = (n - 1) as f64 / n as f64 * bytes as f64 / tuner.nic_bw;
+            rounds.max(volume)
+        }
+    };
+    let gap_pct = if bound > 0.0 {
+        100.0 * (cp.elapsed - bound) / bound
+    } else {
+        0.0
+    };
+
+    if args.flag("json") {
+        let out = Json::obj(vec![
+            ("schema_version", Json::num(patcol::obs::SCHEMA_VERSION as f64)),
+            ("trace", Json::str(path)),
+            ("critical_path", cp.to_json()),
+            ("metrics", m.to_json()),
+            (
+                "optimality",
+                Json::obj(vec![
+                    ("collective", Json::str(format!("{coll}"))),
+                    ("nranks", Json::num(n as f64)),
+                    ("bytes_per_rank", Json::num(bytes as f64)),
+                    ("lower_bound_s", Json::num(bound)),
+                    ("elapsed_s", Json::num(cp.elapsed)),
+                    ("gap_pct", Json::num(gap_pct)),
+                ]),
+            ),
+        ]);
+        println!("{}", out.to_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "analyze {path}: {} events, {} ranks, {coll}, {} per rank",
+        trace.events.len(),
+        n,
+        fmt_bytes(bytes)
+    );
+    if trace.dropped > 0 {
+        println!("  NOTE: {} events were dropped at capture; figures are partial", trace.dropped);
+    }
+    println!(
+        "critical path: {} ops (structural depth {}), elapsed {}, chain covers {} ({:.1}%)",
+        cp.nodes.len(),
+        cp.dag_depth,
+        fmt_time_s(cp.elapsed),
+        fmt_time_s(cp.covered),
+        cp.coverage_pct()
+    );
+    let d = cp.decomp;
+    let mut t = Table::new(["bucket", "seconds", "% of elapsed"]);
+    let pct = |x: f64| {
+        if cp.elapsed > 0.0 {
+            format!("{:.1}%", 100.0 * x / cp.elapsed)
+        } else {
+            "-".to_string()
+        }
+    };
+    for (name, v) in [
+        ("send", d.send_s),
+        ("wire", d.wire_s),
+        ("recv", d.recv_s),
+        ("reduce", d.reduce_s),
+        ("stall", d.stall_s),
+        ("wait", d.wait_s),
+    ] {
+        t.row([name.to_string(), fmt_time_s(v), pct(v)]);
+    }
+    print!("{}", t.render());
+
+    let mut st = Table::new(["step", "send", "wire", "recv", "reduce", "stall", "wait"]);
+    for (s, d) in &cp.per_step {
+        st.row([
+            format!("{s}"),
+            fmt_time_s(d.send_s),
+            fmt_time_s(d.wire_s),
+            fmt_time_s(d.recv_s),
+            fmt_time_s(d.reduce_s),
+            fmt_time_s(d.stall_s),
+            fmt_time_s(d.wait_s),
+        ]);
+    }
+    println!("per-step decomposition:");
+    print!("{}", st.render());
+
+    // Stall taxonomy: nonzero rows only (every stream has a row; at 64
+    // ranks the zero rows are noise), capped for readability.
+    let nonzero: Vec<_> = m
+        .stalls
+        .iter()
+        .filter(|(_, s)| s.total() > 0.0)
+        .collect();
+    println!(
+        "stall taxonomy: {} of {} (rank, channel) streams stalled, total {}",
+        nonzero.len(),
+        m.stalls.len(),
+        fmt_time_s(m.stall_total())
+    );
+    let mut sh = Table::new(["rank", "ch", "warmup", "steady"]);
+    for (&(r, k), s) in nonzero.iter().take(20) {
+        sh.row([
+            format!("{r}"),
+            format!("{k}"),
+            fmt_time_s(s.warmup_s),
+            fmt_time_s(s.steady_s),
+        ]);
+    }
+    print!("{}", sh.render());
+    if nonzero.len() > 20 {
+        println!("  ... {} more rows (use --json for all)", nonzero.len() - 20);
+    }
+
+    if let Some(p) = m.pool {
+        println!(
+            "pool occupancy (slots): p50={} p90={} p99={} max={} over {} samples",
+            p.p50, p.p90, p.p99, p.max, p.samples
+        );
+    }
+    if let Some(a) = m.arena {
+        println!(
+            "arena occupancy: p50={} p90={} p99={} max={} over {} samples",
+            fmt_bytes(a.p50),
+            fmt_bytes(a.p90),
+            fmt_bytes(a.p99),
+            fmt_bytes(a.max),
+            a.samples
+        );
+    }
+    println!(
+        "Träff lower bound ({coll}, {n} ranks, {} per rank): {} → gap {:+.1}%",
+        fmt_bytes(bytes),
+        fmt_time_s(bound),
+        gap_pct
+    );
+    Ok(())
+}
+
+/// `patcol baseline` — compare a freshly written bench-baseline document
+/// against the committed one ([`patcol::obs::baseline::check`]); exits
+/// nonzero on any regression. The CI bench-baseline job's gate.
+fn cmd_baseline(args: &Args) -> Result<()> {
+    use patcol::obs::baseline;
+    use std::path::Path;
+
+    let current = args
+        .opt_str("current")
+        .or_else(|| args.positional().first().cloned())
+        .ok_or_else(|| {
+            patcol::core::Error::Config(
+                "usage: patcol baseline --current NEW.json [--committed BENCH_8.json]".into(),
+            )
+        })?;
+    let committed = args.str("committed", "BENCH_8.json");
+    let cur = baseline::load(Path::new(&current))?;
+    let base = baseline::load(Path::new(&committed))?;
+    match (baseline::reduce_path_ratio(&cur), baseline::reduce_path_ratio(&base)) {
+        (Some(c), Some(b)) => {
+            println!("reduce-path slice@2/owned ratio: {c:.2} (committed {b:.2})")
+        }
+        (Some(c), None) => println!("reduce-path slice@2/owned ratio: {c:.2} (no committed figure)"),
+        _ => {}
+    }
+    let base_gaps = baseline::optimality_gaps(&base);
+    for (k, v) in baseline::optimality_gaps(&cur) {
+        match base_gaps.iter().find(|(bk, _)| *bk == k) {
+            Some((_, b)) => println!("{k}: {v:.2}% (committed {b:.2}%)"),
+            None => println!("{k}: {v:.2}% (no committed figure)"),
+        }
+    }
+    let fails = baseline::check(&cur, &base);
+    if fails.is_empty() {
+        println!("baseline OK: {current} vs {committed}");
+        Ok(())
+    } else {
+        for f in &fails {
+            eprintln!("REGRESSION: {f}");
+        }
+        Err(patcol::core::Error::Verify(format!(
+            "{} baseline regression(s) vs {committed}",
+            fails.len()
+        )))
+    }
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {

@@ -1,0 +1,286 @@
+//! Bench-baseline harness: stamp every bench run into one trajectory
+//! document and check new runs against the committed baseline.
+//!
+//! Every [`crate::report::Report::save`] call checks the
+//! [`BASELINE_ENV`] environment variable; when set, the report is also
+//! merged into the baseline document it names (created on first use).
+//! Running the bench suite with `PATCOL_BASELINE=BENCH_8.json` thus
+//! produces a single schema-stamped JSON file with one entry per bench
+//! — the repo's recorded bench trajectory, committed at the repo root
+//! and compared against by the CI bench-baseline job.
+//!
+//! The document is deterministic (no timestamps, sorted keys) so that
+//! re-running the suite on identical code yields a clean diff:
+//!
+//! ```text
+//! { "schema_version": 3,
+//!   "benches": { "latency_vs_size": { ...report... },
+//!                "transport_hotpath": { ...report... } } }
+//! ```
+//!
+//! [`check`] compares two such documents on machine-independent
+//! metrics only — the reduce-path ABI speedup *ratio* from
+//! `transport_hotpath` and the simulator-derived Träff optimality-gap
+//! percentages from `latency_vs_size` — never absolute wall times,
+//! which would tie the committed baseline to one machine.
+
+use std::path::Path;
+
+use crate::core::Result;
+use crate::obs::trace::SCHEMA_VERSION;
+use crate::util::json::{self, Json};
+
+/// Environment variable naming the baseline document to stamp bench
+/// reports into.
+pub const BASELINE_ENV: &str = "PATCOL_BASELINE";
+
+/// Tolerated relative loss of the reduce-path speedup ratio vs the
+/// committed baseline (the absolute ≥ 2× floor applies regardless).
+const RATIO_SLACK: f64 = 0.75;
+/// Tolerated relative growth of an optimality-gap percentage vs the
+/// committed baseline, plus one percentage point of absolute slack.
+const GAP_GROWTH: f64 = 1.10;
+const GAP_SLACK_PCT: f64 = 1.0;
+
+/// Load a baseline document (missing file → empty skeleton).
+pub fn load(path: &Path) -> Result<Json> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => json::parse(&text),
+        Err(_) => Ok(empty()),
+    }
+}
+
+fn empty() -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+        ("benches", Json::Obj(Default::default())),
+    ])
+}
+
+/// Merge one bench report into the baseline document at `path`:
+/// read-modify-write of `benches[name]`, preserving other entries.
+pub fn stamp(path: &Path, name: &str, report: &Json) -> Result<()> {
+    let mut doc = load(path)?;
+    if doc.get("benches").and_then(|b| b.as_obj()).is_none() {
+        doc = empty();
+    }
+    if let Json::Obj(top) = &mut doc {
+        top.insert("schema_version".into(), Json::num(SCHEMA_VERSION as f64));
+        if let Some(Json::Obj(benches)) = top.get_mut("benches") {
+            benches.insert(name.to_string(), report.clone());
+        }
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}
+
+fn bench<'a>(doc: &'a Json, name: &str) -> Option<&'a Json> {
+    doc.get("benches").and_then(|b| b.get(name))
+}
+
+/// The reduce-path ABI speedup ratio of a `transport_hotpath` report:
+/// slice-descriptor GB/s at 2 shards over the owned-round-trip GB/s.
+/// Machine-independent to first order — both sides run on the same
+/// cores — which is why the baseline gates on the ratio, not on GB/s.
+pub fn reduce_path_ratio(doc: &Json) -> Option<f64> {
+    let rows = bench(doc, "transport_hotpath")?.get("rows")?.as_arr()?;
+    let find = |abi: &str, shards: usize| {
+        rows.iter().find_map(|r| {
+            if r.get("kind")?.as_str()? != "reduce_path" {
+                return None;
+            }
+            if r.get("abi")?.as_str()? != abi || r.get("shards")?.as_usize()? != shards {
+                return None;
+            }
+            r.get("gbps")?.as_f64()
+        })
+    };
+    let owned = find("owned", 1)?;
+    let slice2 = find("slice", 2)?;
+    if owned > 0.0 {
+        Some(slice2 / owned)
+    } else {
+        None
+    }
+}
+
+/// The Träff optimality-gap percentages of a `latency_vs_size` report
+/// (deterministic: simulator-derived), as `(param, pct)` pairs.
+pub fn optimality_gaps(doc: &Json) -> Vec<(String, f64)> {
+    let Some(params) = bench(doc, "latency_vs_size")
+        .and_then(|b| b.get("params"))
+        .and_then(|p| p.as_obj())
+    else {
+        return Vec::new();
+    };
+    params
+        .iter()
+        .filter(|(k, _)| k.ends_with("_gap_pct"))
+        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+        .collect()
+}
+
+/// Compare `current` against the `committed` baseline. Returns one
+/// message per regression; empty means the gate passes. Metrics absent
+/// from the committed baseline are not gated (first runs pass), but
+/// metrics the committed baseline has and `current` lacks are
+/// regressions — a bench silently dropping out must fail loudly.
+pub fn check(current: &Json, committed: &Json) -> Vec<String> {
+    let mut fails = Vec::new();
+
+    let cur_ratio = reduce_path_ratio(current);
+    if let Some(r) = cur_ratio {
+        if r < 2.0 {
+            fails.push(format!(
+                "transport_hotpath reduce-path floor: slice@2/owned ratio {r:.2} < 2.0"
+            ));
+        }
+    }
+    match (cur_ratio, reduce_path_ratio(committed)) {
+        (Some(cur), Some(base)) => {
+            if cur < base * RATIO_SLACK {
+                fails.push(format!(
+                    "transport_hotpath reduce-path ratio regressed: {cur:.2} < \
+                     {RATIO_SLACK} x committed {base:.2}"
+                ));
+            }
+        }
+        (None, Some(_)) => {
+            fails.push("transport_hotpath reduce-path rows missing from current run".into())
+        }
+        _ => {}
+    }
+
+    let cur_gaps = optimality_gaps(current);
+    for (name, base) in optimality_gaps(committed) {
+        match cur_gaps.iter().find(|(k, _)| *k == name) {
+            Some(&(_, cur)) => {
+                if cur > base * GAP_GROWTH + GAP_SLACK_PCT {
+                    fails.push(format!(
+                        "latency_vs_size {name} regressed: {cur:.2}% > \
+                         {GAP_GROWTH} x committed {base:.2}% + {GAP_SLACK_PCT}%"
+                    ));
+                }
+            }
+            None => fails.push(format!("latency_vs_size {name} missing from current run")),
+        }
+    }
+
+    fails
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("patcol_baseline_{}_{name}", std::process::id()))
+    }
+
+    fn hotpath_report(owned: f64, slice2: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str("transport_hotpath")),
+            (
+                "rows",
+                Json::arr(vec![
+                    Json::obj(vec![
+                        ("kind", Json::str("reduce_path")),
+                        ("abi", Json::str("owned")),
+                        ("shards", Json::num(1.0)),
+                        ("gbps", Json::num(owned)),
+                    ]),
+                    Json::obj(vec![
+                        ("kind", Json::str("reduce_path")),
+                        ("abi", Json::str("slice")),
+                        ("shards", Json::num(2.0)),
+                        ("gbps", Json::num(slice2)),
+                    ]),
+                ]),
+            ),
+        ])
+    }
+
+    fn latency_report(small_gap: f64, large_gap: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str("latency_vs_size")),
+            (
+                "params",
+                Json::obj(vec![
+                    ("pat_small_gap_pct", Json::num(small_gap)),
+                    ("pat_large_gap_pct", Json::num(large_gap)),
+                ]),
+            ),
+        ])
+    }
+
+    fn doc(hot: Option<Json>, lat: Option<Json>) -> Json {
+        let mut benches = Vec::new();
+        if let Some(h) = hot {
+            benches.push(("transport_hotpath", h));
+        }
+        if let Some(l) = lat {
+            benches.push(("latency_vs_size", l));
+        }
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("benches", Json::obj(benches)),
+        ])
+    }
+
+    #[test]
+    fn stamp_builds_and_updates_the_document() {
+        let path = tmp("stamp.json");
+        let _ = std::fs::remove_file(&path);
+        stamp(&path, "transport_hotpath", &hotpath_report(1.0, 3.0)).unwrap();
+        stamp(&path, "latency_vs_size", &latency_report(10.0, 5.0)).unwrap();
+        // re-stamp overwrites in place, preserving the other entry
+        stamp(&path, "transport_hotpath", &hotpath_report(1.0, 4.0)).unwrap();
+        let doc = load(&path).unwrap();
+        assert_eq!(
+            doc.get("schema_version").unwrap().as_usize(),
+            Some(SCHEMA_VERSION as usize)
+        );
+        assert_eq!(doc.get("benches").unwrap().as_obj().unwrap().len(), 2);
+        assert!((reduce_path_ratio(&doc).unwrap() - 4.0).abs() < 1e-12);
+        assert_eq!(optimality_gaps(&doc).len(), 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn check_passes_identical_documents() {
+        let d = doc(Some(hotpath_report(1.0, 3.0)), Some(latency_report(10.0, 5.0)));
+        assert!(check(&d, &d).is_empty());
+    }
+
+    #[test]
+    fn check_flags_floor_and_regressions() {
+        let base = doc(Some(hotpath_report(1.0, 4.0)), Some(latency_report(10.0, 5.0)));
+        // ratio fell below the absolute 2.0 floor AND below 0.75x baseline
+        let bad_ratio = doc(Some(hotpath_report(1.0, 1.5)), Some(latency_report(10.0, 5.0)));
+        let fails = check(&bad_ratio, &base);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        // gap grew past 1.1x + 1pt
+        let bad_gap = doc(Some(hotpath_report(1.0, 4.0)), Some(latency_report(13.0, 5.0)));
+        let fails = check(&bad_gap, &base);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("pat_small_gap_pct"));
+        // within tolerance: 10% -> 11.5% passes (1.1x + 1pt = 12)
+        let ok = doc(Some(hotpath_report(1.0, 3.5)), Some(latency_report(11.5, 5.4)));
+        assert!(check(&ok, &base).is_empty());
+    }
+
+    #[test]
+    fn check_flags_missing_metrics() {
+        let base = doc(Some(hotpath_report(1.0, 4.0)), Some(latency_report(10.0, 5.0)));
+        let gone = doc(None, None);
+        let fails = check(&gone, &base);
+        assert_eq!(fails.len(), 3, "{fails:?}"); // ratio + two gap params
+        // ...but a first run against an empty baseline passes
+        assert!(check(&base, &empty()).is_empty());
+    }
+}

@@ -1,0 +1,199 @@
+//! Calibration-drift history: predicted vs measured, append-only.
+//!
+//! The tuner's closed forms ([`crate::coordinator::tuner`]) predict a
+//! wall time for every (collective, algorithm, size, channels) point;
+//! the transport then measures one. The gap between the two is what the
+//! `*_CALIBRATION_TOLERANCE` constants bound — but without a recorded
+//! history those constants are folklore. This module turns every tuned
+//! run into one [`CalibRecord`] appended to a JSON-lines file (set
+//! `calib_history` in the coordinator config), so tolerance tightening
+//! is driven by trend lines: load the file, fold it with
+//! [`drift_summary`], and see per-(alg, size, channels) residuals over
+//! time.
+//!
+//! The history is **append-only JSONL** — one self-contained JSON
+//! object per line, never rewritten — so concurrent runs can append
+//! without coordination and partial lines from a crash corrupt at most
+//! themselves (loading skips unparsable lines).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::core::Result;
+use crate::util::json::{self, Json};
+
+/// One tuned run's prediction vs measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibRecord {
+    /// Collective name (`allgather`, `reduce_scatter`, `allreduce`, ...).
+    pub collective: String,
+    /// Resolved algorithm label (e.g. `pat(a=4)`, `ring`).
+    pub alg: String,
+    pub nranks: usize,
+    /// Total payload bytes per rank.
+    pub bytes: usize,
+    pub channels: usize,
+    /// Tuner model prediction, microseconds.
+    pub predicted_us: f64,
+    /// Transport wall time, microseconds.
+    pub measured_us: f64,
+}
+
+impl CalibRecord {
+    /// Signed residual in percent: positive when the run was slower
+    /// than predicted.
+    pub fn residual_pct(&self) -> f64 {
+        if self.predicted_us > 0.0 {
+            100.0 * (self.measured_us - self.predicted_us) / self.predicted_us
+        } else {
+            0.0
+        }
+    }
+
+    /// Grouping key for drift trend lines.
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/n{}/b{}/c{}",
+            self.collective, self.alg, self.nranks, self.bytes, self.channels
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("collective", Json::str(self.collective.clone())),
+            ("alg", Json::str(self.alg.clone())),
+            ("nranks", Json::num(self.nranks as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("channels", Json::num(self.channels as f64)),
+            ("predicted_us", Json::num(self.predicted_us)),
+            ("measured_us", Json::num(self.measured_us)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<CalibRecord> {
+        Some(CalibRecord {
+            collective: j.get("collective")?.as_str()?.to_string(),
+            alg: j.get("alg")?.as_str()?.to_string(),
+            nranks: j.get("nranks")?.as_usize()?,
+            bytes: j.get("bytes")?.as_usize()?,
+            channels: j.get("channels")?.as_usize()?,
+            predicted_us: j.get("predicted_us")?.as_f64()?,
+            measured_us: j.get("measured_us")?.as_f64()?,
+        })
+    }
+}
+
+/// Append one record to the JSONL history at `path` (created, with its
+/// parent directories, on first use).
+pub fn append(path: &Path, rec: &CalibRecord) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", rec.to_json().to_string())?;
+    Ok(())
+}
+
+/// Load every parsable record from the JSONL history at `path`.
+/// Unparsable lines (crash-truncated tails, foreign content) are
+/// skipped, not fatal; a missing file is an empty history.
+pub fn load(path: &Path) -> Vec<CalibRecord> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    text.lines()
+        .filter_map(|l| json::parse(l).ok())
+        .filter_map(|j| CalibRecord::from_json(&j))
+        .collect()
+}
+
+/// Aggregate drift per [`CalibRecord::key`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Drift {
+    /// Number of runs recorded at this point.
+    pub n: usize,
+    /// Mean signed residual, percent.
+    pub mean_residual_pct: f64,
+    /// Largest absolute residual, percent — the figure a tolerance
+    /// constant must stay above.
+    pub max_abs_residual_pct: f64,
+}
+
+/// Fold records into per-key drift trends.
+pub fn drift_summary(records: &[CalibRecord]) -> BTreeMap<String, Drift> {
+    let mut out: BTreeMap<String, Drift> = BTreeMap::new();
+    for r in records {
+        let d = out.entry(r.key()).or_default();
+        let res = r.residual_pct();
+        d.mean_residual_pct = (d.mean_residual_pct * d.n as f64 + res) / (d.n + 1) as f64;
+        d.max_abs_residual_pct = d.max_abs_residual_pct.max(res.abs());
+        d.n += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("patcol_calib_{}_{name}", std::process::id()))
+    }
+
+    fn rec(predicted: f64, measured: f64) -> CalibRecord {
+        CalibRecord {
+            collective: "allreduce".into(),
+            alg: "pat(a=4)".into(),
+            nranks: 16,
+            bytes: 1 << 20,
+            channels: 2,
+            predicted_us: predicted,
+            measured_us: measured,
+        }
+    }
+
+    #[test]
+    fn append_then_load_roundtrips() {
+        let path = tmp("roundtrip.jsonl");
+        let _ = std::fs::remove_file(&path);
+        append(&path, &rec(100.0, 110.0)).unwrap();
+        append(&path, &rec(100.0, 95.0)).unwrap();
+        let got = load(&path);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], rec(100.0, 110.0));
+        assert!((got[0].residual_pct() - 10.0).abs() < 1e-12);
+        assert!((got[1].residual_pct() + 5.0).abs() < 1e-12);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_skips_garbage_lines_and_missing_files() {
+        let path = tmp("garbage.jsonl");
+        let _ = std::fs::remove_file(&path);
+        assert!(load(&path).is_empty(), "missing file is an empty history");
+        append(&path, &rec(50.0, 60.0)).unwrap();
+        {
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{\"collective\": \"trunca").unwrap();
+        }
+        append(&path, &rec(50.0, 40.0)).unwrap();
+        assert_eq!(load(&path).len(), 2, "truncated line skipped, rest kept");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn drift_summary_tracks_mean_and_worst_case() {
+        let records = vec![rec(100.0, 110.0), rec(100.0, 90.0), rec(100.0, 130.0)];
+        let summary = drift_summary(&records);
+        assert_eq!(summary.len(), 1);
+        let d = summary["allreduce/pat(a=4)/n16/b1048576/c2"];
+        assert_eq!(d.n, 3);
+        // residuals: +10, -10, +30 → mean +10, worst |30|
+        assert!((d.mean_residual_pct - 10.0).abs() < 1e-9);
+        assert!((d.max_abs_residual_pct - 30.0).abs() < 1e-9);
+    }
+}

@@ -102,6 +102,32 @@ fn usecs(t: f64) -> f64 {
     t * 1e6
 }
 
+/// Counter-track name for counter-sample kinds (`"ph":"C"`); span kinds
+/// export as `"X"` events and return `None`.
+fn counter_track(kind: EventKind) -> Option<&'static str> {
+    match kind {
+        EventKind::Pool => Some("pool live slots"),
+        EventKind::Arena => Some("arena bytes"),
+        _ => None,
+    }
+}
+
+/// Inverse of [`counter_track`] plus the span kinds by their exported
+/// `name` — `None` for names this version does not know (forward
+/// compatibility: unknown kinds are skipped on import).
+fn kind_of_name(name: &str) -> Option<EventKind> {
+    match name {
+        "send" => Some(EventKind::SendOp),
+        "recv" => Some(EventKind::RecvOp),
+        "wire" => Some(EventKind::Wire),
+        "stall" => Some(EventKind::Stall),
+        "reduce" => Some(EventKind::Reduce),
+        "pool live slots" => Some(EventKind::Pool),
+        "arena bytes" => Some(EventKind::Arena),
+        _ => None,
+    }
+}
+
 /// Export a [`Trace`] as a Chrome trace-event JSON document (object form,
 /// with `traceEvents` plus a `schema_version` stamp in `otherData`).
 pub fn chrome_trace(trace: &Trace, tags: &ChannelTags) -> Json {
@@ -139,11 +165,12 @@ pub fn chrome_trace(trace: &Trace, tags: &ChannelTags) -> Json {
     }
 
     for ev in &trace.events {
-        if ev.kind == EventKind::Pool {
-            // Counter track: live buffer-pool slots over time.
+        if let Some(track) = counter_track(ev.kind) {
+            // Counter tracks: live pool slots / arena bytes over time, a
+            // curve per rank in the timeline.
             events.push(Json::obj(vec![
                 ("ph", Json::str("C")),
-                ("name", Json::str("pool live slots")),
+                ("name", Json::str(track)),
                 ("pid", Json::num(ev.rank as f64)),
                 ("tid", Json::num(ev.channel as f64)),
                 ("ts", Json::num(usecs(ev.t_start))),
@@ -190,6 +217,76 @@ pub fn chrome_trace(trace: &Trace, tags: &ChannelTags) -> Json {
     ])
 }
 
+/// Re-import a Chrome trace document exported by [`chrome_trace`] back
+/// into a [`Trace`] — what `patcol analyze TRACE.json` consumes.
+///
+/// Tolerant across schema versions per the append-only guarantee in
+/// [`crate::obs`]: metadata records (`"ph":"M"`) and unknown event names
+/// are skipped, missing args default to their neutral values, so v2
+/// documents (which predate the `arena bytes` track) load cleanly.
+/// Counters are rebuilt by folding the imported events; join-time-only
+/// counters that are not event-carried (`allocs`, and `arena_hw_bytes`
+/// in v2 documents) come back as 0.
+pub fn import_chrome_trace(doc: &Json) -> crate::core::Result<Trace> {
+    use crate::core::Error;
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| Error::Config("trace document has no traceEvents array".into()))?;
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|d| d.as_f64())
+        .unwrap_or(0.0) as u64;
+    let mut trace = Trace { dropped, ..Trace::default() };
+    for e in evs {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        if ph != "X" && ph != "C" {
+            continue;
+        }
+        let Some(kind) = e.get("name").and_then(|n| n.as_str()).and_then(kind_of_name)
+        else {
+            continue; // future kind: skip, per the stability guarantee
+        };
+        let num = |key: &str| e.get(key).and_then(|v| v.as_f64());
+        let arg = |key: &str| e.get("args").and_then(|a| a.get(key)).and_then(|v| v.as_f64());
+        let (rank, channel) = match (num("pid"), num("tid")) {
+            (Some(p), Some(t)) => (p as usize, t as usize),
+            _ => {
+                return Err(Error::Config(format!(
+                    "event without pid/tid: {}",
+                    e.to_string()
+                )))
+            }
+        };
+        let ts = num("ts")
+            .ok_or_else(|| Error::Config(format!("event without ts: {}", e.to_string())))?
+            / 1e6;
+        let dur = num("dur").unwrap_or(0.0) / 1e6;
+        let mut ev = Event::span(
+            kind,
+            rank,
+            channel,
+            arg("step").unwrap_or(0.0) as usize,
+            ts,
+            ts + dur,
+        );
+        ev.peer = arg("peer").map(|p| p as usize);
+        ev.chunks = arg("chunks").unwrap_or(0.0) as usize;
+        ev.chunk0 = arg("chunk0").map(|c| c as usize);
+        ev.bytes = arg("bytes").unwrap_or(0.0) as usize;
+        ev.value = arg("live").unwrap_or(0.0) as usize;
+        trace
+            .counters
+            .entry((ev.rank, ev.channel))
+            .or_default()
+            .absorb(&ev);
+        trace.events.push(ev);
+    }
+    trace.sort();
+    Ok(trace)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +304,7 @@ mod tests {
             Event::span(EventKind::Wire, 0, 0, 0, 0.0, 2e-6).with_peer(1).with_msg(&[2], 8),
         );
         rec.record(Event::span(EventKind::Pool, 1, 0, 0, 1e-6, 1e-6).with_value(2));
+        rec.record(Event::span(EventKind::Arena, 1, 0, 0, 1e-6, 1e-6).with_value(4096));
         rec.finish()
     }
 
@@ -231,6 +329,75 @@ mod tests {
             .unwrap();
         assert_eq!(wire.get("pid").unwrap().as_usize(), Some(0));
         assert_eq!(wire.get("args").unwrap().get("peer").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn arena_samples_export_as_counter_track() {
+        let doc = chrome_trace(&sample_trace(), &ChannelTags::plain());
+        let text = doc.to_pretty();
+        let back = json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let arena = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("arena bytes"))
+            .expect("arena counter track missing");
+        assert_eq!(arena.get("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(
+            arena.get("args").unwrap().get("live").unwrap().as_usize(),
+            Some(4096)
+        );
+    }
+
+    #[test]
+    fn import_inverts_export() {
+        let trace = sample_trace();
+        let doc = chrome_trace(&trace, &ChannelTags::plain());
+        let back = import_chrome_trace(&json::parse(&doc.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.events.len(), trace.events.len());
+        for (a, b) in back.events.iter().zip(trace.events.iter()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!((a.rank, a.channel, a.step), (b.rank, b.channel, b.step));
+            assert_eq!(a.peer, b.peer);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.value, b.value);
+            assert!((a.t_start - b.t_start).abs() < 1e-12);
+            assert!((a.t_end - b.t_end).abs() < 1e-12);
+        }
+        // counters rebuilt from the imported events
+        let (ct, co) = (back.totals(), trace.totals());
+        assert_eq!(ct.msgs_sent, co.msgs_sent);
+        assert_eq!(ct.bytes_sent, co.bytes_sent);
+        assert_eq!(ct.pool_peak, co.pool_peak);
+        assert_eq!(ct.arena_hw_bytes, co.arena_hw_bytes);
+    }
+
+    #[test]
+    fn import_tolerates_older_and_newer_documents() {
+        // A v2-era document: no arena track, plus an unknown future kind
+        // that must be skipped rather than rejected.
+        let text = r#"{
+            "traceEvents": [
+                {"ph": "M", "name": "process_name", "pid": 0,
+                 "args": {"name": "rank 0"}},
+                {"ph": "X", "name": "send", "cat": "send", "pid": 0, "tid": 0,
+                 "ts": 1.0, "dur": 2.0, "args": {"step": 3, "peer": 1, "bytes": 64}},
+                {"ph": "X", "name": "quantum_flux", "pid": 0, "tid": 0,
+                 "ts": 0.0, "dur": 1.0, "args": {}},
+                {"ph": "C", "name": "pool live slots", "pid": 0, "tid": 0,
+                 "ts": 2.0, "args": {"live": 5}}
+            ],
+            "otherData": {"schema_version": 2, "dropped_events": 7}
+        }"#;
+        let back = import_chrome_trace(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(back.events.len(), 2, "metadata and unknown kinds skipped");
+        assert_eq!(back.dropped, 7);
+        let send = &back.events[0];
+        assert_eq!(send.kind, EventKind::SendOp);
+        assert_eq!(send.step, 3);
+        assert_eq!(send.peer, Some(1));
+        assert_eq!(send.bytes, 64);
+        assert!((send.t_start - 1e-6).abs() < 1e-15);
+        assert_eq!(back.totals().pool_peak, 5);
     }
 
     #[test]

@@ -1,0 +1,515 @@
+//! Critical-path extraction over the unified trace.
+//!
+//! Answers the question raw spans cannot: *which chain of operations
+//! determined the elapsed time, and what was that chain doing?* The
+//! analyzer rebuilds the op-span dependency graph from a [`Trace`]
+//! (either executor's — the schema is shared) and walks the longest
+//! chain through it:
+//!
+//! * **Stream edges**: ops on one (rank, channel) stream retire in
+//!   order, so each `send`/`recv` span depends on its predecessor in
+//!   the same stream.
+//! * **Message edges**: per (src, dst, channel) connection, wires are
+//!   FIFO — the i-th `wire` span depends on the i-th `send`, and the
+//!   i-th `recv` on the i-th `wire`.
+//!
+//! Two chain notions come out of the same graph:
+//!
+//! * The **timed chain** — from the globally latest-ending op, walk
+//!   backward always choosing the predecessor that ended last. Its
+//!   spans are then *tiled* onto the run window with a chronological
+//!   cursor, so each node contributes only time not already covered by
+//!   an earlier chain node, and uncovered time appears as explicit
+//!   gaps. Tiled contributions plus gaps sum to the elapsed time
+//!   exactly, which is what makes the decomposition an accounting
+//!   identity rather than an estimate.
+//! * The **structural depth** ([`CritPath::dag_depth`]) — the longest
+//!   chain by dependency structure alone, ignoring timestamps. Stream
+//!   order and FIFO matching are program-determined, so this count is
+//!   identical for a simulator run and a transport run of the same
+//!   program (the cross-executor test in `tests/observability.rs`
+//!   asserts exactly that); the timed chain, by contrast, legitimately
+//!   differs with timing noise.
+//!
+//! Decomposition buckets ([`Decomposition`]): `send` (pack + post),
+//! `wire` (serialization + transit), `recv` (match + unpack), `reduce`
+//! (kernel time, carved out of its recv via the matching `reduce`
+//! span), `stall` (chain gaps overlapping a recorded `stall` span —
+//! the stream was blocked on an unmatched receive), and `wait`
+//! (remaining gaps: link contention in the simulator, scheduler/queue
+//! wait in the transport — the slot/slack bucket). The same six
+//! buckets are reported per step, which for composed programs is the
+//! phase/level axis.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::core::Rank;
+use crate::obs::trace::{EventKind, Trace};
+use crate::util::json::Json;
+
+/// Wall-time decomposition in seconds; the six buckets partition the
+/// interval they describe (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Decomposition {
+    pub send_s: f64,
+    pub wire_s: f64,
+    pub recv_s: f64,
+    pub reduce_s: f64,
+    pub stall_s: f64,
+    pub wait_s: f64,
+}
+
+impl Decomposition {
+    pub fn sum(&self) -> f64 {
+        self.send_s + self.wire_s + self.recv_s + self.reduce_s + self.stall_s + self.wait_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("send_s", Json::num(self.send_s)),
+            ("wire_s", Json::num(self.wire_s)),
+            ("recv_s", Json::num(self.recv_s)),
+            ("reduce_s", Json::num(self.reduce_s)),
+            ("stall_s", Json::num(self.stall_s)),
+            ("wait_s", Json::num(self.wait_s)),
+        ])
+    }
+}
+
+/// One node of the timed critical chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CritNode {
+    pub kind: EventKind,
+    pub rank: Rank,
+    pub channel: usize,
+    pub step: usize,
+    pub peer: Option<Rank>,
+    pub bytes: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Exclusive (tiled) contribution to the elapsed time, seconds.
+    pub contrib: f64,
+    /// Uncovered time between the previous chain coverage and this
+    /// node's start — stall or wait, classified in the decomposition.
+    pub gap_before: f64,
+}
+
+/// The extracted critical path and its accounting (see module docs).
+#[derive(Debug, Clone)]
+pub struct CritPath {
+    /// Timed chain, in execution order.
+    pub nodes: Vec<CritNode>,
+    /// First op start, seconds from the trace origin.
+    pub t0: f64,
+    /// Last op end minus first op start — the measured elapsed time the
+    /// decomposition partitions.
+    pub elapsed: f64,
+    /// Σ raw chain-span durations (spans may overlap; compare against
+    /// `elapsed` for the ≥ 95 % coverage acceptance criterion).
+    pub span_sum: f64,
+    /// Σ exclusive contributions (tiled; `covered + gap_sum == elapsed`).
+    pub covered: f64,
+    /// Σ chain gaps, including the lead-in before the first chain op.
+    pub gap_sum: f64,
+    /// Longest dependency chain by structure alone (op count) — the
+    /// executor-invariant figure.
+    pub dag_depth: usize,
+    /// Whole-run decomposition; `decomp.sum() == elapsed` up to fp.
+    pub decomp: Decomposition,
+    /// The same buckets per program step (the phase/level axis).
+    pub per_step: BTreeMap<usize, Decomposition>,
+    /// Fraction of the chain's covered time spent on each (rank,
+    /// channel) — the `crit %` column of `patcol trace`.
+    pub share: BTreeMap<(Rank, usize), f64>,
+}
+
+impl CritPath {
+    /// Coverage of the elapsed window by chain spans, in percent.
+    pub fn coverage_pct(&self) -> f64 {
+        if self.elapsed > 0.0 {
+            100.0 * self.covered / self.elapsed
+        } else {
+            100.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut pairs = vec![
+                    ("kind", Json::str(n.kind.name())),
+                    ("rank", Json::num(n.rank as f64)),
+                    ("channel", Json::num(n.channel as f64)),
+                    ("step", Json::num(n.step as f64)),
+                    ("t_start", Json::num(n.t_start)),
+                    ("t_end", Json::num(n.t_end)),
+                    ("contrib_s", Json::num(n.contrib)),
+                    ("gap_before_s", Json::num(n.gap_before)),
+                ];
+                if let Some(p) = n.peer {
+                    pairs.push(("peer", Json::num(p as f64)));
+                }
+                if n.bytes > 0 {
+                    pairs.push(("bytes", Json::num(n.bytes as f64)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let per_step: Vec<Json> = self
+            .per_step
+            .iter()
+            .map(|(s, d)| {
+                let mut o = d.to_json();
+                if let Json::Obj(m) = &mut o {
+                    m.insert("step".into(), Json::num(*s as f64));
+                }
+                o
+            })
+            .collect();
+        let share: Vec<Json> = self
+            .share
+            .iter()
+            .map(|(&(r, k), &f)| {
+                Json::obj(vec![
+                    ("rank", Json::num(r as f64)),
+                    ("channel", Json::num(k as f64)),
+                    ("share", Json::num(f)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("elapsed_s", Json::num(self.elapsed)),
+            ("span_sum_s", Json::num(self.span_sum)),
+            ("covered_s", Json::num(self.covered)),
+            ("gap_s", Json::num(self.gap_sum)),
+            ("coverage_pct", Json::num(self.coverage_pct())),
+            ("dag_depth", Json::num(self.dag_depth as f64)),
+            ("decomposition", self.decomp.to_json()),
+            ("per_step", Json::Arr(per_step)),
+            ("share", Json::Arr(share)),
+            ("chain", Json::Arr(nodes)),
+        ])
+    }
+}
+
+/// Extract the critical path of `trace` (see module docs). Returns
+/// `None` when the trace holds no op spans at all.
+pub fn critical_path(trace: &Trace) -> Option<CritPath> {
+    // Op nodes: send/recv/wire spans, in the trace's t_start order.
+    let mut ops: Vec<usize> = Vec::new();
+    for (i, ev) in trace.events.iter().enumerate() {
+        if matches!(ev.kind, EventKind::SendOp | EventKind::RecvOp | EventKind::Wire) {
+            ops.push(i);
+        }
+    }
+    if ops.is_empty() {
+        return None;
+    }
+    let ev = |o: usize| &trace.events[ops[o]];
+
+    // Dependency edges (indices into `ops`).
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+    // Stream edges: consecutive send/recv ops on one (rank, channel).
+    let mut streams: BTreeMap<(Rank, usize), usize> = BTreeMap::new();
+    // FIFO lanes per (src, dst, channel) connection.
+    let mut sends: BTreeMap<(Rank, Rank, usize), VecDeque<usize>> = BTreeMap::new();
+    let mut wires: BTreeMap<(Rank, Rank, usize), VecDeque<usize>> = BTreeMap::new();
+    for o in 0..ops.len() {
+        let e = ev(o);
+        match e.kind {
+            EventKind::SendOp | EventKind::RecvOp => {
+                if let Some(prev) = streams.insert((e.rank, e.channel), o) {
+                    preds[o].push(prev);
+                }
+                if let Some(peer) = e.peer {
+                    if e.kind == EventKind::SendOp {
+                        sends.entry((e.rank, peer, e.channel)).or_default().push_back(o);
+                    } else if let Some(w) =
+                        wires.get_mut(&(peer, e.rank, e.channel)).and_then(|q| q.pop_front())
+                    {
+                        preds[o].push(w);
+                    }
+                }
+            }
+            EventKind::Wire => {
+                if let Some(peer) = e.peer {
+                    if let Some(s) =
+                        sends.get_mut(&(e.rank, peer, e.channel)).and_then(|q| q.pop_front())
+                    {
+                        preds[o].push(s);
+                    }
+                    wires.entry((e.rank, peer, e.channel)).or_default().push_back(o);
+                }
+            }
+            _ => unreachable!("only op kinds are collected"),
+        }
+    }
+
+    // Structural depth by Kahn order — robust to timestamp ties.
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+    let mut indeg = vec![0usize; ops.len()];
+    for (o, ps) in preds.iter().enumerate() {
+        indeg[o] = ps.len();
+        for &p in ps {
+            succs[p].push(o);
+        }
+    }
+    let mut depth = vec![1usize; ops.len()];
+    let mut queue: VecDeque<usize> =
+        (0..ops.len()).filter(|&o| indeg[o] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(o) = queue.pop_front() {
+        seen += 1;
+        for &s in &succs[o] {
+            depth[s] = depth[s].max(depth[o] + 1);
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push_back(s);
+            }
+        }
+    }
+    debug_assert_eq!(seen, ops.len(), "op dependency graph has a cycle");
+    let dag_depth = depth.iter().copied().max().unwrap_or(1);
+
+    // Timed chain: from the latest-ending op, walk the latest-ending
+    // predecessor backward.
+    let last = (0..ops.len())
+        .max_by(|&a, &b| ev(a).t_end.total_cmp(&ev(b).t_end))
+        .expect("ops nonempty");
+    let mut chain = vec![last];
+    let mut cur = last;
+    while let Some(&p) = preds[cur]
+        .iter()
+        .max_by(|&&a, &&b| ev(a).t_end.total_cmp(&ev(b).t_end))
+    {
+        chain.push(p);
+        cur = p;
+    }
+    chain.reverse();
+
+    // Stall intervals per (rank, channel), for gap classification.
+    let mut stalls: BTreeMap<(Rank, usize), Vec<(f64, f64)>> = BTreeMap::new();
+    // Reduce-kernel seconds per (rank, channel, step), carved out of the
+    // matching recv's contribution.
+    let mut reduces: BTreeMap<(Rank, usize, usize), f64> = BTreeMap::new();
+    for e in &trace.events {
+        match e.kind {
+            EventKind::Stall => stalls
+                .entry((e.rank, e.channel))
+                .or_default()
+                .push((e.t_start, e.t_end)),
+            EventKind::Reduce => {
+                *reduces.entry((e.rank, e.channel, e.step)).or_default() += e.duration()
+            }
+            _ => {}
+        }
+    }
+
+    let t0 = ops.iter().map(|&i| trace.events[i].t_start).fold(f64::INFINITY, f64::min);
+    let t1 = ops.iter().map(|&i| trace.events[i].t_end).fold(f64::NEG_INFINITY, f64::max);
+    let elapsed = (t1 - t0).max(0.0);
+
+    // Tile the chain onto [t0, t1]: exclusive contributions plus
+    // explicit gaps partition the window exactly.
+    let mut nodes = Vec::with_capacity(chain.len());
+    let mut decomp = Decomposition::default();
+    let mut per_step: BTreeMap<usize, Decomposition> = BTreeMap::new();
+    let mut share: BTreeMap<(Rank, usize), f64> = BTreeMap::new();
+    let (mut cursor, mut span_sum, mut covered, mut gap_sum) = (t0, 0.0, 0.0, 0.0);
+    for &o in &chain {
+        let e = ev(o);
+        let gap = (e.t_start - cursor).max(0.0);
+        let contrib = (e.t_end - cursor.max(e.t_start)).max(0.0);
+        span_sum += e.duration();
+        covered += contrib;
+        gap_sum += gap;
+
+        let d = per_step.entry(e.step).or_default();
+        if gap > 0.0 {
+            // The stream owning this node was the one waiting: split the
+            // gap into recorded stall overlap vs everything else.
+            let (g0, g1) = (cursor, cursor + gap);
+            let mut stall = 0.0;
+            if let Some(iv) = stalls.get(&(e.rank, e.channel)) {
+                for &(s0, s1) in iv {
+                    stall += (s1.min(g1) - s0.max(g0)).max(0.0);
+                }
+            }
+            let stall = stall.min(gap);
+            decomp.stall_s += stall;
+            decomp.wait_s += gap - stall;
+            d.stall_s += stall;
+            d.wait_s += gap - stall;
+        }
+        match e.kind {
+            EventKind::SendOp => {
+                decomp.send_s += contrib;
+                d.send_s += contrib;
+            }
+            EventKind::Wire => {
+                decomp.wire_s += contrib;
+                d.wire_s += contrib;
+            }
+            EventKind::RecvOp => {
+                let rd = reduces
+                    .get(&(e.rank, e.channel, e.step))
+                    .copied()
+                    .unwrap_or(0.0)
+                    .min(contrib);
+                decomp.reduce_s += rd;
+                decomp.recv_s += contrib - rd;
+                d.reduce_s += rd;
+                d.recv_s += contrib - rd;
+            }
+            _ => unreachable!("only op kinds are collected"),
+        }
+        *share.entry((e.rank, e.channel)).or_default() += contrib;
+
+        nodes.push(CritNode {
+            kind: e.kind,
+            rank: e.rank,
+            channel: e.channel,
+            step: e.step,
+            peer: e.peer,
+            bytes: e.bytes,
+            t_start: e.t_start,
+            t_end: e.t_end,
+            contrib,
+            gap_before: gap,
+        });
+        cursor = cursor.max(e.t_end);
+    }
+    // Anything after the last chain op would contradict its maximality;
+    // anything before t0 cannot exist. The identity is therefore exact.
+    if covered > 0.0 {
+        for v in share.values_mut() {
+            *v /= covered;
+        }
+    }
+
+    Some(CritPath {
+        nodes,
+        t0,
+        elapsed,
+        span_sum,
+        covered,
+        gap_sum,
+        dag_depth,
+        decomp,
+        per_step,
+        share,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Event, TraceRecorder};
+
+    /// Hand-built 4-rank trace with a known longest chain:
+    ///
+    /// ```text
+    /// r0 send[0,1] → wire[1,3] → r1 recv[3,4] (reduce [3.5,4])
+    ///   → r1 send[4,5] → wire[5,7] → (stall gap [7,8]) → r2 recv[8,9]
+    /// ```
+    ///
+    /// plus a decoy short chain r3 → r0 that must not win.
+    fn golden_trace() -> Trace {
+        let mut rec = TraceRecorder::new();
+        let sp = Event::span;
+        use EventKind::*;
+        // main chain
+        rec.record(sp(SendOp, 0, 0, 0, 0.0, 1.0).with_peer(1).with_bytes(64));
+        rec.record(sp(Wire, 0, 0, 0, 1.0, 3.0).with_peer(1).with_bytes(64));
+        rec.record(sp(RecvOp, 1, 0, 0, 3.0, 4.0).with_peer(0).with_bytes(64));
+        rec.record(sp(Reduce, 1, 0, 0, 3.5, 4.0).with_bytes(64));
+        rec.record(sp(SendOp, 1, 0, 1, 4.0, 5.0).with_peer(2).with_bytes(64));
+        rec.record(sp(Wire, 1, 0, 1, 5.0, 7.0).with_peer(2).with_bytes(64));
+        rec.record(sp(Stall, 2, 0, 1, 6.5, 8.0).with_peer(1));
+        rec.record(sp(RecvOp, 2, 0, 1, 8.0, 9.0).with_peer(1).with_bytes(64));
+        // decoy chain, fully inside the run window
+        rec.record(sp(SendOp, 3, 0, 0, 0.0, 0.5).with_peer(0).with_bytes(8));
+        rec.record(sp(Wire, 3, 0, 0, 0.5, 1.0).with_peer(0).with_bytes(8));
+        rec.record(sp(RecvOp, 0, 0, 0, 1.0, 1.5).with_peer(3).with_bytes(8));
+        rec.finish()
+    }
+
+    #[test]
+    fn golden_chain_is_extracted_exactly() {
+        let cp = critical_path(&golden_trace()).expect("ops present");
+        use EventKind::*;
+        let got: Vec<(EventKind, Rank, usize)> =
+            cp.nodes.iter().map(|n| (n.kind, n.rank, n.step)).collect();
+        assert_eq!(
+            got,
+            vec![
+                (SendOp, 0, 0),
+                (Wire, 0, 0),
+                (RecvOp, 1, 0),
+                (SendOp, 1, 1),
+                (Wire, 1, 1),
+                (RecvOp, 2, 1),
+            ]
+        );
+        assert_eq!(cp.dag_depth, 6);
+        assert!((cp.elapsed - 9.0).abs() < 1e-12);
+        // exact accounting identity: contributions + gaps == elapsed
+        assert!((cp.covered + cp.gap_sum - cp.elapsed).abs() < 1e-12);
+        assert!((cp.decomp.sum() - cp.elapsed).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_decomposition_matches_hand_count() {
+        let cp = critical_path(&golden_trace()).unwrap();
+        let d = cp.decomp;
+        assert!((d.send_s - 2.0).abs() < 1e-12, "send {}", d.send_s);
+        assert!((d.wire_s - 4.0).abs() < 1e-12, "wire {}", d.wire_s);
+        assert!((d.recv_s - 1.5).abs() < 1e-12, "recv {}", d.recv_s);
+        assert!((d.reduce_s - 0.5).abs() < 1e-12, "reduce {}", d.reduce_s);
+        // the [7,8] gap lies inside r2's recorded stall window
+        assert!((d.stall_s - 1.0).abs() < 1e-12, "stall {}", d.stall_s);
+        assert!(d.wait_s.abs() < 1e-12, "wait {}", d.wait_s);
+        // gap attribution lands on the stalled recv node
+        let recv = cp.nodes.last().unwrap();
+        assert!((recv.gap_before - 1.0).abs() < 1e-12);
+        // per-step buckets partition the same totals
+        let per: f64 = cp.per_step.values().map(|d| d.sum()).sum();
+        assert!((per - cp.elapsed).abs() < 1e-12);
+        // chain share: every contribution fraction sums to one
+        let s: f64 = cp.share.values().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(cp.coverage_pct() > 88.0, "coverage {}", cp.coverage_pct());
+    }
+
+    #[test]
+    fn empty_trace_has_no_path() {
+        assert!(critical_path(&Trace::default()).is_none());
+        // counter-only traces have no op spans either
+        let mut rec = TraceRecorder::new();
+        rec.record(Event::span(EventKind::Pool, 0, 0, 0, 0.0, 0.0).with_value(1));
+        assert!(critical_path(&rec.finish()).is_none());
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let cp = critical_path(&golden_trace()).unwrap();
+        let j = cp.to_json();
+        for key in [
+            "elapsed_s",
+            "span_sum_s",
+            "covered_s",
+            "coverage_pct",
+            "dag_depth",
+            "decomposition",
+            "per_step",
+            "share",
+            "chain",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("dag_depth").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("chain").unwrap().as_arr().unwrap().len(), 6);
+    }
+}

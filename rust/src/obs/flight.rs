@@ -33,6 +33,12 @@ pub struct FlightRecorder {
     ring: VecDeque<Event>,
     dropped: u64,
     counters: BTreeMap<(Rank, usize), Counters>,
+    /// Arena bytes per pool slot — when nonzero, every pool sample also
+    /// emits an [`EventKind::Arena`] sample (schema v3) so occupancy is a
+    /// byte curve, not just a slot count.
+    arena_slot_bytes: usize,
+    /// Static arena bytes (wire regions) under the pool curve.
+    arena_base_bytes: usize,
 }
 
 impl FlightRecorder {
@@ -46,6 +52,8 @@ impl FlightRecorder {
             ring: VecDeque::new(),
             dropped: 0,
             counters: BTreeMap::new(),
+            arena_slot_bytes: 0,
+            arena_base_bytes: 0,
         }
     }
 
@@ -59,7 +67,17 @@ impl FlightRecorder {
             ring: VecDeque::with_capacity(capacity.max(1).min(1024)),
             dropped: 0,
             counters: BTreeMap::new(),
+            arena_slot_bytes: 0,
+            arena_base_bytes: 0,
         }
+    }
+
+    /// Teach the recorder the arena geometry — `slot_bytes` per pool slot
+    /// over `base_bytes` of static wire regions — so pool samples derive
+    /// the arena-occupancy byte curve ([`EventKind::Arena`], schema v3).
+    pub fn set_arena_scale(&mut self, slot_bytes: usize, base_bytes: usize) {
+        self.arena_slot_bytes = slot_bytes;
+        self.arena_base_bytes = base_bytes;
     }
 
     #[inline]
@@ -110,6 +128,12 @@ impl FlightRecorder {
         }
         let t = self.now();
         self.record(Event::span(EventKind::Pool, rank, channel, step, t, t).with_value(live));
+        if self.arena_slot_bytes > 0 {
+            let bytes = self.arena_base_bytes + live * self.arena_slot_bytes;
+            self.record(
+                Event::span(EventKind::Arena, rank, channel, step, t, t).with_value(bytes),
+            );
+        }
     }
 
     pub fn dropped(&self) -> u64 {

@@ -1,0 +1,303 @@
+//! Aggregate trace metrics: stall taxonomy, occupancy percentiles, and
+//! per-link utilization/contention.
+//!
+//! Where [`crate::obs::critpath`] explains *the* slowest chain, this
+//! module aggregates over *all* of the trace:
+//!
+//! * **Stall taxonomy** — per (rank, channel), blocked-on-receive time
+//!   split into `warmup` (stalls resolved before that stream completed
+//!   its first receive: the pipeline fill, expected and benign) and
+//!   `steady` (stalls after the pipeline was primed: skew or
+//!   contention, the thing ROADMAP's arrival-skew work needs blamed
+//!   per rank). Every (rank, channel) the trace knows gets a row with
+//!   *both* classes, zero-valued when unseen, so the key set is a
+//!   schema property of the program rather than of one run's timing —
+//!   the cross-executor test depends on this.
+//! * **Occupancy percentiles** — p50/p90/p99/max over the buffer-pool
+//!   slot samples and the arena byte samples (transport side; `None`
+//!   when the trace has no such counter samples, e.g. simulator runs).
+//! * **Link stats** ([`LinkStat`]) — per-link bytes, busy seconds,
+//!   contended seconds (serialization delayed behind earlier flows),
+//!   and utilization. Produced by the simulator (the transport has no
+//!   fabric model); attach with [`MetricsReport::with_links`].
+
+use std::collections::BTreeMap;
+
+use crate::core::Rank;
+use crate::obs::trace::{EventKind, Trace};
+use crate::util::json::Json;
+
+/// Per-link traffic accounting (simulator side; see
+/// `SimReport::link_stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LinkStat {
+    /// Link index in the topology's link table.
+    pub link: usize,
+    /// Total bytes serialized onto the link.
+    pub bytes: usize,
+    /// Seconds the link spent serializing.
+    pub busy_s: f64,
+    /// Seconds messages waited for this link to free up before starting
+    /// to serialize — the fabric-contention signal.
+    pub contended_s: f64,
+    /// `busy_s` / run elapsed.
+    pub utilization: f64,
+}
+
+impl LinkStat {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("link", Json::num(self.link as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("busy_s", Json::num(self.busy_s)),
+            ("contended_s", Json::num(self.contended_s)),
+            ("utilization", Json::num(self.utilization)),
+        ])
+    }
+}
+
+/// Blocked-on-receive seconds for one (rank, channel), by class. Both
+/// classes are always present (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StallTaxonomy {
+    /// Stalls resolved before the stream's first receive completed.
+    pub warmup_s: f64,
+    /// Stalls after the pipeline was primed.
+    pub steady_s: f64,
+}
+
+impl StallTaxonomy {
+    /// The fixed class vocabulary, in reporting order.
+    pub const CLASSES: [&'static str; 2] = ["warmup", "steady"];
+
+    pub fn total(&self) -> f64 {
+        self.warmup_s + self.steady_s
+    }
+}
+
+/// Occupancy percentiles over counter samples ([`EventKind::Pool`] /
+/// [`EventKind::Arena`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OccupancyStats {
+    pub samples: usize,
+    pub p50: usize,
+    pub p90: usize,
+    pub p99: usize,
+    pub max: usize,
+}
+
+impl OccupancyStats {
+    fn from_samples(mut vals: Vec<usize>) -> Option<OccupancyStats> {
+        if vals.is_empty() {
+            return None;
+        }
+        vals.sort_unstable();
+        // Nearest-rank percentile: smallest value with at least p% of the
+        // samples at or below it.
+        let pct = |p: f64| {
+            let idx = (p / 100.0 * vals.len() as f64).ceil() as usize;
+            vals[idx.saturating_sub(1).min(vals.len() - 1)]
+        };
+        Some(OccupancyStats {
+            samples: vals.len(),
+            p50: pct(50.0),
+            p90: pct(90.0),
+            p99: pct(99.0),
+            max: *vals.last().unwrap(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("samples", Json::num(self.samples as f64)),
+            ("p50", Json::num(self.p50 as f64)),
+            ("p90", Json::num(self.p90 as f64)),
+            ("p99", Json::num(self.p99 as f64)),
+            ("max", Json::num(self.max as f64)),
+        ])
+    }
+}
+
+/// The aggregate metrics of one trace (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsReport {
+    /// Stall taxonomy per (rank, channel) — a row for every (rank,
+    /// channel) the trace's counters know, both classes always present.
+    pub stalls: BTreeMap<(Rank, usize), StallTaxonomy>,
+    /// Buffer-pool occupancy percentiles (slots); `None` without
+    /// pool samples (simulator traces).
+    pub pool: Option<OccupancyStats>,
+    /// Arena occupancy percentiles (bytes); `None` without arena
+    /// samples (simulator and pre-v3 traces).
+    pub arena: Option<OccupancyStats>,
+    /// Per-link stats, when a simulator report supplied them.
+    pub links: Vec<LinkStat>,
+}
+
+impl MetricsReport {
+    /// Attach the simulator's per-link stats.
+    pub fn with_links(mut self, links: &[LinkStat]) -> MetricsReport {
+        self.links = links.to_vec();
+        self
+    }
+
+    /// Total stall seconds across all (rank, channel) rows.
+    pub fn stall_total(&self) -> f64 {
+        self.stalls.values().map(|s| s.total()).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let stalls: Vec<Json> = self
+            .stalls
+            .iter()
+            .map(|(&(r, k), s)| {
+                Json::obj(vec![
+                    ("rank", Json::num(r as f64)),
+                    ("channel", Json::num(k as f64)),
+                    ("warmup_s", Json::num(s.warmup_s)),
+                    ("steady_s", Json::num(s.steady_s)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("stalls", Json::Arr(stalls)),
+            (
+                "pool_occupancy",
+                self.pool.map(|o| o.to_json()).unwrap_or(Json::Null),
+            ),
+            (
+                "arena_occupancy",
+                self.arena.map(|o| o.to_json()).unwrap_or(Json::Null),
+            ),
+            (
+                "links",
+                Json::Arr(self.links.iter().map(|l| l.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Aggregate `trace` into a [`MetricsReport`] (link stats, if any, are
+/// attached separately with [`MetricsReport::with_links`]).
+pub fn metrics(trace: &Trace) -> MetricsReport {
+    // First completed receive per (rank, channel): the warmup boundary.
+    let mut first_recv_end: BTreeMap<(Rank, usize), f64> = BTreeMap::new();
+    for e in &trace.events {
+        if e.kind == EventKind::RecvOp {
+            let v = first_recv_end.entry((e.rank, e.channel)).or_insert(f64::INFINITY);
+            *v = v.min(e.t_end);
+        }
+    }
+
+    // Every (rank, channel) the counters know gets a taxonomy row.
+    let mut stalls: BTreeMap<(Rank, usize), StallTaxonomy> = trace
+        .counters
+        .keys()
+        .map(|&k| (k, StallTaxonomy::default()))
+        .collect();
+    let mut pool_samples = Vec::new();
+    let mut arena_samples = Vec::new();
+    for e in &trace.events {
+        match e.kind {
+            EventKind::Stall => {
+                let boundary = first_recv_end
+                    .get(&(e.rank, e.channel))
+                    .copied()
+                    .unwrap_or(f64::INFINITY);
+                let row = stalls.entry((e.rank, e.channel)).or_default();
+                if e.t_end <= boundary {
+                    row.warmup_s += e.duration();
+                } else {
+                    row.steady_s += e.duration();
+                }
+            }
+            EventKind::Pool => pool_samples.push(e.value),
+            EventKind::Arena => arena_samples.push(e.value),
+            _ => {}
+        }
+    }
+
+    MetricsReport {
+        stalls,
+        pool: OccupancyStats::from_samples(pool_samples),
+        arena: OccupancyStats::from_samples(arena_samples),
+        links: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Event, TraceRecorder};
+
+    #[test]
+    fn stalls_classify_warmup_vs_steady() {
+        let mut rec = TraceRecorder::new();
+        use EventKind::*;
+        // first recv on (0,0) completes at t=2; the stall before it is
+        // warmup, the one after is steady.
+        rec.record(Event::span(Stall, 0, 0, 0, 0.0, 1.0));
+        rec.record(Event::span(RecvOp, 0, 0, 0, 1.0, 2.0).with_peer(1).with_bytes(8));
+        rec.record(Event::span(Stall, 0, 0, 1, 3.0, 3.25));
+        rec.record(Event::span(RecvOp, 0, 0, 1, 3.25, 4.0).with_peer(1).with_bytes(8));
+        // (1,0) emits traffic but never stalls: zero-valued row expected.
+        rec.record(Event::span(SendOp, 1, 0, 0, 0.0, 0.5).with_peer(0).with_bytes(8));
+        let m = metrics(&rec.finish());
+        let s00 = m.stalls[&(0, 0)];
+        assert!((s00.warmup_s - 1.0).abs() < 1e-12);
+        assert!((s00.steady_s - 0.25).abs() < 1e-12);
+        let s10 = m.stalls[&(1, 0)];
+        assert_eq!(s10, StallTaxonomy::default(), "stall-free row still present");
+        assert!((m.stall_total() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_percentiles_over_counter_samples() {
+        let mut rec = TraceRecorder::new();
+        for (i, live) in (1..=100).enumerate() {
+            let t = i as f64;
+            rec.record(Event::span(EventKind::Pool, 0, 0, i, t, t).with_value(live));
+            rec.record(
+                Event::span(EventKind::Arena, 0, 0, i, t, t).with_value(live * 1024),
+            );
+        }
+        let m = metrics(&rec.finish());
+        let pool = m.pool.expect("pool samples");
+        assert_eq!(pool.samples, 100);
+        assert_eq!(pool.p50, 50);
+        assert_eq!(pool.p90, 90);
+        assert_eq!(pool.p99, 99);
+        assert_eq!(pool.max, 100);
+        let arena = m.arena.expect("arena samples");
+        assert_eq!(arena.max, 100 * 1024);
+        assert_eq!(arena.p50, 50 * 1024);
+    }
+
+    #[test]
+    fn counterless_trace_has_no_occupancy() {
+        let mut rec = TraceRecorder::new();
+        rec.record(Event::span(EventKind::SendOp, 0, 0, 0, 0.0, 1.0).with_bytes(8));
+        let m = metrics(&rec.finish());
+        assert!(m.pool.is_none());
+        assert!(m.arena.is_none());
+        assert!(m.links.is_empty());
+        let j = m.to_json();
+        assert_eq!(j.get("pool_occupancy"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn json_carries_link_stats() {
+        let m = metrics(&Trace::default()).with_links(&[LinkStat {
+            link: 3,
+            bytes: 4096,
+            busy_s: 0.5,
+            contended_s: 0.1,
+            utilization: 0.25,
+        }]);
+        let j = m.to_json();
+        let links = j.get("links").unwrap().as_arr().unwrap();
+        assert_eq!(links.len(), 1);
+        assert_eq!(links[0].get("link").unwrap().as_usize(), Some(3));
+        assert_eq!(links[0].get("bytes").unwrap().as_usize(), Some(4096));
+    }
+}

@@ -14,7 +14,22 @@
 //!   disabled; its tail is dumped by the watchdog on a recv timeout).
 //! * [`chrome`] — Chrome trace-event JSON export
 //!   ([`chrome_trace`], Perfetto-loadable), spans grouped rank → channel
-//!   with segment/bucket/phase categories via [`ChannelTags`].
+//!   with segment/bucket/phase categories via [`ChannelTags`] — plus the
+//!   inverse, [`import_chrome_trace`], which is what `patcol analyze`
+//!   reads back.
+//! * [`critpath`] — critical-path extraction over the op-span dependency
+//!   graph: the timed longest chain, its wire/reduce/stall/wait
+//!   decomposition, and the executor-invariant structural depth.
+//! * [`metrics`] — aggregate [`MetricsReport`]: stall taxonomy per
+//!   (rank, channel), pool/arena occupancy percentiles, per-link
+//!   utilization and contention (via the simulator's `link_stats`).
+//! * [`calib`] — append-only calibration-drift history: every tuned
+//!   run's `predicted_us` vs `measured_us`, so the tuner's tolerance
+//!   constants are trend lines, not folklore.
+//! * [`baseline`] — the bench-baseline writer: with
+//!   [`baseline::BASELINE_ENV`] set, every bench report is also stamped
+//!   into one committed trajectory document (`BENCH_8.json`) that CI
+//!   compares new runs against.
 //!
 //! # Event schema
 //!
@@ -31,6 +46,7 @@
 //! | `stall`  | channel blocked on an unmatched receive     | sim, transport|
 //! | `reduce` | one reduction-kernel invocation             | sim, transport|
 //! | `pool`   | buffer-pool occupancy sample (`value`=live) | transport     |
+//! | `arena`  | arena occupancy sample (`value`=bytes), v3  | transport     |
 //!
 //! # Stability guarantee
 //!
@@ -52,10 +68,16 @@
 //! assert!(doc.to_string().contains("traceEvents"));
 //! ```
 
+pub mod baseline;
+pub mod calib;
 pub mod chrome;
+pub mod critpath;
 pub mod flight;
+pub mod metrics;
 pub mod trace;
 
-pub use chrome::{chrome_trace, ChannelTags};
+pub use chrome::{chrome_trace, import_chrome_trace, ChannelTags};
+pub use critpath::{critical_path, CritNode, CritPath, Decomposition};
 pub use flight::{FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
+pub use metrics::{metrics, LinkStat, MetricsReport, OccupancyStats, StallTaxonomy};
 pub use trace::{Counters, Event, EventKind, Trace, TraceRecorder, SCHEMA_VERSION};

@@ -16,7 +16,13 @@ use crate::core::{ChunkId, Rank};
 /// Version of the event schema (also stamped into exported Chrome
 /// traces). Bumped whenever a field is added; see the stability guarantee
 /// in [`crate::obs`].
-pub const SCHEMA_VERSION: u32 = 2;
+///
+/// v3 (additive over v2): the [`EventKind::Arena`] counter kind — arena
+/// occupancy in bytes as a timeline curve rather than only a join-time
+/// counter. v2 traces remain loadable: consumers that predate the kind
+/// skip it, and [`crate::obs::chrome::import_chrome_trace`] tolerates
+/// documents missing it.
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// What an [`Event`] describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -38,6 +44,10 @@ pub enum EventKind {
     /// Buffer-pool occupancy sample: `value` = live slots after a
     /// transition (counter event, `t_start == t_end`).
     Pool,
+    /// Arena occupancy sample: `value` = bytes of arena footprint in use
+    /// (pool slots + wire regions) at the sample instant (counter event,
+    /// `t_start == t_end`). Schema v3; transport-only.
+    Arena,
 }
 
 impl EventKind {
@@ -49,6 +59,7 @@ impl EventKind {
             EventKind::Stall => "stall",
             EventKind::Reduce => "reduce",
             EventKind::Pool => "pool",
+            EventKind::Arena => "arena",
         }
     }
 }
@@ -178,6 +189,9 @@ impl Counters {
                 self.reduce_seconds += ev.duration();
             }
             EventKind::Pool => self.pool_peak = self.pool_peak.max(ev.value),
+            EventKind::Arena => {
+                self.arena_hw_bytes = self.arena_hw_bytes.max(ev.value)
+            }
             EventKind::Wire => {}
         }
     }

@@ -65,10 +65,19 @@ impl Report {
         Ok(path)
     }
 
-    /// Write to the default directory and announce on stdout.
+    /// Write to the default directory and announce on stdout. When
+    /// [`crate::obs::baseline::BASELINE_ENV`] is set, the report is also
+    /// stamped into the baseline trajectory document it names — how the
+    /// CI bench-baseline job builds `BENCH_8.json` without any per-bench
+    /// code.
     pub fn save(&self) -> Result<()> {
         let path = self.write(&Self::default_dir())?;
         println!("[report] wrote {}", path.display());
+        if let Ok(baseline) = std::env::var(crate::obs::baseline::BASELINE_ENV) {
+            let bpath = Path::new(&baseline);
+            crate::obs::baseline::stamp(bpath, &self.name, &self.to_json())?;
+            println!("[report] stamped {} into {}", self.name, bpath.display());
+        }
         Ok(())
     }
 }

@@ -562,6 +562,7 @@ pub fn run_allgather_into(
                     pool_base,
                     pool_slots,
                 );
+                fr.set_arena_scale(sub * 4, plan.wire[r] * 4);
                 let send_off = &plan.send_off[r];
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
@@ -766,6 +767,7 @@ pub fn run_reduce_scatter(
                     pool_base,
                     pool_slots,
                 );
+                fr.set_arena_scale(sub * 4, plan.wire[r] * 4);
                 let send_off = &plan.send_off[r];
                 let mut acc: HashMap<ChunkId, crate::transport::buffers::Slot> = HashMap::new();
                 let mut local_bytes = 0usize;
@@ -1058,6 +1060,7 @@ pub fn run_allreduce_batch(
                     pool_base,
                     pool_slots,
                 );
+                fr.set_arena_scale(slot_elems * 4, plan.wire[r] * 4);
                 let send_off = &plan.send_off[r];
                 let mut acc: HashMap<ChunkId, crate::transport::buffers::Slot> = HashMap::new();
                 let mut finalized = vec![false; nchunks];

@@ -199,6 +199,116 @@ fn steady_state_records_zero_allocs() {
     assert!(tot.arena_hw_bytes > 0, "trace counters missing arena high-water");
 }
 
+/// Trace-analytics cross-executor criterion: the analyzer
+/// ([`patcol::obs::critpath`] / [`patcol::obs::metrics`]) extracts the
+/// same *structural* facts from a simulator trace and a transport trace
+/// of the same program — identical critical-path step count (dependency
+/// structure is program-determined; only timings differ) and an
+/// identical stall-taxonomy key set.
+#[test]
+fn analyzer_agrees_across_executors() {
+    use patcol::obs::{critical_path, import_chrome_trace, metrics};
+
+    let p = program();
+    let st = sim_trace(&p);
+    let tt = transport_trace(&p);
+
+    let scp = critical_path(&st).expect("sim critical path");
+    let tcp = critical_path(&tt).expect("transport critical path");
+    assert_eq!(
+        scp.dag_depth, tcp.dag_depth,
+        "structural critical-path depth must be executor-invariant"
+    );
+
+    // The decomposition is an exact accounting identity on both sides.
+    for cp in [&scp, &tcp] {
+        assert!(
+            (cp.covered + cp.gap_sum - cp.elapsed).abs() <= 1e-9 * cp.elapsed.max(1e-9),
+            "covered {} + gaps {} != elapsed {}",
+            cp.covered,
+            cp.gap_sum,
+            cp.elapsed
+        );
+        assert!((cp.decomp.sum() - cp.elapsed).abs() <= 1e-9 * cp.elapsed.max(1e-9));
+        assert!(cp.span_sum > 0.0);
+    }
+
+    // Same stall-taxonomy rows from both executors — the key set is a
+    // property of the program, not of one run's timing — and both
+    // classes are always present in the vocabulary.
+    let sm = metrics(&st);
+    let tm = metrics(&tt);
+    let skeys: Vec<_> = sm.stalls.keys().copied().collect();
+    let tkeys: Vec<_> = tm.stalls.keys().copied().collect();
+    assert_eq!(skeys, tkeys, "stall taxonomy (rank, channel) key sets diverge");
+    assert_eq!(patcol::obs::StallTaxonomy::CLASSES, ["warmup", "steady"]);
+
+    // The transport side carries pool occupancy; the simulator cannot.
+    assert!(tm.pool.is_some() && sm.pool.is_none());
+
+    // Export → import (what `patcol analyze` reads) preserves the
+    // structural depth.
+    let back = import_chrome_trace(&exported(&st)).unwrap();
+    assert_eq!(critical_path(&back).unwrap().dag_depth, scp.dag_depth);
+}
+
+/// The PR's 64-rank acceptance criterion, through the same path `patcol
+/// analyze` takes (export → re-import): the critical path's span sum
+/// covers ≥ 95 % of the measured elapsed time, a Träff optimality-gap
+/// figure comes out, and the stall decomposition has a row per
+/// (rank, channel).
+#[test]
+fn analyze_64_rank_pat_allreduce() {
+    use patcol::coordinator::Tuner;
+    use patcol::obs::{critical_path, import_chrome_trace, metrics};
+
+    let n = 64usize;
+    let p = sched::generate(
+        Algorithm::Pat { aggregation: usize::MAX },
+        Collective::AllReduce,
+        n,
+    )
+    .unwrap();
+    let topo = Topology::flat(n, CostModel::ib_hdr_nic_bw());
+    let mut rec = TraceRecorder::new();
+    let rep = sim::simulate_observed(&p, &topo, &CostModel::ib_hdr(), PER * 4, &mut rec).unwrap();
+    let doc = json::parse(&chrome_trace(&rec.finish(), &ChannelTags::plain()).to_pretty()).unwrap();
+    let trace = import_chrome_trace(&doc).unwrap();
+
+    let cp = critical_path(&trace).expect("64-rank trace has a critical path");
+    assert!(
+        cp.span_sum >= 0.95 * cp.elapsed,
+        "chain spans sum to {} — less than 95% of elapsed {}",
+        cp.span_sum,
+        cp.elapsed
+    );
+    // The analyzer's elapsed is the simulator's modeled time (µs
+    // round-trip through the Chrome document tolerated).
+    assert!(
+        (cp.elapsed - rep.total_time).abs() <= 1e-9 + 0.01 * rep.total_time,
+        "elapsed {} vs modeled {}",
+        cp.elapsed,
+        rep.total_time
+    );
+
+    // Träff optimality gap: a finite, non-negative percentage.
+    let total_bytes = p.chunk_space() * PER * 4;
+    let bound = Tuner::default().allreduce_lower_bound(n, total_bytes);
+    assert!(bound > 0.0);
+    let gap_pct = 100.0 * (cp.elapsed - bound) / bound;
+    assert!(
+        gap_pct.is_finite() && gap_pct > -1e-6,
+        "modeled time beat the lower bound: {gap_pct}%"
+    );
+
+    // Per-(rank, channel) stall decomposition: one row per stream the
+    // counters know, and a 64-rank PAT run genuinely stalls somewhere.
+    let m = metrics(&trace);
+    assert_eq!(m.stalls.len(), trace.counters.len());
+    assert!(m.stalls.keys().all(|&(r, _)| r < n));
+    assert!(m.stall_total() > 0.0);
+}
+
 #[test]
 fn spans_are_well_formed_and_grouped() {
     let p = program();
