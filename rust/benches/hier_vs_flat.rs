@@ -7,10 +7,24 @@
 //! bench sweeps 64–1024 simulated ranks at equal aggregation and reports
 //! completion time plus the cross-leaf traffic metrics (messages and bytes
 //! at fabric level ≥ 1) for both, emitting the usual JSON report.
+//!
+//! Two further sections feed the bench-baseline gate
+//! ([`patcol::obs::baseline`]):
+//!
+//! * **Multi-leader striping** at 256 ranks and MiB+ sizes: `L` stripe
+//!   leaders per node put `L` NICs and `L` distinct ECMP flows behind
+//!   every node's inter-node traffic, and `L ≥ 2` must beat `L = 1`
+//!   outright. Leader-staging high-water marks (reference executor) are
+//!   stamped next to the analytic [`patcol::sched::hier::staging_bound`]
+//!   so the gate can hold `hw ≤ bound` per leader count.
+//! * **Three-level recursion** on the same fabric: a podded placement
+//!   (leaf/pod/fabric) against the two-level schedule at the
+//!   latency-relevant size, plus the hier Träff gap (`hier_gap_pct`) the
+//!   gate holds to non-growth.
 
-use patcol::core::{Algorithm, Collective, Placement};
+use patcol::core::{ceil_log2, Algorithm, Collective, Placement};
 use patcol::report::Report;
-use patcol::sched;
+use patcol::sched::{self, verify::verify_program};
 use patcol::sim::{simulate, CostModel, SimReport, Topology};
 use patcol::util::json::Json;
 use patcol::util::table::{fmt_bytes, fmt_time_s, Table};
@@ -116,5 +130,149 @@ fn main() {
         );
     }
     print!("{}", t.render());
+
+    // ---- Multi-leader striping: 256 ranks, bandwidth-bound sizes ------
+    //
+    // The headline perf claim: L stripe leaders per node turn one leader
+    // NIC into L parallel inter-node flows (distinct src ranks AND
+    // distinct channel salts, so static ECMP spreads them over parallel
+    // spines/cores). At MiB+ payloads L >= 2 must beat L = 1.
+    let n = 256usize;
+    let topo = Topology::three_level(
+        n,
+        ranks_per_leaf,
+        leaves_per_pod,
+        4,
+        2,
+        CostModel::ib_hdr_nic_bw(),
+        1.0,
+        taper,
+    )
+    .unwrap();
+    let big_sizes: &[usize] = if smoke {
+        &[1 << 20]
+    } else {
+        &[1 << 20, 4 << 20]
+    };
+    println!(
+        "\nmulti-leader striping, hier_pat(a={agg}) on the {n}-rank tapered fat-tree:"
+    );
+    let mut t = Table::new(["chunk", "leaders", "time", "algbw", "staging hw", "bound"]);
+    let mut time_by_l = std::collections::BTreeMap::new();
+    for &bytes in big_sizes {
+        for &l in &[1usize, 2, 4] {
+            let pl = Placement::uniform(n, ranks_per_leaf)
+                .unwrap()
+                .with_leaders(l)
+                .unwrap();
+            topo.check_placement(&pl).unwrap();
+            let prog = sched::generate_placed(
+                Algorithm::HierPat { aggregation: agg },
+                Collective::AllGather,
+                &pl,
+            )
+            .unwrap();
+            let rep = simulate(&prog, &topo, &cost, bytes).unwrap();
+            let algbw = (n - 1) as f64 * bytes as f64 / rep.total_time;
+            let hw = verify_program(&prog).unwrap().peak_slots;
+            let bound = sched::hier::staging_bound(&pl, agg, Collective::AllGather);
+            assert!(
+                hw <= bound,
+                "L={l}: staging high-water {hw} > bound {bound}"
+            );
+            t.row([
+                fmt_bytes(bytes),
+                l.to_string(),
+                fmt_time_s(rep.total_time),
+                format!("{}/s", fmt_bytes(algbw as usize)),
+                hw.to_string(),
+                bound.to_string(),
+            ]);
+            report.rows.push(Json::obj(vec![
+                ("kind", Json::str("striping")),
+                ("chunk_bytes", Json::num(bytes as f64)),
+                ("leaders", Json::num(l as f64)),
+                ("time", Json::num(rep.total_time)),
+                ("algbw", Json::num(algbw)),
+            ]));
+            if bytes == big_sizes[0] {
+                // occupancy is chunk-count-shaped: independent of bytes
+                report.param(&format!("staging_hw_l{l}"), Json::num(hw as f64));
+                report.param(&format!("staging_bound_l{l}"), Json::num(bound as f64));
+            }
+            time_by_l.insert((bytes, l), rep.total_time);
+        }
+        let (t1, t2) = (time_by_l[&(bytes, 1)], time_by_l[&(bytes, 2)]);
+        assert!(
+            t2 < t1,
+            "{}: L=2 ({}) must beat L=1 ({})",
+            fmt_bytes(bytes),
+            fmt_time_s(t2),
+            fmt_time_s(t1)
+        );
+    }
+    print!("{}", t.render());
+
+    // ---- Three-level recursion on the same fabric ---------------------
+    //
+    // Pods of `leaves_per_pod` nodes match the fabric's pod boundaries;
+    // the recursion keeps pod-crossing traffic to pod leaders only.
+    let pl2 = Placement::uniform(n, ranks_per_leaf).unwrap();
+    let pl3 = pl2.clone().with_pods(leaves_per_pod).unwrap();
+    topo.check_placement(&pl3).unwrap();
+    let two = simulate(
+        &sched::generate_placed(
+            Algorithm::HierPat { aggregation: agg },
+            Collective::AllGather,
+            &pl2,
+        )
+        .unwrap(),
+        &topo,
+        &cost,
+        chunk,
+    )
+    .unwrap();
+    let three_prog = sched::generate_placed(
+        Algorithm::HierPat { aggregation: agg },
+        Collective::AllGather,
+        &pl3,
+    )
+    .unwrap();
+    let three = simulate(&three_prog, &topo, &cost, chunk).unwrap();
+    let cross_pod = |r: &SimReport| r.bytes_by_level[2..].iter().sum::<usize>();
+    println!(
+        "\nthree-level recursion @ {}: two-level {} / three-level {} \
+         (core-tier bytes {} -> {})",
+        fmt_bytes(chunk),
+        fmt_time_s(two.total_time),
+        fmt_time_s(three.total_time),
+        fmt_bytes(cross_pod(&two)),
+        fmt_bytes(cross_pod(&three)),
+    );
+    assert!(
+        cross_pod(&three) <= cross_pod(&two),
+        "three-level recursion must not cross the core tier more than two-level"
+    );
+    report.rows.push(Json::obj(vec![
+        ("kind", Json::str("three_level")),
+        ("chunk_bytes", Json::num(chunk as f64)),
+        ("two_level_time", Json::num(two.total_time)),
+        ("three_level_time", Json::num(three.total_time)),
+        ("two_level_core_bytes", Json::num(cross_pod(&two) as f64)),
+        ("three_level_core_bytes", Json::num(cross_pod(&three) as f64)),
+    ]));
+
+    // Hier Träff gap at the headline latency config: modeled time over
+    // the single-phase all-gather lower bound — max(⌈log2 n⌉ rounds,
+    // (n−1)/n of the payload through one NIC). Deterministic
+    // (simulator-derived), so the baseline gate can hold it to
+    // non-growth like the latency_vs_size gaps.
+    let nic = CostModel::ib_hdr_nic_bw();
+    let bound = (ceil_log2(n) as f64 * cost.alpha_base)
+        .max((n - 1) as f64 * chunk as f64 / nic);
+    let gap = 100.0 * (two.total_time - bound) / bound.max(1e-30);
+    println!("hier Träff gap @ {}: {gap:.1}%", fmt_bytes(chunk));
+    report.param("hier_gap_pct", Json::num(gap));
+
     report.save().unwrap();
 }

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::core::{Algorithm, Collective, Error, PhaseAlg, Placement, Result};
-use crate::coordinator::tuner::Tuner;
+use crate::coordinator::tuner::{self, Tuner};
 use crate::runtime::{default_reduce_shards, PjrtService, Registry};
 use crate::sched::{self, program::Program};
 use crate::transport::{self, ArenaCache, DataPath, TransportOptions, TransportReport};
@@ -53,6 +53,14 @@ pub struct CommConfig {
     /// [`crate::sched::DEFAULT_RANKS_PER_NODE`] when a hierarchical
     /// algorithm is pinned.
     pub placement: Option<Placement>,
+    /// Stripe leaders per node for hierarchical algorithms (config key
+    /// `leaders_per_node`, CLI `--leaders-per-node`): each leader owns an
+    /// interleaved chunk stripe and its own inter-node channel, so a
+    /// node's uplink traffic rides `L` distinct ECMP flows
+    /// ([`crate::sched::hier`]). Applied to the configured (or default)
+    /// placement at construction; clamped to the smallest node size.
+    /// `None` = 1 leader per node (the classic two-level schedule).
+    pub leaders_per_node: Option<usize>,
     /// Per-node uplink bandwidth (bytes/s) for the tuner's
     /// flat-vs-hierarchical crossover (config key `inter_gbps`); `None`
     /// models a non-blocking fabric.
@@ -107,6 +115,7 @@ impl Default for CommConfig {
             artifacts_dir: None,
             validate: true,
             placement: None,
+            leaders_per_node: None,
             inter_bw: None,
             channels: None,
             parallel_links: None,
@@ -141,9 +150,20 @@ pub struct Communicator {
 }
 
 impl Communicator {
-    pub fn new(cfg: CommConfig) -> Result<Communicator> {
+    pub fn new(mut cfg: CommConfig) -> Result<Communicator> {
         if cfg.nranks == 0 {
             return Err(Error::Config("nranks must be >= 1".into()));
+        }
+        // Fold the leader count into the placement up front so every
+        // consumer (tuner crossover, program cache, staging bound) sees
+        // the same striped placement.
+        if let Some(l) = cfg.leaders_per_node {
+            if l == 0 {
+                return Err(Error::Config("leaders_per_node must be >= 1".into()));
+            }
+            if let Some(pl) = cfg.placement.take() {
+                cfg.placement = Some(pl.with_leaders(l)?);
+            }
         }
         if let Some(alg) = cfg.algorithm {
             if !alg.supports(cfg.nranks) {
@@ -275,7 +295,13 @@ impl Communicator {
     fn effective_placement(&self) -> Result<Placement> {
         match &self.cfg.placement {
             Some(p) => Ok(p.clone()),
-            None => Placement::uniform(self.cfg.nranks, sched::DEFAULT_RANKS_PER_NODE),
+            None => {
+                let pl = Placement::uniform(self.cfg.nranks, sched::DEFAULT_RANKS_PER_NODE)?;
+                match self.cfg.leaders_per_node {
+                    Some(l) => pl.with_leaders(l),
+                    None => Ok(pl),
+                }
+            }
         }
     }
 
@@ -563,9 +589,14 @@ impl Communicator {
 
     /// Bucketed all-reduce returning execution metadata. Bucket payloads
     /// are padded to the fused chunk grid internally (bucket `b`'s
-    /// `segments × n` chunks each carry `⌈len_b / (segments·n)⌉`
-    /// elements) and the padding is stripped on return; one transport
-    /// buffer pool bounds the staging footprint across all buckets.
+    /// `segments × stripes_b × n` chunks each carry
+    /// `⌈len_b / (segments·stripes_b·n)⌉` elements) and the padding is
+    /// stripped on return; one transport buffer pool bounds the staging
+    /// footprint across all buckets. On a multi-rail fabric
+    /// (`parallel_links > 1`) buckets at or above
+    /// [`tuner::BUCKET_STRIPE_THRESHOLD_BYTES`] are channel-striped
+    /// across the rails ([`sched::bucket::stripe_plan`]); smaller buckets
+    /// stay single-channel.
     pub fn all_reduce_batch_report(
         &self,
         buckets: &[Vec<Vec<f32>>],
@@ -607,12 +638,25 @@ impl Communicator {
         // bucket — the per-operation size the crossover sweep models.
         let chunk_bytes = (total * 4 / (n.max(1) * nb)).max(1);
         let (rs, ag, segments) = self.resolve_phases(chunk_bytes)?;
-        let prog = self.bucketed_program(rs, ag, segments, nb)?;
-        let m = segments * n; // chunks per bucket
-        let elems: Vec<usize> = lens.iter().map(|&l| l.div_ceil(m)).collect();
-        let mut chunk_elems = Vec::with_capacity(nb * m);
-        for &e in &elems {
-            chunk_elems.resize(chunk_elems.len() + m, e);
+        // Cross-bucket channel striping: buckets big enough to be
+        // bandwidth-bound get one channel set per fabric rail (their own
+        // ECMP flows); small buckets stay single-channel and skip the
+        // per-round channel tax. `parallel_links = 1` (the default)
+        // stripes nothing.
+        let bucket_bytes: Vec<usize> = lens.iter().map(|&l| l * 4).collect();
+        let stripes = sched::bucket::stripe_plan(
+            &bucket_bytes,
+            tuner::BUCKET_STRIPE_THRESHOLD_BYTES,
+            self.tuner.parallel_links,
+        );
+        let prog = self.bucketed_program(rs, ag, segments, nb, &stripes)?;
+        // chunks per bucket (stripes multiply the grid; each striped
+        // chunk carries 1/stripes of the bucket payload)
+        let m: Vec<usize> = stripes.iter().map(|&st| segments * st * n).collect();
+        let elems: Vec<usize> = lens.iter().zip(&m).map(|(&l, &mb)| l.div_ceil(mb)).collect();
+        let mut chunk_elems = Vec::with_capacity(m.iter().sum());
+        for (&mb, &e) in m.iter().zip(&elems) {
+            chunk_elems.resize(chunk_elems.len() + mb, e);
         }
         let padded_total: usize = chunk_elems.iter().sum();
         let padded_inputs: Vec<Vec<f32>> = (0..n)
@@ -620,7 +664,7 @@ impl Communicator {
                 let mut v = Vec::with_capacity(padded_total);
                 for (b, bk) in buckets.iter().enumerate() {
                     v.extend_from_slice(&bk[r]);
-                    v.resize(v.len() + (m * elems[b] - lens[b]), 0.0);
+                    v.resize(v.len() + (m[b] * elems[b] - lens[b]), 0.0);
                 }
                 v
             })
@@ -637,7 +681,7 @@ impl Communicator {
             let mut pos = 0usize;
             for (b, bucket_out) in result.iter_mut().enumerate() {
                 bucket_out.push(out[pos..pos + lens[b]].to_vec());
-                pos += m * elems[b];
+                pos += m[b] * elems[b];
             }
         }
         let cr = CollectiveReport {
@@ -647,7 +691,6 @@ impl Communicator {
             transport: rep,
         };
         if self.cfg.calib_history.is_some() {
-            let bucket_bytes: Vec<usize> = lens.iter().map(|&l| l * 4).collect();
             let predicted_s = self.tuner.predict_bucketed(
                 rs,
                 ag,
@@ -679,17 +722,20 @@ impl Communicator {
         }
     }
 
-    /// Cached fused program for `nb` uniform buckets of `rs+ag:segments`.
+    /// Cached fused program for `nb` uniform buckets of `rs+ag:segments`,
+    /// channel-striped per bucket by `stripes`
+    /// ([`sched::bucket::fuse_striped`]).
     fn bucketed_program(
         &self,
         rs: PhaseAlg,
         ag: PhaseAlg,
         segments: usize,
         nb: usize,
+        stripes: &[usize],
     ) -> Result<Arc<Program>> {
         let key = (
             Collective::AllReduce,
-            format!("bkt{nb}:{}+{}:{segments}", rs.spec(), ag.spec()),
+            format!("bkt{nb}:{}+{}:{segments}|st{stripes:?}", rs.spec(), ag.spec()),
             1usize,
         );
         {
@@ -708,7 +754,10 @@ impl Communicator {
         };
         let rsp = build(rs.to_algorithm(), Collective::ReduceScatter)?;
         let agp = build(ag.to_algorithm(), Collective::AllGather)?;
-        let prog = sched::bucket::fuse(&sched::bucket::uniform(&rsp, &agp, nb, segments))?;
+        let prog = sched::bucket::fuse_striped(
+            &sched::bucket::uniform(&rsp, &agp, nb, segments),
+            stripes,
+        )?;
         if self.cfg.validate {
             sched::verify::verify_program(&prog)?;
         }
@@ -959,6 +1008,45 @@ mod tests {
                 assert_eq!(rs_out[r][i], want, "rank {r} idx {i}");
             }
         }
+    }
+
+    /// `leaders_per_node` folds into the placement at construction: the
+    /// striped schedule stays bit-exact with the single-leader one, the
+    /// report shows the inter-node fan-out actually widened, and a zero
+    /// leader count is a loud config error.
+    #[test]
+    fn leaders_per_node_knob() {
+        let n = 16;
+        let mk = |leaders: Option<usize>| {
+            Communicator::new(CommConfig {
+                nranks: n,
+                algorithm: Some(Algorithm::HierPat { aggregation: usize::MAX }),
+                placement: Some(crate::core::Placement::uniform(n, 4).unwrap()),
+                leaders_per_node: leaders,
+                ..Default::default()
+            })
+            .unwrap()
+        };
+        let mut rng = Rng::new(23);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..12).map(|_| rng.below(100) as f32).collect())
+            .collect();
+        let (out1, _rep1) = mk(None).all_gather_report(&inputs).unwrap();
+        let (out4, rep4) = mk(Some(4)).all_gather_report(&inputs).unwrap();
+        assert_eq!(out1, out4);
+        // Per-rank staging attribution covers every rank and agrees with
+        // the scalar high-water mark.
+        assert_eq!(rep4.transport.peak_slots_by_rank.len(), n);
+        assert_eq!(
+            rep4.transport.peak_slots_by_rank.iter().copied().max(),
+            Some(rep4.transport.peak_slots)
+        );
+        assert!(Communicator::new(CommConfig {
+            nranks: n,
+            leaders_per_node: Some(0),
+            ..Default::default()
+        })
+        .is_err());
     }
 
     /// Without an explicit placement, a pinned hierarchical algorithm runs
@@ -1227,5 +1315,45 @@ mod tests {
             ..Default::default()
         })
         .is_err());
+    }
+
+    /// Cross-bucket channel striping end to end: on a multi-rail fabric a
+    /// bucket at the byte threshold is striped across the rails (extra
+    /// channels in the fused program), small buckets stay single-channel,
+    /// and the batched sums remain exact.
+    #[test]
+    fn bucketed_allreduce_stripes_big_buckets() {
+        let n = 4usize;
+        let big = crate::coordinator::tuner::BUCKET_STRIPE_THRESHOLD_BYTES / 4; // elems
+        let lens = [64usize, big, 100];
+        let mk = |cfg: CommConfig| Communicator::new(cfg).unwrap();
+        let railed = mk(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+            parallel_links: Some(4),
+            ..Default::default()
+        });
+        let flat = mk(CommConfig {
+            nranks: n,
+            algorithm: Some(Algorithm::Pat { aggregation: 2 }),
+            ..Default::default()
+        });
+        let buckets: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&l| (0..n).map(|r| (0..l).map(|i| (r * l + i) as f32).collect()).collect())
+            .collect();
+        let (outs_railed, rep_railed) = railed.all_reduce_batch_report(&buckets).unwrap();
+        let (outs_flat, rep_flat) = flat.all_reduce_batch_report(&buckets).unwrap();
+        // the big middle bucket gains 3 extra channels; the others don't
+        assert_eq!(rep_railed.channels, rep_flat.channels + 3);
+        assert_eq!(outs_railed, outs_flat, "striping must not change the sums");
+        for (b, &l) in lens.iter().enumerate() {
+            let want: Vec<f32> = (0..l)
+                .map(|i| (0..n).map(|r| (r * l + i) as f32).sum())
+                .collect();
+            for r in 0..n {
+                assert_eq!(outs_railed[b][r], want, "bucket {b} rank {r}");
+            }
+        }
     }
 }

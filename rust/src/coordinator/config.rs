@@ -23,6 +23,7 @@
 //! | `calib_history` | JSONL file appended with one predicted-vs-measured [`crate::obs::calib::CalibRecord`] per collective call |
 //! | `placement` | rank → node placement (grammar below) |
 //! | `ranks_per_node` | shorthand for `placement = uniform:<k>` |
+//! | `leaders_per_node` | stripe leaders per node for hierarchical algorithms: each leader owns an interleaved chunk stripe and its own inter-node channel (clamped to the smallest node size) |
 //! | `inter_gbps` | per-node uplink bandwidth for the tuner's flat-vs-hier crossover |
 //! | `alpha_base_us`, `alpha_hop_ns`, `gamma_chunk_ns`, `nic_gbps` | cost-model overrides |
 //!
@@ -35,7 +36,11 @@
 //!   (`uniform:4` over 13 ranks → nodes of `[4, 4, 4, 1]`);
 //! * `<k>` — shorthand for `uniform:<k>`;
 //! * `<k1>,<k2>,...` — explicit node sizes, which must sum to `nranks`
-//!   (e.g. `4,4,5` over 13 ranks).
+//!   (e.g. `4,4,5` over 13 ranks);
+//! * `<k>x<m>` — three-level: uniform nodes of `k` ranks grouped into
+//!   pods of `m` nodes (`8x4` over 256 ranks → 8 pods of 4 nodes);
+//! * `<sizes>;<sizes>;...` — three-level with explicit pods of
+//!   comma-separated node sizes (e.g. `4,4;4,5` over 17 ranks).
 //!
 //! `nranks` must be set (in the same file or by env overlay) for the
 //! placement to be resolved; `ranks_per_node` is ignored when an explicit
@@ -203,6 +208,12 @@ impl ConfigMap {
         } else if let Some(k) = self.get_usize("ranks_per_node")? {
             cfg.placement = Some(Placement::uniform(cfg.nranks, k)?);
         }
+        if let Some(l) = self.get_usize("leaders_per_node")? {
+            if l == 0 {
+                return Err(Error::Config("leaders_per_node must be >= 1".into()));
+            }
+            cfg.leaders_per_node = Some(l);
+        }
         if let Some(v) = self.get_f64("inter_gbps")? {
             cfg.inter_bw = Some(v * 1e9);
         }
@@ -303,6 +314,40 @@ mod tests {
             .to_comm_config()
             .is_err());
         assert!(ConfigMap::parse("nranks = 8\nranks_per_node = 0\n")
+            .unwrap()
+            .to_comm_config()
+            .is_err());
+    }
+
+    #[test]
+    fn three_level_and_leader_keys() {
+        // `<k>x<m>` — uniform nodes grouped into pods
+        let cfg = ConfigMap::parse("nranks = 32\nplacement = 4x4\nleaders_per_node = 2\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        let pl = cfg.placement.unwrap();
+        assert!(pl.is_three_level());
+        assert_eq!(pl.npods(), 2);
+        assert_eq!(cfg.leaders_per_node, Some(2));
+
+        // explicit pods of node sizes
+        let cfg = ConfigMap::parse("nranks = 17\nplacement = 4,4;4,5\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        let pl = cfg.placement.unwrap();
+        assert_eq!(pl.npods(), 2);
+        assert_eq!(pl.node_sizes(), vec![4, 4, 4, 5]);
+
+        // leaders_per_node stands alone (applied to the default placement
+        // by the communicator) and rejects zero
+        let cfg = ConfigMap::parse("nranks = 16\nleaders_per_node = 4\n")
+            .unwrap()
+            .to_comm_config()
+            .unwrap();
+        assert_eq!(cfg.leaders_per_node, Some(4));
+        assert!(ConfigMap::parse("nranks = 16\nleaders_per_node = 0\n")
             .unwrap()
             .to_comm_config()
             .is_err());

@@ -1,5 +1,5 @@
-//! Rank placement: the rank → node mapping hierarchical schedules are built
-//! from.
+//! Rank placement: the rank → node (→ pod) mapping hierarchical schedules
+//! are built from.
 //!
 //! A *node* models a set of ranks with cheap mutual communication (one
 //! machine's NVLink domain, or one leaf switch of a fat-tree). Node sizes
@@ -9,6 +9,18 @@
 //! participates in the inter-node phase of a hierarchical schedule
 //! ([`crate::sched::hier`]).
 //!
+//! Two extensions generalize the two-level picture:
+//!
+//! * **Multiple leaders per node** ([`Placement::with_leaders`]): the
+//!   inter-node phase is striped across the first `L` ranks of every node,
+//!   each stripe leader owning a chunk stripe and its own channel (ECMP
+//!   salt). `L` is clamped to the smallest node size at use
+//!   ([`Placement::effective_leaders`]).
+//! * **Pods** ([`Placement::with_pods`], [`Placement::from_pod_sizes`]):
+//!   contiguous groups of nodes forming a third hierarchy level
+//!   (leaf/pod/fabric); hierarchical schedules then recurse — intra-node,
+//!   intra-pod PAT, inter-pod PAT.
+//!
 //! ## Spelling (config / CLI grammar)
 //!
 //! * `uniform:<k>` — contiguous nodes of `k` ranks, last node takes the
@@ -16,10 +28,16 @@
 //! * `<k>` — shorthand for `uniform:<k>`.
 //! * `<k1>,<k2>,...` — explicit node sizes; must sum to the rank count
 //!   (`4,4,5` over 13 ranks).
+//! * `<k>x<m>` / `uniform:<k>x<m>` — three-level: uniform nodes of `k`
+//!   ranks grouped into pods of `m` nodes (last pod takes the remainder).
+//! * `<sizes>;<sizes>;...` — three-level with explicit pods: each `;`
+//!   group is one pod's comma-separated node sizes (`4,4;4,1` = two pods).
 
 use crate::core::{Error, Rank, Result};
 
-/// A rank → node mapping with (possibly uneven) contiguous nodes.
+/// A rank → node mapping with (possibly uneven) contiguous nodes, an
+/// optional pod grouping (third level), and a leaders-per-node stripe
+/// count for the inter-node phase.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
     /// `node_of[r]` is the node id of rank `r` (node ids are dense).
@@ -27,6 +45,13 @@ pub struct Placement {
     /// `nodes[m]` is node `m`'s rank list, ascending; `nodes[m][0]` is the
     /// leader.
     nodes: Vec<Vec<Rank>>,
+    /// Requested inter-node stripe leaders per node (>= 1). Clamped to the
+    /// smallest node size when schedules are built; see
+    /// [`Placement::effective_leaders`].
+    leaders: usize,
+    /// `pods[p]` is pod `p`'s node-id list (contiguous, covering every
+    /// node). Empty means two-level (no pod grouping).
+    pods: Vec<Vec<usize>>,
 }
 
 impl Placement {
@@ -49,7 +74,19 @@ impl Placement {
             }
             next += s;
         }
-        Ok(Placement { node_of, nodes })
+        Ok(Placement { node_of, nodes, leaders: 1, pods: Vec::new() })
+    }
+
+    /// Build a three-level placement from explicit per-pod node sizes:
+    /// `pod_sizes[p]` lists pod `p`'s node sizes (`[[4,4],[4,1]]` = two
+    /// pods, the second with an uneven tail node).
+    pub fn from_pod_sizes(pod_sizes: &[Vec<usize>]) -> Result<Placement> {
+        if pod_sizes.is_empty() || pod_sizes.iter().any(Vec::is_empty) {
+            return Err(Error::Config("placement pods need at least one node each".into()));
+        }
+        let flat: Vec<usize> = pod_sizes.iter().flatten().copied().collect();
+        let pl = Self::from_node_sizes(&flat)?;
+        pl.with_pods_grouped(&pod_sizes.iter().map(Vec::len).collect::<Vec<_>>())
     }
 
     /// Contiguous nodes of `ranks_per_node`; when it does not divide
@@ -78,18 +115,112 @@ impl Placement {
         Self::uniform(nranks, 1)
     }
 
+    /// Set the requested inter-node stripe leader count (>= 1). The value
+    /// is stored as requested; schedules clamp it to the smallest node
+    /// size via [`Placement::effective_leaders`].
+    pub fn with_leaders(mut self, leaders: usize) -> Result<Placement> {
+        if leaders == 0 {
+            return Err(Error::Config("leaders_per_node must be >= 1".into()));
+        }
+        self.leaders = leaders;
+        Ok(self)
+    }
+
+    /// Group nodes into contiguous pods of `nodes_per_pod` nodes each (the
+    /// last pod takes the remainder), turning a two-level placement into a
+    /// three-level one.
+    pub fn with_pods(self, nodes_per_pod: usize) -> Result<Placement> {
+        if nodes_per_pod == 0 {
+            return Err(Error::Config("nodes_per_pod must be >= 1".into()));
+        }
+        let nn = self.nnodes();
+        let mut groups = Vec::new();
+        let mut m = 0;
+        while m < nn {
+            groups.push(nodes_per_pod.min(nn - m));
+            m += nodes_per_pod;
+        }
+        self.with_pods_grouped(&groups)
+    }
+
+    /// Group nodes into contiguous pods with explicit node counts; the
+    /// counts must sum to the node count.
+    pub fn with_pods_grouped(mut self, nodes_per_pod: &[usize]) -> Result<Placement> {
+        let total: usize = nodes_per_pod.iter().sum();
+        if nodes_per_pod.is_empty() || nodes_per_pod.iter().any(|&g| g == 0) {
+            return Err(Error::Config("placement pods need at least one node each".into()));
+        }
+        if total != self.nnodes() {
+            return Err(Error::Config(format!(
+                "placement pod node counts sum to {total}, expected nnodes={}",
+                self.nnodes()
+            )));
+        }
+        let mut pods = Vec::with_capacity(nodes_per_pod.len());
+        let mut next = 0usize;
+        for &g in nodes_per_pod {
+            pods.push((next..next + g).collect());
+            next += g;
+        }
+        self.pods = pods;
+        Ok(self)
+    }
+
     /// Parse the config/CLI grammar (see module docs) for `nranks` ranks.
     pub fn parse(spec: &str, nranks: usize) -> Result<Placement> {
         let spec = spec.trim();
         if spec.is_empty() {
             return Err(Error::Config("empty placement spec".into()));
         }
-        if let Some(rest) = spec.strip_prefix("uniform:") {
-            let k: usize = rest
-                .trim()
+        // `<sizes>;<sizes>;...` — explicit pods of comma-separated node
+        // sizes.
+        if spec.contains(';') {
+            let pods: Result<Vec<Vec<usize>>> = spec
+                .split(';')
+                .map(|group| {
+                    group
+                        .split(',')
+                        .map(|t| {
+                            t.trim().parse::<usize>().map_err(|_| {
+                                Error::Config(format!("placement: bad node size {t:?}"))
+                            })
+                        })
+                        .collect()
+                })
+                .collect();
+            let pods = pods?;
+            let total: usize = pods.iter().flatten().sum();
+            if total != nranks {
+                return Err(Error::Config(format!(
+                    "placement sizes sum to {total}, expected nranks={nranks}"
+                )));
+            }
+            return Self::from_pod_sizes(&pods);
+        }
+        let parse_k = |rest: &str| -> Result<(usize, Option<usize>)> {
+            // `<k>` or `<k>x<m>` (m = nodes per pod).
+            let (k, m) = match rest.split_once('x') {
+                None => (rest.trim(), None),
+                Some((k, m)) => (k.trim(), Some(m.trim())),
+            };
+            let k: usize = k
                 .parse()
-                .map_err(|_| Error::Config(format!("placement: bad node size {rest:?}")))?;
-            return Self::uniform(nranks, k);
+                .map_err(|_| Error::Config(format!("placement: bad node size {k:?}")))?;
+            let m = match m {
+                None => None,
+                Some(m) => Some(m.parse::<usize>().map_err(|_| {
+                    Error::Config(format!("placement: bad nodes-per-pod {m:?}"))
+                })?),
+            };
+            Ok((k, m))
+        };
+        if let Some(rest) = spec.strip_prefix("uniform:") {
+            let (k, m) = parse_k(rest)?;
+            let pl = Self::uniform(nranks, k)?;
+            return match m {
+                None => Ok(pl),
+                Some(m) => pl.with_pods(m),
+            };
         }
         if spec.contains(',') {
             let sizes: Result<Vec<usize>> = spec
@@ -109,10 +240,12 @@ impl Placement {
             }
             return Self::from_node_sizes(&sizes);
         }
-        let k: usize = spec
-            .parse()
-            .map_err(|_| Error::Config(format!("placement: bad spec {spec:?}")))?;
-        Self::uniform(nranks, k)
+        let (k, m) = parse_k(spec)?;
+        let pl = Self::uniform(nranks, k)?;
+        match m {
+            None => Ok(pl),
+            Some(m) => pl.with_pods(m),
+        }
     }
 
     pub fn nranks(&self) -> usize {
@@ -142,6 +275,58 @@ impl Placement {
         self.leader(self.node_of(rank)) == rank
     }
 
+    /// Requested stripe leaders per node (as configured, unclamped).
+    pub fn leaders_per_node(&self) -> usize {
+        self.leaders
+    }
+
+    /// Stripe leaders actually usable: the requested count clamped to the
+    /// smallest node size (every node must field a leader for each
+    /// stripe).
+    pub fn effective_leaders(&self) -> usize {
+        self.leaders.min(self.min_node_size()).max(1)
+    }
+
+    /// The stripe leaders of `node`: its first `effective_leaders()`
+    /// ranks.
+    pub fn leaders_of(&self, node: usize) -> &[Rank] {
+        &self.nodes[node][..self.effective_leaders()]
+    }
+
+    /// Whether `rank` is one of its node's stripe leaders (offset within
+    /// the node below `effective_leaders()`).
+    pub fn is_stripe_leader(&self, rank: Rank) -> bool {
+        self.leaders_of(self.node_of(rank)).contains(&rank)
+    }
+
+    /// Whether a pod grouping is present (three-level hierarchy).
+    pub fn is_three_level(&self) -> bool {
+        !self.pods.is_empty()
+    }
+
+    /// Pod count (0 when two-level).
+    pub fn npods(&self) -> usize {
+        self.pods.len()
+    }
+
+    /// Node ids of pod `p`, ascending.
+    pub fn pod_nodes(&self, pod: usize) -> &[usize] {
+        &self.pods[pod]
+    }
+
+    /// Pod id of `node` (panics when two-level).
+    pub fn pod_of_node(&self, node: usize) -> usize {
+        self.pods
+            .iter()
+            .position(|p| p.contains(&node))
+            .expect("node id out of range for pod lookup")
+    }
+
+    /// Total rank count of pod `p`.
+    pub fn pod_rank_count(&self, pod: usize) -> usize {
+        self.pods[pod].iter().map(|&m| self.nodes[m].len()).sum()
+    }
+
     pub fn node_sizes(&self) -> Vec<usize> {
         self.nodes.iter().map(Vec::len).collect()
     }
@@ -154,9 +339,20 @@ impl Placement {
         self.nodes.iter().map(Vec::len).min().unwrap_or(0)
     }
 
-    /// `"nodes=4 sizes=[4, 4, 4, 1]"` — for reports and explain output.
+    /// `"nodes=4 sizes=[4, 4, 4, 1]"` — for reports and explain output;
+    /// pods and extra leaders are appended when present.
     pub fn describe(&self) -> String {
-        format!("nodes={} sizes={:?}", self.nnodes(), self.node_sizes())
+        let mut s = format!("nodes={} sizes={:?}", self.nnodes(), self.node_sizes());
+        if self.is_three_level() {
+            s.push_str(&format!(
+                " pods={:?}",
+                self.pods.iter().map(Vec::len).collect::<Vec<_>>()
+            ));
+        }
+        if self.leaders > 1 {
+            s.push_str(&format!(" leaders={}", self.leaders));
+        }
+        s
     }
 }
 
@@ -214,10 +410,63 @@ mod tests {
     }
 
     #[test]
+    fn parse_three_level_grammar() {
+        // uniform nodes grouped into pods: 16 ranks, nodes of 4, pods of 2
+        // nodes (uneven last pod absorbed by the `x` grammar's remainder).
+        let p = Placement::parse("4x2", 16).unwrap();
+        assert!(p.is_three_level());
+        assert_eq!(p.npods(), 2);
+        assert_eq!(p.pod_nodes(0), &[0, 1]);
+        assert_eq!(p.pod_nodes(1), &[2, 3]);
+        assert_eq!(p.pod_rank_count(1), 8);
+        assert_eq!(p.pod_of_node(3), 1);
+        let p = Placement::parse("uniform:4x3", 20).unwrap();
+        assert_eq!(p.npods(), 2); // 5 nodes -> pods of [3, 2]
+        assert_eq!(p.pod_nodes(1), &[3, 4]);
+        // explicit pods with uneven nodes
+        let p = Placement::parse("4,4;4,1", 13).unwrap();
+        assert_eq!(p.npods(), 2);
+        assert_eq!(p.node_sizes(), vec![4, 4, 4, 1]);
+        assert_eq!(p.pod_nodes(1), &[2, 3]);
+        assert!(Placement::parse("4,4;4", 13).is_err()); // wrong sum
+        assert!(Placement::parse("4x0", 16).is_err());
+    }
+
+    #[test]
+    fn leaders_clamped_to_min_node() {
+        let p = Placement::uniform(13, 4).unwrap().with_leaders(2).unwrap();
+        assert_eq!(p.leaders_per_node(), 2);
+        // min node size is 1 (the tail node) so only one stripe survives
+        assert_eq!(p.effective_leaders(), 1);
+        let p = Placement::uniform(16, 4).unwrap().with_leaders(2).unwrap();
+        assert_eq!(p.effective_leaders(), 2);
+        assert_eq!(p.leaders_of(1), &[4, 5]);
+        assert!(p.is_stripe_leader(5));
+        assert!(!p.is_stripe_leader(6));
+        assert!(Placement::uniform(8, 4).unwrap().with_leaders(0).is_err());
+        // requesting more leaders than ranks per node clamps
+        let p = Placement::uniform(8, 4).unwrap().with_leaders(99).unwrap();
+        assert_eq!(p.effective_leaders(), 4);
+    }
+
+    #[test]
+    fn describe_mentions_pods_and_leaders() {
+        let p = Placement::parse("4x2", 16).unwrap().with_leaders(2).unwrap();
+        let d = p.describe();
+        assert!(d.contains("pods=[2, 2]"), "{d}");
+        assert!(d.contains("leaders=2"), "{d}");
+        let d = Placement::uniform(8, 4).unwrap().describe();
+        assert!(!d.contains("pods"), "{d}");
+        assert!(!d.contains("leaders"), "{d}");
+    }
+
+    #[test]
     fn invalid_rejected() {
         assert!(Placement::from_node_sizes(&[]).is_err());
         assert!(Placement::from_node_sizes(&[2, 0]).is_err());
         assert!(Placement::uniform(0, 4).is_err());
         assert!(Placement::uniform(8, 0).is_err());
+        assert!(Placement::from_pod_sizes(&[]).is_err());
+        assert!(Placement::uniform(8, 4).unwrap().with_pods_grouped(&[1]).is_err());
     }
 }

@@ -76,14 +76,16 @@ USAGE: patcol <command> [--options]
 COMMANDS
   explain   --ranks N [--agg A] [--alg ALG] [--collective ag|rs|ar] [--trees]
             [--channels C] [--placement SPEC | --ranks-per-node K]
+            [--leaders-per-node L]
   run       --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--buckets B | --bucket-bytes BYTES]
             [--datapath scalar|pjrt] [--reduce-shards N] [--buffer-slots S]
             [--trace PATH] [--placement SPEC | --ranks-per-node K]
+            [--leaders-per-node L]
   simulate  --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--topo flat|leaf_spine|three_level|dragonfly]
             [--taper F] [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
-            [--trace PATH]
+            [--leaders-per-node L] [--trace PATH]
   trace     --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--exec sim|transport|both] [--out STEM]
             [--topo ...] [--smoke]
@@ -93,7 +95,7 @@ COMMANDS
   sweep     --ranks N [--sizes LIST] [--collective ag|rs] [--topo ...]
   tune      --ranks N --size BYTES [--buffer-slots S] [--collective ag|rs|ar]
             [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
-            [--parallel-links L]
+            [--parallel-links L] [--leaders-per-node L]
   selftest  [--max-ranks N]
 
 ALG — the full grammar is alg[+alg][:<segments>][*<channels>]:
@@ -104,6 +106,12 @@ ALG — the full grammar is alg[+alg][:<segments>][*<channels>]:
      pat+ring:2*4 = two pipeline segments, each striped over 4 channels)
 SIZES: e.g. 1KiB,64KiB,1MiB (per-rank chunk size)
 SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
+       | <k>x<m> (three-level: k ranks/node, pods of m nodes)
+       | <sizes>;<sizes>;... (three-level: explicit pods of node sizes)
+--leaders-per-node gives hierarchical algorithms L stripe leaders per
+  node: each leader owns an interleaved chunk stripe and its own
+  inter-node channel (L ECMP flows per node; clamped to the smallest
+  node)
 --channels splits the collective across C channels (--channels overrides *C)
 --buckets B (or --bucket-bytes BYTES) splits an all-reduce payload into
   gradient buckets fused into one pipelined program (bucket i+1's RS
@@ -186,25 +194,57 @@ fn alg_channels(args: &Args) -> Result<(Option<Algorithm>, Option<usize>)> {
     Ok((alg, channels))
 }
 
+/// `--leaders-per-node L`: stripe leaders per node for hierarchical
+/// algorithms (None if absent; zero is rejected).
+fn leaders_opt(args: &Args) -> Result<Option<usize>> {
+    match args.opt_str("leaders-per-node") {
+        None => Ok(None),
+        Some(s) => {
+            let l: usize = s.parse().map_err(|_| {
+                patcol::core::Error::Config(format!("--leaders-per-node: bad integer {s:?}"))
+            })?;
+            if l == 0 {
+                return Err(patcol::core::Error::Config(
+                    "--leaders-per-node must be >= 1".into(),
+                ));
+            }
+            Ok(Some(l))
+        }
+    }
+}
+
+/// Fold `--leaders-per-node` into a placement (idempotent — the
+/// communicator applies the same count again on its own placement).
+fn with_cli_leaders(pl: Placement, args: &Args) -> Result<Placement> {
+    match leaders_opt(args)? {
+        Some(l) => pl.with_leaders(l),
+        None => Ok(pl),
+    }
+}
+
 /// Placement from `--placement SPEC` or `--ranks-per-node K` (None if
-/// neither is given).
+/// neither is given), with `--leaders-per-node` applied.
 fn placement_opt(args: &Args, nranks: usize) -> Result<Option<Placement>> {
     if let Some(spec) = args.opt_str("placement") {
-        return Ok(Some(Placement::parse(&spec, nranks)?));
+        return Ok(Some(with_cli_leaders(Placement::parse(&spec, nranks)?, args)?));
     }
     let k = args.usize("ranks-per-node", 0)?;
     if k == 0 {
         return Ok(None);
     }
-    Ok(Some(Placement::uniform(nranks, k)?))
+    Ok(Some(with_cli_leaders(Placement::uniform(nranks, k)?, args)?))
 }
 
 /// The placement a hierarchical algorithm runs on: the explicit one, or
-/// contiguous default-sized nodes.
+/// contiguous default-sized nodes (both with `--leaders-per-node`
+/// applied).
 fn placement_or_default(args: &Args, nranks: usize) -> Result<Placement> {
     match placement_opt(args, nranks)? {
         Some(p) => Ok(p),
-        None => Placement::uniform(nranks, sched::DEFAULT_RANKS_PER_NODE),
+        None => with_cli_leaders(
+            Placement::uniform(nranks, sched::DEFAULT_RANKS_PER_NODE)?,
+            args,
+        ),
     }
 }
 
@@ -375,6 +415,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         datapath,
         reduce_shards,
         placement: placement_opt(args, n)?,
+        leaders_per_node: leaders_opt(args)?,
         channels,
         buckets,
         trace: trace_path.is_some(),

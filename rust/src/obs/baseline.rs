@@ -20,9 +20,12 @@
 //!
 //! [`check`] compares two such documents on machine-independent
 //! metrics only — the reduce-path ABI speedup *ratio* from
-//! `transport_hotpath` and the simulator-derived Träff optimality-gap
-//! percentages from `latency_vs_size` — never absolute wall times,
-//! which would tie the committed baseline to one machine.
+//! `transport_hotpath`, the simulator-derived Träff optimality-gap
+//! percentages from `latency_vs_size`, and the `hier_vs_flat`
+//! hierarchy gates (leader-staging high-water ≤ the analytic
+//! [`crate::sched::hier::staging_bound`] per leader count, hier Träff
+//! gap non-growth) — never absolute wall times, which would tie the
+//! committed baseline to one machine.
 
 use std::path::Path;
 
@@ -125,6 +128,39 @@ pub fn optimality_gaps(doc: &Json) -> Vec<(String, f64)> {
         .collect()
 }
 
+/// The `hier_vs_flat` leader-staging parameter pairs, as
+/// `(leader label, high water, analytic bound)` — one per
+/// `staging_hw_l<L>` / `staging_bound_l<L>` pair in the report. Both
+/// sides are chunk-count-shaped (reference-executor occupancy vs the
+/// [`crate::sched::hier::staging_bound`] law), so the gate is exact and
+/// machine-independent.
+pub fn staging_pairs(doc: &Json) -> Vec<(String, f64, f64)> {
+    let Some(params) = bench(doc, "hier_vs_flat")
+        .and_then(|b| b.get("params"))
+        .and_then(|p| p.as_obj())
+    else {
+        return Vec::new();
+    };
+    params
+        .iter()
+        .filter_map(|(k, v)| {
+            let l = k.strip_prefix("staging_hw_")?;
+            let hw = v.as_f64()?;
+            let bound = params.get(format!("staging_bound_{l}").as_str())?.as_f64()?;
+            Some((l.to_string(), hw, bound))
+        })
+        .collect()
+}
+
+/// The `hier_vs_flat` Träff gap percentage (simulator-derived,
+/// deterministic).
+pub fn hier_gap_pct(doc: &Json) -> Option<f64> {
+    bench(doc, "hier_vs_flat")?
+        .get("params")?
+        .get("hier_gap_pct")?
+        .as_f64()
+}
+
 /// Compare `current` against the `committed` baseline. Returns one
 /// message per regression; empty means the gate passes. Metrics absent
 /// from the committed baseline are not gated (first runs pass), but
@@ -169,6 +205,39 @@ pub fn check(current: &Json, committed: &Json) -> Vec<String> {
             }
             None => fails.push(format!("latency_vs_size {name} missing from current run")),
         }
+    }
+
+    // Leader-staging law: an absolute gate on the current document (the
+    // bench asserts it too, but the stamped numbers are what CI trusts —
+    // this also catches hand-edited baselines).
+    let cur_staging = staging_pairs(current);
+    for (l, hw, bound) in &cur_staging {
+        if hw > bound {
+            fails.push(format!(
+                "hier_vs_flat leader staging {l}: high water {hw:.0} > \
+                 analytic bound {bound:.0}"
+            ));
+        }
+    }
+    if cur_staging.is_empty() && !staging_pairs(committed).is_empty() {
+        fails.push("hier_vs_flat staging parameters missing from current run".into());
+    }
+
+    // Hier Träff gap: non-growth under the same rule as the
+    // latency_vs_size gaps.
+    match (hier_gap_pct(current), hier_gap_pct(committed)) {
+        (Some(cur), Some(base)) => {
+            if cur > base * GAP_GROWTH + GAP_SLACK_PCT {
+                fails.push(format!(
+                    "hier_vs_flat hier_gap_pct regressed: {cur:.2}% > \
+                     {GAP_GROWTH} x committed {base:.2}% + {GAP_SLACK_PCT}%"
+                ));
+            }
+        }
+        (None, Some(_)) => {
+            fails.push("hier_vs_flat hier_gap_pct missing from current run".into())
+        }
+        _ => {}
     }
 
     fails
@@ -272,6 +341,59 @@ mod tests {
         // within tolerance: 10% -> 11.5% passes (1.1x + 1pt = 12)
         let ok = doc(Some(hotpath_report(1.0, 3.5)), Some(latency_report(11.5, 5.4)));
         assert!(check(&ok, &base).is_empty());
+    }
+
+    fn hier_report(hw2: f64, bound2: f64, gap: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str("hier_vs_flat")),
+            (
+                "params",
+                Json::obj(vec![
+                    ("staging_hw_l2", Json::num(hw2)),
+                    ("staging_bound_l2", Json::num(bound2)),
+                    ("hier_gap_pct", Json::num(gap)),
+                ]),
+            ),
+        ])
+    }
+
+    fn doc_with_hier(hier: Option<Json>) -> Json {
+        let mut benches = Vec::new();
+        if let Some(h) = hier {
+            benches.push(("hier_vs_flat", h));
+        }
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("benches", Json::obj(benches)),
+        ])
+    }
+
+    #[test]
+    fn hier_gates_extract_and_check() {
+        let good = doc_with_hier(Some(hier_report(40.0, 58.0, 25.0)));
+        assert_eq!(staging_pairs(&good), vec![("l2".to_string(), 40.0, 58.0)]);
+        assert_eq!(hier_gap_pct(&good), Some(25.0));
+        assert!(check(&good, &good).is_empty());
+
+        // staging over the analytic bound fails absolutely (even against
+        // an empty committed baseline)
+        let over = doc_with_hier(Some(hier_report(60.0, 58.0, 25.0)));
+        let fails = check(&over, &empty());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("leader staging l2"));
+
+        // gap growth past 1.1x + 1pt fails; within passes
+        let grown = doc_with_hier(Some(hier_report(40.0, 58.0, 30.0)));
+        let fails = check(&grown, &good);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("hier_gap_pct"));
+        let ok = doc_with_hier(Some(hier_report(40.0, 58.0, 28.0)));
+        assert!(check(&ok, &good).is_empty());
+
+        // hier bench dropping out of the current run fails loudly
+        let gone = doc_with_hier(None);
+        let fails = check(&gone, &good);
+        assert_eq!(fails.len(), 2, "{fails:?}"); // staging params + gap
     }
 
     #[test]

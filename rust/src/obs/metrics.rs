@@ -56,6 +56,40 @@ impl LinkStat {
     }
 }
 
+/// Per-fabric-tier roll-up of [`LinkStat`] (simulator side; see
+/// `SimReport::level_link_stats`). Level 0 = NIC links, 1 = leaf↔spine,
+/// 2 = spine↔core — the tier axis on which taper bites, so a three-level
+/// schedule's claim ("traffic stays low in the tree") is checkable as
+/// one row per tier instead of hundreds of per-link rows.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LevelLinkStat {
+    /// Fabric tier (the topology's `Link::level`).
+    pub level: usize,
+    /// Links in this tier.
+    pub links: usize,
+    /// Total bytes serialized across the tier.
+    pub bytes: usize,
+    /// Total busy seconds across the tier's links.
+    pub busy_s: f64,
+    /// Total contended seconds across the tier's links.
+    pub contended_s: f64,
+    /// Busiest link's utilization within the tier.
+    pub max_utilization: f64,
+}
+
+impl LevelLinkStat {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("level", Json::num(self.level as f64)),
+            ("links", Json::num(self.links as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("busy_s", Json::num(self.busy_s)),
+            ("contended_s", Json::num(self.contended_s)),
+            ("max_utilization", Json::num(self.max_utilization)),
+        ])
+    }
+}
+
 /// Blocked-on-receive seconds for one (rank, channel), by class. Both
 /// classes are always present (see module docs).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

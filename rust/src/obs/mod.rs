@@ -79,5 +79,5 @@ pub mod trace;
 pub use chrome::{chrome_trace, import_chrome_trace, ChannelTags};
 pub use critpath::{critical_path, CritNode, CritPath, Decomposition};
 pub use flight::{FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
-pub use metrics::{metrics, LinkStat, MetricsReport, OccupancyStats, StallTaxonomy};
+pub use metrics::{metrics, LevelLinkStat, LinkStat, MetricsReport, OccupancyStats, StallTaxonomy};
 pub use trace::{Counters, Event, EventKind, Trace, TraceRecorder, SCHEMA_VERSION};

@@ -54,6 +54,20 @@
 //! schedule (smaller first bucket, filling the pipeline faster — the
 //! classic answer to the composer's open unequal-segment-sizes item) is
 //! just a size vector; see `crate::coordinator::tuner::bucket_sizes`.
+//!
+//! ## Cross-bucket channel striping
+//!
+//! Latency-bound small buckets want one channel (each extra channel costs
+//! a full per-round message tax); bandwidth-bound big buckets want
+//! several (each channel is its own ECMP flow and can recruit its own
+//! fabric rail). [`channel::split`] on the fused program can only stripe
+//! *every* bucket uniformly. [`fuse_striped`] stripes per bucket: bucket
+//! `b` with `stripes_b` copies runs each pipeline segment as `stripes_b`
+//! side-by-side streams — each on its own channel, each owning a disjoint
+//! mod-`n` chunk range carrying `1/stripes_b` of the segment payload
+//! (exactly the [`channel::split`] contract, applied selectively).
+//! [`stripe_plan`] picks the vector: extra channels only for buckets at
+//! or above a byte threshold.
 
 use crate::core::{ChunkId, Collective, Error, Result};
 use crate::sched::channel;
@@ -91,56 +105,77 @@ pub struct BucketLayout {
     pub nranks: usize,
     /// Per-bucket compose layout (segment step grid within the bucket).
     pub per_bucket: Vec<Layout>,
+    /// Channel stripes per bucket (all ones unless built by
+    /// [`BucketLayout::of_striped`]; see [`fuse_striped`]).
+    pub stripes: Vec<usize>,
     /// Global step at which each bucket's first reduce-scatter starts.
     pub step_base: Vec<usize>,
     /// First chunk id of each bucket (always a multiple of `nranks`).
     pub chunk_base: Vec<usize>,
-    /// First channel of each bucket (bucket `b` spans `segments_b`
-    /// channels).
+    /// First channel of each bucket (bucket `b` spans
+    /// `segments_b · stripes_b` channels).
     pub channel_base: Vec<usize>,
 }
 
 impl BucketLayout {
     /// Layout of [`fuse`]`(buckets)` without building the fused program.
     pub fn of(buckets: &[BucketPhases]) -> BucketLayout {
+        Self::of_striped(buckets, &vec![1; buckets.len()])
+    }
+
+    /// Layout of [`fuse_striped`]`(buckets, stripes)` without building the
+    /// fused program. `stripes` must be per-bucket and all `>= 1`.
+    pub fn of_striped(buckets: &[BucketPhases], stripes: &[usize]) -> BucketLayout {
+        debug_assert_eq!(buckets.len(), stripes.len());
         let nranks = buckets.first().map(|b| b.rs.nranks).unwrap_or(0);
         let mut per_bucket = Vec::with_capacity(buckets.len());
         let mut step_base = Vec::with_capacity(buckets.len());
         let mut chunk_base = Vec::with_capacity(buckets.len());
         let mut channel_base = Vec::with_capacity(buckets.len());
         let (mut step, mut chunk, mut chan) = (0usize, 0usize, 0usize);
-        for b in buckets {
+        for (b, st) in buckets.iter().zip(stripes) {
             let lay = Layout::of(&b.rs, &b.ag, b.segments);
             step_base.push(step);
             chunk_base.push(chunk);
             channel_base.push(chan);
             // The next bucket starts where this bucket's *last* segment's
             // all-gather starts, so the two share a step range — the
-            // cross-operation overlap.
+            // cross-operation overlap. Stripes share their segment's step
+            // span (they run side by side on their own channels), so the
+            // stagger grid does not see them.
             step += b.segments * lay.rs_steps;
-            chunk += b.segments * nranks;
-            chan += b.segments;
+            chunk += b.segments * st * nranks;
+            chan += b.segments * st;
             per_bucket.push(lay);
         }
-        BucketLayout { nranks, per_bucket, step_base, chunk_base, channel_base }
+        BucketLayout {
+            nranks,
+            per_bucket,
+            stripes: stripes.to_vec(),
+            step_base,
+            chunk_base,
+            channel_base,
+        }
     }
 
     pub fn nbuckets(&self) -> usize {
         self.per_bucket.len()
     }
 
-    /// Total chunk id space of the fused program (`Σ_b segments_b · n`).
+    /// Total chunk id space of the fused program
+    /// (`Σ_b segments_b · stripes_b · n`).
     pub fn chunk_space(&self) -> usize {
-        match (self.chunk_base.last(), self.per_bucket.last()) {
-            (Some(&base), Some(lay)) => base + lay.segments * self.nranks,
+        match (self.chunk_base.last(), self.per_bucket.last(), self.stripes.last()) {
+            (Some(&base), Some(lay), Some(&st)) => base + lay.segments * st * self.nranks,
             _ => 0,
         }
     }
 
-    /// Total channel count of the fused program (`Σ_b segments_b`).
+    /// Total channel count of the fused program
+    /// (`Σ_b segments_b · stripes_b`).
     pub fn channels(&self) -> usize {
-        match (self.channel_base.last(), self.per_bucket.last()) {
-            (Some(&base), Some(lay)) => base + lay.segments,
+        match (self.channel_base.last(), self.per_bucket.last(), self.stripes.last()) {
+            (Some(&base), Some(lay), Some(&st)) => base + lay.segments * st,
             _ => 0,
         }
     }
@@ -148,7 +183,7 @@ impl BucketLayout {
     /// Global channel range `[start, end)` owned by `bucket`.
     pub fn channel_range(&self, bucket: usize) -> (usize, usize) {
         let lo = self.channel_base[bucket];
-        (lo, lo + self.per_bucket[bucket].segments)
+        (lo, lo + self.per_bucket[bucket].segments * self.stripes[bucket])
     }
 
     /// Global step range `[start, end)` of `bucket` (first segment's
@@ -170,15 +205,15 @@ impl BucketLayout {
 
     /// Per-chunk element counts for the whole fused chunk space, given the
     /// per-chunk element count of each bucket (`elems[b]` = elements in
-    /// one of bucket `b`'s `segments_b · n` chunks). This is the grid
-    /// [`crate::transport::run_allreduce_batch`] executes, and ×
+    /// one of bucket `b`'s `segments_b · stripes_b · n` chunks). This is
+    /// the grid [`crate::transport::run_allreduce_batch`] executes, and ×
     /// `dtype size` the per-chunk byte vector `crate::sim::simulate_sized`
     /// costs.
     pub fn chunk_elems(&self, elems: &[usize]) -> Vec<usize> {
         debug_assert_eq!(elems.len(), self.nbuckets());
         let mut out = Vec::with_capacity(self.chunk_space());
         for (b, lay) in self.per_bucket.iter().enumerate() {
-            out.resize(out.len() + lay.segments * self.nranks, elems[b]);
+            out.resize(out.len() + lay.segments * self.stripes[b] * self.nranks, elems[b]);
         }
         out
     }
@@ -221,6 +256,18 @@ pub fn bucket_windows(layout: &BucketLayout, channel_spans: &[(f64, f64)]) -> Ve
     out
 }
 
+/// Pick per-bucket channel stripe counts from per-bucket payload bytes:
+/// buckets at or above `threshold_bytes` get `channels` stripes (their
+/// extra ECMP flows), smaller buckets stay on one channel and skip the
+/// per-round channel tax. Feed the result to [`fuse_striped`].
+pub fn stripe_plan(bucket_bytes: &[usize], threshold_bytes: usize, channels: usize) -> Vec<usize> {
+    let c = channels.max(1);
+    bucket_bytes
+        .iter()
+        .map(|&b| if c > 1 && b >= threshold_bytes { c } else { 1 })
+        .collect()
+}
+
 /// Fuse a batch of per-bucket all-reduce requests into one pipelined
 /// multi-channel all-reduce program (see the module docs for the
 /// construction and the FIFO argument). All buckets must share the rank
@@ -228,8 +275,29 @@ pub fn bucket_windows(layout: &BucketLayout, channel_spans: &[(f64, f64)]) -> Ve
 /// [`channel::split`] to the *fused* program — channels compose that
 /// way, exactly as for [`crate::sched::compose::fuse`]).
 pub fn fuse(buckets: &[BucketPhases]) -> Result<Program> {
+    fuse_striped(buckets, &vec![1; buckets.len()])
+}
+
+/// [`fuse`] with per-bucket channel striping (see the module docs):
+/// bucket `b` runs each of its segments as `stripes[b]` side-by-side
+/// copies, each on its own channel over its own mod-`n` chunk range, each
+/// carrying `1/stripes[b]` of the segment payload (the executors see that
+/// through [`BucketLayout::chunk_elems`] — the caller divides bucket
+/// `b`'s per-chunk element count by its stripe count exactly as for
+/// [`channel::split`]). `stripes` all ones reduces to [`fuse`].
+pub fn fuse_striped(buckets: &[BucketPhases], stripes: &[usize]) -> Result<Program> {
     if buckets.is_empty() {
         return Err(Error::Schedule("bucket fuse: at least one bucket required".into()));
+    }
+    if stripes.len() != buckets.len() {
+        return Err(Error::Schedule(format!(
+            "bucket fuse: {} stripe counts for {} buckets",
+            stripes.len(),
+            buckets.len()
+        )));
+    }
+    if let Some(b) = stripes.iter().position(|&s| s == 0) {
+        return Err(Error::Schedule(format!("bucket {b}: stripes must be >= 1")));
     }
     let n = buckets[0].rs.nranks;
     for (b, bk) in buckets.iter().enumerate() {
@@ -261,10 +329,14 @@ pub fn fuse(buckets: &[BucketPhases]) -> Result<Program> {
             )));
         }
     }
-    let layout = BucketLayout::of(buckets);
+    let layout = BucketLayout::of_striped(buckets, stripes);
     let specs: Vec<String> = buckets
         .iter()
-        .map(|b| format!("{}+{}:{}", b.rs.algorithm, b.ag.algorithm, b.segments))
+        .zip(stripes)
+        .map(|(b, &st)| {
+            let stripe = if st > 1 { format!("*{st}") } else { String::new() };
+            format!("{}+{}:{}{stripe}", b.rs.algorithm, b.ag.algorithm, b.segments)
+        })
         .collect();
     let name = if specs.windows(2).all(|w| w[0] == w[1]) {
         format!("bkt{}({})", specs.len(), specs[0])
@@ -273,29 +345,35 @@ pub fn fuse(buckets: &[BucketPhases]) -> Result<Program> {
     };
     let mut out = Program::new(n, Collective::AllReduce, name);
 
-    // Per rank: merge all buckets' 2·S_b phase streams by (global step,
-    // stream index = Σ 2·segments so far), preserving in-stream order.
-    // The stream list is built in the same (bucket, segment, RS-then-AG)
-    // order on every rank — the tie-break both endpoints agree on.
+    // Per rank: merge all buckets' 2·S_b·stripes_b phase streams by
+    // (global step, stream index = position in this list), preserving
+    // in-stream order. The stream list is built in the same (bucket,
+    // segment, stripe, RS-then-AG) order on every rank — the tie-break
+    // both endpoints agree on. Stripes of one segment share their step
+    // spans but own disjoint channels, so the per-channel FIFO argument
+    // is untouched.
     for rank in 0..n {
         let mut streams: Vec<channel::Stream<'_>> = Vec::new();
-        for (b, bk) in buckets.iter().enumerate() {
+        for ((b, bk), &nstripes) in buckets.iter().enumerate().zip(stripes) {
             let lay = &layout.per_bucket[b];
             for seg in 0..bk.segments {
-                let (rs_lo, _) = lay.span(seg, Phase::ReduceScatter);
-                let (ag_lo, _) = lay.span(seg, Phase::AllGather);
-                streams.push(channel::Stream {
-                    ops: &bk.rs.ranks[rank],
-                    step_base: layout.step_base[b] + rs_lo,
-                    chunk_base: layout.chunk_base[b] + seg * n,
-                    channel_base: layout.channel_base[b] + seg,
-                });
-                streams.push(channel::Stream {
-                    ops: &bk.ag.ranks[rank],
-                    step_base: layout.step_base[b] + ag_lo,
-                    chunk_base: layout.chunk_base[b] + seg * n,
-                    channel_base: layout.channel_base[b] + seg,
-                });
+                for stripe in 0..nstripes {
+                    let lane = seg * nstripes + stripe;
+                    let (rs_lo, _) = lay.span(seg, Phase::ReduceScatter);
+                    let (ag_lo, _) = lay.span(seg, Phase::AllGather);
+                    streams.push(channel::Stream {
+                        ops: &bk.rs.ranks[rank],
+                        step_base: layout.step_base[b] + rs_lo,
+                        chunk_base: layout.chunk_base[b] + lane * n,
+                        channel_base: layout.channel_base[b] + lane,
+                    });
+                    streams.push(channel::Stream {
+                        ops: &bk.ag.ranks[rank],
+                        step_base: layout.step_base[b] + ag_lo,
+                        chunk_base: layout.chunk_base[b] + lane * n,
+                        channel_base: layout.channel_base[b] + lane,
+                    });
+                }
             }
         }
         channel::merge_rank_streams(&mut out, rank, &streams);
@@ -485,6 +563,70 @@ mod tests {
         // a silent channel keeps its bucket out of the report
         let quiet = vec![(f64::INFINITY, f64::NEG_INFINITY); 3];
         assert!(bucket_windows(&layout, &quiet).is_empty());
+    }
+
+    #[test]
+    fn stripe_plan_thresholds() {
+        // only buckets at/above the threshold get the extra channels
+        assert_eq!(stripe_plan(&[1 << 10, 256 << 10, 255 << 10], 256 << 10, 4), vec![1, 4, 1]);
+        // channels = 1 (or 0) stripes nothing
+        assert_eq!(stripe_plan(&[1 << 20, 1 << 20], 0, 1), vec![1, 1]);
+        assert_eq!(stripe_plan(&[1 << 20], 0, 0), vec![1]);
+    }
+
+    /// All-ones stripes are exactly [`fuse`] — striping is opt-in per
+    /// bucket, not a new construction.
+    #[test]
+    fn unit_stripes_equal_fuse() {
+        let (rs, ag) = phases(8);
+        let buckets = uniform(&rs, &ag, 3, 2);
+        let plain = fuse(&buckets).unwrap();
+        let striped = fuse_striped(&buckets, &[1, 1, 1]).unwrap();
+        assert_eq!(plain.ranks, striped.ranks);
+        assert_eq!(plain.channels, striped.channels);
+        assert_eq!(plain.steps, striped.steps);
+    }
+
+    /// Mixed stripes verify and land on the right chunk/channel grid:
+    /// a striped bucket's extra copies each own a disjoint mod-n range
+    /// and their own channel, and the fused program still passes the
+    /// reference executor.
+    #[test]
+    fn striped_buckets_verify() {
+        for n in [2usize, 7, 12] {
+            let (rs, ag) = phases(n);
+            let buckets = vec![
+                BucketPhases { rs: rs.clone(), ag: ag.clone(), segments: 1 },
+                BucketPhases { rs: rs.clone(), ag: ag.clone(), segments: 2 },
+                BucketPhases { rs, ag, segments: 1 },
+            ];
+            let stripes = [1usize, 1, 4];
+            let p = fuse_striped(&buckets, &stripes).unwrap();
+            let layout = BucketLayout::of_striped(&buckets, &stripes);
+            // channels: 1·1 + 2·1 + 1·4 = 7; chunks: (1 + 2 + 4)·n
+            assert_eq!(p.channels, 7, "n={n}");
+            assert_eq!(layout.channels(), 7, "n={n}");
+            assert_eq!(p.chunk_space(), 7 * n, "n={n}");
+            assert_eq!(layout.chunk_space(), 7 * n, "n={n}");
+            assert_eq!(layout.channel_range(2), (3, 7), "n={n}");
+            assert_eq!(layout.chunk_base, vec![0, n, 3 * n], "n={n}");
+            verify_program(&p).unwrap_or_else(|e| panic!("n={n}: {e}"));
+            // per-chunk grid: stripes repeat the bucket's element count
+            // over its whole segments·stripes·n range
+            let elems = layout.chunk_elems(&[5, 3, 2]);
+            assert_eq!(elems.len(), 7 * n);
+            assert!(elems[..n].iter().all(|&e| e == 5));
+            assert!(elems[n..3 * n].iter().all(|&e| e == 3));
+            assert!(elems[3 * n..].iter().all(|&e| e == 2));
+        }
+    }
+
+    #[test]
+    fn striped_fuse_rejects_bad_stripe_vectors() {
+        let (rs, ag) = phases(4);
+        let buckets = uniform(&rs, &ag, 2, 1);
+        assert!(fuse_striped(&buckets, &[1]).is_err()); // length mismatch
+        assert!(fuse_striped(&buckets, &[1, 0]).is_err()); // zero stripes
     }
 
     #[test]

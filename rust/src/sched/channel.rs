@@ -30,7 +30,14 @@
 //! ([`crate::sched::bucket`]) is the second user, merging whole
 //! *operations*: every (bucket, segment) is a channel, so one
 //! [`merge_rank_streams`] call per rank interleaves an entire
-//! gradient-bucket batch under the same FIFO argument.
+//! gradient-bucket batch under the same FIFO argument (and
+//! [`crate::sched::bucket::fuse_striped`] applies the splitter's chunk
+//! striping selectively, per bucket). The hierarchical scheduler
+//! ([`crate::sched::hier`]) is the third user: each of a node's `L`
+//! stripe leaders owns the local chunks congruent to its stripe index mod
+//! `L`, and the per-leader phase streams merge with `channel_base =
+//! stripe index` — `L` inter-node flows per node with distinct ECMP salts
+//! instead of one leader's single flow.
 //!
 //! ## Why the merge preserves FIFO
 //!

@@ -133,35 +133,51 @@ pub fn render_pat_tree(n: usize, a: usize) -> String {
     out
 }
 
-/// Render the phase structure of a hierarchical (two-level) program: step
-/// spans, message counts and byte-weighted traffic of the intra-node
-/// gather, inter-node PAT, and intra-node fan-out phases (mirrored names
-/// for reduce-scatter).
+/// Human name of a hierarchical phase slug, per collective orientation
+/// (the mirror reverses direction: gathers become scatters and
+/// broadcasts become reductions).
+fn hier_phase_name(slug: &str, coll: Collective) -> &'static str {
+    let forward = matches!(coll, Collective::AllGather | Collective::AllReduce);
+    match (slug, forward) {
+        ("intra_gather", true) => "intra-node gather",
+        ("intra_gather", false) => "intra-node scatter",
+        ("intra_bcast", true) => "intra-node bcast",
+        ("intra_bcast", false) => "intra-node fan-in",
+        ("inter_pipeline", true) => "inter-node PAT + fan-out",
+        ("inter_pipeline", false) => "fan-in + inter-node PAT reduce",
+        ("pod_pipeline", true) => "intra-pod PAT + fan-out",
+        ("pod_pipeline", false) => "fan-in + intra-pod PAT reduce",
+        ("fabric_pipeline", true) => "inter-pod PAT + fan-out",
+        ("fabric_pipeline", false) => "fan-in + inter-pod PAT reduce",
+        _ => "phase",
+    }
+}
+
+/// Render the phase structure of a hierarchical program: the step span,
+/// message count and chunk traffic of each phase in
+/// [`hier::phase_list`] — intra-node gather/bcast plus one pipelined
+/// PAT+fan-out span per hierarchy level (mirrored names and reversed
+/// order for reduce-scatter).
 pub fn render_hier_phases(p: &Program, pl: &Placement, a: usize) -> String {
-    let (s1, s2, s3) = hier::phase_spans(pl, a);
-    let names: [&str; 3] = match p.collective {
-        Collective::AllGather | Collective::AllReduce => {
-            ["intra-node gather", "inter-node PAT", "intra-node fan-out"]
-        }
-        Collective::ReduceScatter => {
-            ["intra-node fan-in", "inter-node PAT reduce", "intra-node scatter"]
-        }
-    };
-    // All-gather steps run gather → inter → fan-out; the mirror reverses
-    // the span order but phase_spans is symmetric (s1 == s3), so the step
-    // boundaries are the same in both orientations.
-    let bounds = [0, s1, s1 + s2, s1 + s2 + s3];
-    let mut msgs = [0usize; 3];
-    let mut chunks = [0usize; 3];
-    let mut cross = [0usize; 3];
+    let mut phases = hier::phase_list(pl, a);
+    if matches!(p.collective, Collective::ReduceScatter) {
+        phases.reverse();
+    }
+    // Cumulative step bounds; the final phase absorbs any unoccupied grid
+    // tail (uneven pods can leave trailing slots empty).
+    let mut bounds = vec![0usize];
+    for ph in &phases {
+        bounds.push((bounds.last().unwrap() + ph.steps).min(p.steps));
+    }
+    *bounds.last_mut().unwrap() = p.steps;
+    let nph = phases.len();
+    let mut msgs = vec![0usize; nph];
+    let mut chunks = vec![0usize; nph];
+    let mut cross = vec![0usize; nph];
     for m in p.messages() {
-        let phase = if m.step < bounds[1] {
-            0
-        } else if m.step < bounds[2] {
-            1
-        } else {
-            2
-        };
+        let phase = (0..nph)
+            .find(|&i| m.step < bounds[i + 1])
+            .unwrap_or(nph - 1);
         msgs[phase] += 1;
         chunks[phase] += m.chunks.len();
         if pl.node_of(m.src) != pl.node_of(m.dst) {
@@ -171,19 +187,20 @@ pub fn render_hier_phases(p: &Program, pl: &Placement, a: usize) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "{} / {} — {} ({} ranks): {} steps in 3 phases",
+        "{} / {} — {} ({} ranks): {} steps in {} phases",
         p.algorithm,
         p.collective,
         pl.describe(),
         p.nranks,
-        p.steps
+        p.steps,
+        nph
     );
-    for i in 0..3 {
+    for i in 0..nph {
         let _ = writeln!(
             out,
-            "  phase {} {:<22} steps {:>3}..{:<3} msgs {:>5} chunk-transfers {:>6} cross-node {:>5}",
+            "  phase {} {:<30} steps {:>3}..{:<3} msgs {:>5} chunk-transfers {:>6} cross-node {:>5}",
             i + 1,
-            names[i],
+            hier_phase_name(phases[i].name, p.collective),
             bounds[i],
             bounds[i + 1],
             msgs[i],
@@ -357,12 +374,19 @@ mod tests {
         let ag = crate::sched::hier::allgather(&pl, 2);
         let s = render_hier_phases(&ag, &pl, 2);
         assert!(s.contains("intra-node gather"), "{s}");
-        assert!(s.contains("inter-node PAT"), "{s}");
-        assert!(s.contains("intra-node fan-out"), "{s}");
+        assert!(s.contains("inter-node PAT + fan-out"), "{s}");
         assert!(s.contains("sizes=[4, 4, 4, 1]"), "{s}");
         let rs = crate::sched::hier::reduce_scatter(&pl, 2);
         let s = render_hier_phases(&rs, &pl, 2);
         assert!(s.contains("intra-node fan-in"), "{s}");
         assert!(s.contains("intra-node scatter"), "{s}");
+        assert!(s.contains("inter-node PAT reduce"), "{s}");
+        // three-level programs render four phases
+        let pl = Placement::parse("4x2", 32).unwrap();
+        let ag = crate::sched::hier::allgather(&pl, 2);
+        let s = render_hier_phases(&ag, &pl, 2);
+        assert!(s.contains("4 phases"), "{s}");
+        assert!(s.contains("intra-pod PAT + fan-out"), "{s}");
+        assert!(s.contains("inter-pod PAT + fan-out"), "{s}");
     }
 }

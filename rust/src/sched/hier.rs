@@ -1,56 +1,74 @@
-//! Hierarchical (two-level, topology-aware) PAT over a rank
-//! [`Placement`] — the production-scale extension the paper's "communicate
-//! close dimensions first" construction points at, and what NCCL itself
-//! does across NVLink domains: keep the chatty traffic inside a node, run
-//! the latency-optimal algorithm only between nodes.
+//! Hierarchical (topology-aware) PAT over a rank [`Placement`] — the
+//! production-scale extension the paper's "communicate close dimensions
+//! first" construction points at, and what NCCL itself does across NVLink
+//! domains: keep the chatty traffic inside a node, run the latency-optimal
+//! algorithm only between nodes. Three coordinated optimisations keep the
+//! construction fast at scale:
 //!
-//! An all-gather program has three phases, in disjoint step ranges so the
-//! rounds render cleanly:
+//! * **Multi-leader striping.** The inter-node phase is striped across the
+//!   first `L = Placement::effective_leaders()` ranks of every node. Stripe
+//!   `ℓ` owns the local chunks at offsets `≡ ℓ (mod L)` and runs a complete
+//!   hierarchical schedule of its own on channel `ℓ` (its own ECMP salt);
+//!   per-rank op lists are the FIFO-safe
+//!   [`channel::merge_rank_streams`] merge of the `L` stripe streams. One
+//!   leader NIC per node becomes `L` parallel flows at bandwidth-bound
+//!   sizes.
+//! * **Pipelined fan-out.** Instead of one bulk intra-node fan-out after
+//!   the whole inter-node phase, each inter-node round `j` is immediately
+//!   followed by a *wave*: an intra-node broadcast tree carrying exactly
+//!   round `j`'s arrivals. Wave `j` overlaps round `j+1` on the fabric, and
+//!   a leader stages only a round's payload (O(a · kmax/L) chunks) plus
+//!   relayed sets — sublinear in `n`, in place of the old Θ(n) leader
+//!   staging ([`staging_bound`] is the law the tuner budgets against).
+//! * **Three-level recursion.** A [`Placement`] with pods
+//!   (leaf/pod/fabric) recurses: intra-node gather, intra-pod PAT over the
+//!   pod's nodes (each round waved into the nodes), then inter-pod PAT over
+//!   pod leaders, each round distributed by a *pod wave* (leader-to-leader
+//!   tree across the pod's nodes) followed by node waves.
+//!
+//! An all-gather stripe runs, on a shared step grid:
 //!
 //! 1. **Intra-node gather** — within each node, a near-first binomial tree
-//!    over the co-located ranks funnels every rank's chunk to the node
-//!    *leader* (each edge forwards its whole subtree's chunks, so a node of
-//!    `k` ranks needs `k-1` intra-node messages). All traffic stays under
-//!    one switch.
-//! 2. **Inter-node PAT** — the leaders run the flat PAT schedule over
-//!    *nodes*: the program for `nnodes` virtual ranks
-//!    ([`pat::rounds`]) is expanded by substituting each virtual rank with
-//!    its leader and each virtual chunk with that node's chunk set. The
-//!    aggregation factor therefore bounds how many *node chunk sets* one
-//!    transfer carries. Uneven node sizes just produce uneven chunk lists.
-//! 3. **Intra-node fan-out** — the same tree, root-down: each edge carries
-//!    everything the receiving subtree does not already hold (all chunks
-//!    minus the child's own subtree), so every rank ends with all `n`
-//!    chunks.
+//!    over the stripe's member ranks funnels the stripe's chunks to its
+//!    stripe leader.
+//! 2. **Local broadcast (wave 0)** — the node's own stripe chunks reach
+//!    every co-located rank (each edge carries what the receiver does not
+//!    already hold from the gather).
+//! 3. **Inter-node PAT + waves** — the stripe leaders run flat PAT over
+//!    *nodes* (or recurse over pods): the program for `nnodes` virtual
+//!    ranks ([`pat::rounds`]) is expanded by substituting each virtual rank
+//!    with its stripe leader and each virtual chunk with that node's stripe
+//!    chunk set; each round's arrivals are waved into the node on the next
+//!    steps. The aggregation factor bounds how many *node chunk sets* one
+//!    transfer carries; uneven node sizes just produce uneven chunk lists.
 //!
-//! Correctness of phase 2 follows from the flat PAT invariant by
-//! isomorphism: after phase 1 the leader of node `m` holds exactly node
-//! `m`'s chunks, which is the image of "flat rank `m` holds chunk `m`";
-//! every subsequent message is the image of a flat PAT message.
+//! Correctness of the inter phase follows from the flat PAT invariant by
+//! isomorphism: after the gather, the stripe leader of node `m` holds
+//! exactly node `m`'s stripe chunks — the image of "flat rank `m` holds
+//! chunk `m`" — and every subsequent message is the image of a flat PAT
+//! message; waves deliver each PAT arrival exactly once to the rest of the
+//! node (and, for pod waves, to the rest of the pod's leaders).
 //!
 //! Reduce-scatter is the time-and-direction mirror ([`Program::mirror`]):
-//! intra-node scatter of partial sums, inter-node PAT reduce among leaders,
-//! intra-node fan-in — so [`crate::sched::verify::verify_program`] covers it
-//! with no hierarchical-specific executor.
+//! per-round intra-node reduction waves feeding the inter-node PAT reduce,
+//! then an intra-node scatter — so
+//! [`crate::sched::verify::verify_program`] covers it with no
+//! hierarchical-specific executor.
 //!
-//! Buffer note: unlike flat PAT, the leaders relay everything for their
-//! node — up to `n - 1` staged chunks in the all-gather, and up to `n`
-//! live accumulators in the mirrored reduce-scatter (between the fan-in
-//! and inter-node phases the leader holds a partial sum for every chunk).
-//! The hierarchy trades leader buffer space for fabric locality; the tuner
-//! only offers `HierPat` when the buffer budget covers that (see
-//! [`crate::coordinator::tuner::Tuner::choose_placed`]).
+//! The phase structure is a list ([`phase_list`]), not a fixed triple:
+//! two-level programs have three phases, three-level programs four.
 
 use std::collections::HashSet;
 
-use crate::core::{ChunkId, Collective, Placement};
+use crate::core::{ceil_log2, ChunkId, Collective, Placement, Rank};
+use crate::sched::channel::{self, Stream};
 use crate::sched::pat;
 use crate::sched::program::{Op, Program};
 use crate::sched::tree::NearFirstTree;
 
-/// Intra-node tree edges as `(parent, child)` local offsets in pre-order
-/// (every edge appears after the edge that delivers to its parent) — the
-/// fan-out execution order.
+/// Intra-node tree edges as `(parent, child)` indices in pre-order (every
+/// edge appears after the edge that delivers to its parent) — the fan-out
+/// execution order.
 fn preorder_edges(k: usize) -> Vec<(usize, usize)> {
     fn visit(t: &NearFirstTree, o: usize, out: &mut Vec<(usize, usize)>) {
         for c in t.children(o) {
@@ -64,9 +82,9 @@ fn preorder_edges(k: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// Intra-node tree edges as `(child, parent)` local offsets in post-order
-/// (every edge appears after all edges inside the child's subtree) — the
-/// gather execution order.
+/// Intra-node tree edges as `(child, parent)` indices in post-order (every
+/// edge appears after all edges inside the child's subtree) — the gather
+/// execution order.
 fn postorder_edges(k: usize) -> Vec<(usize, usize)> {
     fn visit(t: &NearFirstTree, o: usize, out: &mut Vec<(usize, usize)>) {
         for c in t.children(o) {
@@ -80,7 +98,7 @@ fn postorder_edges(k: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// Local offsets in the subtree rooted at `o`, ascending.
+/// Indices in the subtree rooted at `o`, ascending.
 fn subtree_offsets(t: &NearFirstTree, o: usize) -> Vec<usize> {
     let mut out = vec![o];
     let mut i = 0;
@@ -93,104 +111,387 @@ fn subtree_offsets(t: &NearFirstTree, o: usize) -> Vec<usize> {
     out
 }
 
-/// Step counts of the three phases `(intra_gather, inter_pat, fan_out)` for
-/// this placement and aggregation (all-gather orientation; the mirrored
-/// reduce-scatter reverses them).
-pub fn phase_spans(pl: &Placement, a: usize) -> (usize, usize, usize) {
-    let nnodes = pl.nnodes();
-    let intra = pl.max_node_size().saturating_sub(1);
-    let inter = if nnodes > 1 {
-        pat::rounds(nnodes, pat::clamp_aggregation(nnodes, a)).len()
+/// One named phase of a hierarchical program (all-gather orientation; the
+/// mirrored reduce-scatter reverses the list).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HierPhase {
+    /// Stable slug: `intra_gather`, `intra_bcast`, `inter_pipeline`,
+    /// `pod_pipeline` or `fabric_pipeline`.
+    pub name: &'static str,
+    /// Step count of the phase's span.
+    pub steps: usize,
+}
+
+/// Per-stripe step-grid constants, shared by construction and
+/// [`phase_list`]. All stripes use the same grid (derived from the global
+/// maxima) so their streams merge on aligned step keys.
+struct Grid {
+    /// Intra-node gather span: `ceil(kmax / L) - 1`.
+    g: usize,
+    /// Node-wave span: `kmax - 1`.
+    w: usize,
+    /// Pod-wave span (three-level): `max pod node count - 1`.
+    pw: usize,
+}
+
+fn grid(pl: &Placement) -> Grid {
+    let l = pl.effective_leaders();
+    let kmax = pl.max_node_size();
+    let pw = if pl.is_three_level() {
+        (0..pl.npods()).map(|q| pl.pod_nodes(q).len()).max().unwrap_or(1) - 1
     } else {
         0
     };
-    (intra, inter, intra)
+    Grid { g: kmax.div_ceil(l).saturating_sub(1), w: kmax.saturating_sub(1), pw }
 }
 
-/// Hierarchical PAT all-gather over `pl` with inter-node aggregation `a`.
-pub fn allgather(pl: &Placement, a: usize) -> Program {
+/// Max intra-pod PAT round count across pods (three-level phase 2a).
+fn pod_rounds_max(pl: &Placement, a: usize) -> usize {
+    (0..pl.npods())
+        .map(|q| {
+            let m = pl.pod_nodes(q).len();
+            if m > 1 { pat::rounds(m, pat::clamp_aggregation(m, a)).len() } else { 0 }
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// The phase list of a hierarchical program for this placement and
+/// aggregation (all-gather orientation; the mirror reverses it). Phase
+/// step counts sum to the program's step count for regular placements
+/// (every stripe grid slot occupied); uneven pods can leave the tail of a
+/// span empty, so the sum is an upper bound in general.
+pub fn phase_list(pl: &Placement, a: usize) -> Vec<HierPhase> {
+    let gr = grid(pl);
+    let mut phases = vec![
+        HierPhase { name: "intra_gather", steps: gr.g },
+        HierPhase { name: "intra_bcast", steps: gr.w },
+    ];
+    if pl.is_three_level() {
+        let rp = pod_rounds_max(pl, a);
+        if rp > 0 {
+            phases.push(HierPhase { name: "pod_pipeline", steps: rp * (1 + gr.w) });
+        }
+        let np = pl.npods();
+        if np > 1 {
+            let r = pat::rounds(np, pat::clamp_aggregation(np, a)).len();
+            phases.push(HierPhase {
+                name: "fabric_pipeline",
+                steps: r * (1 + gr.pw + gr.w),
+            });
+        }
+    } else if pl.nnodes() > 1 {
+        let nn = pl.nnodes();
+        let r = pat::rounds(nn, pat::clamp_aggregation(nn, a)).len();
+        phases.push(HierPhase { name: "inter_pipeline", steps: r * (1 + gr.w) });
+    }
+    phases
+}
+
+/// The leader staging-budget law: a conservative bound on the peak
+/// buffer-slot occupancy of the pipelined hierarchical schedule (chunks
+/// staged for forwarding in the all-gather; live accumulators in the
+/// mirrored reduce-scatter). Per level the leader holds its own stripe set
+/// plus at most one in-flight round payload (`a · set`) and the relayed
+/// sets of later rounds (another `a · set` per remaining dimension), so
+/// the bound is logarithmic in the node (and pod) count — *sublinear in
+/// `n`*, unlike the old bulk fan-out's Θ(n). Capped at the trivial bound
+/// (`n - 1` staged chunks / `n` accumulators), which full aggregation can
+/// reach. The tuner gates `HierPat` on this law instead of `n`
+/// ([`crate::coordinator::tuner::Tuner::choose_placed`]).
+pub fn staging_bound(pl: &Placement, a: usize, coll: Collective) -> usize {
+    let n = pl.nranks();
+    if n <= 1 {
+        return 1;
+    }
+    let trivial = match coll {
+        Collective::ReduceScatter => n,
+        _ => n.saturating_sub(1),
+    };
+    let nnodes = pl.nnodes();
+    if nnodes <= 1 {
+        return trivial;
+    }
+    let l = pl.effective_leaders();
+    let kmax = pl.max_node_size();
+    let s = kmax.div_ceil(l); // one node's stripe chunk set
+    let analytic = if pl.is_three_level() && pl.npods() > 1 {
+        let np = pl.npods();
+        let mnodes = (0..np).map(|q| pl.pod_nodes(q).len()).max().unwrap();
+        let pod_set =
+            (0..np).map(|q| pl.pod_rank_count(q).div_ceil(l)).max().unwrap();
+        let a2a = pat::clamp_aggregation(mnodes.max(2), a);
+        let a2b = pat::clamp_aggregation(np, a);
+        s + pod_set
+            + a2a * s * (ceil_log2(mnodes.max(2)) as usize + 2)
+            + a2b * pod_set * (ceil_log2(np) as usize + 2)
+            + a2a.max(a2b) * kmax
+            + 2
+    } else {
+        let ac = pat::clamp_aggregation(nnodes, a);
+        s + ac * s * (ceil_log2(nnodes) as usize + 2) + ac * kmax + 2
+    };
+    // The mirrored reduce-scatter additionally holds the node's own stripe
+    // as accumulators across the scatter.
+    let analytic = match coll {
+        Collective::ReduceScatter => analytic + s + kmax,
+        _ => analytic,
+    };
+    analytic.min(trivial)
+}
+
+/// Per-node, per-stripe construction state.
+struct NodeStripe {
+    /// The stripe leader: the rank at local offset `stripe`.
+    leader: Rank,
+    /// The node's stripe chunk set (global chunk ids, ascending).
+    chunks: Vec<ChunkId>,
+    /// Wave-tree index → local offset, stripe leader first (index 0).
+    wave_order: Vec<usize>,
+}
+
+/// Push one intra-node wave: a pre-order broadcast tree over all local
+/// ranks (rooted at the stripe leader) where every edge carries the full
+/// `payload` — round arrivals are fresh for every non-leader rank.
+fn push_wave(p: &mut Program, local: &[Rank], ns: &NodeStripe, payload: &[ChunkId], base: usize) {
+    let k = local.len();
+    if k <= 1 || payload.is_empty() {
+        return;
+    }
+    for (idx, &(pi, ci)) in preorder_edges(k).iter().enumerate() {
+        let src = local[ns.wave_order[pi]];
+        let dst = local[ns.wave_order[ci]];
+        p.push(src, Op::send(dst, payload.to_vec(), base + idx));
+        p.push(dst, Op::recv(src, payload.to_vec(), false, base + idx));
+    }
+}
+
+/// Build stripe `st`'s complete sub-schedule (gather, local broadcast,
+/// pipelined inter phases) on channel 0; the caller merges stripes onto
+/// their channels.
+fn stripe_program(pl: &Placement, a: usize, st: usize, l: usize) -> Program {
     let n = pl.nranks();
     let nnodes = pl.nnodes();
-    let a_c = if nnodes > 1 {
-        pat::clamp_aggregation(nnodes, a)
-    } else {
-        1
-    };
-    let name = format!("hier_pat(a={a_c},nodes={nnodes})");
-    let mut p = Program::new(n, Collective::AllGather, name);
-    if n <= 1 {
-        return p;
-    }
-    let (s1, s2, _) = phase_spans(pl, a);
+    let mut p = Program::new(n, Collective::AllGather, String::new());
+    let gr = grid(pl);
 
-    // Phase 1: intra-node gather to the leader. Edge (child -> parent)
-    // carries the child's whole subtree of chunks; post-order guarantees
-    // the child received its own subtree first.
+    // Per-node stripe state + phase 1 (gather) and wave 0 (local
+    // broadcast of the node's own stripe chunks).
+    let mut ns: Vec<NodeStripe> = Vec::with_capacity(nnodes);
     for node in 0..nnodes {
         let local = pl.ranks_of(node);
         let k = local.len();
-        if k <= 1 {
-            continue;
+        let members: Vec<usize> = (st..k).step_by(l).collect();
+        let chunks: Vec<ChunkId> = members.iter().map(|&o| local[o]).collect();
+        let mut wave_order = vec![st];
+        wave_order.extend((0..k).filter(|&o| o != st));
+        // Gather: near-first tree over the stripe members, child subtrees
+        // funneled to the stripe leader (member index 0 = offset `st`).
+        let mt = NearFirstTree::new(members.len());
+        // What each local offset holds after the gather (only stripe
+        // members hold stripe chunks: their own gather subtree).
+        let mut held: Vec<HashSet<ChunkId>> = vec![HashSet::new(); k];
+        for (i, &o) in members.iter().enumerate() {
+            held[o] = subtree_offsets(&mt, i).iter().map(|&j| local[members[j]]).collect();
         }
-        let t = NearFirstTree::new(k);
-        for (step, &(c, par)) in postorder_edges(k).iter().enumerate() {
-            let chunks: Vec<ChunkId> =
-                subtree_offsets(&t, c).iter().map(|&o| local[o]).collect();
-            p.push(local[c], Op::send(local[par], chunks.clone(), step));
-            p.push(local[par], Op::recv(local[c], chunks, false, step));
+        for (step, &(ci, pi)) in postorder_edges(members.len()).iter().enumerate() {
+            let sub: Vec<ChunkId> =
+                subtree_offsets(&mt, ci).iter().map(|&j| local[members[j]]).collect();
+            p.push(local[members[ci]], Op::send(local[members[pi]], sub.clone(), step));
+            p.push(local[members[pi]], Op::recv(local[members[ci]], sub, false, step));
         }
+        // Wave 0: the node's own stripe chunks to every co-located rank;
+        // each edge carries what the receiver does not already hold.
+        if k > 1 {
+            for (idx, &(pi, ci)) in preorder_edges(k).iter().enumerate() {
+                let off_c = wave_order[ci];
+                let payload: Vec<ChunkId> =
+                    chunks.iter().copied().filter(|c| !held[off_c].contains(c)).collect();
+                if payload.is_empty() {
+                    continue;
+                }
+                let src = local[wave_order[pi]];
+                let dst = local[off_c];
+                p.push(src, Op::send(dst, payload.clone(), gr.g + idx));
+                p.push(dst, Op::recv(src, payload, false, gr.g + idx));
+            }
+        }
+        ns.push(NodeStripe { leader: local[st], chunks, wave_order });
     }
 
-    // Phase 2: flat PAT over nodes, executed by the leaders. Virtual chunk
-    // `m` expands to node m's rank list.
-    if nnodes > 1 {
-        for (j, round) in pat::rounds(nnodes, a_c).iter().enumerate() {
-            let step = s1 + j;
+    let base = gr.g + gr.w;
+    if pl.is_three_level() {
+        // Phase 2a: intra-pod PAT over each pod's nodes, every round waved
+        // into the nodes on the next steps.
+        let np = pl.npods();
+        for pod in 0..np {
+            let nodes = pl.pod_nodes(pod);
+            let m = nodes.len();
+            if m <= 1 {
+                continue;
+            }
+            let ac = pat::clamp_aggregation(m, a);
+            for (j, round) in pat::rounds(m, ac).iter().enumerate() {
+                let step = base + j * (1 + gr.w);
+                let hop = 1usize << round.dim;
+                let mut recvs: Vec<Vec<ChunkId>> = Vec::with_capacity(m);
+                for v in 0..m {
+                    let srcv = (v + m - hop) % m;
+                    let dstv = (v + hop) % m;
+                    let send: Vec<ChunkId> = round
+                        .offsets
+                        .iter()
+                        .flat_map(|&o| ns[nodes[(v + m - o) % m]].chunks.iter().copied())
+                        .collect();
+                    let recv: Vec<ChunkId> = round
+                        .offsets
+                        .iter()
+                        .flat_map(|&o| ns[nodes[(srcv + m - o) % m]].chunks.iter().copied())
+                        .collect();
+                    p.push(ns[nodes[v]].leader, Op::send(ns[nodes[dstv]].leader, send, step));
+                    p.push(
+                        ns[nodes[v]].leader,
+                        Op::recv(ns[nodes[srcv]].leader, recv.clone(), false, step),
+                    );
+                    recvs.push(recv);
+                }
+                for v in 0..m {
+                    push_wave(&mut p, pl.ranks_of(nodes[v]), &ns[nodes[v]], &recvs[v], step + 1);
+                }
+            }
+        }
+        // Phase 2b: inter-pod PAT over the pod leaders (stripe leader of
+        // each pod's first node); each round's arrivals ride a pod wave
+        // (leader-to-leader tree across the pod's nodes) and then node
+        // waves.
+        if np > 1 {
+            let base2b = base + pod_rounds_max(pl, a) * (1 + gr.w);
+            let ac = pat::clamp_aggregation(np, a);
+            let pod_chunks: Vec<Vec<ChunkId>> = (0..np)
+                .map(|q| {
+                    pl.pod_nodes(q).iter().flat_map(|&mm| ns[mm].chunks.iter().copied()).collect()
+                })
+                .collect();
+            for (j, round) in pat::rounds(np, ac).iter().enumerate() {
+                let step = base2b + j * (1 + gr.pw + gr.w);
+                let hop = 1usize << round.dim;
+                let mut recvs: Vec<Vec<ChunkId>> = Vec::with_capacity(np);
+                for q in 0..np {
+                    let srcq = (q + np - hop) % np;
+                    let dstq = (q + np + hop) % np;
+                    let send: Vec<ChunkId> = round
+                        .offsets
+                        .iter()
+                        .flat_map(|&o| pod_chunks[(q + np - o) % np].iter().copied())
+                        .collect();
+                    let recv: Vec<ChunkId> = round
+                        .offsets
+                        .iter()
+                        .flat_map(|&o| pod_chunks[(srcq + np - o) % np].iter().copied())
+                        .collect();
+                    let leader = |x: usize| ns[pl.pod_nodes(x)[0]].leader;
+                    p.push(leader(q), Op::send(leader(dstq % np), send, step));
+                    p.push(leader(q), Op::recv(leader(srcq), recv.clone(), false, step));
+                    recvs.push(recv);
+                }
+                for q in 0..np {
+                    if recvs[q].is_empty() {
+                        continue;
+                    }
+                    let nodes = pl.pod_nodes(q);
+                    if nodes.len() > 1 {
+                        for (idx, &(pi, ci)) in preorder_edges(nodes.len()).iter().enumerate() {
+                            let src = ns[nodes[pi]].leader;
+                            let dst = ns[nodes[ci]].leader;
+                            p.push(src, Op::send(dst, recvs[q].clone(), step + 1 + idx));
+                            p.push(dst, Op::recv(src, recvs[q].clone(), false, step + 1 + idx));
+                        }
+                    }
+                    for &mm in nodes {
+                        push_wave(&mut p, pl.ranks_of(mm), &ns[mm], &recvs[q], step + 1 + gr.pw);
+                    }
+                }
+            }
+        }
+    } else if nnodes > 1 {
+        // Phase 2 (two-level): flat PAT over nodes, each round waved into
+        // the nodes. Virtual chunk `m` expands to node m's stripe set.
+        let ac = pat::clamp_aggregation(nnodes, a);
+        for (j, round) in pat::rounds(nnodes, ac).iter().enumerate() {
+            let step = base + j * (1 + gr.w);
             let hop = 1usize << round.dim;
+            let mut recvs: Vec<Vec<ChunkId>> = Vec::with_capacity(nnodes);
             for i in 0..nnodes {
-                let dst = (i + hop) % nnodes;
                 let src = (i + nnodes - hop) % nnodes;
+                let dst = (i + hop) % nnodes;
                 let send: Vec<ChunkId> = round
                     .offsets
                     .iter()
-                    .flat_map(|&o| pl.ranks_of((i + nnodes - o) % nnodes).iter().copied())
+                    .flat_map(|&o| ns[(i + nnodes - o) % nnodes].chunks.iter().copied())
                     .collect();
                 let recv: Vec<ChunkId> = round
                     .offsets
                     .iter()
-                    .flat_map(|&o| pl.ranks_of((src + nnodes - o) % nnodes).iter().copied())
+                    .flat_map(|&o| ns[(src + nnodes - o) % nnodes].chunks.iter().copied())
                     .collect();
-                p.push(pl.leader(i), Op::send(pl.leader(dst), send, step));
-                p.push(pl.leader(i), Op::recv(pl.leader(src), recv, false, step));
+                p.push(ns[i].leader, Op::send(ns[dst].leader, send, step));
+                p.push(ns[i].leader, Op::recv(ns[src].leader, recv.clone(), false, step));
+                recvs.push(recv);
             }
-        }
-    }
-
-    // Phase 3: intra-node fan-out. Edge (parent -> child) carries every
-    // chunk outside the child's subtree; pre-order guarantees the parent
-    // received its fan-out payload (or, for the leader, finished phase 2)
-    // first.
-    for node in 0..nnodes {
-        let local = pl.ranks_of(node);
-        let k = local.len();
-        if k <= 1 {
-            continue;
-        }
-        let t = NearFirstTree::new(k);
-        for (idx, &(par, c)) in preorder_edges(k).iter().enumerate() {
-            let step = s1 + s2 + idx;
-            let sub: HashSet<ChunkId> =
-                subtree_offsets(&t, c).iter().map(|&o| local[o]).collect();
-            let chunks: Vec<ChunkId> = (0..n).filter(|x| !sub.contains(x)).collect();
-            p.push(local[par], Op::send(local[c], chunks.clone(), step));
-            p.push(local[c], Op::recv(local[par], chunks, false, step));
+            for i in 0..nnodes {
+                push_wave(&mut p, pl.ranks_of(i), &ns[i], &recvs[i], step + 1);
+            }
         }
     }
     p
 }
 
-/// Hierarchical PAT reduce-scatter: the mirror of the all-gather (fan-in,
-/// inter-node PAT reduce, intra-node scatter).
+/// Hierarchical PAT all-gather over `pl` with per-level inter aggregation
+/// `a`, striped across `pl.effective_leaders()` stripe leaders per node
+/// (stripe `ℓ` rides channel `ℓ`).
+pub fn allgather(pl: &Placement, a: usize) -> Program {
+    let n = pl.nranks();
+    let nnodes = pl.nnodes();
+    let l = pl.effective_leaders();
+    let a_top = if pl.is_three_level() && pl.npods() > 1 {
+        pat::clamp_aggregation(pl.npods(), a)
+    } else if nnodes > 1 {
+        pat::clamp_aggregation(nnodes, a)
+    } else {
+        1
+    };
+    let mut name = format!("hier_pat(a={a_top},nodes={nnodes}");
+    if pl.is_three_level() {
+        name.push_str(&format!(",pods={}", pl.npods()));
+    }
+    if l > 1 {
+        name.push_str(&format!(",leaders={l}"));
+    }
+    name.push(')');
+    let mut p = Program::new(n, Collective::AllGather, name);
+    if n <= 1 {
+        return p;
+    }
+    let stripes: Vec<Program> = (0..l).map(|st| stripe_program(pl, a, st, l)).collect();
+    for r in 0..n {
+        let streams: Vec<Stream<'_>> = stripes
+            .iter()
+            .enumerate()
+            .map(|(i, sp)| Stream {
+                ops: &sp.ranks[r],
+                step_base: 0,
+                chunk_base: 0,
+                channel_base: i,
+            })
+            .collect();
+        channel::merge_rank_streams(&mut p, r, &streams);
+    }
+    p
+}
+
+/// Hierarchical PAT reduce-scatter: the mirror of the all-gather
+/// (per-round intra-node reduction waves, inter PAT reduce, intra-node
+/// scatter).
 pub fn reduce_scatter(pl: &Placement, a: usize) -> Program {
     allgather(pl, a).mirror()
 }
@@ -218,12 +519,61 @@ mod tests {
     }
 
     #[test]
+    fn correct_with_multiple_leaders() {
+        for &n in &[8usize, 12, 16, 24, 32] {
+            for &k in &[2usize, 4, 8] {
+                if k > n {
+                    continue;
+                }
+                for &l in &[2usize, 3, 4] {
+                    let pl = Placement::uniform(n, k).unwrap().with_leaders(l).unwrap();
+                    for &a in &[1usize, 2, usize::MAX] {
+                        let ag = allgather(&pl, a);
+                        verify_program(&ag)
+                            .unwrap_or_else(|e| panic!("ag n={n} k={k} l={l} a={a}: {e}"));
+                        assert_eq!(ag.channels, pl.effective_leaders(), "n={n} k={k} l={l}");
+                        let rs = reduce_scatter(&pl, a);
+                        verify_program(&rs)
+                            .unwrap_or_else(|e| panic!("rs n={n} k={k} l={l} a={a}: {e}"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correct_three_level_uneven_pods() {
+        // uneven nodes AND uneven pods, with and without extra leaders
+        let cases: Vec<Placement> = vec![
+            Placement::from_pod_sizes(&[vec![4, 4], vec![4, 4, 4], vec![2]]).unwrap(),
+            Placement::from_pod_sizes(&[vec![3, 2], vec![4, 1]]).unwrap(),
+            Placement::parse("4x2", 32).unwrap(),
+            Placement::parse("4x2", 32).unwrap().with_leaders(2).unwrap(),
+            Placement::parse("2,2;2,2;2,2", 12).unwrap().with_leaders(2).unwrap(),
+        ];
+        for pl in cases {
+            for &a in &[1usize, 2, usize::MAX] {
+                let ag = allgather(&pl, a);
+                verify_program(&ag)
+                    .unwrap_or_else(|e| panic!("ag {} a={a}: {e}", pl.describe()));
+                let rs = reduce_scatter(&pl, a);
+                verify_program(&rs)
+                    .unwrap_or_else(|e| panic!("rs {} a={a}: {e}", pl.describe()));
+            }
+        }
+    }
+
+    #[test]
     fn explicit_uneven_nodes() {
         let pl = Placement::from_node_sizes(&[4, 1, 5, 3]).unwrap();
         for &a in &[1usize, 2, usize::MAX] {
             verify_program(&allgather(&pl, a)).unwrap();
             verify_program(&reduce_scatter(&pl, a)).unwrap();
         }
+        // extra leaders clamp to the min node size (1) and stay correct
+        let pl = pl.with_leaders(4).unwrap();
+        assert_eq!(pl.effective_leaders(), 1);
+        verify_program(&allgather(&pl, 2)).unwrap();
     }
 
     /// With singleton nodes the hierarchy degenerates to flat PAT: same
@@ -241,22 +591,26 @@ mod tests {
         }
     }
 
-    /// A single node degenerates to a pure intra-node tree (no inter phase).
+    /// A single node degenerates to a pure intra-node tree (gather +
+    /// local broadcast, no inter phase).
     #[test]
     fn single_node_is_tree_only() {
         let pl = Placement::uniform(6, 6).unwrap();
         let p = allgather(&pl, usize::MAX);
         verify_program(&p).unwrap();
-        let (s1, s2, s3) = phase_spans(&pl, usize::MAX);
-        assert_eq!((s1, s2, s3), (5, 0, 5));
-        assert_eq!(p.steps, s1 + s2 + s3);
+        let phases = phase_list(&pl, usize::MAX);
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0], HierPhase { name: "intra_gather", steps: 5 });
+        assert_eq!(phases[1], HierPhase { name: "intra_bcast", steps: 5 });
+        assert_eq!(p.steps, 10);
         // every message stays inside the node by construction
         for m in p.messages() {
             assert_eq!(pl.node_of(m.src), pl.node_of(m.dst));
         }
     }
 
-    /// Only leaders speak across nodes, and non-leader traffic stays local.
+    /// Only stripe leaders speak across nodes, and non-leader traffic
+    /// stays local; with one leader that means the node leaders.
     #[test]
     fn cross_node_messages_are_leader_to_leader() {
         let pl = Placement::uniform(13, 4).unwrap();
@@ -267,10 +621,23 @@ mod tests {
                 assert!(pl.is_leader(m.dst), "dst {} not a leader", m.dst);
             }
         }
+        let pl = Placement::uniform(16, 4).unwrap().with_leaders(2).unwrap();
+        let p = allgather(&pl, 2);
+        let mut by_channel: HashSet<usize> = HashSet::new();
+        for m in p.messages() {
+            if pl.node_of(m.src) != pl.node_of(m.dst) {
+                assert!(pl.is_stripe_leader(m.src), "src {} not a stripe leader", m.src);
+                assert!(pl.is_stripe_leader(m.dst), "dst {} not a stripe leader", m.dst);
+                by_channel.insert(m.channel);
+            }
+        }
+        // both stripes carry inter-node traffic on their own channel
+        assert_eq!(by_channel.len(), 2, "{by_channel:?}");
     }
 
     /// Every valid all-gather delivers each foreign chunk exactly once:
-    /// chunk transfers total n(n-1), same as the flat generators.
+    /// chunk transfers total n(n-1), same as the flat generators —
+    /// including striped and three-level constructions.
     #[test]
     fn chunk_transfer_totals() {
         for (n, k) in [(8usize, 4usize), (13, 4), (16, 5), (9, 2)] {
@@ -278,9 +645,13 @@ mod tests {
             let p = allgather(&pl, 2);
             assert_eq!(p.stats().chunk_transfers, n * (n - 1), "n={n} k={k}");
         }
+        let pl = Placement::uniform(16, 4).unwrap().with_leaders(2).unwrap();
+        assert_eq!(allgather(&pl, 2).stats().chunk_transfers, 16 * 15);
+        let pl = Placement::parse("4x2", 32).unwrap().with_leaders(2).unwrap();
+        assert_eq!(allgather(&pl, 2).stats().chunk_transfers, 32 * 31);
     }
 
-    /// Inter-node messages carry at most `a` node chunk sets.
+    /// Inter-node PAT messages carry at most `a` node chunk sets.
     #[test]
     fn inter_node_aggregation_bounded() {
         let pl = Placement::uniform(32, 4).unwrap();
@@ -301,39 +672,95 @@ mod tests {
         }
     }
 
-    /// Leader staging is bounded by n-1 chunks for AG (its own chunk is
-    /// never staged) and n accumulators for RS (between fan-in and the
-    /// inter-node phase the leader holds a partial sum for every chunk) —
-    /// the hierarchy's buffer trade-off.
+    /// The pipelined fan-out keeps leader staging under the analytic
+    /// [`staging_bound`] law, and that law is sublinear in `n`: growing
+    /// the fabric 8x (fixed node size) must not grow the measured peak
+    /// anywhere near 8x.
     #[test]
-    fn occupancy_bounded() {
-        for (n, k) in [(13usize, 4usize), (16, 8), (24, 5)] {
-            let pl = Placement::uniform(n, k).unwrap();
+    fn occupancy_follows_staging_bound() {
+        let mut peaks = Vec::new();
+        for n in [16usize, 32, 64, 128] {
+            let pl = Placement::uniform(n, 4).unwrap();
             for coll in [Collective::AllGather, Collective::ReduceScatter] {
-                let (p, bound) = match coll {
-                    Collective::AllGather => (allgather(&pl, 2), n - 1),
-                    _ => (reduce_scatter(&pl, 2), n),
+                let p = match coll {
+                    Collective::AllGather => allgather(&pl, 2),
+                    _ => reduce_scatter(&pl, 2),
                 };
                 let occ = verify_program(&p).unwrap();
+                let bound = staging_bound(&pl, 2, coll);
                 assert!(
                     occ.peak_slots <= bound,
-                    "{coll} n={n} k={k}: peak {} > {bound}",
+                    "{coll} n={n}: peak {} > bound {bound}",
                     occ.peak_slots
                 );
+                if coll == Collective::AllGather {
+                    peaks.push(occ.peak_slots);
+                }
             }
         }
+        // sublinear: 16 -> 128 ranks is 8x; the peak must grow far less
+        let (first, last) = (peaks[0], peaks[3]);
+        assert!(
+            last < first * 4 && last < 128 / 2,
+            "staging not sublinear: peaks {peaks:?}"
+        );
+    }
+
+    /// Multi-leader striping also divides leader staging.
+    #[test]
+    fn striping_reduces_staging() {
+        let pl1 = Placement::uniform(64, 8).unwrap();
+        let pl4 = Placement::uniform(64, 8).unwrap().with_leaders(4).unwrap();
+        let p1 = verify_program(&allgather(&pl1, 2)).unwrap().peak_slots;
+        let p4 = verify_program(&allgather(&pl4, 2)).unwrap().peak_slots;
+        assert!(p4 < p1, "L=4 peak {p4} not below L=1 peak {p1}");
+        assert!(p4 <= staging_bound(&pl4, 2, Collective::AllGather));
     }
 
     #[test]
-    fn phase_spans_cover_program() {
-        let pl = Placement::uniform(13, 4).unwrap();
-        let (s1, s2, s3) = phase_spans(&pl, 2);
-        assert_eq!(s1, 3);
-        assert_eq!(s3, 3);
-        assert!(s2 >= 1);
+    fn phase_list_covers_program() {
+        // two-level, uniform: spans are exact
+        let pl = Placement::uniform(16, 4).unwrap();
+        let phases = phase_list(&pl, 2);
+        assert_eq!(phases[0].name, "intra_gather");
+        assert_eq!(phases[0].steps, 3);
+        assert_eq!(phases[1].name, "intra_bcast");
+        assert_eq!(phases[1].steps, 3);
+        assert_eq!(phases[2].name, "inter_pipeline");
+        let total: usize = phases.iter().map(|ph| ph.steps).sum();
         let p = allgather(&pl, 2);
-        assert_eq!(p.steps, s1 + s2 + s3);
+        assert_eq!(p.steps, total);
         let rs = reduce_scatter(&pl, 2);
         assert_eq!(rs.steps, p.steps);
+        // three-level, uniform pods: spans are exact and the list has 4
+        // entries
+        let pl = Placement::parse("4x2", 32).unwrap();
+        let phases = phase_list(&pl, 2);
+        assert_eq!(phases.len(), 4);
+        assert_eq!(phases[2].name, "pod_pipeline");
+        assert_eq!(phases[3].name, "fabric_pipeline");
+        let total: usize = phases.iter().map(|ph| ph.steps).sum();
+        assert_eq!(allgather(&pl, 2).steps, total);
+        // uneven pods: the sum is an upper bound
+        let pl = Placement::from_pod_sizes(&[vec![4, 4], vec![2]]).unwrap();
+        let total: usize = phase_list(&pl, 2).iter().map(|ph| ph.steps).sum();
+        assert!(allgather(&pl, 2).steps <= total);
+    }
+
+    /// Cross-pod traffic is pod-leader to pod-leader only.
+    #[test]
+    fn cross_pod_messages_are_pod_leader_to_pod_leader() {
+        let pl = Placement::parse("4x2", 32).unwrap();
+        let pod_leaders: HashSet<Rank> =
+            (0..pl.npods()).map(|q| pl.leader(pl.pod_nodes(q)[0])).collect();
+        let p = allgather(&pl, 2);
+        for m in p.messages() {
+            let (ps, pd) =
+                (pl.pod_of_node(pl.node_of(m.src)), pl.pod_of_node(pl.node_of(m.dst)));
+            if ps != pd {
+                assert!(pod_leaders.contains(&m.src), "src {} not a pod leader", m.src);
+                assert!(pod_leaders.contains(&m.dst), "dst {} not a pod leader", m.dst);
+            }
+        }
     }
 }

@@ -31,7 +31,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::core::{Error, Rank, Result};
-use crate::obs::{Event, EventKind, LinkStat, TraceRecorder};
+use crate::obs::{Event, EventKind, LevelLinkStat, LinkStat, TraceRecorder};
 use crate::sched::program::{Op, Program};
 use crate::sim::cost::CostModel;
 use crate::sim::topology::Topology;
@@ -84,6 +84,12 @@ pub struct SimReport {
     /// [`crate::obs::MetricsReport::with_links`] for the analyzer's
     /// contention view.
     pub link_stats: Vec<LinkStat>,
+    /// `link_stats` rolled up per fabric tier (indexed by the topology's
+    /// `Link::level`: 0 = NIC, 1 = leaf↔spine, 2 = spine↔core). One row
+    /// per tier makes the taper story auditable at a glance — a
+    /// hierarchical schedule should show its byte mass at level 0 and
+    /// only the striped leader flows above it.
+    pub level_link_stats: Vec<LevelLinkStat>,
 }
 
 impl SimReport {
@@ -239,6 +245,7 @@ fn sim_inner(
         step_spans: vec![(f64::INFINITY, f64::NEG_INFINITY); p.steps],
         channel_spans: vec![(f64::INFINITY, f64::NEG_INFINITY); channels],
         link_stats: Vec::new(),
+        level_link_stats: Vec::new(),
     };
 
     // Initial scheduling pass.
@@ -418,6 +425,21 @@ fn sim_inner(
             },
         })
         .collect();
+    // Tier roll-up: every link carries its fabric level, so the per-tier
+    // rows are a direct fold of the per-link table.
+    let mut by_level = vec![LevelLinkStat::default(); topo.max_level() + 1];
+    for (lvl, row) in by_level.iter_mut().enumerate() {
+        row.level = lvl;
+    }
+    for s in &report.link_stats {
+        let row = &mut by_level[topo.links[s.link].level];
+        row.links += 1;
+        row.bytes += s.bytes;
+        row.busy_s += s.busy_s;
+        row.contended_s += s.contended_s;
+        row.max_utilization = row.max_utilization.max(s.utilization);
+    }
+    report.level_link_stats = by_level;
     Ok(report)
 }
 
@@ -761,6 +783,38 @@ mod tests {
         assert!((max_util - rep.busiest_link_utilization).abs() < 1e-9);
         // a ring over tapered leaf-spine genuinely contends somewhere
         assert!(rep.link_stats.iter().any(|s| s.contended_s > 0.0));
+    }
+
+    /// The per-tier roll-up partitions the per-link table: one row per
+    /// fabric level, link/byte totals preserved, and the tier byte split
+    /// consistent with `bytes_by_level`'s traffic attribution.
+    #[test]
+    fn level_link_stats_partition_the_link_table() {
+        let topo = Topology::three_level(32, 4, 4, 2, 2, 25e9, 1.0, 0.25).unwrap();
+        let p = pat::allgather(32, usize::MAX);
+        let rep = simulate(&p, &topo, &CostModel::ib_hdr(), 16 << 10).unwrap();
+        assert_eq!(rep.level_link_stats.len(), 3);
+        for (lvl, row) in rep.level_link_stats.iter().enumerate() {
+            assert_eq!(row.level, lvl);
+            assert!(row.links > 0, "level {lvl} has no links");
+        }
+        assert_eq!(
+            rep.level_link_stats.iter().map(|r| r.links).sum::<usize>(),
+            rep.link_stats.len()
+        );
+        let bytes_total: usize = rep.level_link_stats.iter().map(|r| r.bytes).sum();
+        assert_eq!(bytes_total as f64, rep.bytes_links);
+        // a flat PAT at 32 ranks genuinely crosses the core tier
+        assert!(rep.level_link_stats[2].bytes > 0);
+        for row in &rep.level_link_stats {
+            let max_in_tier = rep
+                .link_stats
+                .iter()
+                .filter(|s| topo.links[s.link].level == row.level)
+                .map(|s| s.utilization)
+                .fold(0.0, f64::max);
+            assert!((row.max_utilization - max_in_tier).abs() < 1e-12);
+        }
     }
 
     /// Reducing receives emit reduce-kernel events in the unified trace.

@@ -441,7 +441,11 @@ impl Topology {
     /// phases never touch the fabric. A node straddling a leaf boundary —
     /// e.g. a node size that does not divide the leaf radix — is rejected
     /// with [`Error::Topology`] instead of silently (or panickingly)
-    /// misrouting.
+    /// misrouting. For three-level placements the same containment is
+    /// checked one tier up: every placement pod must sit inside one
+    /// fabric pod (distance level ≤ 1), so the three-level schedule's
+    /// intra-pod rounds never cross the core tier it thinks it is
+    /// avoiding.
     pub fn check_placement(&self, placement: &Placement) -> Result<()> {
         if placement.nranks() != self.nranks {
             return Err(Error::Topology(format!(
@@ -464,6 +468,26 @@ impl Topology {
                         self.name,
                         self.distance_level(first, r)
                     )));
+                }
+            }
+        }
+        if placement.is_three_level() {
+            for pod in 0..placement.npods() {
+                let nodes = placement.pod_nodes(pod);
+                let first = placement.ranks_of(nodes[0])[0];
+                for &m in nodes {
+                    for &r in placement.ranks_of(m) {
+                        if self.distance_level(first, r) > 1 {
+                            return Err(Error::Topology(format!(
+                                "placement pod {pod} ({} nodes) straddles a pod of {}: \
+                                 ranks {first} and {r} are {} fabric levels apart \
+                                 (pod node-groups must divide the fabric pod)",
+                                nodes.len(),
+                                self.name,
+                                self.distance_level(first, r)
+                            )));
+                        }
+                    }
                 }
             }
         }
@@ -644,5 +668,24 @@ mod tests {
         Topology::flat(16, 1e9)
             .check_placement(&Placement::uniform(16, 5).unwrap())
             .unwrap();
+    }
+
+    /// Pod containment: a three-level placement is accepted only when
+    /// every placement pod sits inside one fabric pod.
+    #[test]
+    fn placement_pod_compatibility() {
+        // 2 pods × 4 leaves × 4 ranks = 32
+        let t = Topology::three_level(32, 4, 4, 2, 2, 1e9, 1.0, 0.5).unwrap();
+        // 4-node pods align with the 16-rank fabric pods
+        t.check_placement(&Placement::parse("4x4", 32).unwrap()).unwrap();
+        // two-level placements are untouched by the pod check
+        t.check_placement(&Placement::uniform(32, 4).unwrap()).unwrap();
+        // 3-node pods straddle the fabric-pod boundary (pod 1 holds
+        // ranks 12..24, which span the core tier at rank 16)
+        let err = t
+            .check_placement(&Placement::parse("4x3", 32).unwrap())
+            .unwrap_err();
+        assert!(matches!(err, Error::Topology(_)), "{err}");
+        assert!(err.to_string().contains("straddles a pod"), "{err}");
     }
 }

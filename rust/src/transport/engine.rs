@@ -111,6 +111,13 @@ impl Default for TransportOptions {
 pub struct TransportReport {
     /// Peak staging slots (AG) or accumulator slots (RS) on any rank.
     pub peak_slots: usize,
+    /// Per-rank peak staging/accumulator slots (index = rank; `max` is
+    /// [`TransportReport::peak_slots`]). This is what attributes a
+    /// hierarchical schedule's footprint: the stripe leaders' rows are
+    /// the pipelined fan-out's staging cost, asserted against
+    /// [`crate::sched::hier::staging_bound`] by the correctness matrix
+    /// and the bench baseline gate.
+    pub peak_slots_by_rank: Vec<usize>,
     /// Total payload bytes moved between ranks.
     pub bytes_moved: usize,
     /// Total messages.
@@ -652,6 +659,10 @@ pub fn run_allgather_into(
                 let hw = (pool.peak() * sub + plan.wire[r]) * 4;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
+                if rep.peak_slots_by_rank.len() < n {
+                    rep.peak_slots_by_rank.resize(n, 0);
+                }
+                rep.peak_slots_by_rank[r] = pool.peak();
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
@@ -877,6 +888,10 @@ pub fn run_reduce_scatter(
                 let hw = (pool.peak() * sub + plan.wire[r]) * 4;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
+                if rep.peak_slots_by_rank.len() < n {
+                    rep.peak_slots_by_rank.resize(n, 0);
+                }
+                rep.peak_slots_by_rank[r] = pool.peak();
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();
@@ -1223,6 +1238,10 @@ pub fn run_allreduce_batch(
                 let hw = (pool.peak() * slot_elems + plan.wire[r]) * 4;
                 let mut rep = report.lock().unwrap();
                 rep.peak_slots = rep.peak_slots.max(pool.peak());
+                if rep.peak_slots_by_rank.len() < n {
+                    rep.peak_slots_by_rank.resize(n, 0);
+                }
+                rep.peak_slots_by_rank[r] = pool.peak();
                 rep.bytes_moved += local_bytes;
                 rep.messages += local_msgs;
                 rep.slots_allocated += pool.total_allocated();

@@ -806,6 +806,194 @@ fn arena_transport_matrix_to_64() {
     }
 }
 
+/// Three-level axis, reference executor: placements with pods — uniform
+/// (`<k>x<m>`) and uneven (explicit pod grammar, trailing fat node,
+/// single-node pods) — × {AG, RS} × aggregations. Every program verifies,
+/// delivers each foreign chunk exactly once, and keeps its measured
+/// occupancy within the leader staging-budget law
+/// ([`sched::hier::staging_bound`]).
+#[test]
+fn three_level_matrix() {
+    let placements = vec![
+        Placement::parse("4x2", 24).unwrap(),          // 3 pods × 2 nodes × 4
+        Placement::parse("8x4", 64).unwrap(),          // 2 pods × 4 nodes × 8
+        Placement::parse("2,3;4;3,2,3", 17).unwrap(),  // ragged pods AND nodes
+        Placement::from_node_sizes(&[4, 4, 4, 5])
+            .unwrap()
+            .with_pods_grouped(&[1, 3])
+            .unwrap(),                                 // lone-node first pod
+    ];
+    for pl in &placements {
+        assert!(pl.is_three_level());
+        let n = pl.nranks();
+        for &a in &[1usize, 2, usize::MAX] {
+            for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                let p = sched::generate_placed(Algorithm::HierPat { aggregation: a }, coll, pl)
+                    .unwrap_or_else(|e| panic!("3lvl {coll} n={n} a={a}: {e}"));
+                let occ = verify_program(&p)
+                    .unwrap_or_else(|e| panic!("3lvl {coll} n={n} a={a}: {e}"));
+                assert_eq!(
+                    p.stats().chunk_transfers,
+                    n * (n - 1),
+                    "3lvl {coll} n={n} a={a}"
+                );
+                let bound = sched::hier::staging_bound(pl, a, coll);
+                assert!(
+                    occ.peak_slots <= bound,
+                    "3lvl {coll} n={n} a={a}: peak {} > bound {bound}",
+                    occ.peak_slots
+                );
+            }
+        }
+    }
+}
+
+/// Multi-leader axis through the real threaded transport: leaders-per-node
+/// {1, 2, 4} × {ag, rs, allreduce} on two-level and three-level
+/// placements. Striped schedules must be bit-exact with the flat PAT
+/// result (integer-valued payloads make float sums order-independent, so
+/// equality is exact).
+#[test]
+fn multi_leader_transport_matrix() {
+    let opts = TransportOptions::default();
+    let chunk = 8usize;
+    let placements = vec![
+        Placement::uniform(24, 4).unwrap(),
+        Placement::parse("4x2", 24).unwrap(),
+    ];
+    for base_pl in &placements {
+        let n = base_pl.nranks();
+        let mut rng = Rng::new(n as u64 * 709);
+        for &l in &[1usize, 2, 4] {
+            let pl = base_pl.clone().with_leaders(l).unwrap();
+            let a = usize::MAX;
+            let hier = Algorithm::HierPat { aggregation: a };
+
+            // all-gather: striped hier == flat pat, element for element
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let flat = sched::generate(
+                Algorithm::Pat { aggregation: a },
+                Collective::AllGather,
+                n,
+            )
+            .unwrap();
+            let (want, _) = run_allgather(&flat, &inputs, &opts).unwrap();
+            let hag = sched::generate_placed(hier, Collective::AllGather, &pl).unwrap();
+            let (outs, _) = run_allgather(&hag, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("L={l} ag n={n}: {e}"));
+            assert_eq!(outs, want, "L={l} ag n={n}");
+
+            // reduce-scatter
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let hrs = sched::generate_placed(hier, Collective::ReduceScatter, &pl).unwrap();
+            let (outs, _) = run_reduce_scatter(&hrs, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("L={l} rs n={n}: {e}"));
+            for r in 0..n {
+                for i in 0..chunk {
+                    let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                    assert_eq!(outs[r][i], w, "L={l} rs n={n} rank={r} idx={i}");
+                }
+            }
+
+            // all-reduce (bare hier lifted to a Compose of itself)
+            let har = sched::generate_placed(hier, Collective::AllReduce, &pl).unwrap();
+            let nchunks = har.chunk_space();
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..nchunks * 2).map(|_| rng.below(997) as f32).collect())
+                .collect();
+            let (outs, _) = run_allreduce(&har, &inputs, &opts)
+                .unwrap_or_else(|e| panic!("L={l} ar n={n}: {e}"));
+            for (r, out) in outs.iter().enumerate() {
+                for i in 0..nchunks * 2 {
+                    let w: f32 = (0..n).map(|s| inputs[s][i]).sum();
+                    assert_eq!(out[i], w, "L={l} ar n={n} rank={r} idx={i}");
+                }
+            }
+        }
+    }
+}
+
+/// The pipelined fan-out under an *enforced* staging cap: the transport
+/// runs with `slot_capacity` set from the analytic
+/// [`sched::hier::staging_bound`] law (plus the usual one-in-flight
+/// message allowance the sibling matrices use), and the per-rank peak
+/// attribution ([`patcol::transport::TransportReport::peak_slots_by_rank`])
+/// must cover every rank and stay within the cap — the sublinear bound is
+/// a hard budget, not a trend.
+#[test]
+fn pipelined_fanout_respects_enforced_staging_caps() {
+    let chunk = 8usize;
+    for (n, k, l) in [(32usize, 8usize, 1usize), (32, 8, 2), (64, 8, 2), (64, 8, 4)] {
+        let pl = Placement::uniform(n, k).unwrap().with_leaders(l).unwrap();
+        let mut rng = Rng::new((n * 10 + l) as u64);
+        for coll in [Collective::AllGather, Collective::ReduceScatter] {
+            let a = 2usize;
+            let p = sched::generate_placed(Algorithm::HierPat { aggregation: a }, coll, &pl)
+                .unwrap();
+            let occ = verify_program(&p).unwrap();
+            let bound = sched::hier::staging_bound(&pl, a, coll);
+            assert!(
+                occ.peak_slots <= bound,
+                "L={l} {coll} n={n}: verifier peak {} > bound {bound}",
+                occ.peak_slots
+            );
+            let cap = bound + p.stats().max_aggregation + 1;
+            let opts = TransportOptions {
+                slot_capacity: Some(cap),
+                validate: false,
+                ..Default::default()
+            };
+            let rep = match coll {
+                Collective::AllGather => {
+                    let inputs: Vec<Vec<f32>> = (0..n)
+                        .map(|_| (0..chunk).map(|_| rng.below(997) as f32).collect())
+                        .collect();
+                    let mut want = Vec::new();
+                    for i in &inputs {
+                        want.extend_from_slice(i);
+                    }
+                    let (outs, rep) = run_allgather(&p, &inputs, &opts)
+                        .unwrap_or_else(|e| panic!("capped L={l} ag n={n}: {e}"));
+                    for (r, o) in outs.iter().enumerate() {
+                        assert_eq!(o, &want, "capped L={l} ag n={n} rank={r}");
+                    }
+                    rep
+                }
+                _ => {
+                    let inputs: Vec<Vec<f32>> = (0..n)
+                        .map(|_| (0..n * chunk).map(|_| rng.below(997) as f32).collect())
+                        .collect();
+                    let (outs, rep) = run_reduce_scatter(&p, &inputs, &opts)
+                        .unwrap_or_else(|e| panic!("capped L={l} rs n={n}: {e}"));
+                    for r in 0..n {
+                        for i in 0..chunk {
+                            let w: f32 = (0..n).map(|s| inputs[s][r * chunk + i]).sum();
+                            assert_eq!(outs[r][i], w, "capped L={l} rs n={n} rank={r}");
+                        }
+                    }
+                    rep
+                }
+            };
+            assert_eq!(rep.peak_slots_by_rank.len(), n, "L={l} {coll} n={n}");
+            assert_eq!(
+                rep.peak_slots_by_rank.iter().copied().max(),
+                Some(rep.peak_slots),
+                "L={l} {coll} n={n}"
+            );
+            for (r, &pk) in rep.peak_slots_by_rank.iter().enumerate() {
+                assert!(
+                    pk <= cap,
+                    "L={l} {coll} n={n} rank={r}: peak {pk} > cap {cap}"
+                );
+            }
+        }
+    }
+}
+
 /// Claim P3 through the observability layer: the pool high-water counters
 /// sampled at every buffer-pool transition on the real transport stay
 /// within the reference verifier's measured occupancy bound — the traced

@@ -2,9 +2,12 @@
 //! calibration, and config/CLI plumbing.
 
 use patcol::coordinator::config::{parse_bytes, ConfigMap};
-use patcol::coordinator::tuner::{CHANNEL_CALIBRATION_TOLERANCE, HIER_CALIBRATION_TOLERANCE};
+use patcol::coordinator::tuner::{
+    ALLREDUCE_CALIBRATION_TOLERANCE, CHANNEL_CALIBRATION_TOLERANCE, HIER_CALIBRATION_TOLERANCE,
+};
 use patcol::coordinator::{CommConfig, Communicator, Tuner};
-use patcol::core::{Algorithm, Collective, Placement};
+use patcol::core::{Algorithm, Collective, PhaseAlg, Placement};
+use patcol::obs::calib::{self, CalibRecord};
 use patcol::sched;
 use patcol::sim::{simulate, CostModel, Topology};
 
@@ -60,6 +63,16 @@ fn predict_hier_tracks_simulator_on_tapered_fabric() {
     topo.check_placement(&pl).unwrap();
     let cost = CostModel::ib_hdr();
     let tuner = Tuner { inter_bw: Some(nic * 0.25), ..Tuner::default() };
+    // The sweep doubles as a calibration drift run: every point is
+    // appended to a JSONL history exactly as the CLI's `--calib-history`
+    // flag records live runs, then folded through
+    // `obs::calib::drift_summary` — the workflow that watches the
+    // tolerance constant against model drift.
+    let hist = std::env::temp_dir().join(format!(
+        "patcol_hier_calib_drift_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&hist);
     for &a in &[2usize, usize::MAX] {
         for &chunk in &[4usize << 10, 64 << 10, 256 << 10] {
             let prog = sched::generate_placed(
@@ -76,6 +89,82 @@ fn predict_hier_tracks_simulator_on_tapered_fabric() {
                     .contains(&ratio),
                 "a={a} chunk={chunk}: predicted {pred:.6}s vs simulated {sim_t:.6}s \
                  (ratio {ratio:.2} outside ×/÷{HIER_CALIBRATION_TOLERANCE})"
+            );
+            let alg = if a == usize::MAX {
+                "hier_pat:max".to_string()
+            } else {
+                format!("hier_pat:{a}")
+            };
+            calib::append(
+                &hist,
+                &CalibRecord {
+                    collective: "allgather".into(),
+                    alg,
+                    nranks: n,
+                    bytes: chunk,
+                    channels: 1,
+                    predicted_us: pred * 1e6,
+                    measured_us: sim_t * 1e6,
+                },
+            )
+            .unwrap();
+        }
+    }
+    // Drift summary over the fresh history: every swept point present,
+    // and every per-key worst residual inside what the tolerance constant
+    // promises (ratio ∈ ×/÷T ⇒ |residual| ≤ (T−1)·100%).
+    let drift = calib::drift_summary(&calib::load(&hist));
+    assert_eq!(drift.len(), 6, "one drift key per (aggregation, size): {drift:?}");
+    let limit_pct = (HIER_CALIBRATION_TOLERANCE - 1.0) * 100.0;
+    for (key, d) in &drift {
+        assert_eq!(d.n, 1, "{key}: single run per point in this sweep");
+        assert!(
+            d.max_abs_residual_pct <= limit_pct,
+            "{key}: residual {:.1}% beyond the documented ±{limit_pct:.0}%",
+            d.max_abs_residual_pct
+        );
+    }
+    let _ = std::fs::remove_file(&hist);
+}
+
+/// Tuner calibration (the satellite to the hierarchy rework):
+/// `predict_allreduce` tracks the event simulator on a tapered leaf-spine
+/// fabric within the documented constant
+/// [`ALLREDUCE_CALIBRATION_TOLERANCE`] (both directions), across the
+/// latency→bandwidth band and pipeline segment counts. The fabric: 64
+/// ranks on 8-rank leaves, 4 spines tapered ×0.25 — aggregate leaf uplink
+/// equals one NIC, which is what the tuner's `inter_bw` is set to, so the
+/// closed form's shared-uplink `flat_rate` matches the fabric the
+/// simulator contends on.
+#[test]
+fn predict_allreduce_tracks_simulator_on_tapered_leaf_spine() {
+    let n = 64usize;
+    let k = 8usize;
+    let nic = CostModel::ib_hdr_nic_bw();
+    let topo = Topology::leaf_spine(n, k, 4, nic, 0.25).unwrap();
+    let pl = Placement::uniform(n, k).unwrap();
+    topo.check_placement(&pl).unwrap();
+    let cost = CostModel::ib_hdr();
+    // 4 uplinks × 0.25·nic = exactly one NIC of aggregate leaf uplink.
+    let tuner = Tuner { inter_bw: Some(nic), ..Tuner::default() };
+    let ph = PhaseAlg::Pat { aggregation: usize::MAX };
+    for &bytes in &[4usize << 10, 64 << 10, 1 << 20] {
+        for &segments in &[1usize, 2, 4] {
+            let prog = sched::generate_placed(
+                Algorithm::Compose { rs: ph, ag: ph, segments },
+                Collective::AllReduce,
+                &pl,
+            )
+            .unwrap();
+            let seg_bytes = (bytes / segments).max(1);
+            let sim_t = simulate(&prog, &topo, &cost, seg_bytes).unwrap().total_time;
+            let pred = tuner.predict_allreduce(ph, ph, segments, n, seg_bytes, Some(&pl));
+            let ratio = pred / sim_t;
+            assert!(
+                (1.0 / ALLREDUCE_CALIBRATION_TOLERANCE..=ALLREDUCE_CALIBRATION_TOLERANCE)
+                    .contains(&ratio),
+                "bytes={bytes} segments={segments}: predicted {pred:.6}s vs simulated \
+                 {sim_t:.6}s (ratio {ratio:.2} outside ×/÷{ALLREDUCE_CALIBRATION_TOLERANCE})"
             );
         }
     }
@@ -206,6 +295,25 @@ fn cli_binary_smoke() {
              "--alg", "pat:2", "--bucket-bytes", "4KiB"],
         vec!["tune", "--ranks", "64", "--size", "4MiB", "--buffer-slots", "256",
              "--collective", "ar"],
+        // multi-leader striping: L inter-node flows per node
+        vec!["run", "--ranks", "16", "--size", "4KiB", "--alg", "hier_pat",
+             "--ranks-per-node", "4", "--leaders-per-node", "2"],
+        vec!["explain", "--ranks", "16", "--alg", "hier_pat:2",
+             "--ranks-per-node", "4", "--leaders-per-node", "4"],
+        // three-level placement grammar: <k>x<m> and explicit pods
+        vec!["run", "--ranks", "32", "--size", "4KiB", "--alg", "hier_pat",
+             "--placement", "4x4", "--collective", "rs"],
+        vec!["explain", "--ranks", "17", "--alg", "hier_pat:2",
+             "--placement", "4,4;4,5"],
+        vec![
+            "simulate", "--ranks", "32", "--size", "64KiB", "--alg", "hier_pat",
+            "--topo", "three_level", "--ranks-per-leaf", "4",
+            "--leaves-per-pod", "4", "--placement", "4x4",
+            "--leaders-per-node", "2",
+        ],
+        vec!["tune", "--ranks", "64", "--size", "1MiB", "--buffer-slots", "1024",
+             "--ranks-per-node", "8", "--leaders-per-node", "2",
+             "--inter-gbps", "100"],
     ] {
         let out = std::process::Command::new(bin)
             .args(&argv)
