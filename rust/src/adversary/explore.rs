@@ -1,0 +1,406 @@
+//! Episode runner: execute one workload through the real threaded
+//! transport under an adversarial delivery policy, compare against the
+//! reference result, and blame failures.
+//!
+//! An **episode** is one seeded run of a [`Workload`] (collective ×
+//! algorithm × ranks × channels point) with a fresh per-rank policy
+//! family from a [`PolicySpec`]. Episodes are independent and
+//! deterministic in `(workload, policy, episode index)` up to OS thread
+//! scheduling — the perturbations a policy *applies* are recorded as
+//! [`Deviation`]s, which is what makes a failing episode replayable (see
+//! [`crate::adversary::shrink`]).
+//!
+//! Every episode runs with the **sound slot capacity** enforced: `C ×
+//! max(verifier occupancy, max aggregation)` of the unsplit program
+//! (channels progress independently and share the rank's pool, so the
+//! per-channel bound multiplies by the channel count — see
+//! [`crate::transport::TransportOptions::slot_capacity`]). A healthy
+//! schedule under any delivery order must stay within it; exceeding it
+//! is a failure the episode reports, not an artifact.
+
+use std::time::Duration;
+
+use crate::core::{AlgSpec, Algorithm, Collective, Error, Placement, Rank, Result};
+use crate::obs::{Event, EventKind, TraceRecorder};
+use crate::sched;
+use crate::sched::program::Program;
+use crate::sched::verify::verify_program;
+use crate::transport::{run_allgather, run_reduce_scatter, TransportOptions, TransportReport};
+
+use super::policy::{drain_log, new_log, Deviation, PolicySpec};
+use super::shrink::{self, ShrinkResult};
+use super::ReplayTrace;
+
+/// One collective execution point the adversary drives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workload {
+    pub collective: Collective,
+    /// Algorithm plus channel count ([`AlgSpec`] grammar, e.g. `pat:2*2`).
+    pub spec: AlgSpec,
+    pub nranks: usize,
+    /// Per-rank slot payload in elements (padded up to a multiple of the
+    /// channel count by [`Workload::new`]).
+    pub elems: usize,
+    /// Input-data seed (also the base for episode seeds).
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Build a workload, padding `elems` to the channel stripe count the
+    /// way the communicator pads odd payloads.
+    pub fn new(
+        collective: Collective,
+        spec: AlgSpec,
+        nranks: usize,
+        elems: usize,
+        seed: u64,
+    ) -> Workload {
+        let c = spec.channels.max(1);
+        let elems = elems.max(1).div_ceil(c) * c;
+        Workload { collective, spec, nranks, elems, seed }
+    }
+
+    /// One-line label for logs and reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {} n={} elems={} seed={}",
+            self.collective.as_str(),
+            self.spec.spec(),
+            self.nranks,
+            self.elems,
+            self.seed
+        )
+    }
+
+    /// Generate the (channel-split) program plus the sound slot capacity
+    /// (see the module docs).
+    pub fn build(&self) -> Result<(Program, usize)> {
+        let n = self.nranks;
+        let base = match self.spec.alg {
+            Algorithm::HierPat { .. } => {
+                let node = if n >= 8 && n % 4 == 0 {
+                    4
+                } else if n >= 4 && n % 2 == 0 {
+                    2
+                } else {
+                    return Err(Error::Config(format!(
+                        "hier workload needs an even rank count >= 4, got {n}"
+                    )));
+                };
+                sched::generate_placed(self.spec.alg, self.collective, &Placement::uniform(n, node)?)?
+            }
+            _ => sched::generate(self.spec.alg, self.collective, n)?,
+        };
+        let occ = verify_program(&base)?;
+        let per_channel = occ.peak_slots.max(base.stats().max_aggregation).max(1);
+        let cap = per_channel * self.spec.channels.max(1);
+        let p = sched::channel::split(&base, self.spec.channels.max(1))?;
+        Ok((p, cap))
+    }
+
+    /// Deterministic integer-valued inputs, pairwise distinct across
+    /// (rank, element) so any misplaced chunk is visible at element 0 of
+    /// the damage. Values stay far below 2^24, keeping every f32 sum
+    /// exact — adversarial runs must be bit-identical to clean ones.
+    pub fn inputs(&self) -> Vec<Vec<f32>> {
+        let n = self.nranks;
+        let per = match self.collective {
+            Collective::AllGather => self.elems,
+            _ => self.elems * n,
+        };
+        let base = 1 + (self.seed % 5) as usize;
+        (0..n)
+            .map(|r| (0..per).map(|i| (base + r * per + i) as f32).collect())
+            .collect()
+    }
+
+    /// The reference result (exact, computed directly from the inputs).
+    pub fn expected(&self, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let n = self.nranks;
+        match self.collective {
+            Collective::AllGather => {
+                let mut all = Vec::with_capacity(n * self.elems);
+                for inp in inputs {
+                    all.extend_from_slice(inp);
+                }
+                vec![all; n]
+            }
+            _ => {
+                let l = self.elems;
+                (0..n)
+                    .map(|r| {
+                        let mut out = vec![0f32; l];
+                        for inp in inputs {
+                            for (o, x) in out.iter_mut().zip(&inp[r * l..(r + 1) * l]) {
+                                *o += x;
+                            }
+                        }
+                        out
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Execute the workload on the threaded transport.
+    pub fn run(
+        &self,
+        p: &Program,
+        inputs: &[Vec<f32>],
+        opts: &TransportOptions,
+    ) -> Result<(Vec<Vec<f32>>, TransportReport)> {
+        match self.collective {
+            Collective::AllGather => run_allgather(p, inputs, opts),
+            Collective::ReduceScatter => run_reduce_scatter(p, inputs, opts),
+            Collective::AllReduce => Err(Error::Unsupported(
+                "adversary workloads cover ag and rs (allreduce = rs∘ag composition)".into(),
+            )),
+        }
+    }
+
+    /// First output mismatch vs the reference, as a blame: the damaged
+    /// chunk id names the (rank, channel) coordinates (`step` is 0 —
+    /// result damage is observed after the schedule finishes, not at a
+    /// step). Scans ranks then elements in order, so the blame is
+    /// deterministic for a deterministic data flow.
+    pub fn compare(&self, outputs: &[Vec<f32>], expected: &[Vec<f32>]) -> Option<Blame> {
+        let n = self.nranks;
+        let c = self.spec.channels.max(1);
+        let sub = self.elems / c;
+        for (r, (out, want)) in outputs.iter().zip(expected).enumerate() {
+            if let Some(i) = out.iter().zip(want).position(|(a, b)| a != b) {
+                let (slot, o) = match self.collective {
+                    Collective::AllGather => (i / self.elems, i % self.elems),
+                    _ => (r, i),
+                };
+                let stripe = if sub == 0 { 0 } else { o / sub };
+                let chunk = stripe * n + slot;
+                return Some(Blame {
+                    rank: r,
+                    channel: stripe,
+                    step: 0,
+                    kind: format!("wrong-result chunk {chunk}"),
+                });
+            }
+        }
+        None
+    }
+}
+
+/// Where and what failed, in stable coordinates: equality of blames is
+/// the shrinker's reproduction criterion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Blame {
+    pub rank: Rank,
+    pub channel: usize,
+    pub step: usize,
+    /// Coarse failure category (stable across runs; counts and live
+    /// totals are stripped).
+    pub kind: String,
+}
+
+impl Blame {
+    /// Whether this blame is a watchdog timeout — excluded from shrink
+    /// reproduction so counterexamples never converge onto
+    /// timing-dependent artifacts.
+    pub fn is_timeout(&self) -> bool {
+        self.kind == "watchdog-timeout"
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "rank {} channel {} step {}: {}",
+            self.rank, self.channel, self.step, self.kind
+        )
+    }
+}
+
+/// Extract a blame from a transport error message. The transport's
+/// errors carry their coordinates in text ("rank 3", "channel 0",
+/// "step 2" — see `blame_timeout` and the pool's annotated exhaustion
+/// errors); this parses the first occurrence of each and buckets the
+/// message into a stable category.
+pub fn parse_blame(err: &str) -> Blame {
+    let kind = if err.contains("timed out") {
+        "watchdog-timeout".to_string()
+    } else if err.contains("buffer pool exhausted") {
+        "pool-exhausted".to_string()
+    } else if err.contains("elems, want") {
+        "length-mismatch".to_string()
+    } else {
+        let first = err.lines().next().unwrap_or("");
+        first.chars().take(60).collect()
+    };
+    Blame {
+        rank: coord_after(err, "rank ").unwrap_or(0),
+        channel: coord_after(err, "channel ").unwrap_or(0),
+        step: coord_after(err, "step ").unwrap_or(0),
+        kind,
+    }
+}
+
+/// First unsigned integer following the first occurrence of `label`.
+fn coord_after(text: &str, label: &str) -> Option<usize> {
+    let at = text.find(label)? + label.len();
+    let rest = &text[at..];
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// A failing episode: the blame plus everything needed to replay it.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub blame: Blame,
+    /// The raw transport error, when the failure was an error rather
+    /// than silent result damage.
+    pub error: Option<String>,
+    /// The perturbations the policy actually applied this episode.
+    pub deviations: Vec<Deviation>,
+}
+
+/// Outcome of one episode.
+#[derive(Debug, Clone)]
+pub struct EpisodeOutcome {
+    pub episode: u64,
+    /// Deviations the policy applied (0 = the run was effectively clean).
+    pub deviations: usize,
+    /// Force-released holds (bounded-hold rule firings).
+    pub forced: usize,
+    /// Decision points seen across all ranks.
+    pub decisions: u64,
+    /// Peak pool slots (0 when the run failed before reporting).
+    pub peak_slots: usize,
+    pub failure: Option<Failure>,
+}
+
+/// Watchdog for adversarial runs: long enough for held schedules on a
+/// loaded CI box, short enough that failing episodes and deliberate
+/// deadlock trials resolve quickly.
+pub const EPISODE_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Transport options for one adversarial run.
+pub(crate) fn episode_options(
+    cap: usize,
+    delivery: crate::transport::DeliveryFactory,
+) -> TransportOptions {
+    TransportOptions {
+        slot_capacity: Some(cap),
+        recv_timeout: EPISODE_TIMEOUT,
+        delivery: Some(delivery),
+        ..TransportOptions::default()
+    }
+}
+
+/// Run episode `episode` of `w` under `policy`. Harness-level problems
+/// (program generation, verification) return `Err`; transport failures
+/// and wrong results land in [`EpisodeOutcome::failure`].
+pub fn run_episode(w: &Workload, policy: &PolicySpec, episode: u64) -> Result<EpisodeOutcome> {
+    let (p, cap) = w.build()?;
+    let inputs = w.inputs();
+    let expected = w.expected(&inputs);
+    let sink = new_log();
+    let opts = episode_options(cap, policy.factory(episode, sink.clone()));
+    let run = w.run(&p, &inputs, &opts);
+    let log = drain_log(&sink);
+    let mut outcome = EpisodeOutcome {
+        episode,
+        deviations: log.deviations.len(),
+        forced: log.forced,
+        decisions: log.decisions,
+        peak_slots: 0,
+        failure: None,
+    };
+    match run {
+        Ok((outputs, rep)) => {
+            outcome.peak_slots = rep.peak_slots;
+            if let Some(blame) = w.compare(&outputs, &expected) {
+                outcome.failure =
+                    Some(Failure { blame, error: None, deviations: log.deviations });
+            }
+        }
+        Err(e) => {
+            let text = e.to_string();
+            outcome.failure = Some(Failure {
+                blame: parse_blame(&text),
+                error: Some(text),
+                deviations: log.deviations,
+            });
+        }
+    }
+    Ok(outcome)
+}
+
+/// What an exploration run found.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    pub workload: Workload,
+    pub policy: PolicySpec,
+    /// Episodes actually run (stops early at the first shrinkable
+    /// failure).
+    pub episodes_run: u64,
+    /// Failing episodes seen (including the counterexample's).
+    pub failures: usize,
+    /// Watchdog-timeout failures skipped as shrink candidates.
+    pub timeouts_skipped: usize,
+    pub total_deviations: u64,
+    pub total_decisions: u64,
+    /// Shrunk, replayable counterexample from the first deterministic
+    /// failure.
+    pub counterexample: Option<ReplayTrace>,
+    /// Shrink statistics when a counterexample was produced.
+    pub shrink: Option<ShrinkResult>,
+}
+
+/// Run up to `episodes` seeded episodes; on the first non-timeout
+/// failure, shrink its deviation list to a minimal replayable trace and
+/// stop. Episode outcomes (and shrink trials) are recorded into `obs`
+/// as [`EventKind::Adversary`] events on a synthetic per-index timeline.
+pub fn explore(
+    w: &Workload,
+    policy: &PolicySpec,
+    episodes: u64,
+    mut obs: Option<&mut TraceRecorder>,
+) -> Result<ExploreReport> {
+    let mut report = ExploreReport {
+        workload: w.clone(),
+        policy: *policy,
+        episodes_run: 0,
+        failures: 0,
+        timeouts_skipped: 0,
+        total_deviations: 0,
+        total_decisions: 0,
+        counterexample: None,
+        shrink: None,
+    };
+    for episode in 0..episodes {
+        let outcome = run_episode(w, policy, episode)?;
+        report.episodes_run += 1;
+        report.total_deviations += outcome.deviations as u64;
+        report.total_decisions += outcome.decisions;
+        let failed = outcome.failure.is_some();
+        if let Some(rec) = obs.as_mut() {
+            let t = episode as f64;
+            rec.record(
+                Event::span(EventKind::Adversary, 0, 0, episode as usize, t, t + 1.0)
+                    .with_value(outcome.deviations)
+                    .with_bytes(usize::from(failed)),
+            );
+        }
+        if let Some(failure) = outcome.failure {
+            report.failures += 1;
+            if failure.blame.is_timeout() {
+                // Timing artifact, not a deterministic counterexample:
+                // keep exploring (the deadlock is still reported if the
+                // whole sweep finds nothing better — the caller sees
+                // `failures > 0`).
+                report.timeouts_skipped += 1;
+                continue;
+            }
+            let shrunk = shrink::shrink(w, &failure, obs.as_mut().map(|r| &mut **r))?;
+            report.counterexample = Some(ReplayTrace::new(w, policy, episode, &shrunk));
+            report.shrink = Some(shrunk);
+            break;
+        }
+    }
+    Ok(report)
+}

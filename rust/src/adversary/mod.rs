@@ -1,0 +1,287 @@
+//! Adversarial delivery: a schedule-exploration harness that breaks the
+//! transport on purpose.
+//!
+//! The threaded transport normally delivers each connection's messages
+//! eagerly in FIFO order, which exercises exactly one of the many
+//! arrival schedules a real network can produce. This module drives the
+//! **real** transport (`crate::transport::engine`, not a model of it)
+//! through the [`crate::transport::delivery`] hook with policies that
+//! deliberately pick hostile schedules:
+//!
+//! - **delay** — seeded random holds at decision points, deepening the
+//!   per-connection FIFOs and permuting cross-channel arrival order;
+//! - **reorder** — delay plus in-connection reordering *attempts*
+//!   (clamped to FIFO order by the transport's ordering guard unless
+//!   the `fifo-guard-off` mutation sentinel is armed);
+//! - **pressure** — hold every head once, maximising simultaneous slot
+//!   occupancy to probe the pool bound at its worst step;
+//! - **dpor** — DPOR-lite: the episode index is a bit-vector that
+//!   systematically flips defer/deliver at hashed decision points,
+//!   enumerating cross-channel interleavings without randomness.
+//!
+//! An episode ([`explore::run_episode`]) runs one workload under one
+//! policy with the sound slot capacity enforced, then compares the
+//! result bit-exactly against the reference. Failures are blamed to
+//! `(rank, channel, step, kind)` ([`Blame`]) and the policy's recorded
+//! perturbation list is shrunk by greedy delta-debugging
+//! ([`shrink::shrink`]) to a minimal deviation list that still
+//! reproduces the same blame. The result is a [`ReplayTrace`]: a small
+//! JSON document that replays deterministically on any machine because
+//! deviations key on the per-connection match index (deterministic
+//! virtual time), not on wall-clock arrival.
+//!
+//! Mutation sentinels (`crate::transport::delivery::sentinel`) disable
+//! one transport invariant at a time — the FIFO-ordering guard or one
+//! slot release — so the test suite can assert the explorer actually
+//! *finds* the bugs this harness exists for, not merely that healthy
+//! code survives it. Sentinels exist only under `cfg(test)` or the
+//! `adversary` feature; release builds cannot arm them.
+//!
+//! Entry points: `patcol adversary` (episode sweeps, `--replay` for
+//! saved traces), [`explore::explore`] and [`replay`] from code.
+
+pub mod explore;
+pub mod policy;
+pub mod shrink;
+
+#[cfg(test)]
+mod tests;
+
+pub use explore::{
+    explore, parse_blame, run_episode, Blame, EpisodeOutcome, ExploreReport, Failure, Workload,
+};
+pub use policy::{DevKind, Deviation, PolicySpec, Preset};
+pub use shrink::{replay_pinned, shrink as shrink_failure, ShrinkResult};
+
+use crate::core::{AlgSpec, Collective, Error, Result};
+use crate::util::json::{self, Json};
+
+/// Parse a collective name as accepted by traces and the CLI.
+pub fn parse_collective(s: &str) -> Result<Collective> {
+    match s.trim() {
+        "all_gather" | "allgather" | "ag" => Ok(Collective::AllGather),
+        "reduce_scatter" | "reducescatter" | "rs" => Ok(Collective::ReduceScatter),
+        "all_reduce" | "allreduce" | "ar" => Ok(Collective::AllReduce),
+        other => Err(Error::Config(format!("unknown collective {other:?}"))),
+    }
+}
+
+/// Trace-format version, bumped on any incompatible field change.
+pub const TRACE_SCHEMA: usize = 1;
+
+/// A shrunk, replayable counterexample: workload coordinates, the
+/// minimal deviation list, the sentinel (if one was armed when it was
+/// found), and the blame that replay must reproduce bit-exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayTrace {
+    pub workload: Workload,
+    /// Policy spec that found the failure (provenance only — replay is
+    /// pinned and never consults it).
+    pub policy: String,
+    /// Episode index the failure was found at.
+    pub episode: u64,
+    /// Mutation sentinel armed when the trace was captured, by name.
+    pub sentinel: Option<String>,
+    pub deviations: Vec<Deviation>,
+    pub blame: Blame,
+    /// Deviations before shrinking (provenance).
+    pub initial_deviations: usize,
+    /// Replay trials the shrinker spent (provenance).
+    pub shrink_trials: usize,
+}
+
+impl ReplayTrace {
+    pub fn new(w: &Workload, policy: &PolicySpec, episode: u64, shrunk: &ShrinkResult) -> ReplayTrace {
+        ReplayTrace {
+            workload: w.clone(),
+            policy: policy.spec(),
+            episode,
+            sentinel: active_sentinel_name(),
+            deviations: shrunk.deviations.clone(),
+            blame: shrunk.blame.clone(),
+            initial_deviations: shrunk.initial,
+            shrink_trials: shrunk.trials,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let w = &self.workload;
+        Json::obj(vec![
+            ("schema", Json::num(TRACE_SCHEMA as f64)),
+            (
+                "workload",
+                Json::obj(vec![
+                    ("collective", Json::str(w.collective.as_str())),
+                    ("alg", Json::str(w.spec.spec())),
+                    ("nranks", Json::num(w.nranks as f64)),
+                    ("elems", Json::num(w.elems as f64)),
+                    ("seed", Json::num(w.seed as f64)),
+                ]),
+            ),
+            ("policy", Json::str(self.policy.as_str())),
+            ("episode", Json::num(self.episode as f64)),
+            (
+                "sentinel",
+                match &self.sentinel {
+                    Some(s) => Json::str(s.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "deviations",
+                Json::arr(self.deviations.iter().map(|d| {
+                    let arg = match d.kind {
+                        DevKind::Hold { cycles } => cycles as f64,
+                        DevKind::Skip { depth } => depth as f64,
+                    };
+                    Json::obj(vec![
+                        ("rank", Json::num(d.rank as f64)),
+                        ("src", Json::num(d.src as f64)),
+                        ("channel", Json::num(d.channel as f64)),
+                        ("nth", Json::num(d.nth as f64)),
+                        ("kind", Json::str(d.kind.name())),
+                        ("arg", Json::num(arg)),
+                    ])
+                })),
+            ),
+            (
+                "blame",
+                Json::obj(vec![
+                    ("rank", Json::num(self.blame.rank as f64)),
+                    ("channel", Json::num(self.blame.channel as f64)),
+                    ("step", Json::num(self.blame.step as f64)),
+                    ("kind", Json::str(self.blame.kind.as_str())),
+                ]),
+            ),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("initial_deviations", Json::num(self.initial_deviations as f64)),
+                    ("shrink_trials", Json::num(self.shrink_trials as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ReplayTrace> {
+        let bad = |what: &str| Error::Config(format!("replay trace: missing or bad {what}"));
+        let schema = doc.get("schema").and_then(Json::as_usize).ok_or_else(|| bad("schema"))?;
+        if schema != TRACE_SCHEMA {
+            return Err(Error::Config(format!(
+                "replay trace schema {schema} unsupported (this build reads {TRACE_SCHEMA})"
+            )));
+        }
+        let w = doc.get("workload").ok_or_else(|| bad("workload"))?;
+        let field = |obj: &Json, key: &str| -> Result<usize> {
+            obj.get(key).and_then(Json::as_usize).ok_or_else(|| bad(key))
+        };
+        let workload = Workload {
+            collective: parse_collective(
+                w.get("collective").and_then(Json::as_str).ok_or_else(|| bad("collective"))?,
+            )?,
+            spec: AlgSpec::parse(w.get("alg").and_then(Json::as_str).ok_or_else(|| bad("alg"))?)?,
+            nranks: field(w, "nranks")?,
+            elems: field(w, "elems")?,
+            seed: field(w, "seed")? as u64,
+        };
+        let deviations = doc
+            .get("deviations")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("deviations"))?
+            .iter()
+            .map(|d| -> Result<Deviation> {
+                let arg = field(d, "arg")?;
+                let kind = match d.get("kind").and_then(Json::as_str) {
+                    Some("hold") => DevKind::Hold { cycles: arg as u32 },
+                    Some("skip") => DevKind::Skip { depth: arg },
+                    other => {
+                        return Err(Error::Config(format!(
+                            "replay trace: unknown deviation kind {other:?}"
+                        )))
+                    }
+                };
+                Ok(Deviation {
+                    rank: field(d, "rank")?,
+                    src: field(d, "src")?,
+                    channel: field(d, "channel")?,
+                    nth: field(d, "nth")? as u64,
+                    kind,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let b = doc.get("blame").ok_or_else(|| bad("blame"))?;
+        let blame = Blame {
+            rank: field(b, "rank")?,
+            channel: field(b, "channel")?,
+            step: field(b, "step")?,
+            kind: b.get("kind").and_then(Json::as_str).ok_or_else(|| bad("blame kind"))?.to_string(),
+        };
+        let prov = doc.get("provenance");
+        Ok(ReplayTrace {
+            workload,
+            policy: doc.get("policy").and_then(Json::as_str).unwrap_or("").to_string(),
+            episode: doc.get("episode").and_then(Json::as_usize).unwrap_or(0) as u64,
+            sentinel: doc
+                .get("sentinel")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            deviations,
+            blame,
+            initial_deviations: prov
+                .and_then(|p| p.get("initial_deviations"))
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            shrink_trials: prov
+                .and_then(|p| p.get("shrink_trials"))
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ReplayTrace> {
+        let text = std::fs::read_to_string(path)?;
+        ReplayTrace::from_json(&json::parse(&text)?)
+    }
+}
+
+/// Name of the currently armed mutation sentinel, when sentinels exist
+/// in this build.
+fn active_sentinel_name() -> Option<String> {
+    #[cfg(any(test, feature = "adversary"))]
+    {
+        return crate::transport::delivery::sentinel::active().map(|s| s.name().to_string());
+    }
+    #[cfg(not(any(test, feature = "adversary")))]
+    None
+}
+
+/// Replay a saved trace: arm its sentinel (if any), pin its deviations,
+/// run the workload, and return the failure it produces. The caller
+/// compares the returned blame against [`ReplayTrace::blame`] — the
+/// golden-trace test and `patcol adversary --replay` both require exact
+/// equality.
+pub fn replay(trace: &ReplayTrace) -> Result<Option<Failure>> {
+    #[cfg(any(test, feature = "adversary"))]
+    {
+        use crate::transport::delivery::sentinel;
+        let _armed = match trace.sentinel.as_deref() {
+            Some(name) => Some(sentinel::arm(sentinel::Sentinel::parse(name)?)),
+            None => None,
+        };
+        return replay_pinned(&trace.workload, &trace.deviations);
+    }
+    #[cfg(not(any(test, feature = "adversary")))]
+    {
+        if let Some(name) = &trace.sentinel {
+            return Err(Error::Config(format!(
+                "replay trace arms mutation sentinel {name:?}; rebuild with --features adversary"
+            )));
+        }
+        replay_pinned(&trace.workload, &trace.deviations)
+    }
+}

@@ -1,0 +1,676 @@
+//! The adversarial delivery policies: seeded random exploration, the
+//! DPOR-lite systematic permuter, and the pinned replayer.
+//!
+//! All policies speak the [`crate::transport::delivery`] protocol and
+//! record what they *actually did* (not what they rolled) as a list of
+//! [`Deviation`]s keyed by the deterministic decision coordinates
+//! `(rank, src, channel, nth)` — the key that stays stable when the
+//! shrinker replays a subset of the deviations (see the delivery-layer
+//! module docs for why per-connection match counts are
+//! schedule-independent). Each rank's policy flushes its record into a
+//! [`SharedLog`] sink when the rank thread drops it, so the episode
+//! runner sees one merged perturbation list after the run joins.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::core::Rank;
+use crate::transport::delivery::{Decision, DeliveryFactory, DeliveryPolicy, Verdict};
+use crate::util::Rng;
+
+/// What a deviation did to its decision point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DevKind {
+    /// The match was deferred for `cycles` scheduler decisions before
+    /// delivering (or being force-released by the bounded-hold rule).
+    Hold { cycles: u32 },
+    /// FIFO entry `depth` (> 0) was delivered instead of the head —
+    /// in-connection reordering, only possible with the FIFO-ordering
+    /// sentinel armed.
+    Skip { depth: usize },
+}
+
+impl DevKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DevKind::Hold { .. } => "hold",
+            DevKind::Skip { .. } => "skip",
+        }
+    }
+}
+
+/// One recorded perturbation at a deterministic decision point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Deviation {
+    /// The receiving rank whose schedule was perturbed.
+    pub rank: Rank,
+    /// Source rank of the perturbed connection.
+    pub src: Rank,
+    /// Channel of the perturbed connection.
+    pub channel: usize,
+    /// Which match on that connection was perturbed (0-based).
+    pub nth: u64,
+    pub kind: DevKind,
+}
+
+impl Deviation {
+    /// Stable sort key so merged logs are deterministic regardless of
+    /// rank-thread drop order.
+    fn key(&self) -> (Rank, Rank, usize, u64) {
+        (self.rank, self.src, self.channel, self.nth)
+    }
+}
+
+/// The merged perturbation record of one episode.
+#[derive(Debug, Default, Clone)]
+pub struct EpisodeLog {
+    /// Every deviation actually applied, sorted by
+    /// (rank, src, channel, nth).
+    pub deviations: Vec<Deviation>,
+    /// Deliveries forced by the engine's bounded-hold rule.
+    pub forced: usize,
+    /// Total decision points seen across all ranks.
+    pub decisions: u64,
+}
+
+/// Cross-thread sink the per-rank policies flush into on drop.
+pub type SharedLog = Arc<Mutex<EpisodeLog>>;
+
+/// Fresh empty sink for one episode.
+pub fn new_log() -> SharedLog {
+    Arc::new(Mutex::new(EpisodeLog::default()))
+}
+
+/// Take the merged record out of a sink (after the transport run has
+/// joined — every policy has flushed by then), sorted canonically.
+pub fn drain_log(log: &SharedLog) -> EpisodeLog {
+    let mut inner = log.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = std::mem::take(&mut *inner);
+    out.deviations.sort_by_key(|d| d.key());
+    out
+}
+
+/// Knobs of the seeded random explorer (probabilities in parts per
+/// million so configs stay integer and hashable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExploreCfg {
+    /// Probability of soft-holding a decision point.
+    pub hold_ppm: u32,
+    /// Holds last 1..=max_hold scheduler decisions.
+    pub max_hold: u32,
+    /// Probability of delivering out of order when the FIFO is ≥ 2 deep
+    /// (only effective with the FIFO-ordering sentinel armed; otherwise
+    /// the engine clamps the index back to the head).
+    pub skip_ppm: u32,
+    /// Skips reach at most this FIFO index.
+    pub max_depth: usize,
+}
+
+/// Named policy presets (the `--policy` axis of `patcol adversary`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    /// Seeded random delay: soft holds only.
+    Delay,
+    /// Reordering windows: holds to deepen FIFOs plus out-of-order
+    /// delivery attempts within a connection.
+    Reorder,
+    /// Worst-step slot pressure: hold *every* decision point the maximum
+    /// time, so arrivals pile up and every queue runs at peak depth.
+    Pressure,
+    /// DPOR-lite: deterministically permute cross-channel arrival order
+    /// at the first decision points of each rank, driven by the episode
+    /// index bits (episode e explores deferral pattern e).
+    Dpor,
+    /// Rotate delay → reorder → pressure by episode index.
+    Mix,
+}
+
+impl Preset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::Delay => "delay",
+            Preset::Reorder => "reorder",
+            Preset::Pressure => "pressure",
+            Preset::Dpor => "dpor",
+            Preset::Mix => "mix",
+        }
+    }
+
+    fn explore_cfg(&self) -> ExploreCfg {
+        match self {
+            Preset::Delay => {
+                ExploreCfg { hold_ppm: 300_000, max_hold: 3, skip_ppm: 0, max_depth: 0 }
+            }
+            Preset::Reorder => {
+                ExploreCfg { hold_ppm: 350_000, max_hold: 3, skip_ppm: 500_000, max_depth: 3 }
+            }
+            Preset::Pressure => {
+                ExploreCfg { hold_ppm: 1_000_000, max_hold: 2, skip_ppm: 0, max_depth: 0 }
+            }
+            // Dpor/Mix dispatch elsewhere; cfg unused.
+            _ => ExploreCfg { hold_ppm: 0, max_hold: 0, skip_ppm: 0, max_depth: 0 },
+        }
+    }
+}
+
+/// A parsed `--policy` argument: preset plus base seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicySpec {
+    pub preset: Preset,
+    /// Base seed, combined with the episode index and rank to derive
+    /// per-rank streams.
+    pub seed: u64,
+}
+
+impl PolicySpec {
+    /// Parse `<preset>[:<seed>]`, e.g. `delay`, `reorder:7`.
+    pub fn parse(s: &str) -> crate::core::Result<PolicySpec> {
+        let (name, seed) = match s.split_once(':') {
+            Some((n, sd)) => {
+                let seed: u64 = sd.trim().parse().map_err(|_| {
+                    crate::core::Error::Config(format!("bad policy seed {:?} in {s:?}", sd.trim()))
+                })?;
+                (n.trim(), seed)
+            }
+            None => (s.trim(), 0),
+        };
+        let preset = match name {
+            "delay" => Preset::Delay,
+            "reorder" => Preset::Reorder,
+            "pressure" => Preset::Pressure,
+            "dpor" => Preset::Dpor,
+            "mix" => Preset::Mix,
+            other => {
+                return Err(crate::core::Error::Config(format!(
+                    "unknown delivery policy {other:?} (want delay|reorder|pressure|dpor|mix)"
+                )))
+            }
+        };
+        Ok(PolicySpec { preset, seed })
+    }
+
+    /// Canonical spelling (round-trips through [`PolicySpec::parse`]).
+    pub fn spec(&self) -> String {
+        if self.seed == 0 {
+            self.preset.name().to_string()
+        } else {
+            format!("{}:{}", self.preset.name(), self.seed)
+        }
+    }
+
+    /// Build the per-rank policy factory for one episode, flushing into
+    /// `sink`.
+    pub fn factory(&self, episode: u64, sink: SharedLog) -> DeliveryFactory {
+        let spec = *self;
+        Arc::new(move |rank: Rank| -> Box<dyn DeliveryPolicy> {
+            let seed = mix_seed(spec.seed, episode, rank);
+            let preset = match spec.preset {
+                Preset::Mix => match episode % 3 {
+                    0 => Preset::Delay,
+                    1 => Preset::Reorder,
+                    _ => Preset::Pressure,
+                },
+                p => p,
+            };
+            match preset {
+                Preset::Dpor => Box::new(DporPolicy::new(rank, episode, sink.clone())),
+                p => Box::new(ExplorePolicy::new(rank, seed, p, sink.clone())),
+            }
+        })
+    }
+
+    /// Factory for steady-state use through
+    /// [`crate::coordinator::CommConfig::adversary`], where nobody reads
+    /// the perturbation record: episode 0, private sink.
+    pub fn transport_factory(&self) -> DeliveryFactory {
+        self.factory(0, new_log())
+    }
+}
+
+/// Derive a per-(seed, episode, rank) stream that differs in every
+/// coordinate (splitmix-style odd-constant mixing).
+fn mix_seed(seed: u64, episode: u64, rank: Rank) -> u64 {
+    let mut x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(episode.wrapping_mul(0xD1B5_4A32_D192_ED03))
+        .wrapping_add((rank as u64).wrapping_mul(0x2545_F491_4F6C_DD1D))
+        .wrapping_add(0xA076_1D64_78BD_642F);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x
+}
+
+/// The choice a policy committed to at a decision point (re-served on
+/// every re-poll so a decision is consistent across scheduler passes).
+#[derive(Debug, Clone, Copy)]
+enum Pending {
+    /// Soft-hold for this many more decide calls; `total` remembers the
+    /// roll for the record.
+    Hold { left: u32, total: u32 },
+    Deliver(usize),
+}
+
+/// Book-keeping shared by every concrete policy: remembers committed
+/// choices per decision point and accumulates the rank-local record.
+#[derive(Debug)]
+struct DecisionBook {
+    rank: Rank,
+    pending: HashMap<(Rank, usize, u64), Pending>,
+    local: Vec<Deviation>,
+    decisions: u64,
+    forced: usize,
+    sink: SharedLog,
+    label: &'static str,
+}
+
+impl DecisionBook {
+    fn new(rank: Rank, label: &'static str, sink: SharedLog) -> DecisionBook {
+        DecisionBook {
+            rank,
+            pending: HashMap::new(),
+            local: Vec::new(),
+            decisions: 0,
+            forced: 0,
+            sink,
+            label,
+        }
+    }
+
+    /// Serve the committed choice for `d`, committing via `roll` on
+    /// first sight.
+    fn decide(&mut self, d: Decision, roll: impl FnOnce(Decision) -> Pending) -> Verdict {
+        let key = (d.src, d.channel, d.nth);
+        if !self.pending.contains_key(&key) {
+            self.decisions += 1;
+            let choice = roll(d);
+            self.pending.insert(key, choice);
+        }
+        match self.pending.get_mut(&key).expect("just inserted") {
+            Pending::Hold { left, .. } if *left > 0 => {
+                *left -= 1;
+                Verdict::Hold
+            }
+            Pending::Hold { .. } => Verdict::Deliver(0),
+            Pending::Deliver(i) => Verdict::Deliver(*i),
+        }
+    }
+
+    /// Record what actually happened at `d`.
+    fn delivered(&mut self, d: Decision, idx: usize, forced: bool) {
+        let key = (d.src, d.channel, d.nth);
+        if forced {
+            self.forced += 1;
+        }
+        if let Some(Pending::Hold { left, total }) = self.pending.remove(&key) {
+            let held = total - left;
+            if held > 0 {
+                self.local.push(Deviation {
+                    rank: self.rank,
+                    src: d.src,
+                    channel: d.channel,
+                    nth: d.nth,
+                    kind: DevKind::Hold { cycles: held },
+                });
+            }
+        }
+        if idx > 0 {
+            self.local.push(Deviation {
+                rank: self.rank,
+                src: d.src,
+                channel: d.channel,
+                nth: d.nth,
+                kind: DevKind::Skip { depth: idx },
+            });
+        }
+    }
+
+    fn log(&self) -> String {
+        let holds = self
+            .local
+            .iter()
+            .filter(|d| matches!(d.kind, DevKind::Hold { .. }))
+            .count();
+        let skips = self.local.len() - holds;
+        let mut s = format!(
+            "rank {}: policy={} decisions={} holds={} (forced={}) reorders={}",
+            self.rank, self.label, self.decisions, holds, self.forced, skips
+        );
+        for d in &self.local {
+            match d.kind {
+                DevKind::Hold { cycles } => s.push_str(&format!(
+                    "\n  hold src={} ch={} nth={} cycles={cycles}",
+                    d.src, d.channel, d.nth
+                )),
+                DevKind::Skip { depth } => s.push_str(&format!(
+                    "\n  skip src={} ch={} nth={} depth={depth}",
+                    d.src, d.channel, d.nth
+                )),
+            }
+        }
+        s
+    }
+}
+
+impl Drop for DecisionBook {
+    fn drop(&mut self) {
+        let mut sink = self.sink.lock().unwrap_or_else(|e| e.into_inner());
+        sink.deviations.append(&mut self.local);
+        sink.deviations.sort_by_key(|d| d.key());
+        sink.forced += self.forced;
+        sink.decisions += self.decisions;
+    }
+}
+
+/// Seeded random explorer (delay / reorder / pressure presets).
+///
+/// Skips are **opportunistic**: the dice only roll a skip when the FIFO
+/// is already ≥ 2 deep at first sight of the decision point, so the
+/// policy never waits for traffic that may not come — exploration can
+/// slow a schedule but not wedge it.
+pub struct ExplorePolicy {
+    rng: Rng,
+    cfg: ExploreCfg,
+    book: DecisionBook,
+}
+
+impl ExplorePolicy {
+    pub fn new(rank: Rank, seed: u64, preset: Preset, sink: SharedLog) -> ExplorePolicy {
+        ExplorePolicy {
+            rng: Rng::new(seed),
+            cfg: preset.explore_cfg(),
+            book: DecisionBook::new(rank, preset.name(), sink),
+        }
+    }
+}
+
+impl DeliveryPolicy for ExplorePolicy {
+    fn decide(&mut self, d: Decision) -> Verdict {
+        let rng = &mut self.rng;
+        let cfg = self.cfg;
+        self.book.decide(d, |d| {
+            if d.depth >= 2
+                && cfg.skip_ppm > 0
+                && rng.below(1_000_000) < cfg.skip_ppm as usize
+            {
+                let reach = d.depth.min(cfg.max_depth + 1);
+                return Pending::Deliver(1 + rng.below(reach.saturating_sub(1).max(1)));
+            }
+            if cfg.hold_ppm > 0 && rng.below(1_000_000) < cfg.hold_ppm as usize {
+                let c = 1 + rng.below(cfg.max_hold.max(1) as usize) as u32;
+                return Pending::Hold { left: c, total: c };
+            }
+            Pending::Deliver(0)
+        })
+    }
+
+    fn delivered(&mut self, d: Decision, idx: usize, forced: bool) {
+        self.book.delivered(d, idx, forced);
+    }
+
+    fn perturbation_log(&self) -> String {
+        self.book.log()
+    }
+}
+
+/// DPOR-lite: a deterministic schedule permuter. Each rank numbers its
+/// decision points in discovery order; decision point `i` is deferred
+/// one cycle iff bit `(i + rank·7) mod 61` of the episode index is set.
+/// Sweeping the episode index therefore sweeps deferral patterns — at
+/// each deferred point the scheduler moves on to other channels first,
+/// systematically permuting cross-channel arrival order without any
+/// randomness (episode `e` is its own replay key).
+pub struct DporPolicy {
+    episode: u64,
+    point: u64,
+    book: DecisionBook,
+}
+
+/// Decision points beyond this index are left eager (keeps the explored
+/// prefix aligned with the episode index's bit budget).
+const DPOR_POINTS: u64 = 61;
+
+impl DporPolicy {
+    pub fn new(rank: Rank, episode: u64, sink: SharedLog) -> DporPolicy {
+        DporPolicy { episode, point: 0, book: DecisionBook::new(rank, "dpor", sink) }
+    }
+}
+
+impl DeliveryPolicy for DporPolicy {
+    fn decide(&mut self, d: Decision) -> Verdict {
+        let episode = self.episode;
+        let rank = self.book.rank as u64;
+        let point = &mut self.point;
+        self.book.decide(d, |_| {
+            let i = *point;
+            *point += 1;
+            let defer = i < DPOR_POINTS && (episode >> ((i + rank * 7) % 61)) & 1 == 1;
+            if defer {
+                Pending::Hold { left: 1, total: 1 }
+            } else {
+                Pending::Deliver(0)
+            }
+        })
+    }
+
+    fn delivered(&mut self, d: Decision, idx: usize, forced: bool) {
+        self.book.delivered(d, idx, forced);
+    }
+
+    fn perturbation_log(&self) -> String {
+        self.book.log()
+    }
+}
+
+/// Replay a recorded deviation list exactly.
+///
+/// Holds re-apply as soft holds (their only effect is scheduling
+/// pressure). Skips are the semantic deviations, and replaying one must
+/// not race: the policy answers [`Verdict::HoldFirm`] until the FIFO is
+/// deeper than the recorded index, parking the rank until the messages
+/// that provably existed at record time (the recorder saw them) arrive
+/// again — which they do, because everything causally preceding the
+/// recorded match is reachable without this rank's post-match actions.
+/// The watchdog still backstops replays of traces against a schedule
+/// that cannot supply the recorded depth (e.g. a hand-edited trace): the
+/// run fails with a timeout blame instead of hanging.
+pub struct PinnedPolicy {
+    map: HashMap<(Rank, usize, u64), DevKind>,
+    book: DecisionBook,
+}
+
+impl PinnedPolicy {
+    pub fn new(rank: Rank, deviations: &[Deviation], sink: SharedLog) -> PinnedPolicy {
+        let map = deviations
+            .iter()
+            .filter(|d| d.rank == rank)
+            .map(|d| ((d.src, d.channel, d.nth), d.kind))
+            .collect();
+        PinnedPolicy { map, book: DecisionBook::new(rank, "pinned", sink) }
+    }
+
+    /// Factory over a shared deviation list.
+    pub fn factory(deviations: Arc<Vec<Deviation>>, sink: SharedLog) -> DeliveryFactory {
+        Arc::new(move |rank: Rank| -> Box<dyn DeliveryPolicy> {
+            Box::new(PinnedPolicy::new(rank, &deviations, sink.clone()))
+        })
+    }
+}
+
+impl DeliveryPolicy for PinnedPolicy {
+    fn decide(&mut self, d: Decision) -> Verdict {
+        let pinned = self.map.get(&(d.src, d.channel, d.nth)).copied();
+        match pinned {
+            Some(DevKind::Skip { depth }) if d.depth <= depth => Verdict::HoldFirm,
+            Some(DevKind::Skip { depth }) => {
+                // Depth reached: record and deliver out of order. No
+                // Pending entry needed — delivery is immediate.
+                self.book.decide(d, |_| Pending::Deliver(depth))
+            }
+            Some(DevKind::Hold { cycles }) => {
+                self.book.decide(d, |_| Pending::Hold { left: cycles, total: cycles })
+            }
+            None => self.book.decide(d, |_| Pending::Deliver(0)),
+        }
+    }
+
+    fn delivered(&mut self, d: Decision, idx: usize, forced: bool) {
+        self.book.delivered(d, idx, forced);
+    }
+
+    fn perturbation_log(&self) -> String {
+        self.book.log()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(src: Rank, nth: u64, depth: usize) -> Decision {
+        Decision { rank: 0, src, channel: 0, depth, nth, vtime: nth }
+    }
+
+    #[test]
+    fn policy_spec_roundtrip() {
+        for s in ["delay", "reorder", "pressure", "dpor", "mix", "delay:7", "reorder:42"] {
+            let spec = PolicySpec::parse(s).unwrap();
+            assert_eq!(spec.spec(), s);
+            assert_eq!(PolicySpec::parse(&spec.spec()).unwrap(), spec);
+        }
+        assert!(PolicySpec::parse("eager?").is_err());
+        assert!(PolicySpec::parse("delay:x").is_err());
+    }
+
+    #[test]
+    fn explore_decisions_are_consistent_across_repolls() {
+        // Re-asking the same decision point must never change the
+        // committed choice (the scheduler re-polls held channels).
+        let sink = new_log();
+        let mut p = ExplorePolicy::new(0, 42, Preset::Reorder, sink.clone());
+        for nth in 0..50u64 {
+            let first = p.decide(d(1, nth, 3));
+            let second = p.decide(d(1, nth, 3));
+            match (first, second) {
+                (Verdict::Hold, Verdict::Hold | Verdict::Deliver(0)) => {}
+                (a, b) => assert_eq!(a, b, "decision at nth={nth} drifted"),
+            }
+            p.delivered(d(1, nth, 3), 0, false);
+        }
+        drop(p);
+        let log = drain_log(&sink);
+        assert_eq!(log.decisions, 50);
+    }
+
+    #[test]
+    fn explore_skips_only_with_depth() {
+        // With depth 1 a reorder policy may hold but never skip.
+        let sink = new_log();
+        let mut p = ExplorePolicy::new(0, 9, Preset::Reorder, sink.clone());
+        for nth in 0..100u64 {
+            loop {
+                match p.decide(d(2, nth, 1)) {
+                    Verdict::Deliver(i) => {
+                        assert_eq!(i, 0);
+                        p.delivered(d(2, nth, 1), i, false);
+                        break;
+                    }
+                    Verdict::Hold => continue,
+                    Verdict::HoldFirm => panic!("explorer must not hold firm"),
+                }
+            }
+        }
+        drop(p);
+        assert!(drain_log(&sink)
+            .deviations
+            .iter()
+            .all(|dev| matches!(dev.kind, DevKind::Hold { .. })));
+    }
+
+    #[test]
+    fn delay_preset_records_holds() {
+        let sink = new_log();
+        let mut p = ExplorePolicy::new(3, 1, Preset::Delay, sink.clone());
+        let mut delivered = 0;
+        for nth in 0..200u64 {
+            let mut spins = 0;
+            loop {
+                match p.decide(d(0, nth, 1)) {
+                    Verdict::Deliver(i) => {
+                        p.delivered(d(0, nth, 1), i, false);
+                        delivered += 1;
+                        break;
+                    }
+                    Verdict::Hold => {
+                        spins += 1;
+                        assert!(spins <= 3, "delay holds are bounded by max_hold");
+                    }
+                    Verdict::HoldFirm => panic!("explorer must not hold firm"),
+                }
+            }
+        }
+        assert_eq!(delivered, 200);
+        drop(p);
+        let log = drain_log(&sink);
+        assert!(!log.deviations.is_empty(), "300k ppm over 200 points must hold sometimes");
+        assert!(log.deviations.iter().all(|dev| dev.rank == 3));
+    }
+
+    #[test]
+    fn dpor_is_deterministic_in_episode() {
+        let run = |episode: u64| {
+            let sink = new_log();
+            let mut p = DporPolicy::new(1, episode, sink.clone());
+            for nth in 0..30u64 {
+                loop {
+                    if let Verdict::Deliver(i) = p.decide(d(0, nth, 1)) {
+                        p.delivered(d(0, nth, 1), i, false);
+                        break;
+                    }
+                }
+            }
+            drop(p);
+            drain_log(&sink).deviations
+        };
+        assert_eq!(run(0b1011), run(0b1011));
+        assert_ne!(run(0b1011), run(0)); // episode 0 defers nothing
+        assert!(run(0).is_empty());
+    }
+
+    #[test]
+    fn pinned_skip_waits_for_depth() {
+        let sink = new_log();
+        let devs =
+            vec![Deviation { rank: 0, src: 1, channel: 0, nth: 0, kind: DevKind::Skip { depth: 1 } }];
+        let mut p = PinnedPolicy::new(0, &devs, sink.clone());
+        // Depth 1: not enough to take entry 1 — must park, not improvise.
+        assert_eq!(p.decide(d(1, 0, 1)), Verdict::HoldFirm);
+        // Depth 2: deliver the recorded index.
+        assert_eq!(p.decide(d(1, 0, 2)), Verdict::Deliver(1));
+        p.delivered(d(1, 0, 2), 1, false);
+        // Undeviated points stay eager.
+        assert_eq!(p.decide(d(1, 1, 1)), Verdict::Deliver(0));
+        p.delivered(d(1, 1, 1), 0, false);
+        drop(p);
+        let log = drain_log(&sink);
+        assert_eq!(log.deviations, devs);
+    }
+
+    #[test]
+    fn pinned_policies_ignore_other_ranks() {
+        let sink = new_log();
+        let devs =
+            vec![Deviation { rank: 2, src: 1, channel: 0, nth: 0, kind: DevKind::Skip { depth: 1 } }];
+        let mut p = PinnedPolicy::new(0, &devs, sink);
+        assert_eq!(p.decide(d(1, 0, 1)), Verdict::Deliver(0));
+    }
+
+    #[test]
+    fn perturbation_log_names_the_policy() {
+        let sink = new_log();
+        let p = ExplorePolicy::new(5, 7, Preset::Delay, sink);
+        let log = p.perturbation_log();
+        assert!(log.contains("rank 5"));
+        assert!(log.contains("policy=delay"));
+    }
+}

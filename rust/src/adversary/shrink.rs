@@ -1,0 +1,137 @@
+//! Counterexample minimisation: greedy delta-debugging over the
+//! deviation list of a failing episode, with pinned replay as the
+//! reproduction oracle.
+//!
+//! A failing episode's [`Failure`] carries the full list of
+//! [`Deviation`]s the exploration policy applied — often dozens, of
+//! which only one or two matter. [`shrink`] removes chunks of the list
+//! (halving chunk sizes down to singletons, ddmin-style) and replays
+//! each candidate subset through [`replay_pinned`]; a candidate
+//! *reproduces* iff its blamed `(rank, channel, step, kind)` equals the
+//! original blame exactly. Subsets are replayable in the first place
+//! because deviations key on the per-connection match index `nth`,
+//! which is program-determined and therefore stable when other
+//! perturbations are removed (see [`crate::transport::delivery`]).
+//!
+//! Watchdog-timeout failures are never shrunk (the caller filters
+//! them): a timeout reproduces or not depending on machine load, which
+//! would make minimisation chase noise.
+
+use std::sync::Arc;
+
+use crate::core::Result;
+use crate::obs::{Event, EventKind, TraceRecorder};
+
+use super::explore::{episode_options, Failure, Workload};
+use super::policy::{drain_log, new_log, Deviation, PinnedPolicy};
+
+/// Outcome of one shrink run.
+#[derive(Debug, Clone)]
+pub struct ShrinkResult {
+    /// Minimal deviation list that still reproduces the blame (may be
+    /// empty: sentinel-induced failures need no delivery perturbation).
+    pub deviations: Vec<Deviation>,
+    /// The blame every surviving candidate reproduced.
+    pub blame: super::Blame,
+    /// Deviation count before shrinking.
+    pub initial: usize,
+    /// Replay trials spent.
+    pub trials: usize,
+}
+
+/// Cap on replay trials per shrink: each trial is a full transport run,
+/// and greedy ddmin on a pathological list could otherwise thrash. When
+/// the budget runs out the current (partially shrunk) list is returned
+/// — still a valid counterexample, just not minimal.
+pub const MAX_TRIALS: usize = 400;
+
+/// Replay a pinned deviation list against the workload and return the
+/// failure it produces, if any. Deterministic: every deviation is
+/// applied at its recorded `(rank, src, channel, nth)` coordinate and
+/// no new perturbations are introduced (see
+/// [`PinnedPolicy`]).
+pub fn replay_pinned(w: &Workload, devs: &[Deviation]) -> Result<Option<Failure>> {
+    let (p, cap) = w.build()?;
+    let inputs = w.inputs();
+    let expected = w.expected(&inputs);
+    let sink = new_log();
+    let opts = episode_options(cap, PinnedPolicy::factory(Arc::new(devs.to_vec()), sink.clone()));
+    let run = w.run(&p, &inputs, &opts);
+    let log = drain_log(&sink);
+    Ok(match run {
+        Ok((outputs, _rep)) => w.compare(&outputs, &expected).map(|blame| Failure {
+            blame,
+            error: None,
+            deviations: log.deviations,
+        }),
+        Err(e) => {
+            let text = e.to_string();
+            Some(Failure {
+                blame: super::parse_blame(&text),
+                error: Some(text),
+                deviations: log.deviations,
+            })
+        }
+    })
+}
+
+/// Greedily minimise `failure.deviations` while preserving its exact
+/// blame. Trials are recorded into `obs` as [`EventKind::Adversary`]
+/// events on channel 1 (`step` = trial index, `value` = candidate size,
+/// `bytes` = 1 iff the candidate reproduced).
+pub fn shrink(
+    w: &Workload,
+    failure: &Failure,
+    mut obs: Option<&mut TraceRecorder>,
+) -> Result<ShrinkResult> {
+    let target = failure.blame.clone();
+    let initial = failure.deviations.len();
+    let mut trials = 0usize;
+
+    let mut try_candidate = |cand: &[Deviation],
+                             trials: &mut usize,
+                             obs: &mut Option<&mut TraceRecorder>|
+     -> Result<bool> {
+        *trials += 1;
+        let repro = replay_pinned(w, cand)?
+            .map(|f| f.blame == target)
+            .unwrap_or(false);
+        if let Some(rec) = obs.as_mut() {
+            let t = *trials as f64;
+            rec.record(
+                Event::span(EventKind::Adversary, 0, 1, *trials, t, t + 1.0)
+                    .with_value(cand.len())
+                    .with_bytes(usize::from(repro)),
+            );
+        }
+        Ok(repro)
+    };
+
+    // Sentinel-induced failures often need no deviation at all: test the
+    // empty list first so they shrink in one trial.
+    if try_candidate(&[], &mut trials, &mut obs)? {
+        return Ok(ShrinkResult { deviations: Vec::new(), blame: target, initial, trials });
+    }
+
+    let mut devs = failure.deviations.clone();
+    let mut chunk = devs.len().div_ceil(2).max(1);
+    loop {
+        let mut i = 0;
+        while i < devs.len() && devs.len() > 1 && trials < MAX_TRIALS {
+            let end = (i + chunk).min(devs.len());
+            let mut cand = devs.clone();
+            cand.drain(i..end);
+            if try_candidate(&cand, &mut trials, &mut obs)? {
+                devs = cand;
+                // Keep `i`: the next chunk slid into this position.
+            } else {
+                i = end;
+            }
+        }
+        if chunk == 1 || trials >= MAX_TRIALS {
+            break;
+        }
+        chunk = (chunk / 2).max(1);
+    }
+    Ok(ShrinkResult { deviations: devs, blame: target, initial, trials })
+}

@@ -1,0 +1,183 @@
+//! In-crate adversary tests.
+//!
+//! Everything here needs the mutation sentinels, which exist only under
+//! `cfg(test)` / `--features adversary` *of the library crate* —
+//! integration-test binaries link the library without either, so the
+//! sentinel-armed scenarios (and the golden replay, which re-arms a
+//! recorded sentinel) must live in-crate.
+//!
+//! Sentinels are process-global: tests that arm one hold the sentinel
+//! lock for their whole scenario, and tests that need healthy guards
+//! while driving a delivery policy serialize through
+//! [`sentinel::exclusive`].
+
+use crate::core::{AlgSpec, Collective};
+use crate::obs::{EventKind, TraceRecorder};
+use crate::transport::delivery::sentinel::{self, Sentinel};
+
+use super::explore::{explore, run_episode, Workload};
+use super::policy::{DevKind, PolicySpec, Preset};
+use super::{replay, ReplayTrace};
+
+fn workload(coll: Collective, alg: &str, n: usize, elems: usize, seed: u64) -> Workload {
+    Workload::new(coll, AlgSpec::parse(alg).unwrap(), n, elems, seed)
+}
+
+/// Satellite: with the FIFO-ordering guard disabled, the explorer's
+/// reorder policy corrupts an all-gather, and the failure shrinks to a
+/// small replayable deviation list that reproduces the same blame.
+#[test]
+fn explorer_finds_and_shrinks_fifo_reorder_bug() {
+    let w = workload(Collective::AllGather, "ring", 4, 8, 7);
+    let pol = PolicySpec { preset: Preset::Reorder, seed: 3 };
+    let ce = {
+        let _armed = sentinel::arm(Sentinel::FifoGuardOff);
+        let report = explore(&w, &pol, 64, None).unwrap();
+        report
+            .counterexample
+            .expect("reorder exploration must corrupt an unguarded FIFO within 64 episodes")
+    };
+    assert_eq!(ce.sentinel.as_deref(), Some("fifo-guard-off"));
+    assert!(
+        !ce.deviations.is_empty(),
+        "an in-order run cannot corrupt an all-gather; the counterexample needs a deviation"
+    );
+    assert!(
+        ce.deviations.iter().all(|d| matches!(d.kind, DevKind::Skip { .. })),
+        "only reorders corrupt data — holds must shrink away: {:?}",
+        ce.deviations
+    );
+    assert!(ce.blame.kind.starts_with("wrong-result"), "{:?}", ce.blame);
+    assert!(ce.shrink_trials > 0);
+    // Replay re-arms the recorded sentinel (the explore guard is dropped)
+    // and must reproduce the blame bit-exactly.
+    let got = replay(&ce).unwrap().expect("shrunk trace must still fail on replay");
+    assert_eq!(got.blame, ce.blame);
+}
+
+/// Satellite: with one reduce-scatter slot release disabled, every rank
+/// leaks accumulator slots and the enforced sound capacity trips. The
+/// failure needs no delivery perturbation at all, so the shrinker must
+/// reach the empty deviation list.
+#[test]
+fn explorer_finds_slot_release_leak() {
+    let w = workload(Collective::ReduceScatter, "ring", 8, 8, 5);
+    let pol = PolicySpec { preset: Preset::Delay, seed: 1 };
+    let ce = {
+        let _armed = sentinel::arm(Sentinel::SlotReleaseOff);
+        let report = explore(&w, &pol, 4, None).unwrap();
+        report
+            .counterexample
+            .expect("a leaked slot per forwarded chunk must exhaust the sound capacity")
+    };
+    assert_eq!(ce.sentinel.as_deref(), Some("slot-release-off"));
+    assert_eq!(ce.blame.kind, "pool-exhausted", "{:?}", ce.blame);
+    assert!(
+        ce.deviations.is_empty(),
+        "the leak fires under eager delivery too — shrink must reach the empty list: {:?}",
+        ce.deviations
+    );
+    let got = replay(&ce).unwrap().expect("replay must still exhaust the pool");
+    assert_eq!(got.blame, ce.blame);
+}
+
+/// Satellite: the committed golden counterexample replays bit-exactly —
+/// same blamed (rank, channel, step) and failure kind on every machine.
+/// The trace pins one reordered delivery on the rank-0→rank-1 connection
+/// of a 4-rank ring all-gather: rank 1's first match takes the chunk-3
+/// payload instead of chunk 0, so rank 1 (and everyone downstream of its
+/// forwards) ends up with a misplaced chunk while rank 0 stays clean.
+#[test]
+fn golden_trace_replays_bit_exactly() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/adversary_golden.json");
+    let trace = ReplayTrace::load(&path).unwrap();
+    assert_eq!(trace.sentinel.as_deref(), Some("fifo-guard-off"));
+    assert_eq!(trace.deviations.len(), 1);
+    let got = replay(&trace).unwrap().expect("golden trace must fail");
+    assert_eq!(got.blame, trace.blame, "replay must blame the recorded coordinates");
+    assert_eq!(got.blame.rank, 1);
+    assert_eq!(got.blame.channel, 0);
+    assert_eq!(got.blame.step, 0);
+    assert_eq!(got.blame.kind, "wrong-result chunk 0");
+}
+
+/// A shrunk trace round-trips through its JSON wire format.
+#[test]
+fn replay_trace_roundtrips_through_json() {
+    let w = workload(Collective::ReduceScatter, "pat:2*2", 8, 16, 11);
+    let trace = ReplayTrace {
+        workload: w,
+        policy: "mix:9".into(),
+        episode: 17,
+        sentinel: Some("fifo-guard-off".into()),
+        deviations: vec![
+            super::Deviation {
+                rank: 3,
+                src: 1,
+                channel: 1,
+                nth: 4,
+                kind: DevKind::Hold { cycles: 2 },
+            },
+            super::Deviation { rank: 0, src: 7, channel: 0, nth: 0, kind: DevKind::Skip { depth: 2 } },
+        ],
+        blame: super::Blame { rank: 3, channel: 1, step: 2, kind: "pool-exhausted".into() },
+        initial_deviations: 40,
+        shrink_trials: 12,
+    };
+    let doc = trace.to_json();
+    let back = ReplayTrace::from_json(&crate::util::json::parse(&doc.to_string()).unwrap()).unwrap();
+    assert_eq!(back, trace);
+}
+
+/// With healthy guards, adversarial exploration finds nothing: holds are
+/// force-released, reorder attempts are clamped to FIFO order, and every
+/// episode's result stays bit-exact. Episode outcomes land in the obs
+/// timeline as [`EventKind::Adversary`] events.
+#[test]
+fn healthy_transport_survives_exploration() {
+    // Serialize against sentinel-armed tests without arming anything.
+    let _guard = sentinel::exclusive();
+    let mut rec = TraceRecorder::new();
+    for (coll, alg) in [
+        (Collective::AllGather, "pat:2"),
+        (Collective::ReduceScatter, "ring*2"),
+    ] {
+        let w = workload(coll, alg, 8, 16, 13);
+        let pol = PolicySpec { preset: Preset::Mix, seed: 2 };
+        let report = explore(&w, &pol, 6, Some(&mut rec)).unwrap();
+        assert_eq!(report.episodes_run, 6);
+        assert!(
+            report.counterexample.is_none(),
+            "healthy transport must survive {alg}: {:?}",
+            report.counterexample
+        );
+        assert_eq!(report.failures, 0, "{alg}");
+        assert!(report.total_decisions > 0, "policies must actually be consulted ({alg})");
+    }
+    let trace = rec.finish();
+    let episodes = trace
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Adversary && e.channel == 0)
+        .count();
+    assert_eq!(episodes, 12, "one outcome event per episode");
+}
+
+/// Episodes are reproducible: the same (workload, policy, episode) runs
+/// twice with identical deviation counts and outcomes — the property the
+/// whole find-shrink-replay chain rests on.
+#[test]
+fn episodes_are_deterministic_in_their_seed() {
+    let _guard = sentinel::exclusive();
+    let w = workload(Collective::AllGather, "ring", 4, 8, 9);
+    let pol = PolicySpec { preset: Preset::Dpor, seed: 0 };
+    for episode in [0u64, 5, 21] {
+        let a = run_episode(&w, &pol, episode).unwrap();
+        let b = run_episode(&w, &pol, episode).unwrap();
+        assert_eq!(a.deviations, b.deviations, "episode {episode}");
+        assert_eq!(a.decisions, b.decisions, "episode {episode}");
+        assert_eq!(a.failure.is_some(), b.failure.is_some(), "episode {episode}");
+        assert!(a.failure.is_none(), "dpor holds cannot corrupt a guarded transport");
+    }
+}

@@ -102,6 +102,15 @@ pub struct CommConfig {
     /// tuner's `*_CALIBRATION_TOLERANCE` constants. `None` records
     /// nothing.
     pub calib_history: Option<PathBuf>,
+    /// Adversarial delivery policy for every transport run (config key
+    /// `adversary` = `<preset>[:<seed>]`, e.g. `delay` or `reorder:7`):
+    /// each collective executes under the named
+    /// [`crate::adversary::PolicySpec`] delivery schedule instead of
+    /// eager FIFO delivery — a chaos knob for soak tests, not for
+    /// production. Results must still be bit-exact (the transport's
+    /// ordering guard holds); see [`crate::adversary`]. `None` (the
+    /// default) is eager delivery with zero overhead.
+    pub adversary: Option<crate::adversary::PolicySpec>,
 }
 
 impl Default for CommConfig {
@@ -122,6 +131,7 @@ impl Default for CommConfig {
             buckets: None,
             trace: false,
             calib_history: None,
+            adversary: None,
         }
     }
 }
@@ -351,6 +361,11 @@ impl Communicator {
             validate: false,
             trace: self.cfg.trace,
             arena: Some(self.arena.clone()),
+            delivery: self
+                .cfg
+                .adversary
+                .as_ref()
+                .map(|spec| spec.transport_factory()),
             ..Default::default()
         }
     }

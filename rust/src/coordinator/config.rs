@@ -203,6 +203,9 @@ impl ConfigMap {
         if let Some(p) = self.get("calib_history") {
             cfg.calib_history = Some(PathBuf::from(p));
         }
+        if let Some(spec) = self.get("adversary") {
+            cfg.adversary = Some(crate::adversary::PolicySpec::parse(spec)?);
+        }
         if let Some(spec) = self.get("placement") {
             cfg.placement = Some(Placement::parse(spec, cfg.nranks)?);
         } else if let Some(k) = self.get_usize("ranks_per_node")? {

@@ -60,6 +60,12 @@
 //!   by the recv-timeout watchdog), and a Chrome trace-event exporter
 //!   ([`obs::chrome_trace`], Perfetto-loadable) — surfaced as
 //!   `patcol trace` and `--trace <path>` on `run`/`simulate`.
+//! * [`adversary`] — schedule-exploration harness: seeded adversarial
+//!   delivery policies ([`transport::DeliveryPolicy`]) drive the *real*
+//!   transport through hostile arrival orders, failures are blamed and
+//!   shrunk to minimal replayable JSON traces, and mutation sentinels
+//!   let the test suite prove the explorer finds real invariant
+//!   violations (`patcol adversary`).
 //! * [`coordinator`] — the public [`coordinator::Communicator`] API plus the
 //!   algorithm auto-tuner (the flat-vs-hierarchical crossover on tapered
 //!   fabrics and the all-reduce pair × segment-count crossover) and
@@ -123,6 +129,7 @@
 //! assert_eq!(gathered[0].len(), 8 * 1024);
 //! ```
 
+pub mod adversary;
 pub mod core;
 pub mod util;
 pub mod sched;

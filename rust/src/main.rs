@@ -21,6 +21,9 @@
 //! * `tune`     — show the tuner's decision for a configuration.
 //! * `selftest` — quick correctness matrix across algorithms and rank
 //!   counts.
+//! * `adversary` — schedule-exploration harness: run seeded adversarial
+//!   delivery episodes against the threaded transport, shrink failures to
+//!   minimal replayable traces, replay saved traces (`--replay`).
 
 use patcol::cli::Args;
 use patcol::coordinator::config::parse_bytes;
@@ -55,6 +58,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "tune" => cmd_tune(&args),
         "selftest" => cmd_selftest(&args),
+        "adversary" => cmd_adversary(&args),
         other => {
             eprintln!("unknown command {other:?}");
             print_usage();
@@ -86,6 +90,7 @@ COMMANDS
             [--channels C] [--topo flat|leaf_spine|three_level|dragonfly]
             [--taper F] [--intra-gbps G] [--placement SPEC | --ranks-per-node K]
             [--leaders-per-node L] [--trace PATH]
+            [--jitter F] [--flaps N] [--flap-dur S] [--fault-seed S]
   trace     --ranks N --size BYTES [--alg ALG] [--collective ag|rs|ar]
             [--channels C] [--exec sim|transport|both] [--out STEM]
             [--topo ...] [--smoke]
@@ -97,6 +102,11 @@ COMMANDS
             [--placement SPEC | --ranks-per-node K] [--inter-gbps G]
             [--parallel-links L] [--leaders-per-node L]
   selftest  [--max-ranks N]
+  adversary --ranks N [--alg ALG] [--collective ag|rs] [--channels C]
+            [--elems E] [--episodes K] [--seed S]
+            [--policy delay|reorder|pressure|dpor|mix[:SEED]]
+            [--out TRACE.json] [--trace PATH] [--smoke]
+            [--replay TRACE.json] [--sentinel fifo|slot]
 
 ALG — the full grammar is alg[+alg][:<segments>][*<channels>]:
      ring | bruck_near | bruck_far | recursive | pat | pat:<agg> | pat_auto
@@ -136,7 +146,18 @@ SPEC:  uniform:<k> | <k> | <k1>,<k2>,...  (node sizes; uneven allowed)
   machine-readable output)
 `baseline` compares the bench document written under PATCOL_BASELINE
   against the committed one (default BENCH_8.json) and exits nonzero on
-  any regression"
+  any regression
+`adversary` runs seeded episodes of the collective through the threaded
+  transport under an adversarial delivery policy; the first
+  deterministic failure is shrunk to a minimal replayable JSON trace
+  (--out) and the command exits nonzero. --smoke runs a small fixed
+  matrix (the CI job); --replay re-runs a saved trace and requires the
+  recorded blame to reproduce bit-exactly; --sentinel arms a transport
+  mutation (needs a build with --features adversary)
+--jitter F / --flaps N (simulate) add deterministic fault axes on the
+  fabric (seeded per-message serialization stretch in [0,F]; N link-down
+  windows of --flap-dur seconds) and report the slowdown vs the clean
+  run — the simulator-side schedule-robustness number"
     );
 }
 
@@ -555,6 +576,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         fmt_bytes(rep.max_link_bytes),
         rep.busiest_link_utilization * 100.0
     );
+    // Fault axes: rerun the same program under a deterministic fault
+    // model and report the schedule-robustness slowdown.
+    let jitter = args.f64("jitter", 0.0)?;
+    let nflaps = args.usize("flaps", 0)?;
+    if jitter > 0.0 || nflaps > 0 {
+        let fseed = args.usize("fault-seed", 1)? as u64;
+        let dur = args.f64("flap-dur", rep.total_time * 0.25)?;
+        let flaps = sim::FaultModel::random_flaps(fseed, &topo, rep.total_time, nflaps, dur);
+        let fm = sim::FaultModel::new(fseed, jitter).with_flaps(flaps);
+        let frep = sim::simulate_faulted(&prog, &topo, &cost, size, &fm)?;
+        println!(
+            "  faults: jitter={:.0}% flaps={} (dur={}) -> time={}  slowdown={:.3}x",
+            jitter * 100.0,
+            nflaps,
+            fmt_time_s(dur),
+            fmt_time_s(frep.total_time),
+            frep.total_time / rep.total_time.max(f64::MIN_POSITIVE),
+        );
+    }
     // Fabric contention (obs::metrics LinkStat): how long messages queued
     // behind busy links, and where. Zero on an uncontended run.
     let mut contended: Vec<_> = rep
@@ -1243,4 +1283,169 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     assert_eq!(pat::phase_counts(16, 2), (1, 7));
     println!("selftest OK: {count} (algorithm, collective, nranks) cases verified");
     Ok(())
+}
+
+/// `patcol adversary` — schedule-exploration episodes, trace replay,
+/// and the CI smoke matrix. See `crate::adversary` (library side) for
+/// the episode/shrink machinery.
+fn cmd_adversary(args: &Args) -> Result<()> {
+    use patcol::adversary::{self, PolicySpec, Preset, ReplayTrace, Workload};
+    use patcol::core::Error;
+
+    // Replay mode first: replay() arms the trace's own recorded
+    // sentinel, so --sentinel must not also hold the sentinel lock here.
+    if let Some(path) = args.opt_str("replay") {
+        if args.opt_str("sentinel").is_some() {
+            return Err(Error::Config(
+                "--replay uses the trace's recorded sentinel; drop --sentinel".into(),
+            ));
+        }
+        let trace = ReplayTrace::load(std::path::Path::new(&path))?;
+        println!(
+            "replay {path}: {} · {} deviations · sentinel {}",
+            trace.workload.describe(),
+            trace.deviations.len(),
+            trace.sentinel.as_deref().unwrap_or("none"),
+        );
+        return match adversary::replay(&trace)? {
+            Some(f) if f.blame == trace.blame => {
+                println!("reproduced: {}", f.blame.describe());
+                Ok(())
+            }
+            Some(f) => Err(Error::Verify(format!(
+                "blame mismatch: recorded [{}] but replay produced [{}]",
+                trace.blame.describe(),
+                f.blame.describe()
+            ))),
+            None => Err(Error::Verify(format!(
+                "replay produced no failure (recorded [{}])",
+                trace.blame.describe()
+            ))),
+        };
+    }
+
+    // Optionally arm a transport mutation sentinel for the whole sweep
+    // (demonstrates the harness catching a real invariant violation).
+    // The sentinels only exist under cfg(test) or --features adversary.
+    #[cfg(feature = "adversary")]
+    let _armed = match args.opt_str("sentinel") {
+        Some(s) => {
+            use patcol::transport::delivery::sentinel;
+            Some(sentinel::arm(sentinel::Sentinel::parse(&s)?))
+        }
+        None => None,
+    };
+    #[cfg(not(feature = "adversary"))]
+    if args.opt_str("sentinel").is_some() {
+        return Err(Error::Config(
+            "--sentinel needs the mutation sentinels: rebuild with --features adversary".into(),
+        ));
+    }
+
+    let seed = args.usize("seed", 1)? as u64;
+    let mut policy = PolicySpec::parse(&args.str("policy", "reorder"))?;
+    if policy.seed == 0 {
+        policy.seed = seed;
+    }
+    let episodes = args.usize("episodes", if args.flag("smoke") { 200 } else { 64 })? as u64;
+    let out = args.str("out", "adversary_trace.json");
+
+    if args.flag("smoke") {
+        // The CI matrix: small points across rank count × algorithm ×
+        // channels × collective, total episode budget split across them.
+        let mut points = Vec::new();
+        for &(n, alg) in &[(4usize, "ring"), (4, "pat:2"), (8, "ring"), (8, "pat:2")] {
+            for c in [1usize, 2] {
+                for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                    let spec = AlgSpec::parse(&format!("{alg}*{c}"))?;
+                    points.push(Workload::new(coll, spec, n, 64, seed));
+                }
+            }
+        }
+        let per = (episodes / points.len() as u64).max(1);
+        let mut ran = 0u64;
+        let mut failures = 0usize;
+        for (i, w) in points.iter().enumerate() {
+            let pol = PolicySpec {
+                preset: if i % 2 == 0 { Preset::Delay } else { Preset::Reorder },
+                seed: seed.wrapping_add(i as u64),
+            };
+            let rep = adversary::explore(w, &pol, per, None)?;
+            ran += rep.episodes_run;
+            failures += rep.failures;
+            println!(
+                "  {} policy={}: {} episodes, {} failures ({} timeouts skipped)",
+                w.describe(),
+                pol.spec(),
+                rep.episodes_run,
+                rep.failures,
+                rep.timeouts_skipped
+            );
+            if let Some(ce) = &rep.counterexample {
+                ce.save(std::path::Path::new(&out))?;
+                return Err(Error::Verify(format!(
+                    "adversary smoke found a counterexample [{}]; shrunk trace -> {out}",
+                    ce.blame.describe()
+                )));
+            }
+        }
+        println!(
+            "adversary smoke clean: {ran} episodes over {} points, {failures} failures, \
+             0 counterexamples",
+            points.len()
+        );
+        return Ok(());
+    }
+
+    let coll = parse_collective(&args.str("collective", "ag"))?;
+    let (alg_opt, channels) = alg_channels(args)?;
+    let alg = alg_opt.unwrap_or(Algorithm::Pat { aggregation: 2 });
+    let spec = AlgSpec { alg, channels: channels.unwrap_or(1) };
+    let n = args.usize("ranks", 8)?;
+    let elems = args.usize("elems", 64)?;
+    let w = Workload::new(coll, spec, n, elems, seed);
+
+    let mut rec = args
+        .opt_str("trace")
+        .map(|p| (p, patcol::obs::TraceRecorder::new()));
+    let report = adversary::explore(&w, &policy, episodes, rec.as_mut().map(|(_, r)| r))?;
+    println!(
+        "{} policy={}: {} episodes, {} failures ({} timeouts skipped), \
+         {} deviations over {} decisions",
+        w.describe(),
+        policy.spec(),
+        report.episodes_run,
+        report.failures,
+        report.timeouts_skipped,
+        report.total_deviations,
+        report.total_decisions
+    );
+    if let Some((path, r)) = rec {
+        let trace = r.finish();
+        std::fs::write(
+            &path,
+            patcol::obs::chrome_trace(&trace, &patcol::obs::ChannelTags::plain()).to_pretty(),
+        )?;
+        println!("episode/shrink trace ({} events) -> {path}", trace.events.len());
+    }
+    match &report.counterexample {
+        Some(ce) => {
+            ce.save(std::path::Path::new(&out))?;
+            println!(
+                "counterexample at episode {}: {} ({} -> {} deviations in {} shrink trials)",
+                ce.episode,
+                ce.blame.describe(),
+                ce.initial_deviations,
+                ce.deviations.len(),
+                ce.shrink_trials
+            );
+            Err(Error::Verify(format!(
+                "adversarial schedule broke the transport; shrunk replayable trace -> {out}"
+            )))
+        }
+        None => {
+            println!("no counterexample found");
+            Ok(())
+        }
+    }
 }

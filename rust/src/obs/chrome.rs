@@ -122,6 +122,7 @@ fn kind_of_name(name: &str) -> Option<EventKind> {
         "wire" => Some(EventKind::Wire),
         "stall" => Some(EventKind::Stall),
         "reduce" => Some(EventKind::Reduce),
+        "adversary" => Some(EventKind::Adversary),
         "pool live slots" => Some(EventKind::Pool),
         "arena bytes" => Some(EventKind::Arena),
         _ => None,

@@ -22,7 +22,13 @@ use crate::core::{ChunkId, Rank};
 /// counter. v2 traces remain loadable: consumers that predate the kind
 /// skip it, and [`crate::obs::chrome::import_chrome_trace`] tolerates
 /// documents missing it.
-pub const SCHEMA_VERSION: u32 = 3;
+///
+/// v4 (additive over v3): the [`EventKind::Adversary`] span kind —
+/// schedule-exploration provenance from [`crate::adversary`] (episode
+/// outcomes on channel 0, shrink trials on channel 1, both on a
+/// synthetic per-index timeline). Older traces remain loadable as
+/// before.
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// What an [`Event`] describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -48,6 +54,15 @@ pub enum EventKind {
     /// (pool slots + wire regions) at the sample instant (counter event,
     /// `t_start == t_end`). Schema v3; transport-only.
     Arena,
+    /// Schedule-exploration provenance from [`crate::adversary`] (schema
+    /// v4). Emitted on a synthetic per-index timeline (seconds = episode
+    /// or trial index, not wall time): channel 0 events are episode
+    /// outcomes (`step` = episode index, `value` = deviations applied,
+    /// `bytes` = 1 on a failing episode, 0 on a clean one); channel 1
+    /// events are shrink trials (`step` = trial index, `value` =
+    /// surviving deviations, `bytes` = 1 when the trial reproduced the
+    /// blame).
+    Adversary,
 }
 
 impl EventKind {
@@ -60,6 +75,7 @@ impl EventKind {
             EventKind::Reduce => "reduce",
             EventKind::Pool => "pool",
             EventKind::Arena => "arena",
+            EventKind::Adversary => "adversary",
         }
     }
 }
@@ -192,7 +208,8 @@ impl Counters {
             EventKind::Arena => {
                 self.arena_hw_bytes = self.arena_hw_bytes.max(ev.value)
             }
-            EventKind::Wire => {}
+            // Harness provenance, not traffic: nothing to count.
+            EventKind::Wire | EventKind::Adversary => {}
         }
     }
 

@@ -34,6 +34,7 @@ use crate::core::{Error, Rank, Result};
 use crate::obs::{Event, EventKind, LevelLinkStat, LinkStat, TraceRecorder};
 use crate::sched::program::{Op, Program};
 use crate::sim::cost::CostModel;
+use crate::sim::fault::FaultModel;
 use crate::sim::topology::Topology;
 
 /// Simulation result and traffic metrics.
@@ -138,7 +139,22 @@ pub fn simulate(
     chunk_bytes: usize,
 ) -> Result<SimReport> {
     let sizes = vec![chunk_bytes; p.chunk_space()];
-    sim_inner(p, topo, cost, &sizes, None, None)
+    sim_inner(p, topo, cost, &sizes, None, None, None)
+}
+
+/// Like [`simulate`], but under a [`FaultModel`]: seeded per-message
+/// serialization jitter plus link-flap down-windows (see
+/// [`crate::sim::fault`]). A zero model (`jitter == 0`, no flaps)
+/// reproduces [`simulate`] exactly.
+pub fn simulate_faulted(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: usize,
+    faults: &FaultModel,
+) -> Result<SimReport> {
+    let sizes = vec![chunk_bytes; p.chunk_space()];
+    sim_inner(p, topo, cost, &sizes, None, None, Some(faults))
 }
 
 /// Like [`simulate`], but with a *per-chunk* byte size (`chunk_bytes[c]`
@@ -152,7 +168,7 @@ pub fn simulate_sized(
     cost: &CostModel,
     chunk_bytes: &[usize],
 ) -> Result<SimReport> {
-    sim_inner(p, topo, cost, chunk_bytes, None, None)
+    sim_inner(p, topo, cost, chunk_bytes, None, None, None)
 }
 
 /// Like [`simulate`], additionally returning the per-message timeline.
@@ -164,7 +180,7 @@ pub fn simulate_traced(
 ) -> Result<(SimReport, Vec<TraceEvent>)> {
     let mut trace = Vec::new();
     let sizes = vec![chunk_bytes; p.chunk_space()];
-    let rep = sim_inner(p, topo, cost, &sizes, Some(&mut trace), None)?;
+    let rep = sim_inner(p, topo, cost, &sizes, Some(&mut trace), None, None)?;
     trace.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
     Ok((rep, trace))
 }
@@ -182,7 +198,7 @@ pub fn simulate_observed(
     rec: &mut TraceRecorder,
 ) -> Result<SimReport> {
     let sizes = vec![chunk_bytes; p.chunk_space()];
-    sim_inner(p, topo, cost, &sizes, None, Some(rec))
+    sim_inner(p, topo, cost, &sizes, None, Some(rec), None)
 }
 
 fn sim_inner(
@@ -192,6 +208,7 @@ fn sim_inner(
     chunk_bytes: &[usize],
     mut trace: Option<&mut Vec<TraceEvent>>,
     mut obs: Option<&mut TraceRecorder>,
+    faults: Option<&FaultModel>,
 ) -> Result<SimReport> {
     if topo.nranks != p.nranks {
         return Err(Error::Sim(format!(
@@ -283,6 +300,11 @@ fn sim_inner(
                     // ready message wait — per-link contention blame.
                     link_contended[l] += (link_free[l] - t_ready).max(0.0);
                 }
+                if let Some(fm) = faults {
+                    // Link flap: a start inside a down-window on any link
+                    // of the path waits for the window to close.
+                    t0 = fm.hold_start(&path, t0);
+                }
                 for &l in &path {
                     let ser_l = bytes as f64 / topo.links[l].bandwidth;
                     link_free[l] = t0 + ser_l;
@@ -291,7 +313,12 @@ fn sim_inner(
                 }
                 let ser = if path.is_empty() { 0.0 } else { bytes as f64 / min_bw };
                 let hops = path.len().saturating_sub(1);
-                let arrival = t0 + ser + cost.alpha_base + cost.alpha_hop * hops as f64;
+                let mut arrival = t0 + ser + cost.alpha_base + cost.alpha_hop * hops as f64;
+                if let Some(fm) = faults {
+                    // Seeded per-message serialization jitter; the message
+                    // index (retire order is deterministic) keys the hash.
+                    arrival += fm.jitter_extra(r, *peer, k, report.messages as u64, ser);
+                }
                 wires.entry((r, *peer, k)).or_default().push_back(arrival);
                 // Sender stream available again after the posting gap.
                 chan_time[r][k] = t_ready + cost.msg_gap;

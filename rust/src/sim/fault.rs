@@ -1,0 +1,226 @@
+//! Fault axes for the simulator: per-link serialization jitter and
+//! link-flap windows.
+//!
+//! The adversary harness ([`crate::adversary`]) perturbs *delivery
+//! order* on the threaded transport; this module perturbs *timing* on
+//! the simulated fabric, so a schedule's robustness to network
+//! misbehaviour becomes a recorded number instead of an anecdote:
+//! [`robustness`] runs the same program clean and faulted and reports
+//! the slowdown ratio. Both axes are fully deterministic in the model's
+//! seed — a fault sweep is replayable the same way an adversary episode
+//! is.
+//!
+//! * **Jitter** stretches each message's bottleneck serialization by a
+//!   seeded per-message factor in `[0, jitter]` — the fabric analogue of
+//!   the delivery layer's random holds.
+//! * **Flaps** take a link down for a time window: any message whose
+//!   contended start falls inside a flap window on any link of its path
+//!   waits for the window to close (and then re-checks every window, so
+//!   overlapping flaps compound).
+
+use crate::core::Result;
+use crate::sched::program::Program;
+use crate::sim::cost::CostModel;
+use crate::sim::engine::{simulate, simulate_faulted, SimReport};
+use crate::sim::topology::Topology;
+use crate::util::Rng;
+
+/// One link-down window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFlap {
+    /// Index into [`Topology::links`].
+    pub link: usize,
+    /// Window start (seconds, simulation time).
+    pub t0: f64,
+    /// Window length (seconds).
+    pub dur: f64,
+}
+
+impl LinkFlap {
+    fn end(&self) -> f64 {
+        self.t0 + self.dur
+    }
+
+    /// Whether a message starting at `t` on this link is inside the
+    /// window.
+    fn holds(&self, t: f64) -> bool {
+        t >= self.t0 && t < self.end()
+    }
+}
+
+/// Deterministic fault model applied to every simulated message.
+#[derive(Debug, Clone, Default)]
+pub struct FaultModel {
+    pub seed: u64,
+    /// Max fractional serialization stretch per message (0.25 = up to
+    /// +25% on the bottleneck link's serialization time).
+    pub jitter: f64,
+    pub flaps: Vec<LinkFlap>,
+}
+
+impl FaultModel {
+    pub fn new(seed: u64, jitter: f64) -> FaultModel {
+        FaultModel { seed, jitter, flaps: Vec::new() }
+    }
+
+    pub fn with_flaps(mut self, flaps: Vec<LinkFlap>) -> FaultModel {
+        self.flaps = flaps;
+        self
+    }
+
+    /// `count` seeded random flaps of length `dur` each, placed on random
+    /// links with start times in `[0, horizon)`. Run the clean simulation
+    /// first to get a realistic `horizon` (its `total_time`).
+    pub fn random_flaps(
+        seed: u64,
+        topo: &Topology,
+        horizon: f64,
+        count: usize,
+        dur: f64,
+    ) -> Vec<LinkFlap> {
+        let mut rng = Rng::new(seed ^ 0x666c_6170); // "flap"
+        (0..count)
+            .map(|_| LinkFlap {
+                link: rng.below(topo.links.len().max(1)),
+                t0: rng.f64() * horizon.max(0.0),
+                dur,
+            })
+            .collect()
+    }
+
+    /// Push a message's contended start time past every flap window it
+    /// lands in on any link of its path. Iterates to a fixed point so a
+    /// start pushed out of one window into another keeps moving.
+    pub fn hold_start(&self, path: &[usize], mut t0: f64) -> f64 {
+        if self.flaps.is_empty() {
+            return t0;
+        }
+        loop {
+            let mut moved = false;
+            for f in &self.flaps {
+                if path.contains(&f.link) && f.holds(t0) {
+                    t0 = f.end();
+                    moved = true;
+                }
+            }
+            if !moved {
+                return t0;
+            }
+        }
+    }
+
+    /// Extra arrival latency for message number `msg` from `src` to
+    /// `dst` on `channel` whose bottleneck serialization took `ser`
+    /// seconds: `ser × jitter × u`, `u` a seeded unit hash. Purely a
+    /// function of the model seed and the message coordinates.
+    pub fn jitter_extra(&self, src: usize, dst: usize, channel: usize, msg: u64, ser: f64) -> f64 {
+        if self.jitter <= 0.0 || ser <= 0.0 {
+            return 0.0;
+        }
+        let mut h = self.seed ^ 0x6a69_7474_6572; // "jitter"
+        for v in [src as u64, dst as u64, channel as u64, msg] {
+            h ^= v.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            h ^= h >> 27;
+        }
+        let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+        ser * self.jitter * unit
+    }
+}
+
+/// Clean-vs-faulted comparison for one program point.
+#[derive(Debug, Clone)]
+pub struct Robustness {
+    pub clean: SimReport,
+    pub faulted: SimReport,
+}
+
+impl Robustness {
+    /// Faulted completion time over clean completion time (≥ 1.0 for
+    /// any non-degenerate fault model: faults only ever delay).
+    pub fn slowdown(&self) -> f64 {
+        if self.clean.total_time > 0.0 {
+            self.faulted.total_time / self.clean.total_time
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Run `p` clean and under `faults`, returning both reports. The
+/// schedule-robustness number the adversary work records for the
+/// simulator side.
+pub fn robustness(
+    p: &Program,
+    topo: &Topology,
+    cost: &CostModel,
+    chunk_bytes: usize,
+    faults: &FaultModel,
+) -> Result<Robustness> {
+    let clean = simulate(p, topo, cost, chunk_bytes)?;
+    let faulted = simulate_faulted(p, topo, cost, chunk_bytes, faults)?;
+    Ok(Robustness { clean, faulted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Algorithm, Collective};
+    use crate::sched;
+
+    fn setup() -> (Program, Topology, CostModel) {
+        let p = sched::generate(Algorithm::Ring, Collective::AllGather, 8).unwrap();
+        let topo = Topology::leaf_spine(8, 4, 2, 25e9, 0.5).unwrap();
+        (p, topo, CostModel::default())
+    }
+
+    #[test]
+    fn zero_fault_model_matches_clean_exactly() {
+        let (p, topo, cost) = setup();
+        let clean = simulate(&p, &topo, &cost, 1 << 16).unwrap();
+        let faulted =
+            simulate_faulted(&p, &topo, &cost, 1 << 16, &FaultModel::new(7, 0.0)).unwrap();
+        assert_eq!(clean.total_time, faulted.total_time);
+        assert_eq!(clean.messages, faulted.messages);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_slows_completion() {
+        let (p, topo, cost) = setup();
+        let fm = FaultModel::new(42, 0.5);
+        let a = simulate_faulted(&p, &topo, &cost, 1 << 16, &fm).unwrap();
+        let b = simulate_faulted(&p, &topo, &cost, 1 << 16, &fm).unwrap();
+        assert_eq!(a.total_time, b.total_time, "same seed, same timeline");
+        let clean = simulate(&p, &topo, &cost, 1 << 16).unwrap();
+        assert!(
+            a.total_time >= clean.total_time,
+            "jitter only delays: {} < {}",
+            a.total_time,
+            clean.total_time
+        );
+    }
+
+    #[test]
+    fn flap_windows_delay_messages_through_the_link() {
+        let (p, topo, cost) = setup();
+        let clean = simulate(&p, &topo, &cost, 1 << 16).unwrap();
+        // Take every link down for the whole clean run: everything that
+        // starts inside the window waits it out.
+        let flaps: Vec<LinkFlap> = (0..topo.links.len())
+            .map(|l| LinkFlap { link: l, t0: 0.0, dur: clean.total_time })
+            .collect();
+        let fm = FaultModel::new(1, 0.0).with_flaps(flaps);
+        let r = robustness(&p, &topo, &cost, 1 << 16, &fm).unwrap();
+        assert!(r.slowdown() > 1.0, "global flap must slow the run");
+        assert_eq!(r.clean.messages, r.faulted.messages);
+    }
+
+    #[test]
+    fn random_flaps_are_seeded() {
+        let (_p, topo, _c) = setup();
+        let a = FaultModel::random_flaps(9, &topo, 1.0, 5, 0.1);
+        let b = FaultModel::random_flaps(9, &topo, 1.0, 5, 0.1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+}

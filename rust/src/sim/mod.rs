@@ -16,7 +16,11 @@
 //!   limits (Ring's linear part), and reduction cost on the RS datapath;
 //! * [`engine`] — executes a [`crate::sched::Program`] against a topology +
 //!   cost model, tracking per-link busy intervals (contention) and per-rank
-//!   serialization, producing completion time and traffic metrics.
+//!   serialization, producing completion time and traffic metrics;
+//! * [`fault`] — deterministic fault axes (seeded per-message jitter,
+//!   link-flap windows) and [`fault::robustness`], the clean-vs-faulted
+//!   slowdown the adversary harness ([`crate::adversary`]) records for
+//!   the simulator side (`patcol simulate --jitter/--flaps`).
 //!
 //! [`engine::simulate_observed`] additionally emits the unified
 //! [`crate::obs`] event timeline (op spans, wire transit, stalls,
@@ -28,9 +32,12 @@ pub mod topology;
 pub mod routing;
 pub mod cost;
 pub mod engine;
+pub mod fault;
 
 pub use cost::CostModel;
 pub use engine::{
-    simulate, simulate_observed, simulate_sized, simulate_traced, SimReport, TraceEvent,
+    simulate, simulate_faulted, simulate_observed, simulate_sized, simulate_traced, SimReport,
+    TraceEvent,
 };
+pub use fault::{robustness, FaultModel, LinkFlap, Robustness};
 pub use topology::Topology;

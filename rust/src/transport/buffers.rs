@@ -47,6 +47,18 @@ use crate::core::{Error, Rank, Result};
 use crate::obs::FlightRecorder;
 use crate::transport::arena::Arena;
 
+/// Annotate a pool-exhaustion error with the (rank, channel, step) that
+/// hit it, so the failure site is blameable from the error text alone
+/// (the adversary harness parses these coordinates back out).
+fn blame_pool(e: Error, rank: Rank, channel: usize, step: usize) -> Error {
+    match e {
+        Error::Transport(m) => {
+            Error::Transport(format!("{m} (rank {rank}, channel {channel}, step {step})"))
+        }
+        other => other,
+    }
+}
+
 /// One staging/accumulator slot: an arena region descriptor, or a heap
 /// vector when the arena region is exhausted. Carries its own `Arc` to
 /// the arena so access never borrows the pool.
@@ -239,7 +251,9 @@ impl BufferPool {
     // carries the op coordinates so occupancy is attributable to the
     // (rank, channel, step) that moved it.
 
-    /// [`BufferPool::acquire`] + occupancy sample.
+    /// [`BufferPool::acquire`] + occupancy sample. Exhaustion errors are
+    /// annotated with the blamed (rank, channel, step) so adversarial
+    /// episode reports can name the failure site.
     pub fn acquire_traced(
         &mut self,
         fr: &mut FlightRecorder,
@@ -247,7 +261,7 @@ impl BufferPool {
         channel: usize,
         step: usize,
     ) -> Result<Slot> {
-        let slot = self.acquire()?;
+        let slot = self.acquire().map_err(|e| blame_pool(e, rank, channel, step))?;
         fr.pool(rank, channel, step, self.live);
         Ok(slot)
     }
@@ -265,7 +279,9 @@ impl BufferPool {
         fr.pool(rank, channel, step, self.live);
     }
 
-    /// [`BufferPool::reserve`] + occupancy sample.
+    /// [`BufferPool::reserve`] + occupancy sample. Exhaustion errors are
+    /// annotated with the blamed (rank, channel, step), as in
+    /// [`BufferPool::acquire_traced`].
     pub fn reserve_traced(
         &mut self,
         slots: usize,
@@ -274,7 +290,7 @@ impl BufferPool {
         channel: usize,
         step: usize,
     ) -> Result<()> {
-        self.reserve(slots)?;
+        self.reserve(slots).map_err(|e| blame_pool(e, rank, channel, step))?;
         fr.pool(rank, channel, step, self.live);
         Ok(())
     }

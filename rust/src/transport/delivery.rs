@@ -1,0 +1,332 @@
+//! The controllable delivery layer: a policy hook over the per-(src, dst,
+//! channel) connection FIFOs of [`crate::transport::engine`].
+//!
+//! The threaded transport normally matches receives **eagerly**: the
+//! moment a rank's channel scheduler polls a connection whose FIFO is
+//! non-empty, the head descriptor is delivered. A [`DeliveryPolicy`]
+//! interposes at exactly that point — each poll of a non-empty FIFO is a
+//! **decision point**, and the policy may deliver the head, briefly defer
+//! the match ([`Verdict::Hold`]), park outright waiting for deeper
+//! arrivals ([`Verdict::HoldFirm`], replay only), or — when the
+//! FIFO-ordering sentinel is armed — deliver a queued message *out of
+//! order* ([`Verdict::Deliver`] with a non-zero index). This is what lets
+//! the [`crate::adversary`] harness drive the *real* transport through
+//! perturbed schedules and replay a recorded schedule bit-exactly.
+//!
+//! ## Deterministic virtual time
+//!
+//! Physical wall time is useless for replay, so every decision carries
+//! two deterministic clocks maintained by the engine:
+//!
+//! * [`Decision::nth`] — how many messages this rank has already matched
+//!   on this exact (src, channel) connection. The *n*-th match of a
+//!   connection is a program-determined event (per-connection FIFO
+//!   matching is part of the IR semantics), so `(rank, src, channel,
+//!   nth)` names a decision point stably across runs **and across
+//!   deviation-subset replays** — the key the shrinker relies on.
+//! * [`Decision::vtime`] — total messages matched by the rank so far (a
+//!   rank-local Lamport-style clock), useful for ordering a rank's
+//!   decisions in logs.
+//!
+//! ## The bounded-hold rule (why policies cannot deadlock the transport)
+//!
+//! Cross-channel deferral is not free: blocking an arrived message while
+//! other ranks block on *our* sends can manufacture deadlocks that the
+//! verified program does not contain. The engine therefore enforces a
+//! bounded hold: a [`Verdict::Hold`] only defers the match while the rank
+//! has other progress to make or new traffic is arriving; once a full
+//! scheduler pass makes no progress, the engine waits one short grace
+//! interval for in-flight traffic (letting FIFOs deepen — the point of
+//! holding) and then **force-releases** the head of a held connection,
+//! notifying the policy via [`DeliveryPolicy::delivered`] with
+//! `forced = true`. Only [`Verdict::HoldFirm`] may park the thread, and
+//! it is reserved for pinned replay, where a recorded decision proves the
+//! awaited messages are already causally en route (the watchdog still
+//! backstops it).
+//!
+//! ## Mutation sentinels
+//!
+//! [`sentinel`] (compiled under `cfg(any(test, feature = "adversary"))`)
+//! hosts two switches that each disable one protocol guard so the
+//! adversary harness can prove it *finds* the resulting bugs: the
+//! FIFO-ordering clamp in the delivery path, and one accumulator
+//! slot-release on the reduce-scatter send path. Production builds
+//! compile the guards unconditionally — [`fifo_reorder_allowed`] and
+//! [`slot_release_skipped`] are constant `false` without the cfg.
+
+use std::sync::Arc;
+
+use crate::core::Rank;
+
+/// One delivery decision point: rank `rank` polls connection
+/// `(src, channel)` and finds `depth ≥ 1` arrived-but-unmatched
+/// messages. See the module docs for the `nth`/`vtime` clocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// The receiving rank (the one running the policy instance).
+    pub rank: Rank,
+    /// Source rank of the polled connection.
+    pub src: Rank,
+    /// Channel of the polled connection.
+    pub channel: usize,
+    /// Arrived-but-unmatched messages on the connection FIFO right now.
+    pub depth: usize,
+    /// Messages already matched on this connection (stable decision key).
+    pub nth: u64,
+    /// Messages already matched by this rank across all connections.
+    pub vtime: u64,
+}
+
+/// A policy's answer at a decision point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Match the message at this FIFO index (0 = head). Non-zero indices
+    /// are clamped to 0 by the FIFO-ordering guard unless the
+    /// [`sentinel::Sentinel::FifoGuardOff`] mutation is armed.
+    Deliver(usize),
+    /// Defer the match for now. Subject to the bounded-hold rule: the
+    /// engine re-asks every pass and force-releases when nothing else
+    /// progresses.
+    Hold,
+    /// Park-eligible hold: treat the connection as if nothing had
+    /// arrived, letting the rank thread block on the shared receiver
+    /// until more traffic lands. Used by pinned replay to wait for a
+    /// recorded FIFO depth; guarded by the watchdog like any other park.
+    HoldFirm,
+}
+
+/// A per-rank delivery schedule controller, instantiated once per rank
+/// thread by the [`DeliveryFactory`] in
+/// [`crate::transport::TransportOptions::delivery`].
+///
+/// Contract: `decide` may be called any number of times for the same
+/// decision point (the scheduler re-polls every pass while a hold
+/// stands); `delivered` is called exactly once per matched message, with
+/// the index actually used and whether the bounded-hold rule overrode the
+/// policy (`forced`).
+pub trait DeliveryPolicy: Send {
+    /// Choose what to do at a decision point.
+    fn decide(&mut self, d: Decision) -> Verdict;
+
+    /// A message was matched at `d` using FIFO index `idx`. `forced` is
+    /// true when the engine force-released a held connection.
+    fn delivered(&mut self, d: Decision, idx: usize, forced: bool) {
+        let _ = (d, idx, forced);
+    }
+
+    /// Human-readable log of the perturbations applied so far — attached
+    /// to the watchdog's blamed stall report when a deadlock fires under
+    /// this policy. Empty = nothing to report.
+    fn perturbation_log(&self) -> String {
+        String::new()
+    }
+}
+
+/// Builds one [`DeliveryPolicy`] per rank thread. `Arc` so
+/// [`crate::transport::TransportOptions`] stays `Clone`.
+pub type DeliveryFactory = Arc<dyn Fn(Rank) -> Box<dyn DeliveryPolicy> + Send + Sync>;
+
+/// The always-eager policy: deliver every head immediately. Equivalent to
+/// running with no policy at all; exists so explicit "clean" runs can go
+/// through the same plumbing.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EagerDelivery;
+
+impl DeliveryPolicy for EagerDelivery {
+    fn decide(&mut self, _d: Decision) -> Verdict {
+        Verdict::Deliver(0)
+    }
+}
+
+/// Mutation sentinels: runtime switches that each disable one protocol
+/// guard, so the adversary explorer can demonstrate it catches the
+/// resulting bug (the harness's own regression tests). Compiled only for
+/// tests and the `adversary` feature; arming serializes on a global lock
+/// so concurrent tests cannot observe each other's mutations.
+#[cfg(any(test, feature = "adversary"))]
+pub mod sentinel {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, MutexGuard};
+
+    use crate::core::{Error, Result};
+
+    static FIFO_GUARD_OFF: AtomicBool = AtomicBool::new(false);
+    static SLOT_RELEASE_OFF: AtomicBool = AtomicBool::new(false);
+    static ARM_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Which guard to disable.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Sentinel {
+        /// Disable the FIFO-ordering clamp in the delivery path: policies
+        /// may then deliver non-head FIFO entries, reordering messages
+        /// within one (src, dst, channel) connection.
+        FifoGuardOff,
+        /// Skip the accumulator slot-release on the reduce-scatter send
+        /// path: every consumed accumulator leaks its pool slot.
+        SlotReleaseOff,
+    }
+
+    impl Sentinel {
+        /// Stable name used in replay-trace JSON.
+        pub fn name(&self) -> &'static str {
+            match self {
+                Sentinel::FifoGuardOff => "fifo-guard-off",
+                Sentinel::SlotReleaseOff => "slot-release-off",
+            }
+        }
+
+        /// Parse [`Sentinel::name`] (and the short CLI spellings).
+        pub fn parse(s: &str) -> Result<Sentinel> {
+            match s {
+                "fifo" | "fifo-guard-off" => Ok(Sentinel::FifoGuardOff),
+                "slot" | "slot-release-off" => Ok(Sentinel::SlotReleaseOff),
+                other => Err(Error::Config(format!(
+                    "unknown sentinel {other:?} (want fifo|slot)"
+                ))),
+            }
+        }
+    }
+
+    /// RAII arming: sets the switch, holds the global sentinel lock, and
+    /// restores the healthy state on drop.
+    pub struct Armed {
+        which: Sentinel,
+        _lock: MutexGuard<'static, ()>,
+    }
+
+    /// Arm one sentinel for the lifetime of the returned guard.
+    pub fn arm(which: Sentinel) -> Armed {
+        // A test that panicked while armed leaves the mutex poisoned but
+        // the state restored (Drop ran during unwind) — recover the lock.
+        let lock = ARM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        flag(which).store(true, Ordering::SeqCst);
+        Armed { which, _lock: lock }
+    }
+
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            flag(self.which).store(false, Ordering::SeqCst);
+        }
+    }
+
+    fn flag(which: Sentinel) -> &'static AtomicBool {
+        match which {
+            Sentinel::FifoGuardOff => &FIFO_GUARD_OFF,
+            Sentinel::SlotReleaseOff => &SLOT_RELEASE_OFF,
+        }
+    }
+
+    /// Hold the sentinel lock *without* arming anything: a test that
+    /// must observe healthy guards while driving a delivery policy takes
+    /// this to serialize against sentinel-armed tests in the same
+    /// process (sentinels are process-global).
+    pub fn exclusive() -> MutexGuard<'static, ()> {
+        ARM_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The currently armed sentinel, if any (recorded into shrunk traces
+    /// so replay can re-arm it).
+    pub fn active() -> Option<Sentinel> {
+        if FIFO_GUARD_OFF.load(Ordering::SeqCst) {
+            Some(Sentinel::FifoGuardOff)
+        } else if SLOT_RELEASE_OFF.load(Ordering::SeqCst) {
+            Some(Sentinel::SlotReleaseOff)
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn fifo_guard_off() -> bool {
+        FIFO_GUARD_OFF.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn slot_release_off() -> bool {
+        SLOT_RELEASE_OFF.load(Ordering::Relaxed)
+    }
+}
+
+/// True when the FIFO-ordering guard is disabled (sentinel armed): the
+/// delivery path then honors non-head [`Verdict::Deliver`] indices.
+/// Constant `false` in production builds — the guard is unconditional.
+#[inline]
+pub fn fifo_reorder_allowed() -> bool {
+    #[cfg(any(test, feature = "adversary"))]
+    {
+        sentinel::fifo_guard_off()
+    }
+    #[cfg(not(any(test, feature = "adversary")))]
+    {
+        false
+    }
+}
+
+/// True when the reduce-scatter accumulator slot-release should be
+/// skipped (sentinel armed). Constant `false` in production builds.
+#[inline]
+pub fn slot_release_skipped() -> bool {
+    #[cfg(any(test, feature = "adversary"))]
+    {
+        sentinel::slot_release_off()
+    }
+    #[cfg(not(any(test, feature = "adversary")))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sentinels are process-global, so every assertion about their state
+    // happens while holding the sentinel lock (via `arm` or `exclusive`)
+    // — a concurrently armed test must not be observable here.
+
+    #[test]
+    fn guards_default_healthy() {
+        let _g = sentinel::exclusive();
+        assert!(!fifo_reorder_allowed());
+        assert!(!slot_release_skipped());
+    }
+
+    #[test]
+    fn sentinel_arming_is_scoped() {
+        {
+            let _a = sentinel::arm(sentinel::Sentinel::FifoGuardOff);
+            assert!(fifo_reorder_allowed());
+            assert!(!slot_release_skipped());
+            assert_eq!(
+                sentinel::active(),
+                Some(sentinel::Sentinel::FifoGuardOff)
+            );
+        }
+        {
+            let _g = sentinel::exclusive();
+            assert!(!fifo_reorder_allowed());
+            assert_eq!(sentinel::active(), None);
+        }
+        {
+            let _b = sentinel::arm(sentinel::Sentinel::SlotReleaseOff);
+            assert!(slot_release_skipped());
+        }
+        let _g = sentinel::exclusive();
+        assert!(!slot_release_skipped());
+    }
+
+    #[test]
+    fn sentinel_names_roundtrip() {
+        use sentinel::Sentinel;
+        for s in [Sentinel::FifoGuardOff, Sentinel::SlotReleaseOff] {
+            assert_eq!(Sentinel::parse(s.name()).unwrap(), s);
+        }
+        assert!(Sentinel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn eager_policy_always_delivers_head() {
+        let mut p = EagerDelivery;
+        let d = Decision { rank: 0, src: 1, channel: 0, depth: 3, nth: 0, vtime: 0 };
+        assert_eq!(p.decide(d), Verdict::Deliver(0));
+        assert!(p.perturbation_log().is_empty());
+    }
+}

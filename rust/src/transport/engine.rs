@@ -57,6 +57,7 @@ use crate::sched::program::{Op, Program};
 use crate::transport::arena::{Arena, ArenaCache, ArenaLease};
 use crate::transport::buffers::BufferPool;
 use crate::transport::datapath::DataPath;
+use crate::transport::delivery::{self, Decision, DeliveryFactory, DeliveryPolicy, Verdict};
 
 /// Engine configuration.
 #[derive(Clone)]
@@ -90,6 +91,13 @@ pub struct TransportOptions {
     /// the same footprint allocation-free —
     /// [`TransportReport::arena_allocs`] is 0 on the warm path.
     pub arena: Option<ArenaCache>,
+    /// Adversarial delivery hook: builds one
+    /// [`crate::transport::delivery::DeliveryPolicy`] per rank thread,
+    /// interposed at every connection-FIFO match (see
+    /// [`crate::transport::delivery`] and [`crate::adversary`]). `None`
+    /// (the default) keeps the eager fast path — the policy branch is
+    /// never taken.
+    pub delivery: Option<DeliveryFactory>,
 }
 
 impl Default for TransportOptions {
@@ -102,6 +110,7 @@ impl Default for TransportOptions {
             recv_timeout: Duration::from_secs(30),
             trace: false,
             arena: None,
+            delivery: None,
         }
     }
 }
@@ -191,12 +200,19 @@ impl Endpoint {
     }
 
     /// Non-blocking: drain everything that has arrived into the
-    /// per-connection FIFOs, then pop the head of (src, chan) if present.
-    fn try_recv_from(&mut self, src: Rank, chan: usize) -> Option<(f64, (usize, usize))> {
+    /// per-connection FIFOs.
+    fn drain(&mut self) {
         while let Ok(msg) = self.receiver.try_recv() {
             self.stash(msg);
         }
-        self.pending.get_mut(&(src, chan)).and_then(|q| q.pop_front())
+    }
+
+    /// Remove and return entry `idx` of the (src, chan) connection FIFO.
+    /// `idx > 0` reorders messages within the connection — only the
+    /// delivery layer may do that, and only with the FIFO-ordering
+    /// sentinel armed ([`delivery::fifo_reorder_allowed`]).
+    fn take_at(&mut self, src: Rank, chan: usize, idx: usize) -> Option<(f64, (usize, usize))> {
+        self.pending.get_mut(&(src, chan)).and_then(|q| q.remove(idx))
     }
 
     /// Queued-but-unclaimed messages on the (src, chan) connection FIFO.
@@ -217,6 +233,21 @@ impl Endpoint {
         })?;
         self.stash(msg);
         Ok(())
+    }
+
+    /// Bounded grace wait used by the delivery layer's bounded-hold rule:
+    /// give in-flight traffic one short interval to land (deepening the
+    /// FIFOs, which is what a holding policy is waiting for) before the
+    /// engine force-releases a held connection. Returns whether anything
+    /// arrived.
+    fn wait_brief(&mut self) -> bool {
+        match self.receiver.recv_timeout(Duration::from_millis(1)) {
+            Ok(msg) => {
+                self.stash(msg);
+                true
+            }
+            Err(_) => false,
+        }
     }
 }
 
@@ -242,6 +273,70 @@ fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
         .collect()
 }
 
+/// Outcome of polling one connection through the delivery layer.
+enum Polled {
+    /// A descriptor was matched (at the FIFO index the policy chose).
+    Data((f64, (usize, usize))),
+    /// Nothing deliverable: FIFO empty, or a firm (park-eligible) hold.
+    Blocked,
+    /// The policy soft-held an arrived message — park is forbidden, the
+    /// bounded-hold rule applies.
+    Held,
+}
+
+/// Poll the (src, chan) connection, routing the match through the
+/// delivery policy when one is installed. Maintains the deterministic
+/// virtual-time clocks (`matched` = per-connection match counts, `vtime`
+/// = rank-total match count) that name decision points stably for the
+/// adversary's shrinker. `force` implements the bounded-hold rule: the
+/// policy is not consulted, the head is delivered, and the policy is
+/// notified with `forced = true`.
+#[allow(clippy::too_many_arguments)]
+fn recv_decide(
+    ep: &mut Endpoint,
+    src: Rank,
+    chan: usize,
+    policy: &mut Option<Box<dyn DeliveryPolicy>>,
+    matched: &mut HashMap<(Rank, usize), u64>,
+    vtime: &mut u64,
+    force: bool,
+) -> Polled {
+    ep.drain();
+    let depth = ep.fifo_depth(src, chan);
+    if depth == 0 {
+        return Polled::Blocked;
+    }
+    let Some(pol) = policy.as_mut() else {
+        // Eager fast path: no policy, no clocks.
+        return match ep.take_at(src, chan, 0) {
+            Some(d) => Polled::Data(d),
+            None => Polled::Blocked,
+        };
+    };
+    let nth = matched.entry((src, chan)).or_insert(0);
+    let d = Decision { rank: ep.rank, src, channel: chan, depth, nth: *nth, vtime: *vtime };
+    let (want, forced) = if force {
+        (0, true)
+    } else {
+        match pol.decide(d) {
+            Verdict::Deliver(i) => (i, false),
+            Verdict::Hold => return Polled::Held,
+            Verdict::HoldFirm => return Polled::Blocked,
+        }
+    };
+    // The FIFO-ordering guard: only the connection head may be matched.
+    // Disabled by the adversary's mutation sentinel, under which a policy
+    // really can reorder messages within one connection.
+    let idx = if delivery::fifo_reorder_allowed() { want.min(depth - 1) } else { 0 };
+    pol.delivered(d, idx, forced);
+    *nth += 1;
+    *vtime += 1;
+    match ep.take_at(src, chan, idx) {
+        Some(data) => Polled::Data(data),
+        None => Polled::Blocked,
+    }
+}
+
 /// Drive a rank's per-channel op streams to completion (the cooperative
 /// per-channel scheduler, see the module docs). `exec` performs one op,
 /// identified by its **global index** in the rank's op list (the arena
@@ -251,12 +346,20 @@ fn make_endpoints(n: usize, timeout: Duration) -> Vec<Endpoint> {
 /// with a batched send sweep — every channel's ready sends post in one
 /// wakeup before any receive is polled. `fr` is the rank's flight
 /// recorder: park intervals become per-channel stall events, and a
-/// watchdog timeout dumps its tail into the error.
+/// watchdog timeout dumps its tail into the error (with the delivery
+/// policy's perturbation log attached when one is installed).
+///
+/// `policy` is the rank's adversarial delivery controller (see
+/// [`delivery`]); matches route through [`recv_decide`], and a pass that
+/// only soft-held traffic triggers the bounded-hold rule instead of a
+/// park — exploration policies therefore cannot deadlock a live
+/// schedule.
 fn drive_channels<F>(
     ep: &mut Endpoint,
     ops: &[Op],
     channels: usize,
     fr: &mut FlightRecorder,
+    mut policy: Option<Box<dyn DeliveryPolicy>>,
     mut exec: F,
 ) -> Result<()>
 where
@@ -275,9 +378,13 @@ where
     }
     let mut pc = vec![0usize; nchan];
     let mut remaining = ops.len();
+    let mut matched: HashMap<(Rank, usize), u64> = HashMap::new();
+    let mut vtime = 0u64;
+    let mut force = false;
     while remaining > 0 {
         let seen = ep.stashed;
         let mut progressed = false;
+        let mut held = false;
         // Batched dispatch: post every ready send across every channel
         // before polling a single receive — one wakeup drains the whole
         // send frontier, so peers' receives match sooner.
@@ -298,11 +405,18 @@ where
                 let (idx, op) = stream[pc[k]];
                 let data = match op {
                     Op::Send { .. } => None,
-                    Op::Recv { peer, .. } => match ep.try_recv_from(*peer, k) {
-                        Some(d) => Some(d),
-                        // This channel blocks; the others keep progressing.
-                        None => break,
-                    },
+                    Op::Recv { peer, .. } => {
+                        match recv_decide(ep, *peer, k, &mut policy, &mut matched, &mut vtime, force)
+                        {
+                            Polled::Data(d) => Some(d),
+                            // This channel blocks; the others keep progressing.
+                            Polled::Blocked => break,
+                            Polled::Held => {
+                                held = true;
+                                break;
+                            }
+                        }
+                    }
                 };
                 exec(ep, idx, op, data, fr)?;
                 pc[k] += 1;
@@ -310,13 +424,26 @@ where
                 progressed = true;
             }
         }
+        if progressed {
+            force = false;
+        }
         // Block only if the pass neither retired an op nor drained a new
         // arrival: a message stashed mid-pass may belong to a channel
         // checked earlier in the pass, so re-poll before parking.
         if remaining > 0 && !progressed && ep.stashed == seen {
+            if held {
+                // Bounded-hold rule: every blocked channel is blocked on a
+                // policy hold, not a missing message. Grant one short
+                // grace wait for in-flight traffic to deepen the FIFOs;
+                // if nothing lands, force-release held heads next pass.
+                if !ep.wait_brief() {
+                    force = true;
+                }
+                continue;
+            }
             let t_park = fr.now_or_zero();
             if ep.wait_any().is_err() {
-                return Err(blame_timeout(ep, &streams, &pc, fr));
+                return Err(blame_timeout(ep, &streams, &pc, fr, policy.as_deref()));
             }
             if fr.enabled() {
                 // The whole rank thread was parked; every channel whose
@@ -341,6 +468,7 @@ where
 
 /// Build the watchdog's blamed stall report: which (rank, channel, step)
 /// is blocked on which peer, how deep each pending connection FIFO is,
+/// the delivery policy's perturbation log when a policy is installed,
 /// and — when tracing — the flight recorder's tail. Works with tracing
 /// off; the per-channel blame needs no recorded history.
 fn blame_timeout(
@@ -348,6 +476,7 @@ fn blame_timeout(
     streams: &[Vec<(usize, &Op)>],
     pc: &[usize],
     fr: &FlightRecorder,
+    policy: Option<&dyn DeliveryPolicy>,
 ) -> Error {
     let mut msg = format!(
         "rank {} timed out with every channel blocked on a receive \
@@ -367,6 +496,13 @@ fn blame_timeout(
                 chunks.len(),
                 ep.fifo_depth(*peer, k)
             ));
+        }
+    }
+    if let Some(pol) = policy {
+        let log = pol.perturbation_log();
+        if !log.is_empty() {
+            msg.push_str("\ndelivery-policy perturbation log:\n");
+            msg.push_str(&log);
         }
     }
     if fr.enabled() && !fr.is_empty() {
@@ -574,7 +710,8 @@ pub fn run_allgather_into(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, idx, op, data, fr| {
+                let policy = opts.delivery.as_ref().map(|f| f(r));
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, policy, |ep, idx, op, data, fr| {
                     match op {
                         Op::Send { peer, chunks, channel, step } => {
                             let t0 = fr.now_or_zero();
@@ -784,7 +921,12 @@ pub fn run_reduce_scatter(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, idx, op, data, fr| {
+                let policy = opts.delivery.as_ref().map(|f| f(r));
+                // Sentinels only bite adversarial runs: an armed sentinel in
+                // another test of this process must not corrupt concurrent
+                // eager-delivery runs.
+                let adversarial = policy.is_some();
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, policy, |ep, idx, op, data, fr| {
                     match op {
                         Op::Send { peer, chunks, channel, step } => {
                             let t0 = fr.now_or_zero();
@@ -802,7 +944,17 @@ pub fn run_reduce_scatter(
                                         opts.datapath.add_into_traced(
                                             dst, slot.as_slice(), own(c), fr, r, *channel, *step,
                                         )?;
-                                        pool.release_traced(slot, fr, r, *channel, *step);
+                                        // Mutation sentinel B (test/adversary
+                                        // builds only): dropping the consumed
+                                        // accumulator without releasing it
+                                        // leaks its pool slot — the adversary
+                                        // explorer must catch the resulting
+                                        // exhaustion.
+                                        if adversarial && delivery::slot_release_skipped() {
+                                            drop(slot);
+                                        } else {
+                                            pool.release_traced(slot, fr, r, *channel, *step);
+                                        }
                                     }
                                     None => dst.copy_from_slice(own(c)),
                                 }
@@ -1082,7 +1234,8 @@ pub fn run_allreduce_batch(
                 let mut local_bytes = 0usize;
                 let mut local_msgs = 0usize;
 
-                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, |ep, idx, op, data, fr| {
+                let policy = opts.delivery.as_ref().map(|f| f(r));
+                drive_channels(&mut ep, &p.ranks[r], p.channels, &mut fr, policy, |ep, idx, op, data, fr| {
                     match op {
                         Op::Send { peer, chunks, channel, step } => {
                             let t0 = fr.now_or_zero();
@@ -1678,6 +1831,30 @@ mod tests {
         assert!(err.contains("step 3"), "{err}");
         assert!(err.contains("blocked on recv from rank"), "{err}");
         assert!(err.contains("queued on that connection"), "{err}");
+    }
+
+    /// Satellite: when a run deadlocks under an adversarial delivery
+    /// policy, the watchdog's stall report carries the policy's
+    /// perturbation log — the blamed rank's schedule *and* what the
+    /// adversary did to it arrive in one error.
+    #[test]
+    fn watchdog_attaches_perturbation_log() {
+        let mut p = Program::new(2, Collective::AllGather, "broken");
+        p.push(0, Op::recv(1, vec![1], false, 3));
+        p.push(0, Op::send(1, vec![0], 3));
+        p.push(1, Op::recv(0, vec![0], false, 3));
+        let spec = crate::adversary::PolicySpec::parse("delay:7").unwrap();
+        let opts = TransportOptions {
+            validate: false,
+            recv_timeout: Duration::from_millis(100),
+            delivery: Some(spec.transport_factory()),
+            ..Default::default()
+        };
+        let inputs = vec![vec![1.0f32], vec![2.0f32]];
+        let err = run_allgather(&p, &inputs, &opts).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(err.contains("delivery-policy perturbation log"), "{err}");
+        assert!(err.contains("policy=delay"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! * [`datapath`] — the receive-side reduction: either a pure-rust
 //!   lane-chunked scalar kernel or the AOT-compiled Pallas kernel via the
 //!   sharded PJRT service ([`crate::runtime::PjrtService`]).
+//! * [`delivery`] — the adversarial delivery layer: a [`DeliveryPolicy`]
+//!   hook over the per-(src, dst, channel) connection FIFOs (eager by
+//!   default) with deterministic virtual-time decision points, used by
+//!   [`crate::adversary`] to explore, shrink, and replay perturbed
+//!   schedules against this engine.
 //!
 //! With [`TransportOptions::trace`] set, every rank thread keeps a
 //! lock-free [`crate::obs::FlightRecorder`] ring (shared `Instant`
@@ -33,10 +38,12 @@ pub mod arena;
 pub mod engine;
 pub mod buffers;
 pub mod datapath;
+pub mod delivery;
 
 pub use arena::{Arena, ArenaCache, ArenaLease};
 pub use buffers::{BufferPool, Slot};
 pub use datapath::DataPath;
+pub use delivery::{Decision, DeliveryFactory, DeliveryPolicy, EagerDelivery, Verdict};
 pub use engine::{
     run_allgather, run_allgather_into, run_allreduce, run_allreduce_batch, run_reduce_scatter,
     TransportOptions, TransportReport,

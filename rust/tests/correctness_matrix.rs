@@ -1034,3 +1034,47 @@ fn traced_pool_high_water_within_verifier_bound() {
         }
     }
 }
+
+/// Adversarial-delivery axis: seeded hostile delivery schedules (random
+/// holds, plus reorder *attempts* that the transport's FIFO-ordering
+/// guard must clamp) across ranks × algorithms × channels. Every episode
+/// must stay bit-exact against the reference result and within the
+/// sound pool capacity (enforced by the episode runner, re-asserted
+/// here) — delivery order is invisible to results on a healthy
+/// transport.
+#[test]
+fn adversarial_delivery_matrix_stays_bit_exact() {
+    use patcol::adversary::{run_episode, PolicySpec, Preset, Workload};
+    use patcol::core::AlgSpec;
+    for n in [4usize, 8, 16] {
+        for alg in ["pat:2", "ring", "hier_pat:2"] {
+            for channels in [1usize, 2] {
+                let spec = AlgSpec::parse(&format!("{alg}*{channels}")).unwrap();
+                for (preset, seed) in [(Preset::Delay, 5u64), (Preset::Reorder, 11)] {
+                    let pol = PolicySpec { preset, seed: seed + n as u64 };
+                    for coll in [Collective::AllGather, Collective::ReduceScatter] {
+                        let w = Workload::new(coll, spec, n, 24, 3 + n as u64);
+                        let (_, cap) = w.build().unwrap();
+                        for episode in 0..2u64 {
+                            let out = run_episode(&w, &pol, episode).unwrap();
+                            assert!(
+                                out.failure.is_none(),
+                                "{alg}*{channels} {coll} n={n} {preset:?} ep{episode}: {:?}",
+                                out.failure
+                            );
+                            assert!(
+                                out.peak_slots <= cap,
+                                "{alg}*{channels} {coll} n={n}: peak {} > sound capacity {cap}",
+                                out.peak_slots
+                            );
+                            assert!(
+                                out.decisions > 0,
+                                "{alg}*{channels} {coll} n={n}: the policy was never consulted"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
